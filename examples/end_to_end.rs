@@ -1,0 +1,116 @@
+//! END-TO-END DRIVER — exercises the full three-layer system on a real
+//! small workload and reports the paper's headline metrics.
+//!
+//! Pipeline (all layers composing):
+//!  1. L3 data substrate generates a realistic mixture workload
+//!     (catalog instance S-NS: bimodal RGB-cube-like, the paper's
+//!     high-norm-variance showcase).
+//!  2. Seeding with all three variants — standard (Algorithm 1), TIE
+//!     (Algorithm 2), full (TIE + norm filters) — paper metrics reported
+//!     relative to standard, Fig. 2/3/4 style.
+//!  3. The same seeding through the **XLA runtime** (hybrid batcher over the
+//!     AOT Pallas/JAX artifacts via PJRT) — proving L1+L2+L3 compose.
+//!  4. Lloyd's algorithm to convergence via the XLA assignment executable,
+//!     logging the inertia curve.
+//!  5. Exactness validation: scripted-center runs of all variants must be
+//!     bit-identical; variant cost distributions must agree.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::lloyd::LloydConfig;
+use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
+use geokmpp::runtime::{Executor, Manifest};
+use geokmpp::seeding::{
+    seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant,
+};
+
+fn main() {
+    let n = 60_000;
+    let k = 256;
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(n);
+    println!("=== end-to-end: S-NS-like instance, n={n}, d={}, k={k} ===\n", data.cols());
+
+    // --- Step 2: the three variants, paper metrics.
+    println!("[1/4] seeding variants (scalar path)");
+    let mut base_distances = 0u64;
+    let mut base_time = 0f64;
+    for variant in Variant::ALL {
+        let mut rng = Pcg64::seed_from(2024);
+        let r = seed(&data, k, variant, &mut rng);
+        if variant == Variant::Standard {
+            base_distances = r.counters.distances;
+            base_time = r.elapsed.as_secs_f64();
+        }
+        println!(
+            "  {:>8}: {:>11} distances ({:>5.1}% of standard)  {:>7.1} ms  (speedup {:.2}×)  cost {:.0}",
+            variant.name(),
+            r.counters.distances,
+            100.0 * r.counters.distances as f64 / base_distances as f64,
+            r.elapsed.as_secs_f64() * 1e3,
+            base_time / r.elapsed.as_secs_f64(),
+            r.cost()
+        );
+    }
+
+    // --- Step 3+4: the XLA path.
+    if Manifest::default_dir().join("manifest.txt").exists() {
+        println!("\n[2/4] hybrid seeding through the XLA runtime (AOT Pallas/JAX artifacts)");
+        let mut ex = Executor::open().expect("open runtime");
+        let mut rng = Pcg64::seed_from(2024);
+        let hybrid = hybrid_tie_seed(&data, k, BatchPolicy::default(), &mut ex, &mut rng)
+            .expect("hybrid seed");
+        println!(
+            "  hybrid tie: {} distances, {} PJRT dispatches, {:.1} ms, cost {:.0}",
+            hybrid.counters.distances,
+            ex.dispatches,
+            hybrid.elapsed.as_secs_f64() * 1e3,
+            hybrid.cost()
+        );
+
+        println!("\n[3/4] Lloyd via XLA assignment executable");
+        let lr = lloyd_xla(&data, &hybrid.centers, &LloydConfig { max_iters: 30, ..Default::default() }, &mut ex)
+            .expect("lloyd");
+        print!("  inertia curve:");
+        for (i, v) in lr.inertia_trace.iter().enumerate() {
+            if i % 5 == 0 || i + 1 == lr.inertia_trace.len() {
+                print!(" {v:.3e}");
+            }
+        }
+        println!(
+            "\n  {} iterations, converged={}, total dispatches {}",
+            lr.iterations, lr.converged, ex.dispatches
+        );
+    } else {
+        println!("\n[2/4,3/4] SKIPPED: artifacts not built (run `make artifacts`)");
+    }
+
+    // --- Step 5: exactness.
+    println!("\n[4/4] exactness validation (scripted centers, k=64 on 10k subsample)");
+    let small = inst.generate_n(10_000);
+    let script: Vec<usize> = {
+        let mut rng = Pcg64::seed_from(9);
+        let mut p = D2Picker::new(&mut rng);
+        seed_with(&small, &SeedConfig::new(64, Variant::Standard), &mut p, &mut NoTrace)
+            .center_indices
+    };
+    let run = |variant: Variant| {
+        let mut p = ScriptedPicker::new(script.clone());
+        seed_with(&small, &SeedConfig::new(64, variant), &mut p, &mut NoTrace)
+    };
+    let rs = run(Variant::Standard);
+    let rt = run(Variant::Tie);
+    let rf = run(Variant::Full);
+    let exact = rs.weights == rt.weights
+        && rs.weights == rf.weights
+        && rs.assignments == rt.assignments
+        && rs.assignments == rf.assignments;
+    println!("  weights & assignments bit-identical across variants: {exact}");
+    assert!(exact, "EXACTNESS VIOLATION");
+    println!("\n=== end-to-end complete ===");
+}

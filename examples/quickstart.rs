@@ -1,0 +1,44 @@
+//! Quickstart: generate a dataset, seed with the full accelerated
+//! k-means++, run Lloyd's, print what the acceleration saved.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use geokmpp::prelude::*;
+
+fn main() {
+    // 50k points, 16 dimensions, 32 natural clusters.
+    let mut rng = Pcg64::seed_from(42);
+    let data = geokmpp::data::synth::gmm(&GmmSpec::new(50_000, 16, 32), &mut rng);
+
+    // Seed k=64 centers with the paper's full accelerated variant…
+    let accel = seed(&data, 64, Variant::Full, &mut rng);
+    // …and with the standard algorithm, for comparison.
+    let mut rng2 = Pcg64::seed_from(42);
+    let std_run = seed(&data, 64, Variant::Standard, &mut rng2);
+
+    println!("seeding k=64 on n=50_000, d=16:");
+    println!(
+        "  standard    : {:>10} distances   {:.1} ms",
+        std_run.counters.distances,
+        std_run.elapsed.as_secs_f64() * 1e3
+    );
+    println!(
+        "  accelerated : {:>10} distances   {:.1} ms   ({:.1}× fewer, {:.1}× faster)",
+        accel.counters.distances,
+        accel.elapsed.as_secs_f64() * 1e3,
+        std_run.counters.distances as f64 / accel.counters.distances as f64,
+        std_run.elapsed.as_secs_f64() / accel.elapsed.as_secs_f64()
+    );
+
+    // Finish the clustering.
+    let result = lloyd(&data, &accel.centers, &LloydConfig::default());
+    println!(
+        "lloyd: {} iterations, inertia {:.0} → {:.0} (converged: {})",
+        result.iterations,
+        result.inertia_trace[0],
+        result.inertia_trace.last().unwrap(),
+        result.converged
+    );
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: L2 graphs → HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+artifacts through PJRT and Python never appears on the request path.
+
+Artifacts are bucketed by static shape:
+
+* ``CHUNK``     — points per dispatch (callers pad the tail chunk);
+* ``D_BUCKETS`` — feature dimension (callers zero-pad features: SED is
+  unchanged by zero padding on both operands);
+* ``K_BUCKETS`` — centers for the Lloyd-assign graph (callers pad centers
+  at ``FAR_AWAY`` so they never win the argmin).
+
+The manifest is a dependency-free line format parsed by
+``rust/src/runtime/artifacts.rs``::
+
+    op=update chunk=2048 d=32 k=1 file=update_c2048_d32.hlo.txt
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--report]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import sed as K
+
+CHUNK = 2048
+D_BUCKETS = [8, 32, 128, 512]
+K_BUCKETS = [16, 64, 256]
+
+
+def _spec(shape):
+    return jnp.zeros(shape, jnp.float32)
+
+
+def artifact_plan():
+    """Yields (op, chunk, d, k, filename, fn, example_args)."""
+    for d in D_BUCKETS:
+        yield (
+            "update",
+            CHUNK,
+            d,
+            1,
+            f"update_c{CHUNK}_d{d}.hlo.txt",
+            model.update_chunk,
+            (_spec((CHUNK, d)), _spec((d,)), _spec((CHUNK,))),
+        )
+        yield (
+            "norms",
+            CHUNK,
+            d,
+            1,
+            f"norms_c{CHUNK}_d{d}.hlo.txt",
+            model.norms_chunk,
+            (_spec((CHUNK, d)),),
+        )
+        for k in K_BUCKETS:
+            yield (
+                "lloyd_assign",
+                CHUNK,
+                d,
+                k,
+                f"lloyd_c{CHUNK}_d{d}_k{k}.hlo.txt",
+                model.lloyd_assign,
+                (_spec((CHUNK, d)), _spec((k, d))),
+            )
+
+
+def build(out_dir: str, report: bool = False) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    count = 0
+    for op, chunk, d, k, fname, fn, args in artifact_plan():
+        text = model.lower_to_hlo_text(fn, *args)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"op={op} chunk={chunk} d={d} k={k} file={fname}")
+        count += 1
+        if report:
+            flops = model.flop_estimate(op, chunk, d, k)
+            vmem = K.vmem_bytes(K.BLOCK_N, min(K.BLOCK_K, k) if k > 1 else 1, d)
+            print(
+                f"{fname:36} {len(text) / 1024:8.1f} KiB  "
+                f"~{flops / 1e6:8.2f} MFLOP/call  tile VMEM ~{vmem / 1024:6.1f} KiB"
+            )
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# geokmpp AOT artifact manifest (op/shape -> HLO text file)\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    return count
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--report", action="store_true", help="print per-artifact cost estimates")
+    args = ap.parse_args()
+    n = build(args.out_dir, report=args.report)
+    print(f"wrote {n} artifacts + manifest to {os.path.abspath(args.out_dir)}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

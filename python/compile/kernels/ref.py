@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the trusted implementations — straight translations of §3.1's
+definitions with no tiling, no decomposition tricks. Every kernel in
+``sed.py`` is pinned against these in python/tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sed_ref(x, c):
+    """``D[i, j] = sum_d (x[i, d] - c[j, d])^2`` — direct, no decomposition."""
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def min_update_ref(x, c_new, w):
+    """Reference fused update: (min(w, SED(x, c_new)), strict-changed mask)."""
+    diff = x - c_new[None, :]
+    dist = jnp.sum(diff * diff, axis=1)
+    return jnp.minimum(w, dist), (dist < w).astype(jnp.int32)
+
+
+def norms_ref(x):
+    """Per-row Euclidean norm."""
+    return jnp.sqrt(jnp.sum(x * x, axis=1))
+
+
+def lloyd_assign_ref(x, centers):
+    """(argmin over centers, min SED) per point."""
+    d = pairwise_sed_ref(x, centers)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)

@@ -1,0 +1,150 @@
+"""Layer-1 Pallas kernels: the SED hot-spot.
+
+Two kernels cover every dense phase of the system:
+
+* :func:`pairwise_sed` — tiled ``D[i, j] = SED(x_i, c_j)`` over a points
+  block and a centers block. Implemented with the Appendix-B dot-product
+  decomposition ``SED = ||x||^2 + ||c||^2 - 2 x.c^T`` so the cross term is a
+  matmul — on a real TPU this is what puts the work on the MXU; the paper's
+  own distance trick is exactly the thing that makes SED systolic-array
+  friendly (see DESIGN.md §Hardware-Adaptation).
+* :func:`min_update` — the fused Algorithm-2 inner loop over a chunk:
+  ``w' = min(w, SED(x, c_new))`` plus the "changed" mask that the Rust
+  coordinator uses to migrate points between clusters.
+
+Kernels are always instantiated with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+ops that round-trip through the AOT HLO-text bridge (see aot.py). Block
+shapes are nevertheless chosen for VMEM residency on a real TPU:
+``(BN, d_pad) + (BK, d_pad) + (BN, BK)`` f32 tiles stay under 4 MiB for
+every bucket in aot.BUCKETS.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (8-row sublane / 128-lane friendly).
+BLOCK_N = 256
+BLOCK_K = 64
+
+
+def _pairwise_kernel(x_ref, c_ref, o_ref):
+    """One (BN, BK) output tile: SED via the dot-product decomposition."""
+    x = x_ref[...]  # (bn, d)
+    c = c_ref[...]  # (bk, d)
+    xsq = jnp.sum(x * x, axis=1, keepdims=True)  # (bn, 1)
+    csq = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, bk)
+    cross = jax.lax.dot_general(
+        x,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, bk) — the MXU-friendly term.
+    # Clamp: the decomposition can go slightly negative in f32.
+    o_ref[...] = jnp.maximum(xsq + csq - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k"))
+def pairwise_sed(x, c, *, block_n: int = BLOCK_N, block_k: int = BLOCK_K):
+    """Full pairwise SED matrix ``(n, k)`` between points and centers.
+
+    ``n`` must be a multiple of ``block_n`` and ``k`` of ``block_k``
+    (the AOT path always pads to bucket shapes; tests exercise exact fits).
+    """
+    n, d = x.shape
+    k, d2 = c.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    # Small operands shrink the tile instead of failing.
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert n % block_n == 0 and k % block_k == 0, (n, k, block_n, block_k)
+    grid = (n // block_n, k // block_k)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, c)
+
+
+def _min_update_kernel(x_ref, c_ref, w_ref, w2_ref, chg_ref):
+    """One BN-chunk of the Algorithm-2 inner loop (Filter-2 body, dense)."""
+    x = x_ref[...]  # (bn, d)
+    c = c_ref[...]  # (1, d)
+    w = w_ref[...]  # (bn,)
+    diff = x - c  # broadcast over rows
+    dist = jnp.sum(diff * diff, axis=1)  # (bn,)
+    w2 = jnp.minimum(w, dist)
+    w2_ref[...] = w2
+    chg_ref[...] = (dist < w).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def min_update(x, c_new, w, *, block_n: int = BLOCK_N):
+    """Fused weight update against one new center.
+
+    Returns ``(w', changed)`` where ``w' = min(w, SED(x_i, c_new))`` and
+    ``changed[i] = 1`` iff the new center is strictly closer (the paper's
+    strict `w_i > d_new` reassignment rule, Algorithm 2 line 19).
+    """
+    n, d = x.shape
+    assert c_new.shape == (d,)
+    assert w.shape == (n,)
+    block_n = min(block_n, n)
+    assert n % block_n == 0, (n, block_n)
+    c2 = c_new.reshape(1, d)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _min_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(x, c2, w)
+
+
+def _norms_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.sqrt(jnp.sum(x * x, axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def norms(x, *, block_n: int = BLOCK_N):
+    """Per-point Euclidean norms (the §4.3 precomputation)."""
+    n, d = x.shape
+    block_n = min(block_n, n)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _norms_kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def vmem_bytes(block_n: int, block_k: int, d: int) -> int:
+    """Estimated VMEM residency of one pairwise tile (f32): x + c + out."""
+    return 4 * (block_n * d + block_k * d + block_n * block_k)

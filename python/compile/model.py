@@ -1,0 +1,83 @@
+"""Layer-2 JAX graphs — the dense batched phases of the system.
+
+Each function here is a complete jittable computation that the Rust
+coordinator executes through an AOT-compiled PJRT executable (see aot.py):
+
+* :func:`update_chunk`   — Algorithm-2 inner loop over one chunk (the
+  initial full-dataset weight pass and big-cluster scans route here).
+* :func:`lloyd_assign`   — Lloyd's assignment step for one chunk: pairwise
+  SED (L1 kernel) fused with the per-point argmin/min reductions.
+* :func:`norms_chunk`    — the §4.3 norm precomputation.
+* :func:`pairwise_chunk` — raw distance matrix (benches, debugging).
+
+All shapes are static per AOT bucket; the Rust executor pads inputs to the
+bucket shape and ignores padded outputs (see DESIGN.md: zero-padding the
+feature dimension leaves SED unchanged; padded centers sit at +1e18 so they
+never win an argmin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import sed as K
+
+# Coordinate value used to pad center rows so they never win an argmin.
+FAR_AWAY = 1.0e18
+
+
+def update_chunk(x, c_new, w):
+    """(w', changed) for one chunk against one new center — L1 kernel."""
+    return K.min_update(x, c_new, w)
+
+
+def lloyd_assign(x, centers):
+    """(assignment, min-SED) per point of the chunk.
+
+    The pairwise kernel and the reductions lower into one fused HLO module;
+    XLA fuses the row-argmin into the distance tiles.
+    """
+    dists = K.pairwise_sed(x, centers)
+    assign = jnp.argmin(dists, axis=1).astype(jnp.int32)
+    mind = jnp.min(dists, axis=1)
+    return assign, mind
+
+
+def norms_chunk(x):
+    """Per-point Euclidean norms for one chunk — L1 kernel."""
+    return K.norms(x)
+
+
+def pairwise_chunk(x, c):
+    """Raw (chunk, k) SED matrix — L1 kernel."""
+    return K.pairwise_sed(x, c)
+
+
+def lower_to_hlo_text(fn, *example_args) -> str:
+    """Lowers a jitted function to HLO **text** — the interchange format.
+
+    jax ≥ 0.5 serializes HloModuleProto with 64-bit instruction ids that the
+    xla crate's xla_extension 0.5.1 rejects; the HLO *text* parser reassigns
+    ids and round-trips cleanly (see /opt/xla-example/README.md). Lowered
+    with ``return_tuple=True`` — the Rust side unwraps with ``to_tuple()``.
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flop_estimate(op: str, chunk: int, d: int, k: int = 1) -> int:
+    """Rough FLOP count for one executable call (cost/roofline reporting)."""
+    if op == "update":
+        return 3 * chunk * d
+    if op == "lloyd_assign" or op == "pairwise":
+        return 3 * chunk * d * k
+    if op == "norms":
+        return 2 * chunk * d
+    raise ValueError(op)

@@ -1,0 +1,147 @@
+"""L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases pin known values and edge cases.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.kernels import sed as K
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(key, shape, scale=4.0):
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+# --------------------------------------------------------------------------
+# pairwise_sed
+
+
+@hypothesis.given(
+    nb=st.integers(1, 4),
+    kb=st.integers(1, 3),
+    d=st.sampled_from([1, 2, 3, 8, 17, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(nb, kb, d, seed):
+    bn, bk = 8, 8
+    key = jax.random.PRNGKey(seed)
+    kx, kc = jax.random.split(key)
+    x = rand(kx, (nb * bn, d))
+    c = rand(kc, (kb * bk, d))
+    got = K.pairwise_sed(x, c, block_n=bn, block_k=bk)
+    want = ref.pairwise_sed_ref(x, c)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_pairwise_known_values():
+    x = jnp.array([[0.0, 0.0], [3.0, 4.0]] * 4, jnp.float32)  # 8 rows
+    c = jnp.array([[0.0, 0.0]] * 8, jnp.float32)
+    d = K.pairwise_sed(x, c, block_n=8, block_k=8)
+    np.testing.assert_allclose(d[0, 0], 0.0, atol=1e-5)
+    np.testing.assert_allclose(d[1, 0], 25.0, rtol=1e-6)
+
+
+def test_pairwise_never_negative():
+    # The dot-product decomposition can dip below zero in f32; the kernel
+    # must clamp (the Rust coordinator relies on w >= 0).
+    key = jax.random.PRNGKey(7)
+    x = rand(key, (64, 16), scale=100.0)
+    d = K.pairwise_sed(x, x, block_n=8, block_k=8)
+    assert float(jnp.min(d)) >= 0.0
+
+
+def test_pairwise_rejects_misaligned():
+    x = jnp.zeros((10, 4), jnp.float32)  # 10 % 8 != 0
+    c = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        K.pairwise_sed(x, c, block_n=8, block_k=8)
+
+
+def test_pairwise_default_blocks():
+    x = jnp.ones((K.BLOCK_N, 8), jnp.float32)
+    c = jnp.zeros((K.BLOCK_K, 8), jnp.float32)
+    d = K.pairwise_sed(x, c)
+    np.testing.assert_allclose(d, jnp.full((K.BLOCK_N, K.BLOCK_K), 8.0), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# min_update
+
+
+@hypothesis.given(
+    nb=st.integers(1, 6),
+    d=st.sampled_from([1, 2, 5, 8, 33, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_min_update_matches_ref(nb, d, seed):
+    bn = 8
+    key = jax.random.PRNGKey(seed)
+    kx, kc, kw = jax.random.split(key, 3)
+    x = rand(kx, (nb * bn, d))
+    c = rand(kc, (d,))
+    w = jax.random.uniform(kw, (nb * bn,), jnp.float32, 0.0, 50.0)
+    w2, chg = K.min_update(x, c, w, block_n=bn)
+    w2_ref, chg_ref = ref.min_update_ref(x, c, w)
+    np.testing.assert_allclose(w2, w2_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(chg, chg_ref)
+
+
+def test_min_update_strictness():
+    # A point exactly at its current weight distance must NOT be reassigned
+    # (Algorithm 2 line 19 is strict) — this is what keeps the accelerated
+    # variants bit-identical to the standard one.
+    x = jnp.zeros((8, 2), jnp.float32)
+    c = jnp.array([3.0, 4.0], jnp.float32)  # SED = 25 to every point
+    w = jnp.full((8,), 25.0, jnp.float32)
+    w2, chg = K.min_update(x, c, w, block_n=8)
+    np.testing.assert_allclose(w2, w)
+    assert int(jnp.sum(chg)) == 0
+
+
+def test_min_update_self_distance_zero():
+    x = jnp.tile(jnp.array([[1.5, -2.0, 0.5]], jnp.float32), (8, 1))
+    w = jnp.full((8,), 9.0, jnp.float32)
+    w2, chg = K.min_update(x, x[0], w, block_n=8)
+    np.testing.assert_allclose(w2, jnp.zeros(8), atol=1e-6)
+    assert int(jnp.sum(chg)) == 8
+
+
+# --------------------------------------------------------------------------
+# norms
+
+
+@hypothesis.given(
+    nb=st.integers(1, 4),
+    d=st.sampled_from([1, 3, 8, 100]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_norms_matches_ref(nb, d, seed):
+    bn = 8
+    x = rand(jax.random.PRNGKey(seed), (nb * bn, d))
+    got = K.norms(x, block_n=bn)
+    np.testing.assert_allclose(got, ref.norms_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_norms_known():
+    x = jnp.tile(jnp.array([[3.0, 4.0]], jnp.float32), (8, 1))
+    np.testing.assert_allclose(K.norms(x, block_n=8), jnp.full(8, 5.0), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# VMEM estimate sanity (the L1 §Perf structural check)
+
+
+def test_default_tile_fits_vmem_budget():
+    for d in [8, 32, 128, 512]:
+        assert K.vmem_bytes(K.BLOCK_N, K.BLOCK_K, d) < 4 * 1024 * 1024, d

@@ -1,0 +1,79 @@
+"""L2 graph semantics: padding invariance and composition.
+
+The Rust executor relies on two padding contracts (DESIGN.md):
+* zero-padding the feature dimension of both operands leaves SED unchanged;
+* centers padded at FAR_AWAY never win the Lloyd argmin.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(key, shape, scale=4.0):
+    return jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+
+
+def test_update_chunk_zero_dim_padding_invariant():
+    key = jax.random.PRNGKey(0)
+    kx, kc, kw = jax.random.split(key, 3)
+    x = rand(kx, (16, 5))
+    c = rand(kc, (5,))
+    w = jax.random.uniform(kw, (16,), jnp.float32, 0.0, 40.0)
+    w2, chg = model.update_chunk(
+        jnp.pad(x, ((0, 0), (0, 3))), jnp.pad(c, (0, 3)), w
+    )
+    w2_ref, chg_ref = ref.min_update_ref(x, c, w)
+    np.testing.assert_allclose(w2, w2_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(chg, chg_ref)
+
+
+def test_update_chunk_zero_point_padding_is_neutral():
+    # Padded points are all-zero rows with w=0: their w' stays 0 and they
+    # never report "changed" (the executor also just ignores the tail).
+    x = jnp.zeros((8, 4), jnp.float32)
+    c = jnp.array([1.0, 1.0, 1.0, 1.0], jnp.float32)
+    w = jnp.zeros((8,), jnp.float32)
+    w2, chg = model.update_chunk(x, c, w)
+    np.testing.assert_allclose(w2, jnp.zeros(8))
+    assert int(jnp.sum(chg)) == 0
+
+
+def test_lloyd_assign_matches_ref():
+    key = jax.random.PRNGKey(3)
+    kx, kc = jax.random.split(key)
+    x = rand(kx, (256, 8))
+    c = rand(kc, (64, 8))
+    a, m = model.lloyd_assign(x, c)
+    a_ref, m_ref = ref.lloyd_assign_ref(x, c)
+    np.testing.assert_array_equal(a, a_ref)
+    np.testing.assert_allclose(m, m_ref, rtol=1e-4, atol=1e-3)
+
+
+def test_lloyd_assign_far_away_center_padding():
+    key = jax.random.PRNGKey(4)
+    kx, kc = jax.random.split(key)
+    x = rand(kx, (256, 8))
+    c_real = rand(kc, (40, 8))
+    c_pad = jnp.concatenate(
+        [c_real, jnp.full((24, 8), model.FAR_AWAY, jnp.float32)], axis=0
+    )
+    a, _ = model.lloyd_assign(x, c_pad)
+    a_ref, _ = ref.lloyd_assign_ref(x, c_real)
+    np.testing.assert_array_equal(a, a_ref)
+    assert int(jnp.max(a)) < 40
+
+
+def test_norms_chunk():
+    x = jnp.tile(jnp.array([[0.0, 0.0, 5.0, 0.0]], jnp.float32), (256, 1))
+    np.testing.assert_allclose(model.norms_chunk(x), jnp.full(256, 5.0), rtol=1e-6)
+
+
+def test_flop_estimate_monotone():
+    assert model.flop_estimate("update", 2048, 32) < model.flop_estimate("update", 2048, 128)
+    assert model.flop_estimate("lloyd_assign", 2048, 32, 64) > model.flop_estimate(
+        "update", 2048, 32
+    )

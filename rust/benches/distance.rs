@@ -1,0 +1,29 @@
+//! Distance-kernel microbenches: the Appendix-B dot-product decomposition
+//! vs the direct SED, across dimensionalities (the L3 hot inner loop).
+
+use geokmpp::bench::{black_box, Bench};
+use geokmpp::core::distance::{dot, ed, sed, sed_dot, sed_naive, sed_unrolled, sqnorm};
+use geokmpp::core::rng::{Pcg64, Rng};
+
+fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect()
+}
+
+fn main() {
+    let mut rng = Pcg64::seed_from(1);
+    let mut b = Bench::from_env("distance");
+    for d in [3usize, 8, 16, 64, 128, 784] {
+        let x = rand_vec(&mut rng, d);
+        let y = rand_vec(&mut rng, d);
+        let xs = sqnorm(&x);
+        let ys = sqnorm(&y);
+        b.throughput(d as u64);
+        b.bench(&format!("sed/d{d}"), || black_box(sed(&x, &y)));
+        b.bench(&format!("sed_naive/d{d}"), || black_box(sed_naive(&x, &y)));
+        b.bench(&format!("sed_unrolled/d{d}"), || black_box(sed_unrolled(&x, &y)));
+        b.bench(&format!("sed_dot/d{d}"), || black_box(sed_dot(&x, &y, xs, ys)));
+        b.bench(&format!("dot/d{d}"), || black_box(dot(&x, &y)));
+        b.bench(&format!("ed/d{d}"), || black_box(ed(&x, &y)));
+    }
+    b.finish();
+}

@@ -1,0 +1,59 @@
+//! XLA-dispatch benches: scalar inner loop vs the AOT PJRT executables for
+//! the dense phases (init weight pass, Lloyd assignment). Requires
+//! `make artifacts`; prints a notice and exits cleanly otherwise.
+
+use geokmpp::bench::{black_box, Bench};
+use geokmpp::core::distance::sed;
+use geokmpp::core::rng::{Pcg64, Rng};
+use geokmpp::core::matrix::Matrix;
+use geokmpp::runtime::{Executor, Manifest};
+
+fn main() {
+    if !Manifest::default_dir().join("manifest.txt").exists() {
+        eprintln!("runtime bench skipped: run `make artifacts` first");
+        return;
+    }
+    let mut rng = Pcg64::seed_from(4);
+    let n = 16_384;
+    let d = 32;
+    let data = Matrix::from_vec((0..n * d).map(|_| rng.uniform_f32() * 4.0).collect(), n, d);
+    let rows: Vec<usize> = (0..n).collect();
+    let c = data.row(7).to_vec();
+    let centers = data.gather_rows(&(0..64).map(|i| i * 11).collect::<Vec<_>>());
+
+    let mut ex = Executor::open().expect("open runtime");
+    let mut b = Bench::from_env("runtime");
+    b.throughput(n as u64);
+    b.bench("init_weights/scalar/n16k_d32", || {
+        let mut acc = 0f32;
+        for i in 0..data.rows() {
+            acc += sed(data.row(i), &c);
+        }
+        black_box(acc)
+    });
+    b.bench("init_weights/xla/n16k_d32", || {
+        black_box(ex.min_update(&data, &rows, &c).unwrap().0.len())
+    });
+    b.bench("lloyd_assign/scalar/n16k_d32_k64", || {
+        let mut acc = 0u32;
+        for i in 0..data.rows() {
+            let mut best = f32::INFINITY;
+            let mut bj = 0u32;
+            for j in 0..centers.rows() {
+                let dist = sed(data.row(i), centers.row(j));
+                if dist < best {
+                    best = dist;
+                    bj = j as u32;
+                }
+            }
+            acc ^= bj;
+        }
+        black_box(acc)
+    });
+    b.bench("lloyd_assign/xla/n16k_d32_k64", || {
+        black_box(ex.lloyd_assign(&data, &centers).unwrap().0.len())
+    });
+    let t = b.finish();
+    assert!(t.len() == 4);
+    eprintln!("dispatches issued: {}", ex.dispatches);
+}

@@ -1,0 +1,62 @@
+//! D² sampling benches: flat roulette vs the paper's two-step procedure vs
+//! the binary-search cumulative-table refinement (§4.2.2).
+
+use geokmpp::bench::{black_box, Bench};
+use geokmpp::core::rng::{Pcg64, Rng};
+use geokmpp::core::sampling::{roulette, roulette_f64, roulette_indexed, CumTable};
+
+fn main() {
+    let mut rng = Pcg64::seed_from(2);
+    let n = 100_000;
+    let k = 256;
+    let weights: Vec<f32> = (0..n).map(|_| rng.uniform_f32() * 10.0).collect();
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+
+    // Cluster structure: k equal slices.
+    let clusters: Vec<Vec<usize>> = (0..k)
+        .map(|j| ((j * n / k)..((j + 1) * n / k)).collect())
+        .collect();
+    let sums: Vec<f64> = clusters
+        .iter()
+        .map(|c| c.iter().map(|&i| weights[i] as f64).sum())
+        .collect();
+    let tables: Vec<CumTable> = clusters.iter().map(|c| CumTable::build(&weights, c)).collect();
+
+    let mut b = Bench::from_env("sampling");
+    let mut r1 = Pcg64::seed_from(3);
+    b.bench("flat_roulette/n100k", || black_box(roulette(&weights, total, &mut r1)));
+    let mut r2 = Pcg64::seed_from(3);
+    b.bench("two_step/n100k_k256", || {
+        let j = roulette_f64(&sums, total, &mut r2);
+        black_box(roulette_indexed(&weights, &clusters[j], sums[j], &mut r2))
+    });
+    let mut r3 = Pcg64::seed_from(3);
+    b.bench("two_step_binsearch/n100k_k256", || {
+        let j = roulette_f64(&sums, total, &mut r3);
+        black_box(tables[j].draw(&mut r3))
+    });
+    let mut r4 = Pcg64::seed_from(3);
+    b.bench("cumtable_build/n390", || {
+        black_box(CumTable::build(&weights, &clusters[r4.below(k)]))
+    });
+
+    // End-to-end: §4.2.2 binary-search refinement inside the TIE seeder.
+    use geokmpp::data::catalog::by_name;
+    use geokmpp::seeding::{seed_with, D2Picker, NoTrace, SeedConfig, Variant};
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(10_000);
+    for binsearch in [false, true] {
+        let name = if binsearch { "tie_seed/binsearch" } else { "tie_seed/linear" };
+        let mut counter = 0u64;
+        b.bench(name, || {
+            counter += 1;
+            let mut cfg = SeedConfig::new(128, Variant::Tie);
+            cfg.binary_search_sampling = binsearch;
+            let mut p = D2Picker::new(Pcg64::seed_stream(5, counter));
+            geokmpp::bench::black_box(
+                seed_with(&data, &cfg, &mut p, &mut NoTrace).counters.visited_sampling,
+            )
+        });
+    }
+    b.finish();
+}

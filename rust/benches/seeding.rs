@@ -1,0 +1,32 @@
+//! End-to-end seeding benches — the bench-harness form of Figs. 2–4: all
+//! three variants over a k sweep on one low-dim and one high-dim instance.
+//!
+//! `GEOKMPP_BENCH_QUICK=1` shrinks everything for CI smoke runs.
+
+use geokmpp::bench::{black_box, Bench};
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::seeding::{seed, Variant};
+
+fn main() {
+    let quick = std::env::var("GEOKMPP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n = if quick { 2_000 } else { 20_000 };
+    let ks: &[usize] = if quick { &[16, 64] } else { &[16, 64, 256, 1024] };
+
+    let mut b = Bench::from_env("seeding");
+    for inst_name in ["S-NS", "GSAD"] {
+        let inst = by_name(inst_name).unwrap();
+        let data = inst.generate_n(n.min(inst.default_n));
+        for &k in ks {
+            for variant in Variant::ALL {
+                let mut seed_counter = 0u64;
+                b.bench(&format!("{inst_name}/{}/k{k}", variant.name()), || {
+                    seed_counter += 1;
+                    let mut rng = Pcg64::seed_stream(42, seed_counter);
+                    black_box(seed(&data, k, variant, &mut rng).counters.distances)
+                });
+            }
+        }
+    }
+    b.finish();
+}

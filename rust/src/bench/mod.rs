@@ -1,0 +1,243 @@
+//! Criterion-like micro-benchmark harness (criterion is not in the offline
+//! crate set; see DESIGN.md §Substitutions).
+//!
+//! `cargo bench` targets under `rust/benches/` set `harness = false` and
+//! drive this module: warmup, fixed-duration measurement, outlier-robust
+//! statistics, throughput, and aligned/CSV reporting.
+//!
+//! ```no_run
+//! use geokmpp::bench::{Bench, black_box};
+//! let mut b = Bench::from_env("distance");
+//! let x = vec![1.0f32; 128];
+//! b.bench("sed/128", || black_box(geokmpp::core::distance::sed(&x, &x)));
+//! b.finish();
+//! ```
+
+use crate::metrics::table::{fnum, Table};
+use crate::metrics::timer::{Stats, Stopwatch};
+use std::hint;
+use std::time::Duration;
+
+/// Opaque value sink preventing the optimizer from deleting benched code.
+#[inline(always)]
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+/// Configuration for a bench group.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Warmup time per benchmark.
+    pub warmup: Duration,
+    /// Measurement time per benchmark.
+    pub measure: Duration,
+    /// Minimum measured iterations regardless of time.
+    pub min_iters: u64,
+    /// Quick mode (short warmup/measure) — set via `GEOKMPP_BENCH_QUICK=1`,
+    /// used by CI and `cargo test`-adjacent smoke runs.
+    pub quick: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1000),
+            min_iters: 10,
+            quick: false,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Reads config from the environment (`GEOKMPP_BENCH_QUICK`).
+    pub fn from_env() -> Self {
+        let mut cfg = Self::default();
+        if std::env::var("GEOKMPP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            cfg.quick = true;
+            cfg.warmup = Duration::from_millis(20);
+            cfg.measure = Duration::from_millis(60);
+        }
+        cfg
+    }
+}
+
+/// A single benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark id (`group/name`).
+    pub id: String,
+    /// Per-iteration wall-clock stats, in nanoseconds.
+    pub ns: Stats,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    /// Mean throughput in elements/second, if an element count was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / (self.ns.mean * 1e-9))
+    }
+}
+
+/// A bench group: runs closures, collects per-iteration timing samples.
+pub struct Bench {
+    group: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+    elements: Option<u64>,
+}
+
+impl Bench {
+    /// New group with explicit config.
+    pub fn new(group: &str, cfg: BenchConfig) -> Self {
+        Self { group: group.to_string(), cfg, results: Vec::new(), elements: None }
+    }
+
+    /// New group configured from the environment.
+    pub fn from_env(group: &str) -> Self {
+        Self::new(group, BenchConfig::from_env())
+    }
+
+    /// Sets the element count used for throughput on subsequent benches.
+    pub fn throughput(&mut self, elements: u64) -> &mut Self {
+        self.elements = Some(elements);
+        self
+    }
+
+    /// Runs one benchmark. The closure is the measured unit; its return
+    /// value is black-boxed.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup: also estimates per-iteration cost to size measurement batches.
+        let sw = Stopwatch::start();
+        let mut warm_iters = 0u64;
+        while sw.elapsed() < self.cfg.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est_ns = (sw.elapsed().as_nanos() as f64 / warm_iters as f64).max(1.0);
+
+        // Batch so each timing sample is ≥ ~50µs (amortizes clock overhead).
+        let batch = ((50_000.0 / est_ns).ceil() as u64).max(1);
+        let mut samples = Vec::new();
+        let total = Stopwatch::start();
+        let mut iters = 0u64;
+        while total.elapsed() < self.cfg.measure || iters < self.cfg.min_iters {
+            let s = Stopwatch::start();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(s.elapsed().as_nanos() as f64 / batch as f64);
+            iters += batch;
+        }
+
+        let result = BenchResult {
+            id: format!("{}/{name}", self.group),
+            ns: Stats::of(&samples),
+            elements: self.elements,
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Renders and prints the report table; returns it for capture.
+    pub fn finish(&self) -> Table {
+        let mut t = Table::new(["benchmark", "mean", "median", "stddev", "throughput"]);
+        for r in &self.results {
+            t.row([
+                r.id.clone(),
+                humanize_ns(r.ns.mean),
+                humanize_ns(r.ns.median),
+                humanize_ns(r.ns.stddev),
+                r.throughput()
+                    .map(|t| format!("{}/s", humanize_count(t)))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!("{}", t.to_aligned());
+        t
+    }
+}
+
+/// Formats nanoseconds with an adaptive unit.
+pub fn humanize_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{} ns", fnum(ns, 1))
+    } else if ns < 1e6 {
+        format!("{} µs", fnum(ns / 1e3, 2))
+    } else if ns < 1e9 {
+        format!("{} ms", fnum(ns / 1e6, 2))
+    } else {
+        format!("{} s", fnum(ns / 1e9, 3))
+    }
+}
+
+/// Formats a large count with an adaptive suffix.
+pub fn humanize_count(v: f64) -> String {
+    if v < 1e3 {
+        fnum(v, 1)
+    } else if v < 1e6 {
+        format!("{}K", fnum(v / 1e3, 1))
+    } else if v < 1e9 {
+        format!("{}M", fnum(v / 1e6, 1))
+    } else {
+        format!("{}G", fnum(v / 1e9, 2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            min_iters: 3,
+            quick: true,
+        }
+    }
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bench::new("t", quick_cfg());
+        let r = b.bench("noop", || 1 + 1).clone();
+        assert!(r.ns.mean > 0.0);
+        assert!(r.ns.n >= 1);
+        assert_eq!(r.id, "t/noop");
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::new("t", quick_cfg());
+        b.throughput(1000);
+        let r = b.bench("x", || std::hint::black_box(42)).clone();
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn finish_builds_table() {
+        let mut b = Bench::new("t", quick_cfg());
+        b.bench("a", || 0);
+        b.bench("b", || 0);
+        let t = b.finish();
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert_eq!(humanize_ns(12.0), "12.0 ns");
+        assert_eq!(humanize_ns(1500.0), "1.50 µs");
+        assert_eq!(humanize_ns(2.5e6), "2.50 ms");
+        assert_eq!(humanize_ns(3.0e9), "3.000 s");
+        assert_eq!(humanize_count(500.0), "500.0");
+        assert_eq!(humanize_count(1.5e3), "1.5K");
+        assert_eq!(humanize_count(2.0e6), "2.0M");
+        assert_eq!(humanize_count(3.1e9), "3.10G");
+    }
+}

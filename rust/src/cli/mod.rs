@@ -1,0 +1,155 @@
+//! Tiny command-line argument parser (clap is not in the offline crate set).
+//!
+//! Supports the subset the `geokmpp` binary needs:
+//! * positional subcommands (`geokmpp xp fig2 ...`),
+//! * `--flag value` / `--flag=value` options,
+//! * boolean `--switch` flags,
+//! * typed accessors with defaults and error reporting.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a list of positionals plus a flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parses an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare `--` is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parses the process's own argv (skipping the binary name).
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument `i`, if present.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Raw string flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Whether a boolean switch was passed (`--quiet`). A flag given a value
+    /// also counts as set.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    /// Typed flag with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let v = self.get(name).ok_or_else(|| format!("missing required --{name}"))?;
+        v.parse::<T>().map_err(|_| format!("--{name}: cannot parse {v:?}"))
+    }
+
+    /// Comma-separated list flag (`--ks 2,8,32`), with default.
+    pub fn get_list_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, String>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse::<T>().map_err(|_| format!("--{name}: bad element {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["xp", "fig2", "--k", "64", "--out=res.csv", "--quiet"]);
+        assert_eq!(a.pos(0), Some("xp"));
+        assert_eq!(a.pos(1), Some("fig2"));
+        assert_eq!(a.get("k"), Some("64"));
+        assert_eq!(a.get("out"), Some("res.csv"));
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "100", "--ratio", "0.5"]);
+        assert_eq!(a.get_or("n", 7usize).unwrap(), 100);
+        assert_eq!(a.get_or("m", 7usize).unwrap(), 7);
+        assert_eq!(a.require::<f64>("ratio").unwrap(), 0.5);
+        assert!(a.require::<usize>("missing").is_err());
+        assert!(a.get_or("ratio", 1usize).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["--ks", "1, 2,4"]);
+        assert_eq!(a.get_list_or("ks", &[9usize]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.get_list_or("js", &[9usize]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn switch_before_positional() {
+        // `--quiet xp` — `xp` doesn't start with `--` so it's consumed as the
+        // value of `quiet`; a trailing switch stays a switch.
+        let a = parse(&["run", "--fast"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.pos(0), Some("run"));
+    }
+
+    #[test]
+    fn bare_double_dash_errors() {
+        assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Job specifications and results for the experiment coordinator.
+
+use crate::core::matrix::Matrix;
+use crate::core::rng::{stream_id, Pcg64};
+use crate::seeding::{seed, Counters, SeedResult, Variant};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One seeding job: (shared dataset, k, variant, repetition).
+#[derive(Clone)]
+pub struct JobSpec {
+    /// Instance name (report key).
+    pub instance: String,
+    /// Shared dataset (jobs on one instance share one allocation, like the
+    /// paper's concurrent runs share the page cache).
+    pub data: Arc<Matrix>,
+    /// Number of centers.
+    pub k: usize,
+    /// Algorithm variant.
+    pub variant: Variant,
+    /// Repetition index (selects the RNG stream).
+    pub rep: u64,
+    /// Base seed for the experiment.
+    pub seed: u64,
+}
+
+impl JobSpec {
+    /// The job's dedicated RNG (stream derived from all coordinates).
+    pub fn rng(&self) -> Pcg64 {
+        let stream = stream_id(&[
+            self.instance.len() as u64,
+            self.k as u64,
+            self.variant as u64,
+            self.rep,
+        ]);
+        Pcg64::seed_stream(self.seed, stream)
+    }
+
+    /// Runs the job, returning a compact result.
+    pub fn run(&self) -> JobResult {
+        let mut rng = self.rng();
+        let r: SeedResult = seed(&self.data, self.k, self.variant, &mut rng);
+        JobResult {
+            instance: self.instance.clone(),
+            k: self.k,
+            variant: self.variant,
+            rep: self.rep,
+            counters: r.counters,
+            elapsed: r.elapsed,
+            cost: r.cost(),
+        }
+    }
+}
+
+/// Compact result of one job (no per-point arrays — sweeps run thousands).
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Instance name.
+    pub instance: String,
+    /// Number of centers.
+    pub k: usize,
+    /// Variant run.
+    pub variant: Variant,
+    /// Repetition index.
+    pub rep: u64,
+    /// Paper metrics.
+    pub counters: Counters,
+    /// Wall-clock time of the seeding run.
+    pub elapsed: Duration,
+    /// Final seeding cost Σ w_i.
+    pub cost: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gmm, GmmSpec};
+
+    #[test]
+    fn job_runs_and_is_deterministic() {
+        let mut rng = Pcg64::seed_from(1);
+        let data = Arc::new(gmm(&GmmSpec::new(500, 3, 4), &mut rng));
+        let spec = JobSpec {
+            instance: "test".into(),
+            data,
+            k: 8,
+            variant: Variant::Tie,
+            rep: 0,
+            seed: 99,
+        };
+        let a = spec.run();
+        let b = spec.run();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.k, 8);
+    }
+
+    #[test]
+    fn different_reps_use_different_streams() {
+        let mut rng = Pcg64::seed_from(2);
+        let data = Arc::new(gmm(&GmmSpec::new(500, 3, 4), &mut rng));
+        let mk = |rep| JobSpec {
+            instance: "t".into(),
+            data: Arc::clone(&data),
+            k: 8,
+            variant: Variant::Standard,
+            rep,
+            seed: 5,
+        };
+        let a = mk(0).run();
+        let b = mk(1).run();
+        assert_ne!(a.cost, b.cost, "reps should differ");
+    }
+}

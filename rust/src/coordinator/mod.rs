@@ -1,0 +1,17 @@
+//! Experiment coordinator: a bounded-queue worker pool that runs seeding
+//! jobs concurrently — both the engine behind every experiment sweep and
+//! the §5.3 concurrency testbed (j identical jobs sharing the machine).
+//!
+//! tokio is not in the offline crate set; this is a `std::thread` pool with
+//! a bounded MPMC channel providing backpressure (a submitting producer
+//! blocks when the queue is full).
+
+pub mod jobs;
+pub mod queue;
+pub mod report;
+pub mod scheduler;
+
+pub use jobs::{JobResult, JobSpec};
+pub use queue::BoundedQueue;
+pub use report::Report;
+pub use scheduler::{run_concurrent, Scheduler};

@@ -1,0 +1,165 @@
+//! Bounded MPMC queue (condvar-based) — the pool's backpressure primitive.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue.
+///
+/// `push` blocks while full (backpressure); `pop` blocks while empty and
+/// returns `None` once the queue is closed and drained.
+pub struct BoundedQueue<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    /// Creates a queue with the given capacity (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self {
+            inner: Arc::new(Inner {
+                queue: Mutex::new(State { items: VecDeque::new(), capacity, closed: false }),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking push. Returns `Err(item)` if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        loop {
+            if state.closed {
+                return Err(item);
+            }
+            if state.items.len() < state.capacity {
+                state.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            state = self.inner.not_full.wait(state).unwrap();
+        }
+    }
+
+    /// Blocking pop. Returns `None` when closed and empty.
+    pub fn pop(&self) -> Option<T> {
+        let mut state = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = state.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if state.closed {
+                return None;
+            }
+            state = self.inner.not_empty.wait(state).unwrap();
+        }
+    }
+
+    /// Closes the queue: producers fail, consumers drain then get `None`.
+    pub fn close(&self) {
+        let mut state = self.inner.queue.lock().unwrap();
+        state.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    /// Whether the queue is currently empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.push(8).is_err());
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_pop() {
+        let q = BoundedQueue::new(1);
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let h = thread::spawn(move || q2.push(2).unwrap());
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "producer should be blocked");
+        assert_eq!(q.pop(), Some(1));
+        h.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q = BoundedQueue::new(8);
+        let n_items = 1000;
+        let mut consumers = Vec::new();
+        for _ in 0..4 {
+            let q = q.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        let producer = {
+            let q = q.clone();
+            thread::spawn(move || {
+                for i in 0..n_items {
+                    q.push(i).unwrap();
+                }
+                q.close();
+            })
+        };
+        producer.join().unwrap();
+        let mut all: Vec<usize> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_items).collect::<Vec<_>>());
+    }
+}

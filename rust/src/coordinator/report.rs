@@ -1,0 +1,164 @@
+//! Aggregation of job results into per-(instance, k, variant) rows.
+
+use crate::coordinator::jobs::JobResult;
+use crate::metrics::table::{fnum, Table};
+use crate::metrics::timer::Stats;
+use crate::seeding::{Counters, Variant};
+use std::collections::BTreeMap;
+
+/// Aggregated metrics for one (instance, k, variant) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    /// Mean counters over repetitions.
+    pub counters: Counters,
+    /// Wall-time stats in seconds.
+    pub time: Stats,
+    /// Mean seeding cost.
+    pub mean_cost: f64,
+    /// Number of repetitions aggregated.
+    pub reps: usize,
+}
+
+/// A report: cells keyed by (instance, k, variant name).
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    cells: BTreeMap<(String, usize, &'static str), Cell>,
+}
+
+impl Report {
+    /// Builds a report from raw job results (means over repetitions).
+    pub fn aggregate(results: &[JobResult]) -> Report {
+        let mut grouped: BTreeMap<(String, usize, &'static str), Vec<&JobResult>> = BTreeMap::new();
+        for r in results {
+            grouped
+                .entry((r.instance.clone(), r.k, r.variant.name()))
+                .or_default()
+                .push(r);
+        }
+        let mut cells = BTreeMap::new();
+        for (key, rs) in grouped {
+            let reps = rs.len();
+            let mut counters = Counters::default();
+            let mut cost = 0f64;
+            let mut times = Vec::with_capacity(reps);
+            for r in &rs {
+                counters.add(&r.counters);
+                cost += r.cost;
+                times.push(r.elapsed.as_secs_f64());
+            }
+            // Mean counters.
+            let div = reps as u64;
+            counters.visited_assign /= div;
+            counters.visited_sampling /= div;
+            counters.distances /= div;
+            counters.center_distances /= div;
+            counters.norms /= div;
+            counters.filter1_rejects /= div;
+            counters.filter2_rejects /= div;
+            counters.norm_partition_rejects /= div;
+            counters.norm_point_rejects /= div;
+            counters.center_distances_avoided /= div;
+            cells.insert(
+                key,
+                Cell { counters, time: Stats::of(&times), mean_cost: cost / reps as f64, reps },
+            );
+        }
+        Report { cells }
+    }
+
+    /// Looks up a cell.
+    pub fn cell(&self, instance: &str, k: usize, variant: Variant) -> Option<&Cell> {
+        self.cells.get(&(instance.to_string(), k, variant.name()))
+    }
+
+    /// All (instance, k, variant) keys.
+    pub fn keys(&self) -> impl Iterator<Item = &(String, usize, &'static str)> {
+        self.cells.keys()
+    }
+
+    /// Ratio of a metric between two variants (`a / b`), per (instance, k).
+    pub fn ratio<F: Fn(&Cell) -> f64>(
+        &self,
+        instance: &str,
+        k: usize,
+        a: Variant,
+        b: Variant,
+        metric: F,
+    ) -> Option<f64> {
+        let ca = self.cell(instance, k, a)?;
+        let cb = self.cell(instance, k, b)?;
+        let va = metric(ca);
+        let vb = metric(cb);
+        if vb == 0.0 {
+            None
+        } else {
+            Some(va / vb)
+        }
+    }
+
+    /// Renders the full report as a table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new([
+            "instance", "k", "variant", "reps", "time_s", "visited", "distances",
+            "center_dists", "norms", "cost",
+        ]);
+        for ((inst, k, variant), c) in &self.cells {
+            t.row([
+                inst.clone(),
+                k.to_string(),
+                variant.to_string(),
+                c.reps.to_string(),
+                fnum(c.time.mean, 5),
+                c.counters.visited_total().to_string(),
+                c.counters.distances.to_string(),
+                c.counters.center_distances.to_string(),
+                c.counters.norms.to_string(),
+                fnum(c.mean_cost, 2),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn result(variant: Variant, rep: u64, distances: u64) -> JobResult {
+        JobResult {
+            instance: "i".into(),
+            k: 4,
+            variant,
+            rep,
+            counters: Counters { distances, ..Default::default() },
+            elapsed: Duration::from_millis(10 + rep),
+            cost: 100.0 + rep as f64,
+        }
+    }
+
+    #[test]
+    fn aggregates_means() {
+        let rs = vec![
+            result(Variant::Tie, 0, 10),
+            result(Variant::Tie, 1, 20),
+            result(Variant::Standard, 0, 100),
+        ];
+        let rep = Report::aggregate(&rs);
+        let tie = rep.cell("i", 4, Variant::Tie).unwrap();
+        assert_eq!(tie.reps, 2);
+        assert_eq!(tie.counters.distances, 15);
+        assert_eq!(tie.mean_cost, 100.5);
+        let speedup = rep
+            .ratio("i", 4, Variant::Standard, Variant::Tie, |c| c.counters.distances as f64)
+            .unwrap();
+        assert!((speedup - 100.0 / 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_has_all_cells() {
+        let rs = vec![result(Variant::Tie, 0, 1), result(Variant::Full, 0, 2)];
+        let t = Report::aggregate(&rs).to_table();
+        assert_eq!(t.len(), 2);
+    }
+}

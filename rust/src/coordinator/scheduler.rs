@@ -1,0 +1,130 @@
+//! Worker-pool scheduler over the bounded queue.
+
+use crate::coordinator::jobs::{JobResult, JobSpec};
+use crate::coordinator::queue::BoundedQueue;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// A fixed-size worker pool consuming [`JobSpec`]s.
+pub struct Scheduler {
+    workers: usize,
+    queue_capacity: usize,
+}
+
+impl Scheduler {
+    /// Creates a scheduler with `workers` threads (≥ 1) and a bounded input
+    /// queue of `queue_capacity`.
+    pub fn new(workers: usize, queue_capacity: usize) -> Self {
+        Self { workers: workers.max(1), queue_capacity: queue_capacity.max(1) }
+    }
+
+    /// Runs all jobs to completion, returning results in completion order.
+    pub fn run(&self, specs: Vec<JobSpec>) -> Vec<JobResult> {
+        let queue: BoundedQueue<JobSpec> = BoundedQueue::new(self.queue_capacity);
+        let results = Arc::new(Mutex::new(Vec::with_capacity(specs.len())));
+
+        let mut handles = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let q = queue.clone();
+            let out = Arc::clone(&results);
+            handles.push(thread::spawn(move || {
+                while let Some(spec) = q.pop() {
+                    let result = spec.run();
+                    out.lock().unwrap().push(result);
+                }
+            }));
+        }
+        // Producer side: backpressure via the bounded queue.
+        for spec in specs {
+            queue.push(spec).ok();
+        }
+        queue.close();
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        Arc::try_unwrap(results).map(|m| m.into_inner().unwrap()).unwrap_or_default()
+    }
+}
+
+/// The §5.3 experiment primitive: runs the *same* job `j` times
+/// concurrently on `j` OS threads and returns each copy's wall time in
+/// seconds. Interference (shared LLC, memory bandwidth, frequency) shows up
+/// as real slowdown — this is the measured row of Fig. 6.
+pub fn run_concurrent(spec: &JobSpec, j: usize) -> Vec<f64> {
+    assert!(j >= 1);
+    let mut handles = Vec::with_capacity(j);
+    let barrier = Arc::new(std::sync::Barrier::new(j));
+    for copy in 0..j {
+        let mut spec = spec.clone();
+        spec.rep = spec.rep * 1000 + copy as u64; // distinct streams
+        let barrier = Arc::clone(&barrier);
+        handles.push(thread::spawn(move || {
+            barrier.wait(); // synchronized start, like a cluster queue burst
+            let r = spec.run();
+            r.elapsed.as_secs_f64()
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("job panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::data::synth::{gmm, GmmSpec};
+    use crate::seeding::Variant;
+
+    fn specs(n_jobs: usize) -> Vec<JobSpec> {
+        let mut rng = Pcg64::seed_from(3);
+        let data = Arc::new(gmm(&GmmSpec::new(400, 3, 4), &mut rng));
+        (0..n_jobs)
+            .map(|rep| JobSpec {
+                instance: "t".into(),
+                data: Arc::clone(&data),
+                k: 6,
+                variant: Variant::Full,
+                rep: rep as u64,
+                seed: 11,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_completes_all_jobs() {
+        let s = Scheduler::new(4, 2);
+        let results = s.run(specs(20));
+        assert_eq!(results.len(), 20);
+        let mut reps: Vec<u64> = results.iter().map(|r| r.rep).collect();
+        reps.sort_unstable();
+        assert_eq!(reps, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let s = Scheduler::new(1, 1);
+        assert_eq!(s.run(specs(5)).len(), 5);
+    }
+
+    #[test]
+    fn concurrent_runs_return_j_times() {
+        let spec = &specs(1)[0];
+        let times = run_concurrent(spec, 4);
+        assert_eq!(times.len(), 4);
+        assert!(times.iter().all(|&t| t > 0.0));
+    }
+
+    #[test]
+    fn pool_results_match_serial_costs() {
+        // Concurrency must not change results (determinism per stream).
+        let serial: Vec<f64> = specs(8).into_iter().map(|s| s.run().cost).collect();
+        let mut pooled: Vec<(u64, f64)> = Scheduler::new(4, 4)
+            .run(specs(8))
+            .into_iter()
+            .map(|r| (r.rep, r.cost))
+            .collect();
+        pooled.sort_by_key(|&(rep, _)| rep);
+        for (rep, cost) in pooled {
+            assert_eq!(cost, serial[rep as usize]);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Squared-Euclidean / Euclidean distance kernels (scalar hot path).
+//!
+//! The paper works in SED throughout (§3.1): it preserves distance ranking,
+//! drops the square root, and the TIE thresholds translate as
+//! `ED(c, c_best) > 2·ED_min  ⇔  SED(c, c_best) > 4·SED_min` (Eq. 5).
+//!
+//! Two scalar forms are provided:
+//! * [`sed`] — the direct `Σ (x_j − y_j)²`, 4-way unrolled. This is the
+//!   inner loop of every seeder variant.
+//! * [`sed_dot`] — the Appendix-B decomposition
+//!   `SED(x, y) = ‖x‖² + ‖y‖² − 2·x·y`, which reuses precomputed squared
+//!   norms and turns the per-point work into a dot product. The same
+//!   decomposition is what makes the L1 Pallas kernel MXU-friendly.
+
+/// Squared Euclidean distance between two equal-length vectors.
+///
+/// Length-dispatched (§Perf iteration 2): for `d ≤ 256` the plain
+/// iterator form autovectorizes best (measured ~1.2–1.6× faster than the
+/// unrolled form at d ∈ [3, 128]); for larger `d` the 4-way unrolled
+/// version with independent accumulator chains wins (~1.2× at d = 784).
+#[inline]
+pub fn sed(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    if x.len() <= 256 {
+        return sed_naive(x, y);
+    }
+    sed_unrolled(x, y)
+}
+
+/// The 4-way unrolled SED used for large dimensionalities.
+#[inline]
+pub fn sed_unrolled(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+    // Safety-free chunked iteration: slice patterns keep this bound-check free.
+    for i in 0..chunks {
+        let b = i * 4;
+        let d0 = x[b] - y[b];
+        let d1 = x[b + 1] - y[b + 1];
+        let d2 = x[b + 2] - y[b + 2];
+        let d3 = x[b + 3] - y[b + 3];
+        a0 += d0 * d0;
+        a1 += d1 * d1;
+        a2 += d2 * d2;
+        a3 += d3 * d3;
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in chunks * 4..n {
+        let d = x[i] - y[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Euclidean distance (`sqrt` of [`sed`]). Only used where the paper needs a
+/// true metric: the norm-filter bounds `l(x), u(x)` of §4.3.
+#[inline]
+pub fn ed(x: &[f32], y: &[f32]) -> f32 {
+    sed(x, y).sqrt()
+}
+
+/// Dot product, 4-way unrolled (shared by [`sed_dot`] and PCA).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let b = i * 4;
+        a0 += x[b] * y[b];
+        a1 += x[b + 1] * y[b + 1];
+        a2 += x[b + 2] * y[b + 2];
+        a3 += x[b + 3] * y[b + 3];
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in chunks * 4..n {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+/// Appendix-B SED: `‖x‖² + ‖y‖² − 2·x·y` with both squared norms
+/// precomputed. Clamped at zero (the decomposition can go slightly negative
+/// in f32 for near-identical points).
+#[inline]
+pub fn sed_dot(x: &[f32], y: &[f32], x_sqnorm: f32, y_sqnorm: f32) -> f32 {
+    (x_sqnorm + y_sqnorm - 2.0 * dot(x, y)).max(0.0)
+}
+
+/// Squared norm `‖x‖²` of a vector.
+#[inline]
+pub fn sqnorm(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// Iterator-form SED: the reference implementation *and* the small-`d`
+/// fast path (LLVM autovectorizes this form well).
+#[inline]
+pub fn sed_naive(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+
+    fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_f32() * 10.0 - 5.0).collect()
+    }
+
+    #[test]
+    fn sed_matches_naive_across_lengths() {
+        let mut rng = Pcg64::seed_from(1);
+        for n in [0, 1, 2, 3, 4, 5, 7, 8, 13, 64, 127, 300] {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let got = sed(&x, &y);
+            let want = sed_naive(&x, &y);
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn ed_is_sqrt_of_sed() {
+        let x = [0.0f32, 3.0];
+        let y = [4.0f32, 0.0];
+        assert_eq!(sed(&x, &y), 25.0);
+        assert_eq!(ed(&x, &y), 5.0);
+    }
+
+    #[test]
+    fn sed_dot_matches_direct() {
+        let mut rng = Pcg64::seed_from(2);
+        for n in [1, 3, 8, 50, 128] {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let direct = sed(&x, &y);
+            let viadot = sed_dot(&x, &y, sqnorm(&x), sqnorm(&y));
+            assert!(
+                (direct - viadot).abs() <= 1e-3 * direct.max(1.0),
+                "n={n}: {direct} vs {viadot}"
+            );
+        }
+    }
+
+    #[test]
+    fn sed_dot_clamps_negative_zero() {
+        let x = [1.0f32, 2.0, 3.0];
+        let d = sed_dot(&x, &x, sqnorm(&x), sqnorm(&x));
+        assert!(d >= 0.0 && d < 1e-5);
+    }
+
+    #[test]
+    fn sed_identity_is_zero() {
+        let x = [1.5f32, -2.5, 0.25, 9.0, 1.0];
+        assert_eq!(sed(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn sed_is_symmetric() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let y = [5.0f32, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!(sed(&x, &y), sed(&y, &x));
+    }
+
+    /// The paper's footnote-1 counterexample: SED violates the TIE…
+    #[test]
+    fn sed_is_not_a_metric() {
+        let x = [0.0f32, 0.0];
+        let y = [2.0f32, 2.0];
+        let z = [1.0f32, 1.0];
+        assert!(sed(&x, &y) > sed(&x, &z) + sed(&z, &y));
+    }
+
+    /// …but preserves ranking (§3.1), which is all the algorithm needs.
+    #[test]
+    fn sed_preserves_ranking() {
+        let p = [0.0f32, 0.0];
+        let near = [1.0f32, 1.0];
+        let far = [3.0f32, 3.0];
+        assert!(ed(&p, &near) < ed(&p, &far));
+        assert!(sed(&p, &near) < sed(&p, &far));
+    }
+}

@@ -1,0 +1,233 @@
+//! Row-major `f32` matrix: the dataset representation.
+//!
+//! Points are rows. The layout is deliberately a single contiguous `Vec<f32>`
+//! so the standard k-means++ scan is a pure sequential sweep (the paper's
+//! §5.3 locality analysis depends on this) and so chunks can be handed to the
+//! PJRT executables without copies beyond padding.
+
+/// A dense row-major matrix of `f32` values.
+///
+/// Rows are points, columns are features. Indexing is `m.row(i)[j]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Creates a matrix from a flat row-major buffer.
+    ///
+    /// # Panics
+    /// Panics if `data.len() != rows * cols`.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "Matrix::from_vec: buffer length {} != {rows}x{cols}",
+            data.len()
+        );
+        Self { data, rows, cols }
+    }
+
+    /// Creates a zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Number of rows (points).
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (dimensions).
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Returns row `i` as a slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Returns row `i` as a mutable slice.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// The flat row-major buffer.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The flat row-major buffer, mutably.
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consumes the matrix, returning the flat buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Appends a row. `row.len()` must equal `cols` (or the matrix must be
+    /// empty, in which case `cols` is set from the row).
+    pub fn push_row(&mut self, row: &[f32]) {
+        if self.rows == 0 && self.cols == 0 {
+            self.cols = row.len();
+        }
+        assert_eq!(row.len(), self.cols, "push_row: wrong width");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Builds a new matrix from the given row indices of `self`.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// A contiguous block of rows `[start, start + len)` as a slice.
+    #[inline]
+    pub fn rows_slice(&self, start: usize, len: usize) -> &[f32] {
+        &self.data[start * self.cols..(start + len) * self.cols]
+    }
+
+    /// Per-column mean.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut means = vec![0f64; self.cols];
+        for i in 0..self.rows {
+            for (m, &v) in means.iter_mut().zip(self.row(i)) {
+                *m += v as f64;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        for m in &mut means {
+            *m /= n;
+        }
+        means
+    }
+
+    /// Per-column median (O(n log n) per column; used only by Appendix B
+    /// reference-point selection).
+    pub fn col_medians(&self) -> Vec<f32> {
+        let mut med = Vec::with_capacity(self.cols);
+        let mut col = vec![0f32; self.rows];
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                col[i] = self.row(i)[j];
+            }
+            col.sort_by(|a, b| a.total_cmp(b));
+            let m = if self.rows % 2 == 1 {
+                col[self.rows / 2]
+            } else {
+                0.5 * (col[self.rows / 2 - 1] + col[self.rows / 2])
+            };
+            med.push(m);
+        }
+        med
+    }
+
+    /// Per-column minimum (the "positive" reference point of Appendix B).
+    pub fn col_mins(&self) -> Vec<f32> {
+        let mut mins = vec![f32::INFINITY; self.cols];
+        for i in 0..self.rows {
+            for (m, &v) in mins.iter_mut().zip(self.row(i)) {
+                if v < *m {
+                    *m = v;
+                }
+            }
+        }
+        mins
+    }
+
+    /// Subtracts `shift` from every row in place (data re-referencing for
+    /// Appendix B; relative distances are unchanged).
+    pub fn shift_by(&mut self, shift: &[f32]) {
+        assert_eq!(shift.len(), self.cols);
+        for i in 0..self.rows {
+            for (v, &s) in self.data[i * self.cols..(i + 1) * self.cols].iter_mut().zip(shift) {
+                *v -= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_roundtrip() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length")]
+    fn from_vec_bad_len_panics() {
+        let _ = Matrix::from_vec(vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = Matrix::zeros(0, 0);
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[3.0, 4.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = Matrix::from_vec((0..12).map(|v| v as f32).collect(), 4, 3);
+        let g = m.gather_rows(&[3, 0]);
+        assert_eq!(g.row(0), m.row(3));
+        assert_eq!(g.row(1), m.row(0));
+    }
+
+    #[test]
+    fn col_stats() {
+        let m = Matrix::from_vec(vec![1.0, 10.0, 3.0, 20.0, 2.0, 30.0], 3, 2);
+        assert_eq!(m.col_means(), vec![2.0, 20.0]);
+        assert_eq!(m.col_medians(), vec![2.0, 20.0]);
+        assert_eq!(m.col_mins(), vec![1.0, 10.0]);
+    }
+
+    #[test]
+    fn col_median_even_rows() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0], 4, 1);
+        assert_eq!(m.col_medians(), vec![2.5]);
+    }
+
+    #[test]
+    fn shift_preserves_relative_distances() {
+        use crate::core::distance::sed;
+        let mut m = Matrix::from_vec(vec![0.0, 0.0, 3.0, 4.0], 2, 2);
+        let before = sed(m.row(0), m.row(1));
+        m.shift_by(&[7.0, -2.0]);
+        let after = sed(m.row(0), m.row(1));
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn rows_slice_is_contiguous() {
+        let m = Matrix::from_vec((0..12).map(|v| v as f32).collect(), 4, 3);
+        assert_eq!(m.rows_slice(1, 2), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    }
+}

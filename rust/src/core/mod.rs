@@ -1,0 +1,10 @@
+//! Core numeric substrates: dataset matrix, distances, RNG, sampling, norms.
+//!
+//! Everything in this module is dependency-free (the offline crate set has no
+//! `rand`/`ndarray`); the implementations are small, documented, and tested.
+
+pub mod distance;
+pub mod matrix;
+pub mod norms;
+pub mod rng;
+pub mod sampling;

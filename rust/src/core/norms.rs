@@ -1,0 +1,160 @@
+//! Point norms and reference-point shifted norms (§3.3, §4.3, Appendix B).
+//!
+//! The norm filter needs, per point, `‖x‖₂` (a true metric quantity — the
+//! bounds `l(x) = ‖x‖ − ED(x, c)` and `u(x) = ‖x‖ + ED(x, c)` require the
+//! square root). Norms are computed once up front (§4.3: "efficiently
+//! pre-computed at the start… since they remain constant").
+//!
+//! Appendix B generalizes the origin to an arbitrary reference point `o`:
+//! the "norm" becomes `ED(x, o)`, equivalent to shifting the data so `o` is
+//! the origin. [`norms_from`] implements exactly that.
+
+use crate::core::distance::{ed, sqnorm};
+use crate::core::matrix::Matrix;
+
+/// Per-point Euclidean norms `‖x_i‖₂` (reference point = origin).
+pub fn norms(data: &Matrix) -> Vec<f32> {
+    (0..data.rows()).map(|i| sqnorm(data.row(i)).sqrt()).collect()
+}
+
+/// Per-point squared norms `‖x_i‖₂²` (for the Appendix-B dot-product SED).
+pub fn sqnorms(data: &Matrix) -> Vec<f32> {
+    (0..data.rows()).map(|i| sqnorm(data.row(i))).collect()
+}
+
+/// Per-point norms relative to an arbitrary reference point
+/// (`ED(x_i, reference)`), Appendix B.
+pub fn norms_from(data: &Matrix, reference: &[f32]) -> Vec<f32> {
+    assert_eq!(reference.len(), data.cols());
+    (0..data.rows()).map(|i| ed(data.row(i), reference)).collect()
+}
+
+/// The paper's "% norm variance" statistic (Tables 1–2).
+///
+/// The paper never spells out the formula; we use the Popoviciu-normalized
+/// variance — the observed variance of the norms as a percentage of the
+/// maximum variance any distribution on the same range could have
+/// (`Var_max = ((max − min)/2)²`):
+///
+/// ```text
+/// NV% = 100 · Var(r) / ((max r − min r) / 2)²
+/// ```
+///
+/// This is bounded in `[0, 100]` (Popoviciu's inequality), scale-free, and
+/// reproduces the paper's regime structure: bimodal norm profiles (S-NS,
+/// GS-CO, GSAD, PTN) score high (→100), uniform profiles score ≈33, and
+/// concentrated unimodal profiles (YAH, HPC, MNIST, RQ) score low (<10).
+/// See DESIGN.md §Substitutions.
+pub fn norm_variance_pct(norms: &[f32]) -> f64 {
+    if norms.len() < 2 {
+        return 0.0;
+    }
+    let n = norms.len() as f64;
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut sum = 0f64;
+    for &x in norms {
+        let x = x as f64;
+        if x < lo {
+            lo = x;
+        }
+        if x > hi {
+            hi = x;
+        }
+        sum += x;
+    }
+    if hi <= lo {
+        return 0.0;
+    }
+    let mean = sum / n;
+    let var: f64 = norms.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n;
+    let half_range = (hi - lo) / 2.0;
+    (100.0 * var / (half_range * half_range)).min(100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_basic() {
+        let m = Matrix::from_vec(vec![3.0, 4.0, 0.0, 0.0], 2, 2);
+        assert_eq!(norms(&m), vec![5.0, 0.0]);
+        assert_eq!(sqnorms(&m), vec![25.0, 0.0]);
+    }
+
+    #[test]
+    fn norms_from_shifts_reference() {
+        let m = Matrix::from_vec(vec![3.0, 4.0], 1, 2);
+        assert_eq!(norms_from(&m, &[3.0, 4.0]), vec![0.0]);
+        assert_eq!(norms_from(&m, &[0.0, 0.0]), norms(&m));
+    }
+
+    #[test]
+    fn norms_from_equals_shifted_data_norms() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, -3.0, 0.5, 4.0, 4.0], 3, 2);
+        let r = [0.5f32, -1.0];
+        let via_ref = norms_from(&m, &r);
+        let mut shifted = m.clone();
+        shifted.shift_by(&r);
+        let via_shift = norms(&shifted);
+        for (a, b) in via_ref.iter().zip(&via_shift) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nv_zero_for_constant_norms() {
+        // All points on a sphere → zero norm variance.
+        let m = Matrix::from_vec(vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0], 3, 2);
+        let nv = norm_variance_pct(&norms(&m));
+        assert!(nv < 1e-9, "nv={nv}");
+    }
+
+    #[test]
+    fn nv_bounded_0_100() {
+        let samples = vec![0.0f32, 1.0, 10.0, 100.0, 1000.0];
+        let nv = norm_variance_pct(&samples);
+        assert!((0.0..=100.0).contains(&nv), "nv={nv}");
+    }
+
+    #[test]
+    fn nv_bimodal_near_100() {
+        let mut samples = vec![1.0f32; 50];
+        samples.extend(vec![100.0f32; 50]);
+        let nv = norm_variance_pct(&samples);
+        assert!(nv > 99.0, "nv={nv}");
+    }
+
+    #[test]
+    fn nv_uniform_near_33() {
+        let samples: Vec<f32> = (0..10_000).map(|i| i as f32).collect();
+        let nv = norm_variance_pct(&samples);
+        assert!((nv - 33.3).abs() < 1.0, "nv={nv}");
+    }
+
+    #[test]
+    fn nv_gaussian_is_low() {
+        use crate::core::rng::{Pcg64, Rng};
+        let mut rng = Pcg64::seed_from(1);
+        let samples: Vec<f32> = (0..50_000).map(|_| 100.0 + rng.normal() as f32).collect();
+        let nv = norm_variance_pct(&samples);
+        assert!(nv < 15.0, "nv={nv}");
+    }
+
+    #[test]
+    fn nv_scale_free() {
+        let a: Vec<f32> = (0..1000).map(|i| (i % 7) as f32).collect();
+        let b: Vec<f32> = a.iter().map(|&x| x * 1000.0).collect();
+        let nva = norm_variance_pct(&a);
+        let nvb = norm_variance_pct(&b);
+        assert!((nva - nvb).abs() < 0.1);
+    }
+
+    #[test]
+    fn nv_empty_is_zero() {
+        assert_eq!(norm_variance_pct(&[]), 0.0);
+        assert_eq!(norm_variance_pct(&[5.0]), 0.0);
+        assert_eq!(norm_variance_pct(&[5.0, 5.0]), 0.0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so this module implements the two
+//! generators the project needs from scratch:
+//!
+//! * [`SplitMix64`] — a tiny 64-bit mixer, used to seed/split streams.
+//! * [`Pcg64`] — PCG XSL-RR 128/64, the workhorse generator. Statistically
+//!   solid, 16 bytes of state, trivially reproducible across platforms.
+//!
+//! All experiment entry points take explicit seeds; a (instance, k, variant,
+//! repetition) tuple maps to a unique stream via [`Pcg64::seed_stream`].
+
+/// Minimal RNG interface used throughout the crate.
+pub trait Rng {
+    /// Next raw 64 random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    fn uniform_f64(&mut self) -> f64 {
+        // 53 high bits → the standard [0,1) double construction.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    fn uniform_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's rejection method, unbiased).
+    #[inline]
+    fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "Rng::below: bound must be positive");
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound {
+                return (m >> 64) as usize;
+            }
+            // Rejection zone: only entered with probability < bound / 2^64.
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal sample (Box–Muller; one value per call, simple and
+    /// adequate — data generation is not on the hot path).
+    #[inline]
+    fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform_f64();
+            if u1 > 1e-300 {
+                let u2 = self.uniform_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T])
+    where
+        Self: Sized,
+    {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+impl<R: Rng + ?Sized> Rng for &mut R {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        (**self).next_u64()
+    }
+}
+
+/// SplitMix64 — seeding mixer (Steele, Lea, Flood 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Creates a SplitMix64 from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+}
+
+impl Rng for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG XSL-RR 128/64 (O'Neill 2014). 128-bit LCG state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // stream selector; must be odd
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Creates a generator from a 64-bit seed (default stream).
+    pub fn seed_from(seed: u64) -> Self {
+        Self::seed_stream(seed, 0)
+    }
+
+    /// Creates a generator on an independent stream. `(seed, stream)` pairs
+    /// give statistically independent sequences — experiments use
+    /// `stream = hash(instance, k, variant, rep)`.
+    pub fn seed_stream(seed: u64, stream: u64) -> Self {
+        let mut mix = SplitMix64::new(seed ^ 0xA02B_DBF7_BB3C_0A7A);
+        let s0 = mix.next_u64();
+        let s1 = mix.next_u64();
+        let mut mix2 = SplitMix64::new(stream ^ 0x6A09_E667_F3BC_C909);
+        let i0 = mix2.next_u64();
+        let i1 = mix2.next_u64();
+        let mut rng = Self {
+            state: (s0 as u128) << 64 | s1 as u128,
+            inc: ((i0 as u128) << 64 | i1 as u128) | 1,
+        };
+        // Burn a few outputs so near-identical seeds decorrelate.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+}
+
+impl Rng for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+}
+
+/// Hashes an experiment coordinate into a stream id for [`Pcg64::seed_stream`].
+pub fn stream_id(parts: &[u64]) -> u64 {
+    let mut h = SplitMix64::new(0x9E37_79B9_7F4A_7C15);
+    let mut acc = 0u64;
+    for &p in parts {
+        acc = acc.rotate_left(13) ^ p.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        acc ^= h.next_u64();
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic() {
+        let mut a = Pcg64::seed_from(7);
+        let mut b = Pcg64::seed_from(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::seed_stream(7, 0);
+        let mut b = Pcg64::seed_stream(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_f64_in_range_and_spread() {
+        let mut rng = Pcg64::seed_from(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = rng.uniform_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut rng = Pcg64::seed_from(11);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = n as f64 / 7.0;
+            assert!(
+                (c as f64 - expect).abs() < 5.0 * expect.sqrt(),
+                "bucket {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bound must be positive")]
+    fn below_zero_panics() {
+        Pcg64::seed_from(1).below(0);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seed_from(5);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.normal();
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Pcg64::seed_from(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the published SplitMix64 algorithm, seed=0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+    }
+}

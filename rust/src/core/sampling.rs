@@ -1,0 +1,239 @@
+//! Weighted sampling: roulette-wheel selection and the paper's two-step
+//! cluster→point procedure (§4.2.2).
+//!
+//! The standard k-means++ D² step draws a point with probability
+//! `p_i = w_i / Σ w_j` — a linear scan. The accelerated algorithm replaces it
+//! with a two-step draw: roulette over per-cluster sums `s_j`, then roulette
+//! inside the chosen cluster (expected `O(k + n/k)`), optionally with cached
+//! per-cluster cumulative sums + binary search (the §4.2.2 refinement).
+
+use crate::core::rng::Rng;
+
+/// Linear-scan roulette wheel over `weights`. Returns the selected index.
+///
+/// Zero-weight entries are never selected; if all weights are zero (every
+/// remaining point coincides with a center) an arbitrary valid index `0` is
+/// returned, matching the standard-library-of-the-paper behaviour of
+/// "pick anything, the clustering cost is already 0".
+pub fn roulette<R: Rng>(weights: &[f32], total: f64, rng: &mut R) -> usize {
+    debug_assert!(!weights.is_empty());
+    if total <= 0.0 {
+        return 0;
+    }
+    let r = rng.uniform_f64() * total;
+    let mut acc = 0f64;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w as f64;
+        if acc > r {
+            return i;
+        }
+    }
+    // Float round-off: the accumulated sum fell short of `total`; return the
+    // last positively-weighted entry.
+    weights
+        .iter()
+        .rposition(|&w| w > 0.0)
+        .unwrap_or(weights.len() - 1)
+}
+
+/// Roulette over an *indexed subset*: `weights[idx[i]]` for `i` in `idx`.
+/// Used by the two-step procedure's second step, where a cluster stores
+/// member indices into the global weight array.
+pub fn roulette_indexed<R: Rng>(
+    weights: &[f32],
+    idx: &[usize],
+    total: f64,
+    rng: &mut R,
+) -> usize {
+    debug_assert!(!idx.is_empty());
+    if total <= 0.0 {
+        return idx[0];
+    }
+    let r = rng.uniform_f64() * total;
+    let mut acc = 0f64;
+    for &i in idx {
+        acc += weights[i] as f64;
+        if acc > r {
+            return i;
+        }
+    }
+    idx.iter()
+        .rev()
+        .copied()
+        .find(|&i| weights[i] > 0.0)
+        .unwrap_or(*idx.last().unwrap())
+}
+
+/// Roulette over `f64` weights (used for the cluster-selection step, whose
+/// sums are kept in f64 to avoid drift).
+pub fn roulette_f64<R: Rng>(weights: &[f64], total: f64, rng: &mut R) -> usize {
+    debug_assert!(!weights.is_empty());
+    if total <= 0.0 {
+        return 0;
+    }
+    let r = rng.uniform_f64() * total;
+    let mut acc = 0f64;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w;
+        if acc > r {
+            return i;
+        }
+    }
+    weights.iter().rposition(|&w| w > 0.0).unwrap_or(weights.len() - 1)
+}
+
+/// Cumulative-sum table enabling `O(log n)` weighted draws (§4.2.2's
+/// binary-search refinement). Valid as long as the underlying cluster is
+/// unchanged; the owning cluster invalidates it on any weight update.
+#[derive(Clone, Debug, Default)]
+pub struct CumTable {
+    /// `cum[i]` = sum of weights of members `0..=i`.
+    cum: Vec<f64>,
+}
+
+impl CumTable {
+    /// Builds the table from a cluster's member weights.
+    pub fn build(weights: &[f32], idx: &[usize]) -> Self {
+        let mut cum = Vec::with_capacity(idx.len());
+        let mut acc = 0f64;
+        for &i in idx {
+            acc += weights[i] as f64;
+            cum.push(acc);
+        }
+        Self { cum }
+    }
+
+    /// Wraps an already-accumulated cumulative-sum vector (built for free
+    /// during a scan that was touching every member anyway — the §4.2.2
+    /// "compute the cumulative sums each time a cluster is visited").
+    pub fn from_cumulative(cum: Vec<f64>) -> Self {
+        Self { cum }
+    }
+
+    /// Total weight covered by the table.
+    pub fn total(&self) -> f64 {
+        *self.cum.last().unwrap_or(&0.0)
+    }
+
+    /// Whether the table has been built and not invalidated.
+    pub fn is_valid(&self) -> bool {
+        !self.cum.is_empty()
+    }
+
+    /// Invalidates the table (owning cluster changed).
+    pub fn invalidate(&mut self) {
+        self.cum.clear();
+    }
+
+    /// Draws a member *position* (index into the cluster's member list) by
+    /// binary search — `O(log n)`.
+    pub fn draw<R: Rng>(&self, rng: &mut R) -> usize {
+        debug_assert!(self.is_valid());
+        let total = self.total();
+        if total <= 0.0 {
+            return 0;
+        }
+        let r = rng.uniform_f64() * total;
+        // partition_point: first position whose cumsum exceeds r.
+        self.cum.partition_point(|&c| c <= r).min(self.cum.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+
+    fn freq_of<F: FnMut(&mut Pcg64) -> usize>(n_draws: usize, k: usize, mut f: F) -> Vec<f64> {
+        let mut rng = Pcg64::seed_from(1234);
+        let mut counts = vec![0usize; k];
+        for _ in 0..n_draws {
+            counts[f(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / n_draws as f64).collect()
+    }
+
+    #[test]
+    fn roulette_respects_weights() {
+        let w = [1.0f32, 0.0, 3.0, 6.0];
+        let total: f64 = w.iter().map(|&x| x as f64).sum();
+        let freq = freq_of(100_000, 4, |rng| roulette(&w, total, rng));
+        assert!((freq[0] - 0.1).abs() < 0.01);
+        assert_eq!(freq[1], 0.0);
+        assert!((freq[2] - 0.3).abs() < 0.01);
+        assert!((freq[3] - 0.6).abs() < 0.01);
+    }
+
+    #[test]
+    fn roulette_all_zero_returns_valid() {
+        let w = [0.0f32; 5];
+        let mut rng = Pcg64::seed_from(1);
+        let i = roulette(&w, 0.0, &mut rng);
+        assert!(i < 5);
+    }
+
+    #[test]
+    fn roulette_indexed_matches_subset() {
+        let w = [5.0f32, 1.0, 2.0, 0.0, 2.0];
+        let idx = [1usize, 2, 4];
+        let total = 5.0f64;
+        let mut rng = Pcg64::seed_from(7);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..50_000 {
+            *counts.entry(roulette_indexed(&w, &idx, total, &mut rng)).or_insert(0usize) += 1;
+        }
+        assert!(counts.keys().all(|i| idx.contains(i)));
+        let f1 = counts[&1] as f64 / 50_000.0;
+        assert!((f1 - 0.2).abs() < 0.01, "f1={f1}");
+    }
+
+    #[test]
+    fn cum_table_draw_matches_linear_distribution() {
+        let w = [2.0f32, 0.0, 1.0, 5.0];
+        let idx = [0usize, 1, 2, 3];
+        let table = CumTable::build(&w, &idx);
+        assert_eq!(table.total(), 8.0);
+        let freq = freq_of(80_000, 4, |rng| table.draw(rng));
+        assert!((freq[0] - 0.25).abs() < 0.01);
+        assert_eq!(freq[1], 0.0);
+        assert!((freq[2] - 0.125).abs() < 0.01);
+        assert!((freq[3] - 0.625).abs() < 0.01);
+    }
+
+    #[test]
+    fn cum_table_invalidation() {
+        let w = [1.0f32, 2.0];
+        let mut t = CumTable::build(&w, &[0, 1]);
+        assert!(t.is_valid());
+        t.invalidate();
+        assert!(!t.is_valid());
+    }
+
+    /// Two-step sampling (cluster roulette then member roulette) must match
+    /// the flat D² distribution — the paper's §4.2.2 equivalence claim.
+    #[test]
+    fn two_step_equals_flat_distribution() {
+        // 3 clusters with fixed membership and weights.
+        let w = [1.0f32, 3.0, 2.0, 2.0, 0.0, 4.0];
+        let clusters: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
+        let sums: Vec<f64> = clusters
+            .iter()
+            .map(|c| c.iter().map(|&i| w[i] as f64).sum())
+            .collect();
+        let grand: f64 = sums.iter().sum();
+
+        let flat = freq_of(200_000, 6, |rng| roulette(&w, grand, rng));
+        let two = freq_of(200_000, 6, |rng| {
+            let j = roulette_f64(&sums, grand, rng);
+            roulette_indexed(&w, &clusters[j], sums[j], rng)
+        });
+        for i in 0..6 {
+            assert!(
+                (flat[i] - two[i]).abs() < 0.01,
+                "point {i}: flat={} two-step={}",
+                flat[i],
+                two[i]
+            );
+        }
+    }
+}

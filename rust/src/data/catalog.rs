@@ -1,0 +1,307 @@
+//! The Table-1 instance catalog.
+//!
+//! The paper evaluates on 21 real datasets that are only "available on
+//! request"; each catalog entry mirrors one of them with a synthetic
+//! generator matching the properties the paper's analysis actually uses:
+//! the dimensionality `d`, the **norm-variance regime** (low / mid / high —
+//! the norm filter's effectiveness knob), and the **spatial character**
+//! (separated blobs / dense central mass / uniform spread / road-polyline /
+//! low-rank image-like — the TIE filter's effectiveness knob). `n` is scaled
+//! down to laptop scale; the paper's original `n` is recorded alongside.
+//!
+//! Every experiment runner refers to instances by the paper's short names
+//! (MGT, CIF-C, …, SUSY).
+
+use crate::core::matrix::Matrix;
+use crate::core::rng::{stream_id, Pcg64, Rng};
+use crate::data::synth;
+
+/// Norm-variance regime (qualitative band; the quantitative targets from
+/// Table 1 are recorded per instance and reported side-by-side).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NvBand {
+    /// `NV% < 18` — norm filter expected ineffective (YAH, HPC, RQ…).
+    Low,
+    /// `18 ≤ NV% ≤ 48` — intermediate (3DR, SUSY, C-10…).
+    Mid,
+    /// `NV% > 40` — norm filter expected effective (S-NS, GS-CO, PTN…).
+    High,
+}
+
+impl NvBand {
+    /// Whether an achieved NV% value falls inside the band (bands overlap
+    /// slightly; generators are tuned to the band's core).
+    pub fn contains(&self, nv: f64) -> bool {
+        match self {
+            NvBand::Low => nv < 18.0,
+            NvBand::Mid => (14.0..=48.0).contains(&nv),
+            NvBand::High => nv > 40.0,
+        }
+    }
+}
+
+/// Spatial character of an instance — drives the generator family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Character {
+    /// Well-separated Gaussian blobs at the given radii from the origin.
+    RadialBlobs,
+    /// Dense central mass with sparse halo (CIF-C / HAR shape).
+    CentralMass,
+    /// Uniform-ish cube/box (S-NS RGB-cube shape via radial blobs instead).
+    UniformBox,
+    /// Points along polylines (3DR road-network shape).
+    Polyline,
+    /// Low-rank image-like data (MNIST / CIFAR shape).
+    ImageLike,
+    /// Concentric shells (radial multi-modal norm profile).
+    Shells,
+}
+
+/// One catalog entry mirroring a Table-1 instance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    /// Paper short name (MGT, CIF-C, …).
+    pub name: &'static str,
+    /// Paper's original point count (for the Table-1 report).
+    pub paper_n: usize,
+    /// Scaled default point count generated here.
+    pub default_n: usize,
+    /// Dimensionality (identical to the paper).
+    pub d: usize,
+    /// Paper's reported % norm variance.
+    pub paper_nv: f64,
+    /// Qualitative NV band the generator targets.
+    pub band: NvBand,
+    /// Generator family.
+    pub character: Character,
+    /// High-dimensional group? (paper: d > 16).
+    pub high_dim: bool,
+}
+
+impl Instance {
+    /// Generates the instance at its default size.
+    pub fn generate(&self) -> Matrix {
+        self.generate_n(self.default_n)
+    }
+
+    /// Generates the instance with a custom point count (sweeps/tests).
+    /// Deterministic: the RNG stream is derived from the instance name.
+    pub fn generate_n(&self, n: usize) -> Matrix {
+        let seed = stream_id(&[0xDA7A, self.name.len() as u64, self.d as u64, self.paper_n as u64]);
+        let mut rng = Pcg64::seed_stream(seed, 0x11);
+        let d = self.d;
+        match (self.name, self.character) {
+            // --- Low-dimensional group -------------------------------------
+            // MGT: two telescope-event populations → bimodal radial blobs.
+            ("MGT", _) => synth::gmm_radial(n, d, &[30.0, 33.0, 250.0, 256.0], 8.0, true, &mut rng),
+            // CIF-C: dense central mass, low NV.
+            ("CIF-C", _) => synth::core_halo(n, d, 0.9, 2.0, 30.0, &mut rng),
+            // CIF-T: like CIF-C but norm-spread (bimodal radial structure).
+            ("CIF-T", _) => synth::gmm_radial(n, d, &[20.0, 23.0, 160.0, 166.0], 6.0, true, &mut rng),
+            // RQ: two clusters *equidistant from the origin* — origin norms
+            // are unimodal/tight (very low NV, paper: 2.60) while a
+            // reference point inside either cluster sees a bimodal distance
+            // profile (the Appendix-B / Table-2 re-referencing effect).
+            ("RQ", _) => synth::gmm_radial(n, d, &[250.0, 250.0, 251.0], 2.5, true, &mut rng),
+            // S-NS: skin/non-skin pixels — dark vs light clusters in the
+            // positive RGB cube → strongly bimodal norms.
+            ("S-NS", _) => synth::gmm_radial(n, d, &[40.0, 44.0, 380.0, 390.0], 6.0, true, &mut rng),
+            // 3DR: road polylines, positive coordinates near the origin.
+            ("3DR", _) => synth::polyline(n, d, 24, 0.3, &mut rng),
+            // RNA: central mass, low NV.
+            ("RNA", _) => {
+                let mut m = synth::core_halo(n, d, 0.85, 3.0, 25.0, &mut rng);
+                m.shift_by(&vec![-120.0; d]);
+                m
+            }
+            // HPC: household power — tight operating-point cloud, offset.
+            ("HPC", _) => {
+                let mut m = synth::gmm(&synth::GmmSpec { box_side: 15.0, sigma: 2.0, ..synth::GmmSpec::new(n, d, 4) }, &mut rng);
+                m.shift_by(&vec![-180.0; d]);
+                m
+            }
+            // HAR: dense central mass (accelerometer resting state).
+            ("HAR", _) => {
+                let mut m = synth::core_halo(n, d, 0.92, 1.5, 20.0, &mut rng);
+                m.shift_by(&vec![-90.0; d]);
+                m
+            }
+            // GS-CO / GS-MET: gas sensor sweeps — wide bimodal response.
+            ("GS-CO", _) => synth::shells(n, d, &[10.0, 12.0, 450.0, 455.0], 3.0, &mut rng),
+            ("GS-MET", _) => synth::shells(n, d, &[30.0, 32.0, 230.0, 235.0], 8.0, &mut rng),
+            // YAH: uniform single cluster, offset → very low NV.
+            ("YAH", _) => {
+                let mut m = synth::uniform_box(n, d, 0.0, 8.0, &mut rng);
+                m.shift_by(&vec![-150.0; d]);
+                m
+            }
+
+            // --- High-dimensional group ------------------------------------
+            // GSAD: well-separated sensor-drift batches, high NV.
+            ("GSAD", _) => synth::gmm_radial(n, d, &[20.0, 22.0, 900.0, 905.0], 3.0, false, &mut rng),
+            // PHY: particle-physics features, concentrated norms.
+            ("PHY", _) => {
+                let mut m = synth::gmm(&synth::GmmSpec { box_side: 8.0, sigma: 2.5, ..synth::GmmSpec::new(n, d, 5) }, &mut rng);
+                m.shift_by(&vec![-40.0; d]);
+                m
+            }
+            // CRP: crop time-series classes — moderate-high NV blobs.
+            ("CRP", _) => synth::gmm_radial(n, d, &[15.0, 17.0, 180.0, 184.0], 7.0, true, &mut rng),
+            // C-10 / C-100: low-rank image manifolds with a brightness
+            // spread (dark↔bright photos) that widens the norm profile.
+            ("C-10", _) => {
+                let mut m = synth::lowrank_image(n, d, 10, 12.0, &mut rng);
+                brightness_spread(&mut m, 0.38, 1.0, &mut rng);
+                m
+            }
+            ("C-100", _) => {
+                let mut m = synth::lowrank_image(n, d, 24, 12.0, &mut rng);
+                brightness_spread(&mut m, 0.32, 1.0, &mut rng);
+                m
+            }
+            // MNIST: similar ink mass per digit → concentrated norms.
+            ("MNIST", _) => {
+                let mut m = synth::lowrank_image(n, d, 6, 4.0, &mut rng);
+                // Rescale rows to near-constant norm (ink-mass normalization).
+                for i in 0..m.rows() {
+                    let row = m.row_mut(i);
+                    let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                    let target = 2500.0 * (1.0 + 0.05 * rng.normal() as f32);
+                    for v in row.iter_mut() {
+                        *v *= target / norm;
+                    }
+                }
+                m
+            }
+            // PTN: protein features, bimodal high NV + separated clusters.
+            ("PTN", _) => synth::gmm_radial(n, d, &[20.0, 23.0, 700.0, 706.0], 4.0, false, &mut rng),
+            // YP: year-prediction audio features, spread radial profile.
+            ("YP", _) => synth::shells(n, d, &[20.0, 22.0, 250.0, 260.0, 270.0], 8.0, &mut rng),
+            // SUSY: single cloud with a spread radial profile, mid NV.
+            ("SUSY", _) => synth::shells(n, d, &[30.0, 60.0, 90.0, 120.0], 8.0, &mut rng),
+            (other, _) => panic!("unknown catalog instance {other:?}"),
+        }
+    }
+}
+
+/// Scales each row's norm by a uniform brightness factor in `[lo, hi]` —
+/// models the dark↔bright photo spread of natural-image datasets.
+fn brightness_spread<R: crate::core::rng::Rng>(m: &mut Matrix, lo: f32, hi: f32, rng: &mut R) {
+    for i in 0..m.rows() {
+        let f = lo + (hi - lo) * rng.uniform_f32();
+        for v in m.row_mut(i) {
+            *v *= f;
+        }
+    }
+}
+
+/// The full 21-instance catalog, in Table 1's order.
+pub fn catalog() -> Vec<Instance> {
+    use Character::*;
+    use NvBand::*;
+    let e = |name, paper_n, default_n, d, paper_nv, band, character, high_dim| Instance {
+        name,
+        paper_n,
+        default_n,
+        d,
+        paper_nv,
+        band,
+        character,
+        high_dim,
+    };
+    vec![
+        // Low-dimensional (d ≤ 16).
+        e("MGT", 19_020, 19_020, 10, 50.00, High, RadialBlobs, false),
+        e("CIF-C", 68_040, 40_000, 9, 11.49, Low, CentralMass, false),
+        e("CIF-T", 68_040, 40_000, 16, 48.06, High, RadialBlobs, false),
+        e("RQ", 200_000, 60_000, 7, 2.60, Low, UniformBox, false),
+        e("S-NS", 245_057, 60_000, 3, 75.45, High, RadialBlobs, false),
+        e("3DR", 434_874, 80_000, 3, 22.63, Mid, Polyline, false),
+        e("RNA", 488_565, 80_000, 6, 8.97, Low, CentralMass, false),
+        e("HPC", 2_049_280, 100_000, 7, 5.40, Low, CentralMass, false),
+        e("HAR", 2_259_597, 100_000, 6, 10.43, Low, CentralMass, false),
+        e("GS-CO", 4_208_262, 100_000, 16, 85.12, High, Shells, false),
+        e("GS-MET", 4_178_505, 100_000, 16, 56.38, High, Shells, false),
+        e("YAH", 45_811_883, 120_000, 5, 4.84, Low, UniformBox, false),
+        // High-dimensional (d > 16).
+        e("GSAD", 13_910, 13_910, 128, 85.56, High, RadialBlobs, true),
+        e("PHY", 18_644, 18_644, 78, 7.48, Low, CentralMass, true),
+        e("CRP", 24_000, 24_000, 46, 52.92, High, RadialBlobs, true),
+        e("C-10", 60_000, 6_000, 3072, 23.61, Mid, ImageLike, true),
+        e("C-100", 60_000, 6_000, 3072, 28.08, Mid, ImageLike, true),
+        e("MNIST", 70_000, 12_000, 784, 5.51, Low, ImageLike, true),
+        e("PTN", 285_409, 60_000, 74, 85.12, High, RadialBlobs, true),
+        e("YP", 515_345, 60_000, 90, 61.49, High, Shells, true),
+        e("SUSY", 5_000_000, 100_000, 18, 20.96, Mid, CentralMass, true),
+    ]
+}
+
+/// Looks an instance up by its paper short name (case-insensitive).
+pub fn by_name(name: &str) -> Option<Instance> {
+    catalog().into_iter().find(|i| i.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::norms::{norm_variance_pct, norms};
+
+    #[test]
+    fn catalog_has_21_instances() {
+        let c = catalog();
+        assert_eq!(c.len(), 21);
+        assert_eq!(c.iter().filter(|i| i.high_dim).count(), 9);
+        assert_eq!(c.iter().filter(|i| !i.high_dim).count(), 12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("s-ns").unwrap().name, "S-NS");
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn dimensions_match_table_1() {
+        let c = catalog();
+        let d3dr = c.iter().find(|i| i.name == "3DR").unwrap();
+        assert_eq!(d3dr.d, 3);
+        let mnist = c.iter().find(|i| i.name == "MNIST").unwrap();
+        assert_eq!(mnist.d, 784);
+        // Low-dim group is d ≤ 16 per the paper's definition.
+        for i in &c {
+            if i.high_dim {
+                assert!(i.d > 16, "{}", i.name);
+            } else {
+                assert!(i.d <= 16, "{}", i.name);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let inst = by_name("MGT").unwrap();
+        let a = inst.generate_n(500);
+        let b = inst.generate_n(500);
+        assert_eq!(a, b);
+    }
+
+    /// Every instance's achieved norm variance must fall in its target band
+    /// (evaluated at reduced n for speed; NV% is n-stable).
+    #[test]
+    fn nv_bands_hit() {
+        for inst in catalog() {
+            let n = inst.default_n.min(4_000);
+            let data = inst.generate_n(n);
+            assert_eq!(data.cols(), inst.d, "{}", inst.name);
+            let nv = norm_variance_pct(&norms(&data));
+            assert!(
+                inst.band.contains(nv),
+                "{}: achieved NV {:.2}% outside {:?} band (paper {:.2}%)",
+                inst.name,
+                nv,
+                inst.band,
+                inst.paper_nv
+            );
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Dataset I/O: CSV (interchange with external tools / real datasets when
+//! the user has them) and a packed little-endian binary format (fast reload
+//! of generated catalog instances).
+
+use crate::core::matrix::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Writes a matrix as headerless CSV (one point per line).
+pub fn write_csv<P: AsRef<Path>>(data: &Matrix, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(&path)?);
+    for i in 0..data.rows() {
+        let line = data
+            .row(i)
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Reads a headerless CSV of floats. Lines beginning with `#` and blank
+/// lines are skipped; all rows must have the same width.
+pub fn read_csv<P: AsRef<Path>>(path: P) -> Result<Matrix> {
+    let f = std::fs::File::open(&path)
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let reader = BufReader::new(f);
+    let mut m = Matrix::zeros(0, 0);
+    let mut row = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        row.clear();
+        for field in trimmed.split(',') {
+            let v: f32 = field
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad float {field:?}", lineno + 1))?;
+            row.push(v);
+        }
+        if m.rows() > 0 && row.len() != m.cols() {
+            bail!("line {}: width {} != {}", lineno + 1, row.len(), m.cols());
+        }
+        m.push_row(&row);
+    }
+    if m.rows() == 0 {
+        bail!("empty CSV: {}", path.as_ref().display());
+    }
+    Ok(m)
+}
+
+const MAGIC: &[u8; 8] = b"GKPPBIN1";
+
+/// Writes the packed binary format: magic, u64 rows, u64 cols, then
+/// little-endian f32 data.
+pub fn write_bin<P: AsRef<Path>>(data: &Matrix, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(&path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(data.rows() as u64).to_le_bytes())?;
+    w.write_all(&(data.cols() as u64).to_le_bytes())?;
+    for &v in data.as_slice() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Reads the packed binary format written by [`write_bin`].
+pub fn read_bin<P: AsRef<Path>>(path: P) -> Result<Matrix> {
+    let mut r = BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("open {}", path.as_ref().display()))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a geokmpp binary dataset: {}", path.as_ref().display());
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let cols = u64::from_le_bytes(b8) as usize;
+    let count = rows
+        .checked_mul(cols)
+        .context("dataset dimensions overflow")?;
+    let mut bytes = vec![0u8; count * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Matrix::from_vec(data, rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("geokmpp_io_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = Matrix::from_vec(vec![1.5, -2.0, 0.25, 1e6], 2, 2);
+        let p = tmp("rt.csv");
+        write_csv(&m, &p).unwrap();
+        let back = read_csv(&p).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blanks() {
+        let p = tmp("c.csv");
+        std::fs::write(&p, "# header\n1,2\n\n3,4\n").unwrap();
+        let m = read_csv(&p).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1,2\n3,4,5\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_empty() {
+        let p = tmp("empty.csv");
+        std::fs::write(&p, "# nothing\n").unwrap();
+        assert!(read_csv(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let m = Matrix::from_vec((0..60).map(|i| i as f32 * 0.5).collect(), 12, 5);
+        let p = tmp("rt.bin");
+        write_bin(&m, &p).unwrap();
+        let back = read_bin(&p).unwrap();
+        assert_eq!(m, back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn bin_rejects_bad_magic() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC\x00\x00").unwrap();
+        assert!(read_bin(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

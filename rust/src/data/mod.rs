@@ -1,0 +1,8 @@
+//! Dataset substrate: synthetic generators, the Table-1 instance catalog,
+//! statistics, I/O, and PCA (Fig. 5).
+
+pub mod catalog;
+pub mod io;
+pub mod pca;
+pub mod stats;
+pub mod synth;

@@ -1,0 +1,144 @@
+//! Top-2 principal component analysis via power iteration with deflation —
+//! the Fig. 5 two-dimensional dataset visualizations.
+
+use crate::core::distance::dot;
+use crate::core::matrix::Matrix;
+use crate::core::rng::{Pcg64, Rng};
+
+/// Result of a 2-component PCA.
+#[derive(Clone, Debug)]
+pub struct Pca2 {
+    /// The two principal directions (unit vectors, length `d`).
+    pub components: [Vec<f32>; 2],
+    /// Eigenvalue estimates (variance explained by each component).
+    pub eigenvalues: [f64; 2],
+    /// Per-dimension mean subtracted before analysis.
+    pub mean: Vec<f32>,
+}
+
+impl Pca2 {
+    /// Projects the dataset onto the two components (`n × 2`).
+    pub fn project(&self, data: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(data.rows(), 2);
+        let mut centered = vec![0f32; data.cols()];
+        for i in 0..data.rows() {
+            for ((c, &v), &m) in centered.iter_mut().zip(data.row(i)).zip(&self.mean) {
+                *c = v - m;
+            }
+            let x = dot(&centered, &self.components[0]);
+            let y = dot(&centered, &self.components[1]);
+            let row = out.row_mut(i);
+            row[0] = x;
+            row[1] = y;
+        }
+        out
+    }
+}
+
+/// Computes the top-2 PCA of `data` by power iteration (`iters` rounds per
+/// component, deterministic start from `seed`).
+pub fn pca2(data: &Matrix, iters: usize, seed: u64) -> Pca2 {
+    let d = data.cols();
+    let mean: Vec<f32> = data.col_means().iter().map(|&m| m as f32).collect();
+    let mut rng = Pcg64::seed_from(seed);
+
+    let mut components: [Vec<f32>; 2] = [vec![0.0; d], vec![0.0; d]];
+    let mut eigenvalues = [0f64; 2];
+    let mut centered = vec![0f32; d];
+
+    for comp in 0..2 {
+        // Random unit start.
+        let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        normalize(&mut v);
+        let mut lambda = 0f64;
+        for _ in 0..iters.max(1) {
+            // w = Cov·v computed streaming: Σ_i (x_i − µ)·((x_i − µ)ᵀ v) / n.
+            let mut w = vec![0f64; d];
+            for i in 0..data.rows() {
+                for ((c, &x), &m) in centered.iter_mut().zip(data.row(i)).zip(&mean) {
+                    *c = x - m;
+                }
+                // Deflate against earlier components.
+                for prev in 0..comp {
+                    let proj = dot(&centered, &components[prev]);
+                    for (c, &p) in centered.iter_mut().zip(&components[prev]) {
+                        *c -= proj * p;
+                    }
+                }
+                let s = dot(&centered, &v) as f64;
+                for (wj, &cj) in w.iter_mut().zip(&centered) {
+                    *wj += s * cj as f64;
+                }
+            }
+            let n = data.rows().max(1) as f64;
+            for wj in &mut w {
+                *wj /= n;
+            }
+            lambda = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if lambda <= 1e-30 {
+                break;
+            }
+            for (vj, &wj) in v.iter_mut().zip(&w) {
+                *vj = (wj / lambda) as f32;
+            }
+        }
+        components[comp] = v;
+        eigenvalues[comp] = lambda;
+    }
+
+    Pca2 { components, eigenvalues, mean }
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+    for x in v {
+        *x /= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Data stretched along (1,1): first component must align with it.
+    #[test]
+    fn finds_dominant_direction() {
+        let mut m = Matrix::zeros(0, 0);
+        let mut rng = Pcg64::seed_from(1);
+        for _ in 0..500 {
+            let t = (rng.uniform_f32() - 0.5) * 20.0;
+            let noise = (rng.uniform_f32() - 0.5) * 0.5;
+            m.push_row(&[t + noise, t - noise]);
+        }
+        let p = pca2(&m, 50, 7);
+        let c0 = &p.components[0];
+        let alignment = (c0[0] * c0[1]).abs(); // (±1/√2, ±1/√2) → product 0.5
+        assert!((alignment - 0.5).abs() < 0.05, "c0={c0:?}");
+        assert!(p.eigenvalues[0] > 10.0 * p.eigenvalues[1].max(1e-12));
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut rng = Pcg64::seed_from(2);
+        let data: Vec<f32> = (0..300 * 5).map(|_| rng.uniform_f32() * 4.0).collect();
+        let m = Matrix::from_vec(data, 300, 5);
+        let p = pca2(&m, 60, 3);
+        let n0 = dot(&p.components[0], &p.components[0]);
+        let n1 = dot(&p.components[1], &p.components[1]);
+        let cross = dot(&p.components[0], &p.components[1]);
+        assert!((n0 - 1.0).abs() < 1e-3);
+        assert!((n1 - 1.0).abs() < 1e-3);
+        assert!(cross.abs() < 0.05, "components not orthogonal: {cross}");
+    }
+
+    #[test]
+    fn projection_shape_and_centering() {
+        let m = Matrix::from_vec(vec![1.0, 1.0, 3.0, 3.0], 2, 2);
+        let p = pca2(&m, 20, 1);
+        let proj = p.project(&m);
+        assert_eq!(proj.rows(), 2);
+        assert_eq!(proj.cols(), 2);
+        // Projections of mean-symmetric points are symmetric around 0.
+        assert!((proj.row(0)[0] + proj.row(1)[0]).abs() < 1e-4);
+    }
+}

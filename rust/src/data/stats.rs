@@ -1,0 +1,59 @@
+//! Dataset statistics used by Table 1/2 and the catalog's self-checks.
+
+use crate::core::matrix::Matrix;
+use crate::core::norms::{norm_variance_pct, norms};
+
+/// Summary statistics of a dataset instance.
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    /// Number of points.
+    pub n: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// The paper's "% norm variance" (Table 1 column).
+    pub norm_variance_pct: f64,
+    /// Mean point norm.
+    pub mean_norm: f64,
+    /// Per-dimension bounding box (min, max).
+    pub bbox: Vec<(f32, f32)>,
+}
+
+/// Computes [`DatasetStats`] for a matrix.
+pub fn stats(data: &Matrix) -> DatasetStats {
+    let ns = norms(data);
+    let mean_norm = ns.iter().map(|&x| x as f64).sum::<f64>() / ns.len().max(1) as f64;
+    let mut bbox = vec![(f32::INFINITY, f32::NEG_INFINITY); data.cols()];
+    for i in 0..data.rows() {
+        for (b, &v) in bbox.iter_mut().zip(data.row(i)) {
+            if v < b.0 {
+                b.0 = v;
+            }
+            if v > b.1 {
+                b.1 = v;
+            }
+        }
+    }
+    DatasetStats {
+        n: data.rows(),
+        d: data.cols(),
+        norm_variance_pct: norm_variance_pct(&ns),
+        mean_norm,
+        bbox,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let m = Matrix::from_vec(vec![0.0, 0.0, 3.0, 4.0], 2, 2);
+        let s = stats(&m);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.d, 2);
+        assert_eq!(s.mean_norm, 2.5);
+        assert_eq!(s.bbox, vec![(0.0, 3.0), (0.0, 4.0)]);
+        assert!(s.norm_variance_pct > 0.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on 21 real datasets "available on request"; we cannot
+//! obtain them, so the catalog ([`crate::data::catalog`]) mirrors each with
+//! a generator matching the *geometric properties the paper's analysis
+//! depends on*: dimensionality, norm variance, cluster separation / central
+//! mass, and uniform-box structure. The generator families here are the
+//! building blocks.
+
+use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
+
+/// Gaussian-mixture spec: `clusters` isotropic blobs in `dims` dimensions.
+#[derive(Clone, Debug)]
+pub struct GmmSpec {
+    /// Total number of points.
+    pub n: usize,
+    /// Dimensionality.
+    pub dims: usize,
+    /// Number of mixture components.
+    pub clusters: usize,
+    /// Component centers are drawn uniformly in `[0, box_side]^dims`.
+    pub box_side: f32,
+    /// Per-component standard deviation.
+    pub sigma: f32,
+    /// Mixture imbalance: 0 = balanced, 1 = heavily imbalanced (component
+    /// weights ∝ (i+1)^(-2) style decay).
+    pub imbalance: f32,
+}
+
+impl GmmSpec {
+    /// A balanced default spec (σ chosen so blobs are well separated).
+    pub fn new(n: usize, dims: usize, clusters: usize) -> Self {
+        Self { n, dims, clusters, box_side: 100.0, sigma: 2.0, imbalance: 0.0 }
+    }
+}
+
+/// Samples a Gaussian mixture.
+pub fn gmm<R: Rng>(spec: &GmmSpec, rng: &mut R) -> Matrix {
+    assert!(spec.clusters >= 1);
+    // Component centers.
+    let mut centers = Vec::with_capacity(spec.clusters * spec.dims);
+    for _ in 0..spec.clusters * spec.dims {
+        centers.push(rng.uniform_f32() * spec.box_side);
+    }
+    // Component weights (imbalance interpolates uniform → power-law).
+    let mut cweights: Vec<f64> = (0..spec.clusters)
+        .map(|i| {
+            let uniform = 1.0;
+            let decayed = 1.0 / ((i + 1) as f64 * (i + 1) as f64);
+            (1.0 - spec.imbalance as f64) * uniform + spec.imbalance as f64 * decayed
+        })
+        .collect();
+    let wsum: f64 = cweights.iter().sum();
+    for w in &mut cweights {
+        *w /= wsum;
+    }
+
+    let mut m = Matrix::zeros(spec.n, spec.dims);
+    for i in 0..spec.n {
+        // Pick component by cumulative weight.
+        let r = rng.uniform_f64();
+        let mut acc = 0.0;
+        let mut c = spec.clusters - 1;
+        for (j, &w) in cweights.iter().enumerate() {
+            acc += w;
+            if acc > r {
+                c = j;
+                break;
+            }
+        }
+        let row = m.row_mut(i);
+        for (jj, v) in row.iter_mut().enumerate() {
+            *v = centers[c * spec.dims + jj] + spec.sigma * rng.normal() as f32;
+        }
+    }
+    m
+}
+
+/// Uniform points in `[lo, hi]^dims` — e.g. the RGB-cube-like S-NS instance.
+pub fn uniform_box<R: Rng>(n: usize, dims: usize, lo: f32, hi: f32, rng: &mut R) -> Matrix {
+    let mut m = Matrix::zeros(n, dims);
+    for i in 0..n {
+        for v in m.row_mut(i) {
+            *v = lo + (hi - lo) * rng.uniform_f32();
+        }
+    }
+    m
+}
+
+/// Dense central mass plus a sparse halo — the CIF-C / HAR shape the paper
+/// calls "points densely distributed around a central mass", which makes the
+/// TIE filter struggle at low k.
+pub fn core_halo<R: Rng>(
+    n: usize,
+    dims: usize,
+    core_frac: f32,
+    core_sigma: f32,
+    halo_radius: f32,
+    rng: &mut R,
+) -> Matrix {
+    let mut m = Matrix::zeros(n, dims);
+    let center = halo_radius; // keep everything positive-ish
+    for i in 0..n {
+        let in_core = rng.uniform_f32() < core_frac;
+        let row = m.row_mut(i);
+        if in_core {
+            for v in row.iter_mut() {
+                *v = center + core_sigma * rng.normal() as f32;
+            }
+        } else {
+            // Halo: direction uniform, radius uniform in [0, halo_radius].
+            let mut dir: Vec<f32> = (0..dims).map(|_| rng.normal() as f32).collect();
+            let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            let radius = halo_radius * rng.uniform_f32();
+            for (v, d) in row.iter_mut().zip(&mut dir) {
+                *v = center + *d / norm * radius;
+            }
+        }
+    }
+    m
+}
+
+/// Points along a random polyline network — the 3D-road-network shape
+/// (low-dimensional, spatially spread, locally 1-D).
+pub fn polyline<R: Rng>(n: usize, dims: usize, segments: usize, jitter: f32, rng: &mut R) -> Matrix {
+    assert!(segments >= 1);
+    // Random waypoints in [0, 100]^dims.
+    let mut waypoints = Vec::with_capacity((segments + 1) * dims);
+    for _ in 0..(segments + 1) * dims {
+        waypoints.push(rng.uniform_f32() * 100.0);
+    }
+    let mut m = Matrix::zeros(n, dims);
+    for i in 0..n {
+        let s = rng.below(segments);
+        let t = rng.uniform_f32();
+        let row = m.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            let a = waypoints[s * dims + j];
+            let b = waypoints[(s + 1) * dims + j];
+            *v = a + t * (b - a) + jitter * rng.normal() as f32;
+        }
+    }
+    m
+}
+
+/// Low-rank "image-like" data: points = nonneg mixture of `rank` basis
+/// patterns + noise, all coordinates clamped to `[0, 255]` (MNIST/CIFAR-ish:
+/// high ambient dimension, much lower intrinsic dimension).
+pub fn lowrank_image<R: Rng>(n: usize, dims: usize, rank: usize, noise: f32, rng: &mut R) -> Matrix {
+    let mut basis = Vec::with_capacity(rank * dims);
+    for _ in 0..rank * dims {
+        basis.push(rng.uniform_f32() * 255.0);
+    }
+    let mut m = Matrix::zeros(n, dims);
+    for i in 0..n {
+        let coeffs: Vec<f32> = (0..rank).map(|_| rng.uniform_f32()).collect();
+        let csum: f32 = coeffs.iter().sum::<f32>().max(1e-6);
+        let row = m.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for (r, &c) in coeffs.iter().enumerate() {
+                acc += c * basis[r * dims + j];
+            }
+            *v = (acc / csum + noise * rng.normal() as f32).clamp(0.0, 255.0);
+        }
+    }
+    m
+}
+
+/// Gaussian blobs whose component centers sit at *specified distances from
+/// the origin* (random directions). The primary knob for shaping a dataset's
+/// norm profile: component radii → modes of the norm distribution.
+pub fn gmm_radial<R: Rng>(
+    n: usize,
+    dims: usize,
+    comp_radii: &[f32],
+    sigma: f32,
+    positive: bool,
+    rng: &mut R,
+) -> Matrix {
+    assert!(!comp_radii.is_empty());
+    // One center per component: random unit direction × radius. With
+    // `positive`, directions are restricted to the positive orthant (pixel-
+    // like data such as S-NS).
+    let k = comp_radii.len();
+    let mut centers = vec![0f32; k * dims];
+    for (c, &r) in comp_radii.iter().enumerate() {
+        let dir: Vec<f32> = (0..dims)
+            .map(|_| {
+                let v = rng.normal() as f32;
+                if positive {
+                    v.abs()
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+        for (dst, d) in centers[c * dims..(c + 1) * dims].iter_mut().zip(&dir) {
+            *dst = d / norm * r;
+        }
+    }
+    let mut m = Matrix::zeros(n, dims);
+    for i in 0..n {
+        let c = rng.below(k);
+        let row = m.row_mut(i);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = centers[c * dims + j] + sigma * rng.normal() as f32;
+        }
+    }
+    m
+}
+
+/// Concentric shells: controls norm variance directly (all-one-shell → ~0;
+/// spread shells → high). Used to hit the catalog's NV% targets.
+pub fn shells<R: Rng>(n: usize, dims: usize, radii: &[f32], sigma: f32, rng: &mut R) -> Matrix {
+    assert!(!radii.is_empty());
+    let mut m = Matrix::zeros(n, dims);
+    for i in 0..n {
+        let r_target = radii[rng.below(radii.len())] + sigma * rng.normal() as f32;
+        let dir: Vec<f32> = (0..dims).map(|_| rng.normal() as f32).collect();
+        let norm = dir.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+        let row = m.row_mut(i);
+        for (v, d) in row.iter_mut().zip(&dir) {
+            *v = d / norm * r_target.max(0.0);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::norms::{norm_variance_pct, norms};
+    use crate::core::rng::Pcg64;
+
+    #[test]
+    fn gmm_shapes_and_determinism() {
+        let spec = GmmSpec::new(500, 4, 8);
+        let a = gmm(&spec, &mut Pcg64::seed_from(1));
+        let b = gmm(&spec, &mut Pcg64::seed_from(1));
+        assert_eq!(a.rows(), 500);
+        assert_eq!(a.cols(), 4);
+        assert_eq!(a, b, "generator must be deterministic per seed");
+    }
+
+    #[test]
+    fn gmm_blobs_are_tight() {
+        // With σ=2 and box 100, within-blob spread ≪ box: most points lie
+        // within 4σ·√d of some component center.
+        let spec = GmmSpec { sigma: 1.0, ..GmmSpec::new(300, 3, 4) };
+        let m = gmm(&spec, &mut Pcg64::seed_from(2));
+        // crude check: dataset variance far exceeds σ².
+        let means = m.col_means();
+        let mut var = 0f64;
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                var += (v as f64 - means[j]) * (v as f64 - means[j]);
+            }
+        }
+        var /= (m.rows() * m.cols()) as f64;
+        assert!(var > 25.0, "clusters did not spread: var={var}");
+    }
+
+    #[test]
+    fn uniform_box_in_bounds() {
+        let m = uniform_box(200, 3, 0.0, 255.0, &mut Pcg64::seed_from(3));
+        for i in 0..m.rows() {
+            for &v in m.row(i) {
+                assert!((0.0..=255.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn core_halo_has_dense_core() {
+        let m = core_halo(1000, 2, 0.8, 0.5, 50.0, &mut Pcg64::seed_from(4));
+        let ns = norms(&m);
+        // Center of mass is at (50, 50): count points within ED 3 of it.
+        let close = (0..m.rows())
+            .filter(|&i| {
+                let dx = m.row(i)[0] - 50.0;
+                let dy = m.row(i)[1] - 50.0;
+                (dx * dx + dy * dy).sqrt() < 3.0
+            })
+            .count();
+        assert!(close > 600, "core too sparse: {close}");
+        assert!(!ns.is_empty());
+    }
+
+    #[test]
+    fn shells_control_norm_variance() {
+        let mut rng = Pcg64::seed_from(5);
+        let one_shell = shells(500, 8, &[50.0], 0.1, &mut rng);
+        let spread = shells(500, 8, &[5.0, 20.0, 50.0, 100.0], 0.1, &mut rng);
+        let nv_one = norm_variance_pct(&norms(&one_shell));
+        let nv_spread = norm_variance_pct(&norms(&spread));
+        assert!(nv_one < 20.0, "nv_one={nv_one}");
+        assert!(nv_spread > 40.0, "nv_spread={nv_spread}");
+        assert!(nv_spread > 2.0 * nv_one);
+    }
+
+    #[test]
+    fn polyline_is_low_dimensional_structure() {
+        let m = polyline(400, 3, 6, 0.2, &mut Pcg64::seed_from(6));
+        assert_eq!(m.rows(), 400);
+        assert_eq!(m.cols(), 3);
+    }
+
+    #[test]
+    fn lowrank_image_clamped() {
+        let m = lowrank_image(50, 64, 5, 10.0, &mut Pcg64::seed_from(7));
+        for i in 0..m.rows() {
+            for &v in m.row(i) {
+                assert!((0.0..=255.0).contains(&v));
+            }
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Clustering cost (inertia / within-cluster sum of squared errors).
+
+use crate::core::distance::sed;
+use crate::core::matrix::Matrix;
+
+/// Sum over all points of the SED to their *closest* center.
+pub fn inertia(data: &Matrix, centers: &Matrix) -> f64 {
+    assert_eq!(data.cols(), centers.cols());
+    let mut total = 0f64;
+    for i in 0..data.rows() {
+        let row = data.row(i);
+        let mut best = f32::INFINITY;
+        for c in 0..centers.rows() {
+            let d = sed(row, centers.row(c));
+            if d < best {
+                best = d;
+            }
+        }
+        total += best as f64;
+    }
+    total
+}
+
+/// Inertia given fixed assignments (no argmin): Σ SED(x_i, c_{a(i)}).
+pub fn inertia_assigned(data: &Matrix, centers: &Matrix, assignments: &[u32]) -> f64 {
+    assert_eq!(data.rows(), assignments.len());
+    let mut total = 0f64;
+    for i in 0..data.rows() {
+        total += sed(data.row(i), centers.row(assignments[i] as usize)) as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inertia_zero_when_centers_cover() {
+        let data = Matrix::from_vec(vec![0.0, 0.0, 1.0, 1.0], 2, 2);
+        assert_eq!(inertia(&data, &data), 0.0);
+    }
+
+    #[test]
+    fn inertia_picks_closest() {
+        let data = Matrix::from_vec(vec![0.0, 0.0], 1, 2);
+        let centers = Matrix::from_vec(vec![10.0, 0.0, 1.0, 0.0], 2, 2);
+        assert_eq!(inertia(&data, &centers), 1.0);
+    }
+
+    #[test]
+    fn assigned_ge_optimal() {
+        let data = Matrix::from_vec(vec![0.0, 0.0, 5.0, 5.0], 2, 2);
+        let centers = Matrix::from_vec(vec![0.0, 0.0, 5.0, 5.0], 2, 2);
+        // Deliberately bad assignment.
+        let bad = inertia_assigned(&data, &centers, &[1, 0]);
+        assert!(bad >= inertia(&data, &centers));
+        assert_eq!(bad, 100.0);
+    }
+}

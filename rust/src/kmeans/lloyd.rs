@@ -1,0 +1,170 @@
+//! Lloyd's algorithm (batch k-means).
+//!
+//! Assignment steps can optionally be dispatched to the AOT XLA executables
+//! via the runtime's batcher (see `runtime::batcher`); this module is the
+//! pure-scalar implementation used both standalone and as the reference for
+//! the XLA path.
+
+use crate::core::distance::sed;
+use crate::core::matrix::Matrix;
+
+/// Lloyd's configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LloydConfig {
+    /// Maximum number of iterations.
+    pub max_iters: usize,
+    /// Stop when relative inertia improvement falls below this.
+    pub tol: f64,
+}
+
+impl Default for LloydConfig {
+    fn default() -> Self {
+        Self { max_iters: 100, tol: 1e-6 }
+    }
+}
+
+/// Result of a Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    /// Final centers (`k × d`) — centroids, not dataset points.
+    pub centers: Matrix,
+    /// Final point→center assignment.
+    pub assignments: Vec<u32>,
+    /// Inertia after each iteration (strictly non-increasing).
+    pub inertia_trace: Vec<f64>,
+    /// Iterations actually executed.
+    pub iterations: usize,
+    /// Whether the tolerance criterion stopped the run (vs. max_iters).
+    pub converged: bool,
+}
+
+/// Runs Lloyd's algorithm from the given initial centers.
+pub fn lloyd(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> LloydResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = initial_centers.rows();
+    assert!(k >= 1 && n >= k);
+    assert_eq!(d, initial_centers.cols());
+
+    let mut centers = initial_centers.clone();
+    let mut assignments = vec![0u32; n];
+    let mut inertia_trace = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+        // Assignment step.
+        let mut cost = 0f64;
+        for i in 0..n {
+            let row = data.row(i);
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..k {
+                let dist = sed(row, centers.row(j));
+                if dist < best {
+                    best = dist;
+                    best_j = j as u32;
+                }
+            }
+            assignments[i] = best_j;
+            cost += best as f64;
+        }
+        inertia_trace.push(cost);
+
+        // Convergence check against the previous iteration.
+        if inertia_trace.len() >= 2 {
+            let prev = inertia_trace[inertia_trace.len() - 2];
+            if prev - cost <= cfg.tol * prev.abs().max(1e-12) {
+                converged = true;
+                break;
+            }
+        }
+
+        // Update step: centroids; empty clusters keep their old center
+        // (the standard safeguard).
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let j = assignments[i] as usize;
+            counts[j] += 1;
+            for (s, &v) in sums[j * d..(j + 1) * d].iter_mut().zip(data.row(i)) {
+                *s += v as f64;
+            }
+        }
+        for j in 0..k {
+            if counts[j] == 0 {
+                continue;
+            }
+            let row = centers.row_mut(j);
+            for (c, s) in row.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                *c = (*s / counts[j] as f64) as f32;
+            }
+        }
+    }
+
+    LloydResult { centers, assignments, inertia_trace, iterations, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::data::synth::{gmm, GmmSpec};
+    use crate::seeding::{seed, Variant};
+
+    #[test]
+    fn inertia_is_non_increasing() {
+        let mut rng = Pcg64::seed_from(3);
+        let data = gmm(&GmmSpec::new(400, 3, 5), &mut rng);
+        let s = seed(&data, 5, Variant::Standard, &mut rng);
+        let r = lloyd(&data, &s.centers, &LloydConfig::default());
+        for w in r.inertia_trace.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "inertia increased: {:?}", w);
+        }
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Pcg64::seed_from(8);
+        let spec = GmmSpec { sigma: 0.5, ..GmmSpec::new(600, 2, 4) };
+        let data = gmm(&spec, &mut rng);
+        let s = seed(&data, 4, Variant::Full, &mut rng);
+        let r = lloyd(&data, &s.centers, &LloydConfig::default());
+        // With σ=0.5 vs box 100, final inertia ≈ n·d·σ² = 600·2·0.25 = 300.
+        let final_inertia = *r.inertia_trace.last().unwrap();
+        assert!(final_inertia < 1000.0, "inertia={final_inertia}");
+    }
+
+    #[test]
+    fn seeding_variants_yield_same_quality() {
+        // Not identical runs (different RNG consumption) but statistically
+        // equal quality — the exactness claim at the distribution level.
+        let mut rng = Pcg64::seed_from(12);
+        let data = gmm(&GmmSpec::new(500, 4, 8), &mut rng);
+        let mut costs = Vec::new();
+        for variant in Variant::ALL {
+            let mut sum = 0f64;
+            for rep in 0..5u64 {
+                let mut r2 = Pcg64::seed_stream(99, rep);
+                let s = seed(&data, 8, variant, &mut r2);
+                let r = lloyd(&data, &s.centers, &LloydConfig::default());
+                sum += r.inertia_trace.last().unwrap();
+            }
+            costs.push(sum / 5.0);
+        }
+        let max = costs.iter().cloned().fold(f64::MIN, f64::max);
+        let min = costs.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(max / min < 1.5, "variant quality diverged: {costs:?}");
+    }
+
+    #[test]
+    fn single_cluster_converges_to_mean() {
+        let data = Matrix::from_vec(vec![0.0, 0.0, 2.0, 0.0, 4.0, 0.0], 3, 2);
+        let init = Matrix::from_vec(vec![100.0, 100.0], 1, 2);
+        let r = lloyd(&data, &init, &LloydConfig::default());
+        assert!((r.centers.row(0)[0] - 2.0).abs() < 1e-5);
+        assert!((r.centers.row(0)[1] - 0.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,6 @@
+//! Lloyd's k-means on top of any seeding — the end-to-end consumer that the
+//! paper's seeding feeds (and the quality check that exact acceleration
+//! preserves the clustering).
+
+pub mod inertia;
+pub mod lloyd;

@@ -1,0 +1,54 @@
+//! # geokmpp
+//!
+//! Accelerated **exact** k-means++ seeding using geometric information —
+//! a full-system reproduction of *"Accelerating the k-means++ Algorithm by
+//! Using Geometric Information"* (Rodríguez Corominas, Blesa, Blum, 2024).
+//!
+//! The crate is the Layer-3 (Rust) coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the `standard`, `tie`
+//!   and `full` seeder variants with cluster bookkeeping, Triangle-Inequality
+//!   and norm filters, two-step D² sampling, plus every substrate the
+//!   evaluation needs (dataset catalog, cache simulator, job coordinator,
+//!   bench harness, experiment runners).
+//! * **L2 (`python/compile/model.py`)** — dense batched phases as JAX graphs,
+//!   AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (`python/compile/kernels/`)** — Pallas SED kernels called from L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT (the `xla`
+//! crate) so Python is never on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath; see Makefile)
+//! use geokmpp::prelude::*;
+//!
+//! let mut rng = Pcg64::seed_from(42);
+//! let data = geokmpp::data::synth::gmm(&GmmSpec::new(1_000, 8, 16), &mut rng);
+//! let result = seed(&data, 16, Variant::Full, &mut rng);
+//! assert_eq!(result.centers.rows(), 16);
+//! ```
+#![deny(missing_docs)]
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod kmeans;
+pub mod metrics;
+pub mod prop;
+pub mod runtime;
+pub mod seeding;
+pub mod simcache;
+pub mod xp;
+
+/// Convenience re-exports of the most commonly used items.
+pub mod prelude {
+    pub use crate::core::matrix::Matrix;
+    pub use crate::core::rng::{Pcg64, Rng, SplitMix64};
+    pub use crate::data::synth::GmmSpec;
+    pub use crate::kmeans::lloyd::{lloyd, LloydConfig};
+    pub use crate::seeding::{seed, seed_with, SeedConfig, SeedResult, Variant};
+}

@@ -1,0 +1,189 @@
+//! `geokmpp` — accelerated exact k-means++ seeding (CLI).
+//!
+//! ```text
+//! geokmpp data <INSTANCE> [--n N] [--csv out.csv | --bin out.bin]
+//! geokmpp seed   --instance NAME | --file data.csv   --k K
+//!                [--variant standard|tie|full] [--xla] [--appendix-a]
+//!                [--refpoint origin|mean|median|positive|mean-norm]
+//! geokmpp kmeans --instance NAME --k K [--iters N] [--xla]
+//! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
+//! geokmpp info
+//! ```
+
+use anyhow::{bail, Context, Result};
+use geokmpp::cli::Args;
+use geokmpp::core::matrix::Matrix;
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::data::{io, stats};
+use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
+use geokmpp::metrics::table::fnum;
+use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
+use geokmpp::runtime::Executor;
+use geokmpp::seeding::{seed_with, D2Picker, NoTrace, RefPoint, SeedConfig, Variant};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.pos(0) {
+        Some("data") => cmd_data(args),
+        Some("seed") => cmd_seed(args),
+        Some("kmeans") => cmd_kmeans(args),
+        Some("xp") => cmd_xp(args),
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: geokmpp <data|seed|kmeans|xp|info> [flags]\n\
+ run `geokmpp xp` with no id for the experiment list";
+
+fn load_data(args: &Args) -> Result<(String, Matrix)> {
+    if let Some(file) = args.get("file") {
+        let m = if file.ends_with(".bin") { io::read_bin(file)? } else { io::read_csv(file)? };
+        return Ok((file.to_string(), m));
+    }
+    let name = args.get("instance").context("need --instance NAME or --file PATH")?;
+    let inst = by_name(name).with_context(|| format!("unknown instance {name:?}"))?;
+    let n = args.get_or("n", inst.default_n).map_err(anyhow::Error::msg)?;
+    Ok((inst.name.to_string(), inst.generate_n(n)))
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let name = args.pos(1).context("usage: geokmpp data <INSTANCE> [--n N] [--csv F|--bin F]")?;
+    let inst = by_name(name).with_context(|| format!("unknown instance {name:?}"))?;
+    let n = args.get_or("n", inst.default_n).map_err(anyhow::Error::msg)?;
+    let data = inst.generate_n(n);
+    let s = stats::stats(&data);
+    println!(
+        "{}: n={} d={} norm-variance={:.2}% (paper: {:.2}%) mean-norm={:.2}",
+        inst.name, s.n, s.d, s.norm_variance_pct, inst.paper_nv, s.mean_norm
+    );
+    if let Some(path) = args.get("csv") {
+        io::write_csv(&data, path)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("bin") {
+        io::write_bin(&data, path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_seed(args: &Args) -> Result<()> {
+    let (name, data) = load_data(args)?;
+    let k: usize = args.require("k").map_err(anyhow::Error::msg)?;
+    let variant = Variant::parse(args.get("variant").unwrap_or("full"))
+        .context("bad --variant (standard|tie|full)")?;
+    let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    let mut rng = Pcg64::seed_from(seed_v);
+
+    let result = if args.has("xla") {
+        let mut ex = Executor::open().context("open XLA runtime (run `make artifacts`)")?;
+        if variant != Variant::Tie {
+            eprintln!("note: --xla uses the hybrid TIE path");
+        }
+        let threshold = args.get_or("dense-threshold", 2048).map_err(anyhow::Error::msg)?;
+        hybrid_tie_seed(&data, k, BatchPolicy { dense_threshold: threshold }, &mut ex, &mut rng)?
+    } else {
+        let mut cfg = SeedConfig::new(k, variant);
+        cfg.appendix_a = args.has("appendix-a");
+        cfg.dot_trick = args.has("dot-trick");
+        cfg.binary_search_sampling = args.has("binsearch-sampling");
+        if let Some(rp) = args.get("refpoint") {
+            cfg.refpoint = RefPoint::parse(rp).context("bad --refpoint")?;
+        }
+        let mut picker = D2Picker::new(&mut rng);
+        seed_with(&data, &cfg, &mut picker, &mut NoTrace)
+    };
+
+    let c = &result.counters;
+    println!("instance          {name}");
+    println!("variant           {}", variant.name());
+    println!("k                 {k}");
+    println!("time              {}s", fnum(result.elapsed.as_secs_f64(), 4));
+    println!("seeding cost      {}", fnum(result.cost(), 2));
+    println!("visited (assign)  {}", c.visited_assign);
+    println!("visited (sample)  {}", c.visited_sampling);
+    println!("distances         {}", c.distances);
+    println!("center distances  {} (avoided {})", c.center_distances, c.center_distances_avoided);
+    println!("norms             {}", c.norms);
+    println!(
+        "filter rejects    f1={} f2={} norm-part={} norm-point={}",
+        c.filter1_rejects, c.filter2_rejects, c.norm_partition_rejects, c.norm_point_rejects
+    );
+    Ok(())
+}
+
+fn cmd_kmeans(args: &Args) -> Result<()> {
+    let (name, data) = load_data(args)?;
+    let k: usize = args.require("k").map_err(anyhow::Error::msg)?;
+    let variant = Variant::parse(args.get("variant").unwrap_or("full"))
+        .context("bad --variant (standard|tie|full)")?;
+    let iters: usize = args.get_or("iters", 100).map_err(anyhow::Error::msg)?;
+    let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    let mut rng = Pcg64::seed_from(seed_v);
+    let cfg = LloydConfig { max_iters: iters, ..LloydConfig::default() };
+
+    let s = geokmpp::seeding::seed(&data, k, variant, &mut rng);
+    println!(
+        "{name}: seeded k={k} via {} in {:.3}s (cost {:.2})",
+        variant.name(),
+        s.elapsed.as_secs_f64(),
+        s.cost()
+    );
+    let r = if args.has("xla") {
+        let mut ex = Executor::open().context("open XLA runtime (run `make artifacts`)")?;
+        lloyd_xla(&data, &s.centers, &cfg, &mut ex)?
+    } else {
+        lloyd(&data, &s.centers, &cfg)
+    };
+    println!(
+        "lloyd: {} iterations, converged={}, inertia {} → {}",
+        r.iterations,
+        r.converged,
+        fnum(r.inertia_trace[0], 2),
+        fnum(*r.inertia_trace.last().unwrap(), 2)
+    );
+    Ok(())
+}
+
+fn cmd_xp(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        None => {
+            geokmpp::xp::help();
+            Ok(())
+        }
+        Some(id) => geokmpp::xp::run(id, args),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("geokmpp {}", env!("CARGO_PKG_VERSION"));
+    println!("instances: {}", geokmpp::data::catalog::catalog().len());
+    match geokmpp::runtime::Runtime::new() {
+        Ok(rt) => println!(
+            "XLA runtime: platform={} artifacts={}",
+            rt.platform(),
+            rt.manifest().entries.len()
+        ),
+        Err(e) => println!("XLA runtime: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,4 @@
+//! Measurement utilities: timers and tabular/CSV report writers.
+
+pub mod table;
+pub mod timer;

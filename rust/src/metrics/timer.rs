@@ -1,0 +1,112 @@
+//! Monotonic wall-clock timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Starts a new stopwatch.
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    /// Elapsed time since start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds as `f64`.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restarts the stopwatch, returning the previous lap.
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Summary statistics over a set of duration/scalar samples.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Stats {
+    /// Sample count.
+    pub n: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Median (linear interpolation between middle samples).
+    pub median: f64,
+    /// Population standard deviation.
+    pub stddev: f64,
+    /// Minimum.
+    pub min: f64,
+    /// Maximum.
+    pub max: f64,
+}
+
+impl Stats {
+    /// Computes stats over raw samples. Empty input yields the default.
+    pub fn of(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Stats {
+            n,
+            mean,
+            median,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let lap = sw.lap();
+        assert!(lap >= Duration::from_millis(4));
+        assert!(sw.secs() < lap.as_secs_f64());
+    }
+
+    #[test]
+    fn stats_known_values() {
+        let s = Stats::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.stddev - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_odd_median() {
+        assert_eq!(Stats::of(&[5.0, 1.0, 3.0]).median, 3.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        assert_eq!(Stats::of(&[]), Stats::default());
+    }
+}

@@ -1,0 +1,206 @@
+//! Property-testing mini-framework (proptest is not in the offline crate
+//! set; see DESIGN.md §Substitutions).
+//!
+//! A [`Gen`] produces random values from an [`Rng`]; [`forall`] runs a
+//! property over many generated cases and, on failure, retries with "smaller"
+//! regenerations (a lightweight shrink: it re-draws with progressively
+//! smaller size hints and reports the smallest failing case it finds).
+//!
+//! ```no_run
+//! use geokmpp::prop::{forall, Gen, Config};
+//! let g = Gen::new(|rng, size| {
+//!     (0..size.max(1)).map(|_| geokmpp::core::rng::Rng::uniform_f32(rng)).collect::<Vec<f32>>()
+//! });
+//! forall("sum is finite", &g, Config::default(), |xs| {
+//!     xs.iter().sum::<f32>().is_finite()
+//! });
+//! ```
+
+use crate::core::rng::Pcg64;
+
+/// A value generator: a closure from `(rng, size_hint)` to a value.
+pub struct Gen<T> {
+    f: Box<dyn Fn(&mut Pcg64, usize) -> T>,
+}
+
+impl<T> Gen<T> {
+    /// Wraps a generation closure.
+    pub fn new<F: Fn(&mut Pcg64, usize) -> T + 'static>(f: F) -> Self {
+        Self { f: Box::new(f) }
+    }
+
+    /// Generates one value at the given size hint.
+    pub fn sample(&self, rng: &mut Pcg64, size: usize) -> T {
+        (self.f)(rng, size)
+    }
+
+    /// Maps the generated value.
+    pub fn map<U, F: Fn(T) -> U + 'static>(self, f: F) -> Gen<U>
+    where
+        T: 'static,
+    {
+        Gen::new(move |rng, size| f(self.sample(rng, size)))
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of cases to run.
+    pub cases: usize,
+    /// Maximum size hint (cases sweep sizes from 1 to this).
+    pub max_size: usize,
+    /// Seed for reproducibility; failures print it.
+    pub seed: u64,
+    /// Shrink attempts after a failure.
+    pub shrink_attempts: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, max_size: 64, seed: 0xC0FFEE, shrink_attempts: 200 }
+    }
+}
+
+/// Runs `prop` over `cfg.cases` generated values.
+///
+/// # Panics
+/// Panics with a descriptive message (including the seed and a debug dump of
+/// the smallest failing case found) if the property fails.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    gen: &Gen<T>,
+    cfg: Config,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Pcg64::seed_stream(cfg.seed, 0x5EED);
+    for case in 0..cfg.cases {
+        // Ramp sizes so early cases are small.
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let value = gen.sample(&mut rng, size);
+        if !prop(&value) {
+            let minimal = shrink(gen, &mut rng, size, cfg.shrink_attempts, &prop)
+                .unwrap_or(value);
+            panic!(
+                "property {name:?} failed (seed={:#x}, case={case}, size={size}).\n\
+                 smallest failing case found:\n{minimal:#?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Re-draws at progressively smaller sizes, keeping the smallest failure.
+fn shrink<T>(
+    gen: &Gen<T>,
+    rng: &mut Pcg64,
+    fail_size: usize,
+    attempts: usize,
+    prop: &impl Fn(&T) -> bool,
+) -> Option<T> {
+    let mut best: Option<(usize, T)> = None;
+    for a in 0..attempts {
+        // Bias toward small sizes.
+        let cap = best.as_ref().map(|(s, _)| *s).unwrap_or(fail_size);
+        if cap <= 1 {
+            break;
+        }
+        let size = 1 + (a * cap / attempts.max(1)) % cap;
+        let candidate = gen.sample(rng, size);
+        if !prop(&candidate) && best.as_ref().map(|(s, _)| size < *s).unwrap_or(true) {
+            best = Some((size, candidate));
+        }
+    }
+    best.map(|(_, v)| v)
+}
+
+/// Common generators.
+pub mod gens {
+    use super::Gen;
+    use crate::core::matrix::Matrix;
+    use crate::core::rng::Rng;
+
+    /// Vector of f32 in `[-scale, scale]`, length = size hint.
+    pub fn vec_f32(scale: f32) -> Gen<Vec<f32>> {
+        Gen::new(move |rng, size| {
+            (0..size.max(1)).map(|_| (rng.uniform_f32() * 2.0 - 1.0) * scale).collect()
+        })
+    }
+
+    /// Random dataset matrix: `size×dims` points uniform in a cube.
+    pub fn matrix(dims: usize, scale: f32) -> Gen<Matrix> {
+        Gen::new(move |rng, size| {
+            let rows = size.max(2);
+            let data = (0..rows * dims)
+                .map(|_| (rng.uniform_f32() * 2.0 - 1.0) * scale)
+                .collect();
+            Matrix::from_vec(data, rows, dims)
+        })
+    }
+
+    /// `(Matrix, k)` pair with `1 ≤ k ≤ rows`.
+    pub fn matrix_with_k(dims: usize, scale: f32) -> Gen<(Matrix, usize)> {
+        let m = matrix(dims, scale);
+        Gen::new(move |rng, size| {
+            let data = m.sample(rng, size);
+            let k = 1 + rng.below(data.rows());
+            (data, k)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = gens::vec_f32(1.0);
+        forall("bounded", &g, Config { cases: 50, ..Config::default() }, |xs| {
+            xs.iter().all(|x| x.abs() <= 1.0)
+        });
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let g = gens::vec_f32(1.0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall("always-false", &g, Config::default(), |_| false);
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("always-false"));
+        assert!(msg.contains("seed="));
+    }
+
+    #[test]
+    fn shrink_finds_smaller_case() {
+        // Property fails for any vec of len >= 2; shrink should find len 2.
+        let g = gens::vec_f32(1.0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall(
+                "short-only",
+                &g,
+                Config { cases: 200, max_size: 64, ..Config::default() },
+                |xs| xs.len() < 2,
+            );
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        // The reported minimal case should be a 2-element vector (size hint 2
+        // is the smallest failing size, and the dump prints both elements).
+        let lines = msg.lines().filter(|l| l.trim_start().starts_with('-') || l.contains(',')).count();
+        assert!(msg.contains("smallest failing case"), "{msg}");
+        assert!(lines < 20, "shrink did not reduce: {msg}");
+    }
+
+    #[test]
+    fn matrix_gen_shapes() {
+        let g = gens::matrix_with_k(3, 2.0);
+        let mut rng = Pcg64::seed_from(5);
+        for size in [1, 2, 10, 40] {
+            let (m, k) = g.sample(&mut rng, size);
+            assert_eq!(m.cols(), 3);
+            assert!(m.rows() >= 2);
+            assert!(k >= 1 && k <= m.rows());
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Artifact manifest: maps (op, shape bucket) → HLO text file.
+//!
+//! The manifest is the dependency-free line format emitted by `aot.py`:
+//!
+//! ```text
+//! op=update chunk=2048 d=32 k=1 file=update_c2048_d32.hlo.txt
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact: an op at a fixed shape bucket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    /// Operation name (`update`, `norms`, `lloyd_assign`).
+    pub op: String,
+    /// Points per dispatch.
+    pub chunk: usize,
+    /// Feature-dimension bucket.
+    pub d: usize,
+    /// Centers bucket (1 for non-Lloyd ops).
+    pub k: usize,
+    /// HLO text file, relative to the artifacts directory.
+    pub file: String,
+}
+
+/// A parsed manifest plus its base directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// All artifact entries.
+    pub entries: Vec<ArtifactEntry>,
+    /// Directory containing the artifact files.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Default artifacts directory: `$GEOKMPP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GEOKMPP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Loads `manifest.txt` from a directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut op = None;
+            let mut chunk = None;
+            let mut d = None;
+            let mut k = None;
+            let mut file = None;
+            for kv in line.split_whitespace() {
+                let (key, value) = kv
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad field {kv:?}", lineno + 1))?;
+                match key {
+                    "op" => op = Some(value.to_string()),
+                    "chunk" => chunk = Some(value.parse::<usize>()?),
+                    "d" => d = Some(value.parse::<usize>()?),
+                    "k" => k = Some(value.parse::<usize>()?),
+                    "file" => file = Some(value.to_string()),
+                    other => bail!("manifest line {}: unknown key {other:?}", lineno + 1),
+                }
+            }
+            entries.push(ArtifactEntry {
+                op: op.context("missing op")?,
+                chunk: chunk.context("missing chunk")?,
+                d: d.context("missing d")?,
+                k: k.context("missing k")?,
+                file: file.context("missing file")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("manifest {} has no entries", path.display());
+        }
+        Ok(Manifest { entries, dir })
+    }
+
+    /// Finds the smallest bucket that fits `(op, d_needed, k_needed)`.
+    pub fn find(&self, op: &str, d_needed: usize, k_needed: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.d >= d_needed && e.k >= k_needed)
+            .min_by_key(|e| (e.d, e.k))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("gkpp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_and_finds_buckets() {
+        let dir = write_manifest(
+            "# comment\n\
+             op=update chunk=2048 d=8 k=1 file=a.hlo.txt\n\
+             op=update chunk=2048 d=32 k=1 file=b.hlo.txt\n\
+             op=lloyd_assign chunk=2048 d=32 k=16 file=c.hlo.txt\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        assert_eq!(m.find("update", 5, 1).unwrap().file, "a.hlo.txt");
+        assert_eq!(m.find("update", 9, 1).unwrap().file, "b.hlo.txt");
+        assert!(m.find("update", 33, 1).is_none());
+        assert_eq!(m.find("lloyd_assign", 8, 10).unwrap().k, 16);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let dir = write_manifest("op=update chunk=2048 d=8 file=a.hlo.txt\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let dir = write_manifest("# nothing\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Soft integration check: only meaningful after `make artifacts`.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("update", 8, 1).is_some());
+            assert!(m.find("lloyd_assign", 128, 256).is_some());
+            assert!(m.find("norms", 512, 1).is_some());
+        }
+    }
+}

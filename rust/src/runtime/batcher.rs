@@ -1,0 +1,270 @@
+//! Batching policy: routing cluster scans between the scalar filter path
+//! and the dense XLA executables.
+//!
+//! The accelerated algorithm's per-point filters only pay off when they can
+//! skip *distance computations*; on a chunked vector backend the marginal
+//! cost of a distance inside an already-dispatched chunk is tiny. The
+//! coordinator therefore routes each Filter-1-surviving cluster by size:
+//!
+//! * `|P_j| ≥ dense_threshold` → gather the members and dispatch one or more
+//!   `update` chunks (all member distances computed — still an *exact*
+//!   min-update);
+//! * smaller clusters → the scalar path with Filter 2 pruning.
+//!
+//! The same trade-off the paper's §5.3 reaches for cache lines (sequential
+//! beats clever-but-irregular below a granularity) appears here one level
+//! up, at chunk granularity.
+
+use crate::core::distance::sed;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
+use crate::kmeans::lloyd::{LloydConfig, LloydResult};
+use crate::runtime::executor::Executor;
+use crate::seeding::clusters::ClusterSet;
+use crate::seeding::counters::Counters;
+use crate::seeding::picker::{CenterPicker, D2Picker, PickCtx};
+use crate::seeding::SeedResult;
+use anyhow::Result;
+
+/// Routing policy for the hybrid seeder.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Clusters at least this large go to the XLA dense path.
+    pub dense_threshold: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        // One artifact chunk: below this, a dispatch can't even fill a chunk.
+        Self { dense_threshold: 2048 }
+    }
+}
+
+/// Hybrid TIE seeding: Algorithm 2 control flow in Rust, dense scans on the
+/// AOT XLA executables per [`BatchPolicy`]. Exact at the algorithm level:
+/// the dense path performs the same strict min-update; weights can differ
+/// from the scalar path only in f32 summation order (≈1 ulp), which the
+/// integration tests bound.
+pub fn hybrid_tie_seed<R: Rng>(
+    data: &Matrix,
+    k: usize,
+    policy: BatchPolicy,
+    ex: &mut Executor,
+    rng: &mut R,
+) -> Result<SeedResult> {
+    assert!(k >= 1 && k <= data.rows());
+    let started = std::time::Instant::now();
+    let n = data.rows();
+    let mut counters = Counters::default();
+    let mut picker = D2Picker::new(rng);
+
+    let first = picker.first(n);
+    let mut center_indices = vec![first];
+    let mut assignments = vec![0u32; n];
+
+    // Initial pass: dense (the standard algorithm's init scan is the
+    // archetypal dense phase).
+    let all_rows: Vec<usize> = (0..n).collect();
+    let c0 = data.row(first).to_vec();
+    let (mut weights, _) = ex.min_update(data, &all_rows, &c0)?;
+    counters.distances += n as u64;
+    counters.visited_assign += n as u64;
+    let r0 = weights.iter().cloned().fold(0f32, f32::max);
+    let s0 = weights.iter().map(|&w| w as f64).sum();
+    let mut cs = ClusterSet::initial(n, r0, s0);
+
+    while center_indices.len() < k {
+        let total = cs.total();
+        let groups: Vec<&[usize]> = cs.members.iter().map(|m| m.as_slice()).collect();
+        let pick = picker.next(PickCtx::TwoStep { weights: &weights, groups: &groups, sums: &cs.sums, total });
+        drop(groups);
+        counters.visited_sampling += pick.visited;
+        let c_new = pick.index;
+        let slot = center_indices.len();
+        center_indices.push(c_new);
+        let new_j = cs.push_empty();
+        let cn_row: Vec<f32> = data.row(c_new).to_vec();
+
+        let mut moved: Vec<usize> = Vec::new();
+        for j in 0..new_j {
+            counters.visited_assign += 1;
+            let d_cc = sed(data.row(center_indices[j]), &cn_row);
+            counters.center_distances += 1;
+            if 4.0 * cs.radius[j] <= d_cc {
+                counters.filter1_rejects += 1;
+                continue;
+            }
+            let members = std::mem::take(&mut cs.members[j]);
+            let mut retained = Vec::with_capacity(members.len());
+            let mut new_r = 0f32;
+            let mut new_s = 0f64;
+            counters.visited_assign += members.len() as u64;
+
+            if members.len() >= policy.dense_threshold {
+                // Dense path: one exact fused min-update over the members.
+                let (w2, chg) = ex.min_update_with_weights(data, &members, &cn_row, &weights)?;
+                counters.distances += members.len() as u64;
+                for (pos, &i) in members.iter().enumerate() {
+                    if chg[pos] == 1 {
+                        weights[i] = w2[pos];
+                        assignments[i] = slot as u32;
+                        moved.push(i);
+                    } else {
+                        retained.push(i);
+                        if weights[i] > new_r {
+                            new_r = weights[i];
+                        }
+                        new_s += weights[i] as f64;
+                    }
+                }
+            } else {
+                // Scalar path: Filter 2 pruning.
+                for &i in &members {
+                    if 4.0 * weights[i] > d_cc {
+                        counters.distances += 1;
+                        let dnew = sed(data.row(i), &cn_row);
+                        if dnew < weights[i] {
+                            weights[i] = dnew;
+                            assignments[i] = slot as u32;
+                            moved.push(i);
+                            continue;
+                        }
+                    } else {
+                        counters.filter2_rejects += 1;
+                    }
+                    retained.push(i);
+                    if weights[i] > new_r {
+                        new_r = weights[i];
+                    }
+                    new_s += weights[i] as f64;
+                }
+            }
+            cs.members[j] = retained;
+            cs.radius[j] = new_r;
+            cs.sums[j] = new_s;
+        }
+        cs.members[new_j] = moved;
+        cs.refresh(new_j, &weights);
+    }
+
+    Ok(SeedResult {
+        centers: data.gather_rows(&center_indices),
+        center_indices,
+        assignments,
+        weights,
+        counters,
+        elapsed: started.elapsed(),
+    })
+}
+
+/// Lloyd's algorithm with XLA-dispatched assignment steps. The update
+/// (centroid) step stays scalar — it is `O(n·d)` streaming with no reuse.
+pub fn lloyd_xla(
+    data: &Matrix,
+    initial_centers: &Matrix,
+    cfg: &LloydConfig,
+    ex: &mut Executor,
+) -> Result<LloydResult> {
+    let n = data.rows();
+    let d = data.cols();
+    let k = initial_centers.rows();
+    let mut centers = initial_centers.clone();
+    let mut inertia_trace = Vec::new();
+    let mut assignments = vec![0u32; n];
+    let mut converged = false;
+    let mut iterations = 0;
+
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+        let (assign, mind) = ex.lloyd_assign(data, &centers)?;
+        assignments = assign;
+        let cost: f64 = mind.iter().map(|&m| m as f64).sum();
+        inertia_trace.push(cost);
+        if inertia_trace.len() >= 2 {
+            let prev = inertia_trace[inertia_trace.len() - 2];
+            if prev - cost <= cfg.tol * prev.abs().max(1e-12) {
+                converged = true;
+                break;
+            }
+        }
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let j = assignments[i] as usize;
+            counts[j] += 1;
+            for (s, &v) in sums[j * d..(j + 1) * d].iter_mut().zip(data.row(i)) {
+                *s += v as f64;
+            }
+        }
+        for j in 0..k {
+            if counts[j] == 0 {
+                continue;
+            }
+            for (c, s) in centers.row_mut(j).iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                *c = (*s / counts[j] as f64) as f32;
+            }
+        }
+    }
+
+    Ok(LloydResult { centers, assignments, inertia_trace, iterations, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::data::synth::{gmm, GmmSpec};
+    use crate::runtime::artifacts::Manifest;
+    use crate::seeding::{seed, Variant};
+
+    fn artifacts_built() -> bool {
+        Manifest::default_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn hybrid_seed_quality_matches_scalar() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rng = Pcg64::seed_from(5);
+        let data = gmm(&GmmSpec::new(5000, 4, 16), &mut rng);
+        let mut ex = Executor::open().unwrap();
+
+        // Same RNG stream for both: picks are identical until weights drift
+        // (they shouldn't — both paths compute the same f32 SED sums).
+        let mut r1 = Pcg64::seed_from(77);
+        let mut r2 = Pcg64::seed_from(77);
+        let hybrid =
+            hybrid_tie_seed(&data, 16, BatchPolicy { dense_threshold: 1024 }, &mut ex, &mut r1)
+                .unwrap();
+        let scalar = seed(&data, 16, Variant::Tie, &mut r2);
+        assert_eq!(hybrid.center_indices, scalar.center_indices);
+        for (i, (a, b)) in hybrid.weights.iter().zip(&scalar.weights).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * a.max(1.0),
+                "weight {i} diverged: xla={a} scalar={b}"
+            );
+        }
+        assert!(ex.dispatches > 0, "dense path never used");
+    }
+
+    #[test]
+    fn lloyd_xla_matches_scalar_lloyd() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rng = Pcg64::seed_from(6);
+        let data = gmm(&GmmSpec::new(3000, 5, 8), &mut rng);
+        let s = seed(&data, 8, Variant::Full, &mut rng);
+        let cfg = LloydConfig::default();
+        let scalar = crate::kmeans::lloyd::lloyd(&data, &s.centers, &cfg);
+        let mut ex = Executor::open().unwrap();
+        let xla = lloyd_xla(&data, &s.centers, &cfg, &mut ex).unwrap();
+        assert_eq!(scalar.assignments, xla.assignments);
+        let a = scalar.inertia_trace.last().unwrap();
+        let b = xla.inertia_trace.last().unwrap();
+        assert!((a - b).abs() <= 1e-3 * a.max(1.0), "{a} vs {b}");
+    }
+}

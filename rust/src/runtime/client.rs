@@ -1,0 +1,114 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile, keep the executable cache.
+
+use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// A PJRT client plus the compiled-executable cache, keyed by artifact file.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Creates a CPU PJRT client and loads the manifest from the default
+    /// artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(Manifest::default_dir())
+    }
+
+    /// Creates a CPU PJRT client with an explicit artifacts directory.
+    pub fn with_dir<P: AsRef<std::path::Path>>(dir: P) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Returns the compiled executable for an artifact, compiling and
+    /// caching on first use (compilation is milliseconds on CPU; caching
+    /// keeps it off the per-dispatch path).
+    pub fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&entry.file) {
+            let path = self.manifest.path_of(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", entry.file))?;
+            self.cache.insert(entry.file.clone(), exe);
+        }
+        Ok(&self.cache[&entry.file])
+    }
+
+    /// Executes an artifact with f32 inputs of the given shapes; returns the
+    /// decomposed output tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(dims).context("reshape input literal")?
+            };
+            literals.push(lit);
+        }
+        let exe = self.executable(entry)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", entry.file))?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full round-trip over a real artifact (skipped until `make artifacts`).
+    #[test]
+    fn norms_artifact_roundtrip() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new().unwrap();
+        let entry = rt.manifest().find("norms", 8, 1).unwrap().clone();
+        let chunk = entry.chunk;
+        let d = entry.d;
+        // Row i = (3, 4, 0, …) → norm 5.
+        let mut x = vec![0f32; chunk * d];
+        for i in 0..chunk {
+            x[i * d] = 3.0;
+            x[i * d + 1] = 4.0;
+        }
+        let outs = rt
+            .run_f32(&entry, &[(&x, &[chunk as i64, d as i64])])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let norms: Vec<f32> = outs[0].to_vec().unwrap();
+        assert_eq!(norms.len(), chunk);
+        assert!((norms[0] - 5.0).abs() < 1e-5);
+        assert!((norms[chunk - 1] - 5.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,364 @@
+//! High-level dispatch: pad-to-bucket marshaling over the [`Runtime`].
+//!
+//! Padding contracts (verified by `python/tests/test_model.py`):
+//! * feature dimension — zero-padded on both operands (SED unchanged);
+//! * points — tail chunks zero-padded with `w = 0`; outputs beyond the real
+//!   row count are ignored;
+//! * centers (Lloyd) — padded at `FAR_AWAY` so they never win the argmin.
+
+use crate::core::matrix::Matrix;
+use crate::runtime::client::Runtime;
+use anyhow::{bail, Context, Result};
+
+/// Matches `model.FAR_AWAY` in `python/compile/model.py`.
+pub const FAR_AWAY: f32 = 1.0e18;
+
+/// Pads rows `rows[i]` of `data` into a `chunk × d_pad` buffer.
+fn gather_padded(data: &Matrix, rows: &[usize], chunk: usize, d_pad: usize, buf: &mut Vec<f32>) {
+    debug_assert!(rows.len() <= chunk);
+    let d = data.cols();
+    buf.clear();
+    buf.resize(chunk * d_pad, 0.0);
+    for (slot, &r) in rows.iter().enumerate() {
+        buf[slot * d_pad..slot * d_pad + d].copy_from_slice(data.row(r));
+    }
+}
+
+/// High-level executor over the AOT artifacts.
+pub struct Executor {
+    rt: Runtime,
+    // Reused marshaling buffers (allocation-free steady state).
+    xbuf: Vec<f32>,
+    wbuf: Vec<f32>,
+    cbuf: Vec<f32>,
+    /// Number of PJRT dispatches issued (perf accounting).
+    pub dispatches: u64,
+}
+
+impl Executor {
+    /// Wraps a runtime.
+    pub fn new(rt: Runtime) -> Executor {
+        Executor { rt, xbuf: Vec::new(), wbuf: Vec::new(), cbuf: Vec::new(), dispatches: 0 }
+    }
+
+    /// Opens the default runtime (artifacts directory from the environment).
+    pub fn open() -> Result<Executor> {
+        Ok(Executor::new(Runtime::new()?))
+    }
+
+    /// Largest feature-dimension bucket available for an op.
+    pub fn max_d(&self, op: &str) -> usize {
+        self.rt
+            .manifest()
+            .entries
+            .iter()
+            .filter(|e| e.op == op)
+            .map(|e| e.d)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Whether the executor can serve a dataset of dimension `d`.
+    pub fn supports_d(&self, d: usize) -> bool {
+        self.max_d("update") >= d
+    }
+
+    /// Fused min-update of `weights[rows]` against `c_new` (a dataset row),
+    /// dispatched chunk-by-chunk. Returns per-`rows`-position `(w', changed)`.
+    ///
+    /// Exactness: identical results to the scalar path up to f32 rounding of
+    /// the same `Σ (x−c)²` (the kernel computes the direct form, not the
+    /// dot decomposition, for the update op).
+    pub fn min_update(
+        &mut self,
+        data: &Matrix,
+        rows: &[usize],
+        c_new: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let d = data.cols();
+        let entry = match self.rt.manifest().find("update", d, 1) {
+            Some(e) => e.clone(),
+            None => bail!("no update artifact for d={d} (max {})", self.max_d("update")),
+        };
+        let chunk = entry.chunk;
+        let d_pad = entry.d;
+
+        let mut c_pad = vec![0f32; d_pad];
+        c_pad[..d].copy_from_slice(c_new);
+
+        let mut w_out = Vec::with_capacity(rows.len());
+        let mut chg_out = Vec::with_capacity(rows.len());
+        // Temporarily move buffers out to appease the borrow checker.
+        let mut xbuf = std::mem::take(&mut self.xbuf);
+        let mut wbuf = std::mem::take(&mut self.wbuf);
+        for batch in rows.chunks(chunk) {
+            gather_padded(data, batch, chunk, d_pad, &mut xbuf);
+            wbuf.clear();
+            wbuf.resize(chunk, f32::INFINITY);
+            // w inputs: +inf means "no current center beats anything" — used
+            // by init passes; callers that carry real weights overwrite below.
+            for (slot, &_r) in batch.iter().enumerate() {
+                wbuf[slot] = f32::INFINITY;
+            }
+            let outs = self.rt.run_f32(
+                &entry,
+                &[
+                    (&xbuf, &[chunk as i64, d_pad as i64]),
+                    (&c_pad, &[d_pad as i64]),
+                    (&wbuf, &[chunk as i64]),
+                ],
+            )?;
+            self.dispatches += 1;
+            let w2: Vec<f32> = outs[0].to_vec()?;
+            let chg: Vec<i32> = outs[1].to_vec()?;
+            w_out.extend_from_slice(&w2[..batch.len()]);
+            chg_out.extend_from_slice(&chg[..batch.len()]);
+        }
+        self.xbuf = xbuf;
+        self.wbuf = wbuf;
+        Ok((w_out, chg_out))
+    }
+
+    /// Like [`Executor::min_update`] but carrying current weights: returns
+    /// `(w', changed)` where `w'[i] = min(w[rows[i]], SED(x_rows[i], c_new))`.
+    pub fn min_update_with_weights(
+        &mut self,
+        data: &Matrix,
+        rows: &[usize],
+        c_new: &[f32],
+        weights: &[f32],
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let d = data.cols();
+        let entry = match self.rt.manifest().find("update", d, 1) {
+            Some(e) => e.clone(),
+            None => bail!("no update artifact for d={d}"),
+        };
+        let chunk = entry.chunk;
+        let d_pad = entry.d;
+        let mut c_pad = vec![0f32; d_pad];
+        c_pad[..d].copy_from_slice(c_new);
+
+        let mut w_out = Vec::with_capacity(rows.len());
+        let mut chg_out = Vec::with_capacity(rows.len());
+        let mut xbuf = std::mem::take(&mut self.xbuf);
+        let mut wbuf = std::mem::take(&mut self.wbuf);
+        for batch in rows.chunks(chunk) {
+            gather_padded(data, batch, chunk, d_pad, &mut xbuf);
+            wbuf.clear();
+            wbuf.resize(chunk, 0.0);
+            for (slot, &r) in batch.iter().enumerate() {
+                wbuf[slot] = weights[r];
+            }
+            let outs = self.rt.run_f32(
+                &entry,
+                &[
+                    (&xbuf, &[chunk as i64, d_pad as i64]),
+                    (&c_pad, &[d_pad as i64]),
+                    (&wbuf, &[chunk as i64]),
+                ],
+            )?;
+            self.dispatches += 1;
+            let w2: Vec<f32> = outs[0].to_vec()?;
+            let chg: Vec<i32> = outs[1].to_vec()?;
+            w_out.extend_from_slice(&w2[..batch.len()]);
+            chg_out.extend_from_slice(&chg[..batch.len()]);
+        }
+        self.xbuf = xbuf;
+        self.wbuf = wbuf;
+        Ok((w_out, chg_out))
+    }
+
+    /// Lloyd assignment for all points against `centers` (`k × d`), chunked.
+    /// Returns `(assignment, min-SED)` per point.
+    pub fn lloyd_assign(
+        &mut self,
+        data: &Matrix,
+        centers: &Matrix,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let d = data.cols();
+        let k = centers.rows();
+        let entry = match self.rt.manifest().find("lloyd_assign", d, k) {
+            Some(e) => e.clone(),
+            None => bail!(
+                "no lloyd_assign artifact for d={d}, k={k} (max d={}, largest k bucket exceeded?)",
+                self.max_d("lloyd_assign")
+            ),
+        };
+        let chunk = entry.chunk;
+        let d_pad = entry.d;
+        let k_pad = entry.k;
+
+        // Pad centers: zero dims, FAR_AWAY rows.
+        let mut cbuf = std::mem::take(&mut self.cbuf);
+        cbuf.clear();
+        cbuf.resize(k_pad * d_pad, FAR_AWAY);
+        for j in 0..k {
+            cbuf[j * d_pad..j * d_pad + d].copy_from_slice(centers.row(j));
+            for extra in d..d_pad {
+                cbuf[j * d_pad + extra] = 0.0;
+            }
+        }
+
+        let n = data.rows();
+        let mut assign = Vec::with_capacity(n);
+        let mut mind = Vec::with_capacity(n);
+        let all_rows: Vec<usize> = (0..n).collect();
+        let mut xbuf = std::mem::take(&mut self.xbuf);
+        for batch in all_rows.chunks(chunk) {
+            gather_padded(data, batch, chunk, d_pad, &mut xbuf);
+            let outs = self.rt.run_f32(
+                &entry,
+                &[
+                    (&xbuf, &[chunk as i64, d_pad as i64]),
+                    (&cbuf, &[k_pad as i64, d_pad as i64]),
+                ],
+            )?;
+            self.dispatches += 1;
+            let a: Vec<i32> = outs[0].to_vec()?;
+            let m: Vec<f32> = outs[1].to_vec()?;
+            assign.extend(a[..batch.len()].iter().map(|&v| v as u32));
+            mind.extend_from_slice(&m[..batch.len()]);
+        }
+        self.xbuf = xbuf;
+        self.cbuf = cbuf;
+        Ok((assign, mind))
+    }
+
+    /// Per-point norms via the AOT norms artifact, chunked.
+    pub fn norms(&mut self, data: &Matrix) -> Result<Vec<f32>> {
+        let d = data.cols();
+        let entry = match self.rt.manifest().find("norms", d, 1) {
+            Some(e) => e.clone(),
+            None => bail!("no norms artifact for d={d}"),
+        };
+        let chunk = entry.chunk;
+        let d_pad = entry.d;
+        let n = data.rows();
+        let mut out = Vec::with_capacity(n);
+        let all_rows: Vec<usize> = (0..n).collect();
+        let mut xbuf = std::mem::take(&mut self.xbuf);
+        for batch in all_rows.chunks(chunk) {
+            gather_padded(data, batch, chunk, d_pad, &mut xbuf);
+            let outs = self
+                .rt
+                .run_f32(&entry, &[(&xbuf, &[chunk as i64, d_pad as i64])])
+                .context("norms dispatch")?;
+            self.dispatches += 1;
+            let ns: Vec<f32> = outs[0].to_vec()?;
+            out.extend_from_slice(&ns[..batch.len()]);
+        }
+        self.xbuf = xbuf;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::sed;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::runtime::artifacts::Manifest;
+
+    fn artifacts_built() -> bool {
+        Manifest::default_dir().join("manifest.txt").exists()
+    }
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        Matrix::from_vec((0..n * d).map(|_| rng.uniform_f32() * 6.0 - 3.0).collect(), n, d)
+    }
+
+    #[test]
+    fn min_update_matches_scalar() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let data = random_data(3000, 5, 1); // crosses a chunk boundary
+        let mut ex = Executor::open().unwrap();
+        let rows: Vec<usize> = (0..data.rows()).collect();
+        let c = data.row(17).to_vec();
+        let (w, chg) = ex.min_update(&data, &rows, &c).unwrap();
+        assert_eq!(w.len(), 3000);
+        for i in 0..data.rows() {
+            let want = sed(data.row(i), &c);
+            assert!((w[i] - want).abs() <= 1e-3 * want.max(1.0), "i={i}: {} vs {want}", w[i]);
+        }
+        // All finite weights beat +inf → all changed.
+        assert!(chg.iter().all(|&c| c == 1));
+        assert!(ex.dispatches >= 2);
+    }
+
+    #[test]
+    fn min_update_with_weights_matches_scalar() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let data = random_data(500, 7, 2);
+        let mut ex = Executor::open().unwrap();
+        let rows: Vec<usize> = (0..data.rows()).collect();
+        let c0 = data.row(0).to_vec();
+        let weights: Vec<f32> = (0..data.rows()).map(|i| sed(data.row(i), &c0)).collect();
+        let c1 = data.row(99).to_vec();
+        let (w, chg) = ex.min_update_with_weights(&data, &rows, &c1, &weights).unwrap();
+        for i in 0..data.rows() {
+            let d1 = sed(data.row(i), &c1);
+            let want = weights[i].min(d1);
+            assert!((w[i] - want).abs() <= 1e-3 * want.max(1.0), "i={i}");
+            assert_eq!(chg[i] == 1, d1 < weights[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn lloyd_assign_matches_scalar() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let data = random_data(2500, 6, 3);
+        let centers = data.gather_rows(&[1, 50, 200, 777, 1234]);
+        let mut ex = Executor::open().unwrap();
+        let (assign, mind) = ex.lloyd_assign(&data, &centers).unwrap();
+        for i in 0..data.rows() {
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..centers.rows() {
+                let d = sed(data.row(i), centers.row(j));
+                if d < best {
+                    best = d;
+                    best_j = j as u32;
+                }
+            }
+            assert_eq!(assign[i], best_j, "i={i}");
+            assert!((mind[i] - best).abs() <= 1e-3 * best.max(1.0));
+        }
+    }
+
+    #[test]
+    fn norms_matches_scalar() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let data = random_data(100, 9, 4);
+        let mut ex = Executor::open().unwrap();
+        let ns = ex.norms(&data).unwrap();
+        let want = crate::core::norms::norms(&data);
+        for (a, b) in ns.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unsupported_dimension_errors() {
+        if !artifacts_built() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let data = random_data(8, 4096, 5); // d beyond the largest bucket
+        let mut ex = Executor::open().unwrap();
+        assert!(!ex.supports_d(4096));
+        assert!(ex.min_update(&data, &[0, 1], &data.row(0).to_vec()).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python runs once at build time; after `make artifacts` the Rust binary is
+//! self-contained. The interchange format is HLO **text** (not serialized
+//! protos — see `/opt/xla-example/README.md` and `aot.py`).
+
+pub mod artifacts;
+pub mod batcher;
+pub mod client;
+pub mod executor;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use batcher::BatchPolicy;
+pub use client::Runtime;
+pub use executor::Executor;

@@ -1,0 +1,153 @@
+//! Appendix A — avoiding center–center distance computations.
+//!
+//! Each iteration of Algorithm 2 computes `SED(c_new, c_j)` for every
+//! existing center: the acceleration's only real overhead. Appendix A skips
+//! some of these with the TIE applied *between clusters*:
+//!
+//! Let `c_src` be the center of the cluster the new center was drawn from,
+//! and `d_src = ED(c_new, c_src)` (already known: it is `√w[c_new]` at pick
+//! time). For any other cluster `j` whose distance to `c_src` is known:
+//!
+//! ```text
+//! ED(c_src, c_j) − d_src ≥ 2·√r_j        (Eq. 12, per-pick form)
+//! ```
+//!
+//! implies every point of cluster `j` stays with `c_j`, so both the distance
+//! computation *and* the cluster scan are skipped. The coarser Eq. 13 form
+//! (`ED(c_src, c_j) − √r_src ≥ 2·√r_j`) is monotone — once true it stays
+//! true — but Eq. 12 dominates it (`d_src ≤ √r_src`), so we implement Eq. 12
+//! and get Eq. 13's savings for free.
+//!
+//! Known center–center EDs are memoized in a growing triangular matrix;
+//! entries skipped in earlier iterations are simply unknown (NaN) and force
+//! a normal computation when later needed.
+
+use crate::core::distance::sed;
+
+/// Memoized center–center geometry + the Appendix-A skip rule.
+pub struct CenterGeom {
+    enabled: bool,
+    /// `ed[a][b]` for `b < a`: ED between centers `a` and `b`; NaN = unknown.
+    ed: Vec<Vec<f32>>,
+    /// EDs computed this iteration, waiting for [`CenterGeom::commit_center`].
+    pending: Vec<(usize, f32)>,
+}
+
+impl CenterGeom {
+    /// Creates the tracker. When `enabled` is false, [`CenterGeom::sed_to`]
+    /// always computes (baseline Algorithm 2 behaviour).
+    pub fn new(enabled: bool) -> Self {
+        // Center 0 has an empty row.
+        Self { enabled, ed: vec![Vec::new()], pending: Vec::new() }
+    }
+
+    /// Whether the Appendix-A rule is active.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Looks up a memoized ED between centers `a` and `b` (NaN if unknown).
+    pub fn known_ed(&self, a: usize, b: usize) -> f32 {
+        if !self.enabled || a == b {
+            return if a == b { 0.0 } else { f32::NAN };
+        }
+        let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+        self.ed.get(hi).and_then(|row| row.get(lo)).copied().unwrap_or(f32::NAN)
+    }
+
+    /// Decides cluster `j` for the incoming center `new` (not yet
+    /// registered): returns `None` if the Appendix-A rule proves cluster `j`
+    /// cannot lose any point to the new center (skip it entirely), else
+    /// `Some(SED(c_j, c_new))`, computing and memoizing it.
+    ///
+    /// * `src` — cluster the new center was drawn from;
+    /// * `d_src_ed` — `ED(c_new, c_src)` (√ of the pick-time weight);
+    /// * `r_j_sed` — current SED radius of cluster `j`;
+    /// * `rows` — `(c_j, c_new)` coordinate slices.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sed_to(
+        &mut self,
+        j: usize,
+        src: usize,
+        d_src_ed: f32,
+        r_j_sed: f32,
+        c_j: &[f32],
+        c_new: &[f32],
+    ) -> Option<f32> {
+        if self.enabled && j != src {
+            let d_src_j = self.known_ed(src, j);
+            if d_src_j.is_finite() && d_src_j - d_src_ed >= 2.0 * r_j_sed.sqrt() {
+                // Eq. 12: cluster j is provably out of reach. Record a lower
+                // bound? — no: keep the entry unknown; soundness only.
+                return None;
+            }
+        }
+        let d = sed(c_j, c_new);
+        if self.enabled {
+            self.pending.push((j, d.sqrt()));
+        }
+        Some(d)
+    }
+
+    /// Registers the new center (call once per iteration, after all
+    /// [`CenterGeom::sed_to`] calls for it) — commits memoized EDs.
+    pub fn commit_center(&mut self, n_existing: usize) {
+        if !self.enabled {
+            return;
+        }
+        let mut row = vec![f32::NAN; n_existing];
+        for (j, e) in self.pending.drain(..) {
+            row[j] = e;
+        }
+        self.ed.push(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_always_computes() {
+        let mut g = CenterGeom::new(false);
+        let d = g.sed_to(0, 0, 0.0, 100.0, &[0.0, 0.0], &[3.0, 4.0]);
+        assert_eq!(d, Some(25.0));
+    }
+
+    #[test]
+    fn skip_rule_fires_when_separated() {
+        // Centers: c0 at origin, c1 far away at (100, 0) with tiny radius.
+        let mut g = CenterGeom::new(true);
+        // Register c1: compute its distance to c0.
+        let d01 = g.sed_to(0, 0, 0.0, 0.0, &[0.0, 0.0], &[100.0, 0.0]).unwrap();
+        assert_eq!(d01, 10_000.0);
+        g.commit_center(1);
+        assert_eq!(g.known_ed(0, 1), 100.0);
+
+        // New center drawn from cluster 0, very close to c0 (d_src = 1).
+        // Cluster 1 has SED radius 4 (ED radius 2):
+        // 100 − 1 = 99 ≥ 2·2 → skip.
+        let skip = g.sed_to(1, 0, 1.0, 4.0, &[100.0, 0.0], &[1.0, 0.0]);
+        assert_eq!(skip, None);
+    }
+
+    #[test]
+    fn no_skip_when_close() {
+        let mut g = CenterGeom::new(true);
+        g.sed_to(0, 0, 0.0, 0.0, &[0.0, 0.0], &[10.0, 0.0]).unwrap();
+        g.commit_center(1);
+        // d(c0,c1)=10, new center at ED 9 from c0, r_1 SED = 4 (ED 2):
+        // 10 − 9 = 1 < 4 → must compute.
+        let d = g.sed_to(1, 0, 9.0, 4.0, &[10.0, 0.0], &[9.0, 0.0]);
+        assert_eq!(d, Some(1.0));
+    }
+
+    #[test]
+    fn unknown_pairs_force_compute() {
+        let mut g = CenterGeom::new(true);
+        g.commit_center(0); // center 1 registered without any computed EDs
+        assert!(g.known_ed(0, 1).is_nan());
+        let d = g.sed_to(0, 1, 0.0, 1e30, &[0.0, 0.0], &[3.0, 4.0]);
+        assert_eq!(d, Some(25.0));
+    }
+}

@@ -1,0 +1,137 @@
+//! Cluster bookkeeping for the TIE-accelerated variant (Algorithm 2).
+//!
+//! Per cluster `j` the algorithm maintains:
+//! * the member list `P_j` (indices into the dataset),
+//! * the SED radius `r_j = max_{x∈P_j} SED(x, c_j)` (Eq. 9 works directly in
+//!   SED via the `4·r_j` threshold),
+//! * the weight sum `s_j = Σ_{x∈P_j} w_x` used by two-step sampling.
+//!
+//! Radius and sum are recomputed *during* the scans that Algorithm 2 already
+//! performs (see §4.2.1: updates coincide exactly with TIE-filter failures),
+//! so maintaining them adds no extra passes.
+
+/// The cluster set for [`crate::seeding::Variant::Tie`].
+#[derive(Clone, Debug, Default)]
+pub struct ClusterSet {
+    /// `members[j]` — point indices currently assigned to cluster `j`.
+    pub members: Vec<Vec<usize>>,
+    /// `radius[j]` — max SED from `c_j` to any member.
+    pub radius: Vec<f32>,
+    /// `sums[j]` — Σ of member weights (f64 to avoid drift over iterations).
+    pub sums: Vec<f64>,
+}
+
+impl ClusterSet {
+    /// Creates the initial single-cluster state holding all `n` points, with
+    /// the given radius and sum.
+    pub fn initial(n: usize, radius: f32, sum: f64) -> Self {
+        Self {
+            members: vec![(0..n).collect()],
+            radius: vec![radius],
+            sums: vec![sum],
+        }
+    }
+
+    /// Number of clusters.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when no clusters exist yet.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Appends an empty cluster (for a newly selected center); returns its id.
+    pub fn push_empty(&mut self) -> usize {
+        self.members.push(Vec::new());
+        self.radius.push(0.0);
+        self.sums.push(0.0);
+        self.members.len() - 1
+    }
+
+    /// Grand total Σ_j s_j (the two-step sampling denominator).
+    pub fn total(&self) -> f64 {
+        self.sums.iter().sum()
+    }
+
+    /// Recomputes radius and sum of cluster `j` from the global weights.
+    /// Only called on clusters the algorithm scanned anyway.
+    pub fn refresh(&mut self, j: usize, weights: &[f32]) {
+        let mut r = 0f32;
+        let mut s = 0f64;
+        for &i in &self.members[j] {
+            let w = weights[i];
+            if w > r {
+                r = w;
+            }
+            s += w as f64;
+        }
+        self.radius[j] = r;
+        self.sums[j] = s;
+    }
+
+    /// Debug invariant: every point appears in exactly one cluster, and
+    /// stored radii/sums match recomputation.
+    #[cfg(any(test, debug_assertions))]
+    pub fn check_invariants(&self, n: usize, weights: &[f32]) {
+        let mut seen = vec![false; n];
+        for m in &self.members {
+            for &i in m {
+                assert!(!seen[i], "point {i} in two clusters");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some point is in no cluster");
+        for j in 0..self.len() {
+            let mut r = 0f32;
+            let mut s = 0f64;
+            for &i in &self.members[j] {
+                r = r.max(weights[i]);
+                s += weights[i] as f64;
+            }
+            assert_eq!(r, self.radius[j], "cluster {j} radius stale");
+            assert!((s - self.sums[j]).abs() <= 1e-6 * s.abs().max(1.0), "cluster {j} sum stale");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_holds_everything() {
+        let cs = ClusterSet::initial(5, 2.0, 10.0);
+        assert_eq!(cs.len(), 1);
+        assert_eq!(cs.members[0], vec![0, 1, 2, 3, 4]);
+        assert_eq!(cs.total(), 10.0);
+    }
+
+    #[test]
+    fn push_empty_and_refresh() {
+        let mut cs = ClusterSet::initial(3, 9.0, 12.0);
+        let j = cs.push_empty();
+        assert_eq!(j, 1);
+        // Move point 2 into the new cluster.
+        cs.members[0].retain(|&i| i != 2);
+        cs.members[1].push(2);
+        let w = [4.0f32, 9.0, 1.0];
+        cs.refresh(0, &w);
+        cs.refresh(1, &w);
+        assert_eq!(cs.radius[0], 9.0);
+        assert_eq!(cs.sums[0], 13.0);
+        assert_eq!(cs.radius[1], 1.0);
+        assert_eq!(cs.sums[1], 1.0);
+        cs.check_invariants(3, &w);
+    }
+
+    #[test]
+    #[should_panic(expected = "two clusters")]
+    fn invariant_catches_duplicates() {
+        let mut cs = ClusterSet::initial(2, 1.0, 2.0);
+        cs.push_empty();
+        cs.members[1].push(0); // 0 now in both
+        cs.check_invariants(2, &[1.0, 1.0]);
+    }
+}

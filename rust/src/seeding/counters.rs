@@ -1,0 +1,90 @@
+//! The paper's intrinsic-efficiency metrics (§5.2): visited points,
+//! distance computations, norm computations.
+//!
+//! The paper's accounting rules, reproduced exactly:
+//! * visited clusters/partitions count as examined points ("to ensure
+//!   fairness, we have counted the visited clusters as points examined");
+//! * center–center distances are included in the distance count;
+//! * norm computations (first iteration only) are included for the
+//!   norm-filtered variant.
+
+/// Counter set collected by every seeder run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Points examined while updating closest-center assignments
+    /// (includes cluster/partition header checks, per the paper).
+    pub visited_assign: u64,
+    /// Points examined during D² sampling (cluster headers included).
+    pub visited_sampling: u64,
+    /// Point↔center SED computations.
+    pub distances: u64,
+    /// Center↔center SED computations (accelerated variants' overhead).
+    pub center_distances: u64,
+    /// Norm computations (first iteration of the full variant).
+    pub norms: u64,
+    /// Clusters rejected by Filter 1 (cluster-level TIE, Eq. 9).
+    pub filter1_rejects: u64,
+    /// Points rejected by Filter 2 (point-level TIE, Eq. 5).
+    pub filter2_rejects: u64,
+    /// Partitions rejected by the partition-level norm bounds (§4.3).
+    pub norm_partition_rejects: u64,
+    /// Points rejected by the per-point norm bounds (§4.3).
+    pub norm_point_rejects: u64,
+    /// Center–center distance computations *avoided* via Appendix A.
+    pub center_distances_avoided: u64,
+}
+
+impl Counters {
+    /// Total points examined (both phases).
+    pub fn visited_total(&self) -> u64 {
+        self.visited_assign + self.visited_sampling
+    }
+
+    /// Total distance-like computations: point-center + center-center +
+    /// norms, matching Fig. 3's accounting.
+    pub fn computations_total(&self) -> u64 {
+        self.distances + self.center_distances + self.norms
+    }
+
+    /// Element-wise sum (for aggregating repetitions).
+    pub fn add(&mut self, other: &Counters) {
+        self.visited_assign += other.visited_assign;
+        self.visited_sampling += other.visited_sampling;
+        self.distances += other.distances;
+        self.center_distances += other.center_distances;
+        self.norms += other.norms;
+        self.filter1_rejects += other.filter1_rejects;
+        self.filter2_rejects += other.filter2_rejects;
+        self.norm_partition_rejects += other.norm_partition_rejects;
+        self.norm_point_rejects += other.norm_point_rejects;
+        self.center_distances_avoided += other.center_distances_avoided;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_compose() {
+        let c = Counters {
+            visited_assign: 10,
+            visited_sampling: 5,
+            distances: 7,
+            center_distances: 2,
+            norms: 1,
+            ..Default::default()
+        };
+        assert_eq!(c.visited_total(), 15);
+        assert_eq!(c.computations_total(), 10);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = Counters { distances: 1, ..Default::default() };
+        let b = Counters { distances: 2, norms: 3, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.distances, 3);
+        assert_eq!(a.norms, 3);
+    }
+}

@@ -1,0 +1,434 @@
+//! The full accelerated variant — Algorithm 2 + norm filters (§4.3).
+//!
+//! Filter cascade per (new center, cluster):
+//! 1. **Partition norm bounds** — if `‖c_new‖ ∉ (l, u)` for a partition, the
+//!    partition is skipped; if both partitions are skipped, the center–center
+//!    distance is never computed (the bounds only need `‖c_new‖`, a lookup).
+//! 2. **Filter 1 per partition** (Eq. 9 with the partition's own radius —
+//!    tighter than the cluster radius, one of the §4.3 side benefits).
+//! 3. Per point: **Filter 2** (Eq. 5), then the **point norm filter**
+//!    (Eq. 8: reject when `(‖c_new‖ − ‖x_i‖)² ≥ w_i`), then the distance.
+//!
+//! Norms are computed once up front relative to `cfg.refpoint` (Appendix B);
+//! center norms are lookups because centers are dataset points.
+
+use crate::core::distance::{sed, sed_dot};
+use crate::core::matrix::Matrix;
+use crate::core::norms::{norms as compute_norms, norms_from, sqnorms};
+use crate::seeding::centerdist::CenterGeom;
+use crate::seeding::counters::Counters;
+use crate::seeding::partitions::{NormCluster, Part};
+use crate::seeding::picker::{CenterPicker, PickCtx};
+use crate::seeding::refpoint::RefPoint;
+use crate::seeding::trace::TraceSink;
+use crate::seeding::{SeedConfig, SeedResult};
+use std::time::Duration;
+
+pub(crate) fn run<P: CenterPicker, T: TraceSink>(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    picker: &mut P,
+    trace: &mut T,
+) -> SeedResult {
+    let n = data.rows();
+    let d = data.cols();
+    let mut counters = Counters::default();
+
+    // Norm precomputation (§4.3: once, at the start). Appendix B reference
+    // points shift the frame; distances are computed in the original frame.
+    let norms: Vec<f32> = match &cfg.refpoint {
+        RefPoint::Origin => compute_norms(data),
+        rp => {
+            let reference = rp.coordinates(data);
+            norms_from(data, &reference)
+        }
+    };
+    counters.norms += n as u64;
+
+    let sq = if cfg.dot_trick {
+        counters.norms += n as u64;
+        sqnorms(data)
+    } else {
+        Vec::new()
+    };
+    let dist =
+        |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
+            c.distances += 1;
+            t.read_point(a);
+            t.ops(3 * d as u64);
+            if cfg.dot_trick {
+                sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+            } else {
+                sed(data.row(a), data.row(b))
+            }
+        };
+
+    // --- Initialization: one cluster holding everything.
+    let first = picker.first(n);
+    let mut center_indices = vec![first];
+    let mut weights = vec![0f32; n];
+    let mut assignments = vec![0u32; n];
+    let mut geom = CenterGeom::new(cfg.appendix_a);
+
+    // Per-point §4.3 bounds, cached: l(x) = ‖x‖ − ED(x, c_a(x)),
+    // u(x) = ‖x‖ + ED(x, c_a(x)). Updated only when w changes (one sqrt per
+    // reassignment) — the paper stores exactly these per point.
+    let mut lo = vec![0f32; n];
+    let mut up = vec![0f32; n];
+
+    let mut clusters: Vec<NormCluster> = vec![NormCluster::new(norms[first])];
+    for i in 0..n {
+        trace.access_weight(i);
+        weights[i] = dist(i, first, &mut counters, trace);
+        let e = weights[i].sqrt();
+        lo[i] = norms[i] - e;
+        up[i] = norms[i] + e;
+        trace.access_bound(i);
+        clusters[0].insert(i, norms[i]);
+    }
+    counters.visited_assign += n as u64;
+    clusters[0].lower.refresh(&weights, &norms);
+    clusters[0].upper.refresh(&weights, &norms);
+
+    // --- Main loop.
+    while center_indices.len() < cfg.k {
+        // Two-step sampling over partitions (distribution-equivalent to
+        // cluster-level two-step since partitions tile clusters).
+        let mut groups: Vec<&[usize]> = Vec::with_capacity(clusters.len() * 2);
+        let mut sums: Vec<f64> = Vec::with_capacity(clusters.len() * 2);
+        for c in &clusters {
+            groups.push(c.lower.members.as_slice());
+            sums.push(c.lower.sum);
+            groups.push(c.upper.members.as_slice());
+            sums.push(c.upper.sum);
+        }
+        let total: f64 = sums.iter().sum();
+        let pick = picker.next(PickCtx::TwoStep { weights: &weights, groups: &groups, sums: &sums, total });
+        drop(groups);
+        counters.visited_sampling += pick.visited;
+
+        let c_new = pick.index;
+        let src = assignments[c_new] as usize;
+        let d_src_ed = weights[c_new].sqrt();
+        let slot = center_indices.len();
+        center_indices.push(c_new);
+        let cn_row = data.row(c_new);
+        let cn_norm = norms[c_new];
+
+        let m = clusters.len();
+        let mut new_cluster = NormCluster::new(cn_norm);
+        for j in 0..m {
+            trace.access_cluster(j);
+
+            // 1. Partition norm bounds — lookups only, no distance needed.
+            let mut admit_lower = false;
+            let mut admit_upper = false;
+            if !clusters[j].lower.members.is_empty() {
+                counters.visited_assign += 1; // partition header examined
+                if clusters[j].lower.norm_bounds_admit(cn_norm) {
+                    admit_lower = true;
+                } else {
+                    counters.norm_partition_rejects += 1;
+                }
+            }
+            if !clusters[j].upper.members.is_empty() {
+                counters.visited_assign += 1;
+                if clusters[j].upper.norm_bounds_admit(cn_norm) {
+                    admit_upper = true;
+                } else {
+                    counters.norm_partition_rejects += 1;
+                }
+            }
+            if !admit_lower && !admit_upper {
+                continue;
+            }
+
+            // 2. Center–center distance (Appendix A may skip it, using the
+            //    cluster-level radius = max of partition radii).
+            let r_cluster = clusters[j].lower.radius.max(clusters[j].upper.radius);
+            let d_cc = match geom.sed_to(
+                j,
+                src,
+                d_src_ed,
+                r_cluster,
+                data.row(center_indices[j]),
+                cn_row,
+            ) {
+                None => {
+                    counters.center_distances_avoided += 1;
+                    counters.filter1_rejects += 1;
+                    continue;
+                }
+                Some(d_cc) => {
+                    counters.center_distances += 1;
+                    trace.read_point(center_indices[j]);
+                    trace.ops(3 * d as u64);
+                    d_cc
+                }
+            };
+
+            // 3. Per admitted partition: TIE Filter 1, then the point scan.
+            let cluster = &mut clusters[j];
+            for (is_lower, admitted) in [(true, admit_lower), (false, admit_upper)] {
+                if !admitted {
+                    continue;
+                }
+                let part: &mut Part = if is_lower { &mut cluster.lower } else { &mut cluster.upper };
+                if 4.0 * part.radius <= d_cc {
+                    counters.filter1_rejects += 1;
+                    continue;
+                }
+                // Single fused pass: filter/update and recompute the
+                // partition stats (radius, sum, norm bounds) for retained
+                // points — the same one-pass refresh Algorithm 2 does for
+                // r_j/s_j (§4.2.1), extended to the §4.3 bounds.
+                let members = std::mem::take(&mut part.members);
+                let mut retained = Vec::with_capacity(members.len());
+                let (mut r, mut s) = (0f32, 0f64);
+                let (mut lb, mut ub) = (f32::INFINITY, f32::NEG_INFINITY);
+                // Cached bounds: no sqrt on the retained path.
+                macro_rules! keep {
+                    ($i:expr) => {{
+                        let i = $i;
+                        retained.push(i);
+                        let w = weights[i];
+                        if w > r {
+                            r = w;
+                        }
+                        s += w as f64;
+                        if lo[i] < lb {
+                            lb = lo[i];
+                        }
+                        if up[i] > ub {
+                            ub = up[i];
+                        }
+                    }};
+                }
+                for &i in &members {
+                    counters.visited_assign += 1;
+                    trace.access_weight(i);
+                    // Filter 2 (TIE, Eq. 5).
+                    if 4.0 * weights[i] <= d_cc {
+                        counters.filter2_rejects += 1;
+                        keep!(i);
+                        continue;
+                    }
+                    // Point norm filter (Eq. 8).
+                    trace.access_bound(i);
+                    let dn = cn_norm - norms[i];
+                    if dn * dn >= weights[i] {
+                        counters.norm_point_rejects += 1;
+                        keep!(i);
+                        continue;
+                    }
+                    let dnew = dist(i, c_new, &mut counters, trace);
+                    if dnew < weights[i] {
+                        weights[i] = dnew;
+                        assignments[i] = slot as u32;
+                        let e = dnew.sqrt();
+                        lo[i] = norms[i] - e;
+                        up[i] = norms[i] + e;
+                        new_cluster.insert(i, norms[i]);
+                    } else {
+                        keep!(i);
+                    }
+                }
+
+                part.members = retained;
+                part.radius = r;
+                part.sum = s;
+                part.lb = lb;
+                part.ub = ub;
+            }
+        }
+        geom.commit_center(m);
+
+        new_cluster.lower.refresh(&weights, &norms);
+        new_cluster.upper.refresh(&weights, &norms);
+        clusters.push(new_cluster);
+
+        #[cfg(debug_assertions)]
+        check_invariants(&clusters, n, &weights, &norms);
+    }
+
+    SeedResult {
+        centers: data.gather_rows(&center_indices),
+        center_indices,
+        assignments,
+        weights,
+        counters,
+        elapsed: Duration::ZERO,
+    }
+}
+
+/// Debug invariants: disjoint membership covering all points; partition
+/// stats consistent; norm routing respected.
+#[cfg(any(test, debug_assertions))]
+fn check_invariants(clusters: &[NormCluster], n: usize, weights: &[f32], norms: &[f32]) {
+    let mut seen = vec![false; n];
+    for c in clusters {
+        for (part, lower) in [(&c.lower, true), (&c.upper, false)] {
+            for &i in &part.members {
+                assert!(!seen[i], "point {i} in two partitions");
+                seen[i] = true;
+                if lower {
+                    assert!(norms[i] <= c.center_norm, "lower partition norm violation");
+                } else {
+                    assert!(norms[i] > c.center_norm, "upper partition norm violation");
+                }
+                assert!(weights[i] <= part.radius, "radius not covering member {i}");
+                let e = weights[i].sqrt();
+                assert!(norms[i] - e >= part.lb - 1e-4, "lb not covering member {i}");
+                assert!(norms[i] + e <= part.ub + 1e-4, "ub not covering member {i}");
+            }
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some point unassigned");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::seeding::picker::{D2Picker, ScriptedPicker};
+    use crate::seeding::trace::NoTrace;
+    use crate::seeding::{standard, tie, Variant};
+
+    fn random_data(n: usize, dims: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let data = (0..n * dims).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect();
+        Matrix::from_vec(data, n, dims)
+    }
+
+    /// Exactness: full == standard given the same scripted center sequence.
+    #[test]
+    fn exactness_vs_standard_scripted() {
+        for seed in 0..5u64 {
+            let data = random_data(120, 4, seed);
+            let k = 12;
+            let script: Vec<usize> = {
+                let mut rng = Pcg64::seed_from(seed ^ 0x77);
+                let cfg = SeedConfig::new(k, Variant::Standard);
+                let mut p = D2Picker::new(&mut rng);
+                standard::run(&data, &cfg, &mut p, &mut NoTrace).center_indices
+            };
+            let mut ps = ScriptedPicker::new(script.clone());
+            let mut pf = ScriptedPicker::new(script.clone());
+            let rs = standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut ps, &mut NoTrace);
+            let rf = run(&data, &SeedConfig::new(k, Variant::Full), &mut pf, &mut NoTrace);
+            assert_eq!(rs.weights, rf.weights, "seed {seed}");
+            assert_eq!(rs.assignments, rf.assignments, "seed {seed}");
+        }
+    }
+
+    /// Property sweep over random shapes & scripts: full == standard == tie.
+    #[test]
+    fn prop_exactness_random_scripts() {
+        let mut rng = Pcg64::seed_from(0xBEEF);
+        for _case in 0..20 {
+            let n = 20 + rng.below(80);
+            let dims = 1 + rng.below(6);
+            let data = random_data(n, dims, rng.next_u64());
+            let k = 2 + rng.below(n.min(15) - 1);
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            let script: Vec<usize> = idx[..k].to_vec();
+            let rs = standard::run(
+                &data,
+                &SeedConfig::new(k, Variant::Standard),
+                &mut ScriptedPicker::new(script.clone()),
+                &mut NoTrace,
+            );
+            let rt = tie::run(
+                &data,
+                &SeedConfig::new(k, Variant::Tie),
+                &mut ScriptedPicker::new(script.clone()),
+                &mut NoTrace,
+            );
+            let rf = run(
+                &data,
+                &SeedConfig::new(k, Variant::Full),
+                &mut ScriptedPicker::new(script.clone()),
+                &mut NoTrace,
+            );
+            assert_eq!(rs.weights, rf.weights, "n={n} d={dims} k={k}");
+            assert_eq!(rs.assignments, rf.assignments, "n={n} d={dims} k={k}");
+            assert_eq!(rt.weights, rf.weights);
+        }
+    }
+
+    /// The norm filter must reject at least some work on norm-spread data.
+    #[test]
+    fn norm_filter_fires_on_spread_data() {
+        // Radially spread data: high norm variance → norm filter territory.
+        let mut rng = Pcg64::seed_from(9);
+        let mut m = Matrix::zeros(0, 0);
+        for _ in 0..500 {
+            let r = 1.0 + 50.0 * rng.uniform_f32();
+            let theta = rng.uniform_f32() * std::f32::consts::TAU;
+            m.push_row(&[r * theta.cos(), r * theta.sin()]);
+        }
+        let mut p = D2Picker::new(Pcg64::seed_from(10));
+        let r = run(&m, &SeedConfig::new(32, Variant::Full), &mut p, &mut NoTrace);
+        let norm_rejects = r.counters.norm_partition_rejects + r.counters.norm_point_rejects;
+        assert!(norm_rejects > 0, "norm filters never fired");
+    }
+
+    /// Appendix-B reference point changes norms but not the result.
+    #[test]
+    fn refpoint_is_exact() {
+        let data = random_data(150, 3, 21);
+        let k = 10;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(2);
+            let mut p = D2Picker::new(&mut rng);
+            standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        for rp in [RefPoint::Origin, RefPoint::Mean, RefPoint::Median, RefPoint::Positive, RefPoint::MeanNorm] {
+            let mut cfg = SeedConfig::new(k, Variant::Full);
+            cfg.refpoint = rp;
+            let rf = run(&data, &cfg, &mut ScriptedPicker::new(script.clone()), &mut NoTrace);
+            let rs = standard::run(
+                &data,
+                &SeedConfig::new(k, Variant::Standard),
+                &mut ScriptedPicker::new(script.clone()),
+                &mut NoTrace,
+            );
+            assert_eq!(rs.weights, rf.weights, "{rp:?}");
+            assert_eq!(rs.assignments, rf.assignments, "{rp:?}");
+        }
+    }
+
+    /// Full variant computes no more distances than TIE-only (it only adds
+    /// filters), on any data.
+    #[test]
+    fn full_no_more_distances_than_tie() {
+        let data = random_data(400, 6, 31);
+        let k = 48;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(3);
+            let mut p = D2Picker::new(&mut rng);
+            standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let rt = tie::run(
+            &data,
+            &SeedConfig::new(k, Variant::Tie),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        let rf = run(
+            &data,
+            &SeedConfig::new(k, Variant::Full),
+            &mut ScriptedPicker::new(script),
+            &mut NoTrace,
+        );
+        assert!(
+            rf.counters.distances <= rt.counters.distances,
+            "full {} > tie {}",
+            rf.counters.distances,
+            rt.counters.distances
+        );
+    }
+}

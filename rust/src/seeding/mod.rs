@@ -1,0 +1,238 @@
+//! k-means++ seeding: the paper's contribution.
+//!
+//! Three variants, all producing **identical clusterings in distribution**
+//! (the accelerations are exact):
+//!
+//! * [`Variant::Standard`] — Algorithm 1: the textbook k-means++ with flat
+//!   D² roulette sampling and a full `O(n)` weight-update scan per center.
+//! * [`Variant::Tie`] — Algorithm 2: Triangle-Inequality Filter 1 (cluster
+//!   level, Eq. 9) + Filter 2 (point level, Eq. 5) + two-step sampling
+//!   (§4.2.2).
+//! * [`Variant::Full`] — Algorithm 2 plus the norm filters of §4.3: clusters
+//!   split into lower/upper norm partitions, with partition-level
+//!   `[l, u]`-bound rejection and per-point norm rejection (Eq. 8).
+//!
+//! Options (off by default, matching the paper's baseline configuration):
+//! Appendix-A center–center distance avoidance, Appendix-B reference points
+//! and the dot-product SED decomposition.
+
+pub mod centerdist;
+pub mod clusters;
+pub mod counters;
+pub mod full;
+pub mod partitions;
+pub mod picker;
+pub mod refpoint;
+pub mod standard;
+pub mod tie;
+pub mod trace;
+
+pub use counters::Counters;
+pub use picker::{CenterPicker, D2Picker, Pick, PickCtx, ScriptedPicker};
+pub use refpoint::RefPoint;
+pub use trace::{NoTrace, TraceSink};
+
+use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
+use crate::metrics::timer::Stopwatch;
+use std::time::Duration;
+
+/// Which seeding algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Algorithm 1 — standard k-means++.
+    Standard,
+    /// Algorithm 2 — TIE filters + two-step sampling.
+    Tie,
+    /// Algorithm 2 + norm filters (the "full accelerated" variant).
+    Full,
+}
+
+impl Variant {
+    /// All variants, in the paper's presentation order.
+    pub const ALL: [Variant; 3] = [Variant::Standard, Variant::Tie, Variant::Full];
+
+    /// Short identifier used in reports and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::Standard => "standard",
+            Variant::Tie => "tie",
+            Variant::Full => "full",
+        }
+    }
+
+    /// Parses a CLI name.
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "standard" | "std" => Some(Variant::Standard),
+            "tie" => Some(Variant::Tie),
+            "full" => Some(Variant::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Full seeding configuration.
+#[derive(Clone, Debug)]
+pub struct SeedConfig {
+    /// Number of centers to select.
+    pub k: usize,
+    /// Algorithm variant.
+    pub variant: Variant,
+    /// Reference point for the norm filter (Appendix B; `Full` only).
+    pub refpoint: RefPoint,
+    /// Appendix-A center–center distance avoidance (`Tie`/`Full` only).
+    pub appendix_a: bool,
+    /// Appendix-B dot-product SED decomposition for point–center distances.
+    pub dot_trick: bool,
+    /// §4.2.2 refinement: cache per-cluster cumulative weight tables while a
+    /// cluster is untouched and draw members by binary search (`Tie` only;
+    /// the `Full` variant's partitions churn too often to amortize tables).
+    pub binary_search_sampling: bool,
+}
+
+impl SeedConfig {
+    /// Default configuration for a variant (paper baseline: origin reference
+    /// point, no Appendix-A/B extras).
+    pub fn new(k: usize, variant: Variant) -> Self {
+        Self {
+            k,
+            variant,
+            refpoint: RefPoint::Origin,
+            appendix_a: false,
+            dot_trick: false,
+            binary_search_sampling: false,
+        }
+    }
+}
+
+/// The outcome of a seeding run.
+#[derive(Clone, Debug)]
+pub struct SeedResult {
+    /// The selected centers, one per row (`k × d`).
+    pub centers: Matrix,
+    /// Dataset indices of the selected centers, in selection order.
+    pub center_indices: Vec<usize>,
+    /// Final assignment of each point to its closest center (index into
+    /// `center_indices`).
+    pub assignments: Vec<u32>,
+    /// Final per-point weights `w_i = SED(x_i, c_{a(i)})`.
+    pub weights: Vec<f32>,
+    /// The paper's intrinsic-efficiency counters.
+    pub counters: Counters,
+    /// Wall-clock time of the run.
+    pub elapsed: Duration,
+}
+
+impl SeedResult {
+    /// The seeding cost `Σ w_i` (what D² sampling minimizes in expectation).
+    pub fn cost(&self) -> f64 {
+        self.weights.iter().map(|&w| w as f64).sum()
+    }
+}
+
+/// Runs seeding with the default D² picker and no tracing.
+pub fn seed<R: Rng>(data: &Matrix, k: usize, variant: Variant, rng: &mut R) -> SeedResult {
+    let cfg = SeedConfig::new(k, variant);
+    let mut picker = D2Picker::new(rng);
+    seed_with(data, &cfg, &mut picker, &mut NoTrace)
+}
+
+/// Runs seeding with an explicit configuration, picker, and trace sink.
+///
+/// # Panics
+/// Panics if `cfg.k` is zero or exceeds the number of points.
+pub fn seed_with<P: CenterPicker, T: TraceSink>(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    picker: &mut P,
+    trace: &mut T,
+) -> SeedResult {
+    assert!(cfg.k >= 1, "k must be at least 1");
+    assert!(cfg.k <= data.rows(), "k={} exceeds n={}", cfg.k, data.rows());
+    let sw = Stopwatch::start();
+    let mut result = match cfg.variant {
+        Variant::Standard => standard::run(data, cfg, picker, trace),
+        Variant::Tie => tie::run(data, cfg, picker, trace),
+        Variant::Full => full::run(data, cfg, picker, trace),
+    };
+    result.elapsed = sw.elapsed();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+
+    fn toy_data() -> Matrix {
+        // Two well-separated blobs in 2-d.
+        let mut rows = Vec::new();
+        for i in 0..20 {
+            let t = i as f32 * 0.01;
+            rows.extend_from_slice(&[t, t]);
+            rows.extend_from_slice(&[10.0 + t, 10.0 + t]);
+        }
+        Matrix::from_vec(rows, 40, 2)
+    }
+
+    #[test]
+    fn all_variants_produce_k_centers() {
+        let data = toy_data();
+        for variant in Variant::ALL {
+            let mut rng = Pcg64::seed_from(99);
+            let r = seed(&data, 5, variant, &mut rng);
+            assert_eq!(r.centers.rows(), 5, "{variant:?}");
+            assert_eq!(r.center_indices.len(), 5);
+            assert_eq!(r.assignments.len(), 40);
+            assert_eq!(r.weights.len(), 40);
+            // Every selected center has weight 0 and is assigned to itself.
+            for (slot, &ci) in r.center_indices.iter().enumerate() {
+                assert_eq!(r.weights[ci], 0.0, "{variant:?} center {ci}");
+                assert_eq!(r.assignments[ci] as usize, slot, "{variant:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_one_trivial() {
+        let data = toy_data();
+        let mut rng = Pcg64::seed_from(5);
+        let r = seed(&data, 1, Variant::Tie, &mut rng);
+        assert_eq!(r.centers.rows(), 1);
+        assert!(r.cost() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn k_too_large_panics() {
+        let data = toy_data();
+        let mut rng = Pcg64::seed_from(5);
+        seed(&data, 41, Variant::Standard, &mut rng);
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn centers_prefer_spread() {
+        // k=2 on two far blobs should pick one center per blob nearly always.
+        let data = toy_data();
+        let mut cross = 0;
+        for seed_v in 0..50u64 {
+            let mut rng = Pcg64::seed_from(seed_v);
+            let r = seed(&data, 2, Variant::Standard, &mut rng);
+            let b0 = r.center_indices[0] % 2; // even idx = blob A, odd = blob B
+            let b1 = r.center_indices[1] % 2;
+            if b0 != b1 {
+                cross += 1;
+            }
+        }
+        assert!(cross >= 45, "expected D² sampling to split blobs, got {cross}/50");
+    }
+}

@@ -1,0 +1,164 @@
+//! Norm partitions for the full accelerated variant (§4.3).
+//!
+//! Each cluster is split by norm relative to its center:
+//! `L_j = {x : ‖x‖ ≤ ‖c_j‖}` and `U_j = {x : ‖x‖ > ‖c_j‖}`. Per partition
+//! the algorithm keeps — besides the member list, SED radius and weight sum
+//! that the TIE machinery already needs — the norm bounds
+//!
+//! ```text
+//! l(Part) = min_i ( ‖x_i‖ − ED(x_i, c_j) )
+//! u(Part) = max_i ( ‖x_i‖ + ED(x_i, c_j) )
+//! ```
+//!
+//! A new center whose norm falls outside `[l, u]` cannot be the nearest
+//! center of any member (Eq. 6), so the partition is skipped without even
+//! computing the center–center distance. The split also tightens the TIE
+//! filter: each partition carries its own radius.
+
+/// One norm partition (half of a cluster).
+#[derive(Clone, Debug, Default)]
+pub struct Part {
+    /// Point indices in this partition.
+    pub members: Vec<usize>,
+    /// SED radius: `max_i w_i` over members.
+    pub radius: f32,
+    /// Weight sum over members (f64 accumulator).
+    pub sum: f64,
+    /// Lower norm bound `min_i (‖x_i‖ − √w_i)`; +∞ when empty.
+    pub lb: f32,
+    /// Upper norm bound `max_i (‖x_i‖ + √w_i)`; −∞ when empty.
+    pub ub: f32,
+}
+
+impl Part {
+    /// An empty partition with neutral bounds.
+    pub fn empty() -> Self {
+        Self { members: Vec::new(), radius: 0.0, sum: 0.0, lb: f32::INFINITY, ub: f32::NEG_INFINITY }
+    }
+
+    /// Whether a center with norm `c_norm` survives the partition-level norm
+    /// filter (i.e. the partition must be examined further).
+    #[inline]
+    pub fn norm_bounds_admit(&self, c_norm: f32) -> bool {
+        !self.members.is_empty() && c_norm > self.lb && c_norm < self.ub
+    }
+
+    /// Recomputes radius, sum and bounds from the global weight/norm arrays.
+    pub fn refresh(&mut self, weights: &[f32], norms: &[f32]) {
+        let mut r = 0f32;
+        let mut s = 0f64;
+        let mut lb = f32::INFINITY;
+        let mut ub = f32::NEG_INFINITY;
+        for &i in &self.members {
+            let w = weights[i];
+            if w > r {
+                r = w;
+            }
+            s += w as f64;
+            let e = w.sqrt();
+            let l = norms[i] - e;
+            let u = norms[i] + e;
+            if l < lb {
+                lb = l;
+            }
+            if u > ub {
+                ub = u;
+            }
+        }
+        self.radius = r;
+        self.sum = s;
+        self.lb = lb;
+        self.ub = ub;
+    }
+}
+
+/// A cluster in the full variant: two norm partitions plus its center norm.
+#[derive(Clone, Debug)]
+pub struct NormCluster {
+    /// Lower partition (`‖x‖ ≤ ‖c_j‖`).
+    pub lower: Part,
+    /// Upper partition (`‖x‖ > ‖c_j‖`).
+    pub upper: Part,
+    /// `‖c_j‖` (with the configured reference point).
+    pub center_norm: f32,
+}
+
+impl NormCluster {
+    /// New empty cluster for a center with the given norm.
+    pub fn new(center_norm: f32) -> Self {
+        Self { lower: Part::empty(), upper: Part::empty(), center_norm }
+    }
+
+    /// Inserts a point into the partition dictated by its norm.
+    #[inline]
+    pub fn insert(&mut self, i: usize, norm_i: f32) {
+        if norm_i <= self.center_norm {
+            self.lower.members.push(i);
+        } else {
+            self.upper.members.push(i);
+        }
+    }
+
+    /// Total weight of the cluster (both partitions).
+    pub fn sum(&self) -> f64 {
+        self.lower.sum + self.upper.sum
+    }
+
+    /// Member count (both partitions).
+    pub fn len(&self) -> usize {
+        self.lower.members.len() + self.upper.members.len()
+    }
+
+    /// True when both partitions are empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_routes_by_norm() {
+        let mut c = NormCluster::new(5.0);
+        c.insert(0, 4.0);
+        c.insert(1, 5.0); // ties go lower (≤)
+        c.insert(2, 6.0);
+        assert_eq!(c.lower.members, vec![0, 1]);
+        assert_eq!(c.upper.members, vec![2]);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn refresh_computes_bounds() {
+        let mut p = Part::empty();
+        p.members = vec![0, 1];
+        // w = SED; norms in ED space.
+        let weights = [4.0f32, 9.0]; // EDs 2 and 3
+        let norms = [10.0f32, 20.0];
+        p.refresh(&weights, &norms);
+        assert_eq!(p.radius, 9.0);
+        assert_eq!(p.sum, 13.0);
+        assert_eq!(p.lb, 8.0); // 10 − 2
+        assert_eq!(p.ub, 23.0); // 20 + 3
+    }
+
+    #[test]
+    fn empty_part_admits_nothing() {
+        let p = Part::empty();
+        assert!(!p.norm_bounds_admit(0.0));
+        assert!(!p.norm_bounds_admit(1e30));
+    }
+
+    #[test]
+    fn bounds_admit_semantics() {
+        let mut p = Part::empty();
+        p.members = vec![0];
+        p.refresh(&[4.0], &[10.0]); // bounds [8, 12]
+        assert!(p.norm_bounds_admit(9.0));
+        assert!(!p.norm_bounds_admit(8.0)); // boundary excluded (Eq. 7 is ≥)
+        assert!(!p.norm_bounds_admit(12.0));
+        assert!(!p.norm_bounds_admit(20.0));
+    }
+}

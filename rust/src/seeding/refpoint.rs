@@ -1,0 +1,151 @@
+//! Appendix B — alternative reference points for the norm filter.
+//!
+//! The norm of a point is its ED to the origin; any point of the space can
+//! serve as the reference instead (equivalent to shifting the data), and a
+//! well-chosen reference increases norm variance — which is what makes the
+//! norm filter selective. The paper evaluates five choices (Table 2):
+//! origin, mean, median, "positive" (bounding-box minimum), and the point
+//! whose norm is closest to the mean norm.
+
+use crate::core::matrix::Matrix;
+use crate::core::norms::{norm_variance_pct, norms, norms_from};
+
+/// Reference-point strategy for norm computation (Appendix B / Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RefPoint {
+    /// The origin — the standard norm (paper baseline).
+    Origin,
+    /// Per-dimension mean of the data.
+    Mean,
+    /// Per-dimension median of the data.
+    Median,
+    /// Bounding-box minimum: shifts all data into the positive quadrant.
+    Positive,
+    /// The dataset point whose norm is closest to the mean norm.
+    MeanNorm,
+}
+
+impl RefPoint {
+    /// All strategies in Table 2's column order.
+    pub const ALL: [RefPoint; 5] =
+        [RefPoint::Origin, RefPoint::Mean, RefPoint::Median, RefPoint::Positive, RefPoint::MeanNorm];
+
+    /// Short identifier for CLI flags and report columns.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefPoint::Origin => "origin",
+            RefPoint::Mean => "mean",
+            RefPoint::Median => "median",
+            RefPoint::Positive => "positive",
+            RefPoint::MeanNorm => "mean-norm",
+        }
+    }
+
+    /// Parses a CLI name.
+    pub fn parse(s: &str) -> Option<RefPoint> {
+        Self::ALL.into_iter().find(|r| r.name() == s)
+    }
+
+    /// Computes the reference point's coordinates for a dataset.
+    pub fn coordinates(&self, data: &Matrix) -> Vec<f32> {
+        match self {
+            RefPoint::Origin => vec![0.0; data.cols()],
+            RefPoint::Mean => data.col_means().iter().map(|&m| m as f32).collect(),
+            RefPoint::Median => data.col_medians(),
+            RefPoint::Positive => data.col_mins(),
+            RefPoint::MeanNorm => {
+                let ns = norms(data);
+                let mean = ns.iter().map(|&x| x as f64).sum::<f64>() / ns.len().max(1) as f64;
+                let best = ns
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        ((**a as f64) - mean).abs().total_cmp(&(((**b as f64) - mean).abs()))
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                data.row(best).to_vec()
+            }
+        }
+    }
+
+    /// Norm variance (%) of the dataset when using this reference point —
+    /// the quantity Table 2 reports.
+    pub fn norm_variance(&self, data: &Matrix) -> f64 {
+        match self {
+            RefPoint::Origin => norm_variance_pct(&norms(data)),
+            rp => {
+                let reference = rp.coordinates(data);
+                norm_variance_pct(&norms_from(data, &reference))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+
+    fn shifted_blob(offset: f32) -> Matrix {
+        let mut rng = Pcg64::seed_from(42);
+        let mut m = Matrix::zeros(0, 0);
+        for _ in 0..200 {
+            m.push_row(&[offset + rng.normal() as f32, offset + rng.normal() as f32]);
+        }
+        m
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for rp in RefPoint::ALL {
+            assert_eq!(RefPoint::parse(rp.name()), Some(rp));
+        }
+        assert_eq!(RefPoint::parse("bogus"), None);
+    }
+
+    #[test]
+    fn origin_coordinates_are_zero() {
+        let m = shifted_blob(5.0);
+        assert_eq!(RefPoint::Origin.coordinates(&m), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_reference_centers_data() {
+        let m = shifted_blob(100.0);
+        let c = RefPoint::Mean.coordinates(&m);
+        assert!((c[0] - 100.0).abs() < 1.0, "{c:?}");
+    }
+
+    #[test]
+    fn positive_reference_is_bounding_box_min() {
+        let m = Matrix::from_vec(vec![1.0, -5.0, 3.0, 2.0], 2, 2);
+        assert_eq!(RefPoint::Positive.coordinates(&m), vec![1.0, -5.0]);
+    }
+
+    #[test]
+    fn mean_norm_picks_a_dataset_point() {
+        let m = shifted_blob(3.0);
+        let c = RefPoint::MeanNorm.coordinates(&m);
+        let found = (0..m.rows()).any(|i| m.row(i) == c.as_slice());
+        assert!(found);
+    }
+
+    /// The Appendix-B motivation: two blobs equidistant from the origin have
+    /// an unfavourable (unimodal) norm profile; a reference point *inside*
+    /// one blob (mean-norm picks a dataset point) makes the profile bimodal
+    /// and the variance jumps.
+    #[test]
+    fn refpoint_inside_blob_raises_variance() {
+        let mut rng = Pcg64::seed_from(7);
+        let mut m = Matrix::zeros(0, 0);
+        for i in 0..400 {
+            let (cx, cy) = if i % 2 == 0 { (300.0, 0.0) } else { (0.0, 300.0) };
+            m.push_row(&[cx + rng.normal() as f32, cy + rng.normal() as f32]);
+        }
+        let nv_origin = RefPoint::Origin.norm_variance(&m);
+        let nv_meannorm = RefPoint::MeanNorm.norm_variance(&m);
+        assert!(nv_origin < 20.0, "origin nv={nv_origin}");
+        assert!(nv_meannorm > 60.0, "mean-norm nv={nv_meannorm}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Algorithm 1 — the standard k-means++.
+//!
+//! Per added center: one full `O(n·d)` scan updating `w_i` against the new
+//! center (using the fact that the previous closest center remains closest
+//! among predecessors, §4.1), then flat D² roulette sampling.
+
+use crate::core::distance::{sed, sed_dot};
+use crate::core::matrix::Matrix;
+use crate::core::norms::sqnorms;
+use crate::seeding::counters::Counters;
+use crate::seeding::picker::{CenterPicker, PickCtx};
+use crate::seeding::trace::TraceSink;
+use crate::seeding::{SeedConfig, SeedResult};
+use std::time::Duration;
+
+pub(crate) fn run<P: CenterPicker, T: TraceSink>(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    picker: &mut P,
+    trace: &mut T,
+) -> SeedResult {
+    let n = data.rows();
+    let d = data.cols();
+    let mut counters = Counters::default();
+
+    // Optional Appendix-B dot-product decomposition: precompute ‖x‖².
+    let sq = if cfg.dot_trick {
+        counters.norms += n as u64;
+        sqnorms(data)
+    } else {
+        Vec::new()
+    };
+
+    let first = picker.first(n);
+    let mut center_indices = vec![first];
+    let mut weights = vec![0f32; n];
+    let mut assignments = vec![0u32; n];
+
+    // Initial pass: w_i = SED(x_i, c_0).
+    let mut total = 0f64;
+    {
+        let c0 = data.row(first);
+        let c0_sq = if cfg.dot_trick { sq[first] } else { 0.0 };
+        for i in 0..n {
+            trace.read_point(i);
+            trace.access_weight(i);
+            trace.ops(3 * d as u64);
+            let w = if cfg.dot_trick {
+                sed_dot(data.row(i), c0, sq[i], c0_sq)
+            } else {
+                sed(data.row(i), c0)
+            };
+            weights[i] = w;
+            total += w as f64;
+        }
+        counters.visited_assign += n as u64;
+        counters.distances += n as u64;
+    }
+
+    while center_indices.len() < cfg.k {
+        let pick = picker.next(PickCtx::Flat { weights: &weights, total });
+        counters.visited_sampling += pick.visited;
+        let c_new = pick.index;
+        let slot = center_indices.len() as u32;
+        center_indices.push(c_new);
+
+        // Full update scan against the new center only (§4.1 optimization).
+        let cn = data.row(c_new);
+        let cn_sq = if cfg.dot_trick { sq[c_new] } else { 0.0 };
+        total = 0f64;
+        for i in 0..n {
+            trace.read_point(i);
+            trace.access_weight(i);
+            trace.ops(3 * d as u64);
+            let dist = if cfg.dot_trick {
+                sed_dot(data.row(i), cn, sq[i], cn_sq)
+            } else {
+                sed(data.row(i), cn)
+            };
+            if dist < weights[i] {
+                weights[i] = dist;
+                assignments[i] = slot;
+            }
+            total += weights[i] as f64;
+        }
+        counters.visited_assign += n as u64;
+        counters.distances += n as u64;
+    }
+
+    SeedResult {
+        centers: data.gather_rows(&center_indices),
+        center_indices,
+        assignments,
+        weights,
+        counters,
+        elapsed: Duration::ZERO, // filled by seed_with
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::seeding::picker::{D2Picker, ScriptedPicker};
+    use crate::seeding::trace::NoTrace;
+    use crate::seeding::Variant;
+
+    fn grid(n_side: usize) -> Matrix {
+        let mut m = Matrix::zeros(0, 0);
+        for i in 0..n_side {
+            for j in 0..n_side {
+                m.push_row(&[i as f32, j as f32]);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn counter_accounting_matches_formula() {
+        // Standard k-means++ examines exactly n points per added center
+        // (k passes counting the initial one) and computes n distances each.
+        let data = grid(6); // n = 36
+        let cfg = SeedConfig::new(4, Variant::Standard);
+        let mut picker = D2Picker::new(Pcg64::seed_from(3));
+        let r = run(&data, &cfg, &mut picker, &mut NoTrace);
+        assert_eq!(r.counters.visited_assign, 36 * 4);
+        assert_eq!(r.counters.distances, 36 * 4);
+        assert_eq!(r.counters.center_distances, 0);
+        assert_eq!(r.counters.norms, 0);
+    }
+
+    #[test]
+    fn weights_are_true_min_distances() {
+        let data = grid(5);
+        let cfg = SeedConfig::new(6, Variant::Standard);
+        let mut picker = D2Picker::new(Pcg64::seed_from(8));
+        let r = run(&data, &cfg, &mut picker, &mut NoTrace);
+        for i in 0..data.rows() {
+            let brute = r
+                .center_indices
+                .iter()
+                .map(|&c| sed(data.row(i), data.row(c)))
+                .fold(f32::INFINITY, f32::min);
+            assert_eq!(r.weights[i], brute, "point {i}");
+        }
+    }
+
+    #[test]
+    fn scripted_picker_forces_sequence() {
+        let data = grid(4);
+        let cfg = SeedConfig::new(3, Variant::Standard);
+        let mut picker = ScriptedPicker::new(vec![0, 15, 5]);
+        let r = run(&data, &cfg, &mut picker, &mut NoTrace);
+        assert_eq!(r.center_indices, vec![0, 15, 5]);
+    }
+
+    #[test]
+    fn dot_trick_close_to_direct() {
+        let data = grid(5);
+        let mut cfg = SeedConfig::new(4, Variant::Standard);
+        let mut p1 = ScriptedPicker::new(vec![0, 24, 12, 4]);
+        let plain = run(&data, &cfg, &mut p1, &mut NoTrace);
+        cfg.dot_trick = true;
+        let mut p2 = ScriptedPicker::new(vec![0, 24, 12, 4]);
+        let dot = run(&data, &cfg, &mut p2, &mut NoTrace);
+        assert_eq!(dot.counters.norms, 25);
+        for (a, b) in plain.weights.iter().zip(&dot.weights) {
+            assert!((a - b).abs() <= 1e-3 * a.max(1.0), "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,407 @@
+//! Algorithm 2 — TIE-accelerated k-means++ (§4.2).
+//!
+//! Per added center:
+//! 1. **Two-step sampling** (§4.2.2): roulette over cluster sums `s_j`, then
+//!    roulette inside the chosen cluster.
+//! 2. **Filter 1** (Eq. 9): skip cluster `j` when `SED(c_j, c_new) ≥ 4·r_j`.
+//! 3. **Filter 2** (Eq. 5): inside a surviving cluster, compute the distance
+//!    for point `i` only when `4·w_i > SED(c_j, c_new)`.
+//! 4. Moved points migrate to the new cluster; radii/sums of scanned
+//!    clusters are refreshed in the same pass.
+//!
+//! With `cfg.appendix_a`, center–center computations are additionally
+//! skipped via [`crate::seeding::centerdist::CenterGeom`].
+
+use crate::core::distance::{sed, sed_dot};
+use crate::core::matrix::Matrix;
+use crate::core::norms::sqnorms;
+use crate::core::sampling::CumTable;
+use crate::seeding::centerdist::CenterGeom;
+use crate::seeding::clusters::ClusterSet;
+use crate::seeding::counters::Counters;
+use crate::seeding::picker::{CenterPicker, PickCtx};
+use crate::seeding::trace::TraceSink;
+use crate::seeding::{SeedConfig, SeedResult};
+use std::time::Duration;
+
+pub(crate) fn run<P: CenterPicker, T: TraceSink>(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    picker: &mut P,
+    trace: &mut T,
+) -> SeedResult {
+    let n = data.rows();
+    let d = data.cols();
+    let mut counters = Counters::default();
+
+    let sq = if cfg.dot_trick {
+        counters.norms += n as u64;
+        sqnorms(data)
+    } else {
+        Vec::new()
+    };
+    let dist =
+        |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
+            c.distances += 1;
+            t.read_point(a);
+            t.ops(3 * d as u64);
+            if cfg.dot_trick {
+                sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+            } else {
+                sed(data.row(a), data.row(b))
+            }
+        };
+
+    // --- Initialization (Algorithm 2 lines 1–7).
+    let first = picker.first(n);
+    let mut center_indices = vec![first];
+    let mut weights = vec![0f32; n];
+    let mut assignments = vec![0u32; n];
+    let mut geom = CenterGeom::new(cfg.appendix_a);
+
+    let mut r0 = 0f32;
+    let mut s0 = 0f64;
+    for i in 0..n {
+        trace.access_weight(i);
+        let w = dist(i, first, &mut counters, trace);
+        weights[i] = w;
+        if w > r0 {
+            r0 = w;
+        }
+        s0 += w as f64;
+    }
+    counters.visited_assign += n as u64;
+    let mut cs = ClusterSet::initial(n, r0, s0);
+
+    // §4.2.2 binary-search refinement: lazily-built per-cluster cumulative
+    // tables, invalidated whenever a cluster's members/weights change.
+    let mut tables: Vec<CumTable> = if cfg.binary_search_sampling {
+        vec![CumTable::build(&weights, &cs.members[0])]
+    } else {
+        Vec::new()
+    };
+
+    // --- Main loop (lines 8–32).
+    while center_indices.len() < cfg.k {
+        // Two-step sampling over (cluster, member).
+        let total = cs.total();
+        let groups: Vec<&[usize]> = cs.members.iter().map(|m| m.as_slice()).collect();
+        let pick = if cfg.binary_search_sampling {
+            picker.next(PickCtx::TwoStepCached {
+                weights: &weights,
+                groups: &groups,
+                sums: &cs.sums,
+                total,
+                tables: &mut tables,
+            })
+        } else {
+            picker.next(PickCtx::TwoStep {
+                weights: &weights,
+                groups: &groups,
+                sums: &cs.sums,
+                total,
+            })
+        };
+        drop(groups);
+        counters.visited_sampling += pick.visited;
+        let c_new = pick.index;
+        let src = assignments[c_new] as usize; // cluster the pick came from
+        let d_src_ed = weights[c_new].sqrt(); // ED(c_new, c_src), Appendix A
+        let slot = center_indices.len();
+        center_indices.push(c_new);
+        let new_j = cs.push_empty();
+        if cfg.binary_search_sampling {
+            tables.push(CumTable::default()); // new cluster: table invalid
+        }
+        let cn_row = data.row(c_new);
+
+        let m = new_j; // number of pre-existing clusters
+        let mut moved: Vec<usize> = Vec::new();
+        for j in 0..m {
+            trace.access_cluster(j);
+            // Cluster header check counts as an examined point (§5.2).
+            counters.visited_assign += 1;
+
+            // Center–center distance (possibly skipped via Appendix A).
+            let d_cc = match geom.sed_to(
+                j,
+                src,
+                d_src_ed,
+                cs.radius[j],
+                data.row(center_indices[j]),
+                cn_row,
+            ) {
+                None => {
+                    counters.center_distances_avoided += 1;
+                    counters.filter1_rejects += 1;
+                    continue;
+                }
+                Some(d_cc) => {
+                    counters.center_distances += 1;
+                    trace.read_point(center_indices[j]);
+                    trace.ops(3 * d as u64);
+                    d_cc
+                }
+            };
+
+            // Filter 1 (Eq. 9): reject the whole cluster.
+            if 4.0 * cs.radius[j] <= d_cc {
+                counters.filter1_rejects += 1;
+                continue;
+            }
+
+            // Scan the cluster; refresh r_j/s_j (and, for the §4.2.2
+            // refinement, the cumulative weight table) in the same pass —
+            // no extra memory traversal.
+            let members = std::mem::take(&mut cs.members[j]);
+            let mut retained = Vec::with_capacity(members.len());
+            let mut cum: Vec<f64> =
+                if cfg.binary_search_sampling { Vec::with_capacity(members.len()) } else { Vec::new() };
+            let mut new_r = 0f32;
+            let mut new_s = 0f64;
+            for &i in &members {
+                counters.visited_assign += 1;
+                trace.access_weight(i);
+                // Filter 2 (Eq. 5): distance needed only if 4·w_i > d_cc.
+                if 4.0 * weights[i] > d_cc {
+                    let dnew = dist(i, c_new, &mut counters, trace);
+                    if dnew < weights[i] {
+                        weights[i] = dnew;
+                        assignments[i] = slot as u32;
+                        moved.push(i);
+                        continue;
+                    }
+                } else {
+                    counters.filter2_rejects += 1;
+                }
+                retained.push(i);
+                if weights[i] > new_r {
+                    new_r = weights[i];
+                }
+                new_s += weights[i] as f64;
+                if cfg.binary_search_sampling {
+                    cum.push(new_s);
+                }
+            }
+            cs.members[j] = retained;
+            cs.radius[j] = new_r;
+            cs.sums[j] = new_s;
+            if cfg.binary_search_sampling {
+                tables[j] = CumTable::from_cumulative(cum);
+            }
+        }
+        geom.commit_center(m);
+
+        // Install the new cluster (lines 29–31).
+        cs.members[new_j] = moved;
+        cs.refresh(new_j, &weights);
+        if cfg.binary_search_sampling {
+            // New cluster's table (its refresh pass just touched every
+            // member; one extra O(|P_new|) accumulation).
+            tables[new_j] = CumTable::build(&weights, &cs.members[new_j]);
+        }
+
+        #[cfg(debug_assertions)]
+        cs.check_invariants(n, &weights);
+    }
+
+    SeedResult {
+        centers: data.gather_rows(&center_indices),
+        center_indices,
+        assignments,
+        weights,
+        counters,
+        elapsed: Duration::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::seeding::picker::{D2Picker, ScriptedPicker};
+    use crate::seeding::trace::NoTrace;
+    use crate::seeding::{standard, Variant};
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let data = (0..n * d).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect();
+        Matrix::from_vec(data, n, d)
+    }
+
+    /// THE exactness test: same scripted center sequence ⇒ bit-identical
+    /// weights and assignments vs. the standard algorithm.
+    #[test]
+    fn exactness_vs_standard_scripted() {
+        for seed in 0..5u64 {
+            let data = random_data(120, 4, seed);
+            let mut rng = Pcg64::seed_from(seed ^ 0xABCD);
+            let k = 12;
+            let script: Vec<usize> = {
+                // A plausible script: run standard with D² first, reuse its picks.
+                let cfg = SeedConfig::new(k, Variant::Standard);
+                let mut p = D2Picker::new(&mut rng);
+                standard::run(&data, &cfg, &mut p, &mut NoTrace).center_indices
+            };
+            let cfg_s = SeedConfig::new(k, Variant::Standard);
+            let cfg_t = SeedConfig::new(k, Variant::Tie);
+            let mut ps = ScriptedPicker::new(script.clone());
+            let mut pt = ScriptedPicker::new(script.clone());
+            let rs = standard::run(&data, &cfg_s, &mut ps, &mut NoTrace);
+            let rt = run(&data, &cfg_t, &mut pt, &mut NoTrace);
+            assert_eq!(rs.weights, rt.weights, "seed {seed}");
+            assert_eq!(rs.assignments, rt.assignments, "seed {seed}");
+            assert_eq!(rs.center_indices, rt.center_indices);
+        }
+    }
+
+    /// Appendix A must not change results, only skip computations.
+    #[test]
+    fn appendix_a_is_exact_and_saves() {
+        let data = random_data(300, 3, 7);
+        let k = 24;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(1);
+            let cfg = SeedConfig::new(k, Variant::Standard);
+            let mut p = D2Picker::new(&mut rng);
+            standard::run(&data, &cfg, &mut p, &mut NoTrace).center_indices
+        };
+        let base_cfg = SeedConfig::new(k, Variant::Tie);
+        let mut aa_cfg = SeedConfig::new(k, Variant::Tie);
+        aa_cfg.appendix_a = true;
+        let mut p1 = ScriptedPicker::new(script.clone());
+        let mut p2 = ScriptedPicker::new(script.clone());
+        let base = run(&data, &base_cfg, &mut p1, &mut NoTrace);
+        let aa = run(&data, &aa_cfg, &mut p2, &mut NoTrace);
+        assert_eq!(base.weights, aa.weights);
+        assert_eq!(base.assignments, aa.assignments);
+        assert!(
+            aa.counters.center_distances <= base.counters.center_distances,
+            "appendix A should not add center distances"
+        );
+    }
+
+    /// Accelerated variant must compute no *more* distances than standard.
+    #[test]
+    fn saves_distance_computations() {
+        let data = random_data(400, 3, 11);
+        let mut rng1 = Pcg64::seed_from(2);
+        let mut rng2 = Pcg64::seed_from(2);
+        let k = 32;
+        let cfg_s = SeedConfig::new(k, Variant::Standard);
+        let cfg_t = SeedConfig::new(k, Variant::Tie);
+        let mut ps = D2Picker::new(&mut rng1);
+        let mut pt = D2Picker::new(&mut rng2);
+        let rs = standard::run(&data, &cfg_s, &mut ps, &mut NoTrace);
+        let rt = run(&data, &cfg_t, &mut pt, &mut NoTrace);
+        assert!(
+            rt.counters.distances < rs.counters.distances,
+            "tie {} vs std {}",
+            rt.counters.distances,
+            rs.counters.distances
+        );
+        // Filters actually fired at this scale.
+        assert!(rt.counters.filter1_rejects + rt.counters.filter2_rejects > 0);
+    }
+
+    /// Weights remain true min-distances to the selected centers.
+    #[test]
+    fn weights_are_true_min_distances() {
+        let data = random_data(150, 5, 3);
+        let mut rng = Pcg64::seed_from(17);
+        let cfg = SeedConfig::new(20, Variant::Tie);
+        let mut p = D2Picker::new(&mut rng);
+        let r = run(&data, &cfg, &mut p, &mut NoTrace);
+        for i in 0..data.rows() {
+            let brute = r
+                .center_indices
+                .iter()
+                .map(|&c| sed(data.row(i), data.row(c)))
+                .fold(f32::INFINITY, f32::min);
+            assert_eq!(r.weights[i], brute, "point {i}");
+        }
+    }
+
+    /// §4.2.2 binary-search sampling: same result validity, same cost
+    /// distribution, fewer sampling visits once clusters stabilize.
+    #[test]
+    fn binary_search_sampling_is_equivalent_and_cheaper() {
+        let data = random_data(2_000, 3, 42);
+        let k = 64;
+        let reps = 10u64;
+        let mean_cost = |binsearch: bool| -> (f64, u64) {
+            let mut cost = 0f64;
+            let mut sampling_visits = 0u64;
+            for rep in 0..reps {
+                let mut cfg = SeedConfig::new(k, Variant::Tie);
+                cfg.binary_search_sampling = binsearch;
+                let mut picker = D2Picker::new(Pcg64::seed_stream(7, rep));
+                let r = run(&data, &cfg, &mut picker, &mut NoTrace);
+                cost += r.cost();
+                sampling_visits += r.counters.visited_sampling;
+                // Weights must still be true min distances.
+                for i in 0..data.rows() {
+                    let brute = r
+                        .center_indices
+                        .iter()
+                        .map(|&c| sed(data.row(i), data.row(c)))
+                        .fold(f32::INFINITY, f32::min);
+                    assert_eq!(r.weights[i], brute);
+                }
+            }
+            (cost / reps as f64, sampling_visits / reps)
+        };
+        let (cost_plain, visits_plain) = mean_cost(false);
+        let (cost_bs, visits_bs) = mean_cost(true);
+        // Distribution-equivalent sampling ⇒ statistically equal costs.
+        assert!(
+            (cost_bs / cost_plain - 1.0).abs() < 0.3,
+            "costs diverged: {cost_bs} vs {cost_plain}"
+        );
+        // The refinement's point: strictly fewer entries examined.
+        assert!(
+            visits_bs < visits_plain,
+            "binary search should examine fewer entries: {visits_bs} vs {visits_plain}"
+        );
+    }
+
+    /// Duplicate points (zero-radius clusters) must not break anything.
+    #[test]
+    fn handles_duplicate_points() {
+        let mut rows = Vec::new();
+        for _ in 0..10 {
+            rows.extend_from_slice(&[1.0f32, 1.0]);
+        }
+        for i in 0..10 {
+            rows.extend_from_slice(&[5.0 + i as f32, 5.0]);
+        }
+        let data = Matrix::from_vec(rows, 20, 2);
+        let mut rng = Pcg64::seed_from(4);
+        let cfg = SeedConfig::new(6, Variant::Tie);
+        let mut p = D2Picker::new(&mut rng);
+        let r = run(&data, &cfg, &mut p, &mut NoTrace);
+        assert_eq!(r.center_indices.len(), 6);
+    }
+
+    /// Property: on random instances and random scripts, tie == standard.
+    #[test]
+    fn prop_exactness_random_scripts() {
+        let mut rng = Pcg64::seed_from(0xFEED);
+        for _case in 0..20 {
+            let n = 20 + rng.below(80);
+            let d = 1 + rng.below(6);
+            let data = random_data(n, d, rng.next_u64());
+            let k = 2 + rng.below(n.min(15) - 1);
+            // Random distinct script.
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            let script: Vec<usize> = idx[..k].to_vec();
+            let mut ps = ScriptedPicker::new(script.clone());
+            let mut pt = ScriptedPicker::new(script.clone());
+            let rs = standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut ps, &mut NoTrace);
+            let rt = run(&data, &SeedConfig::new(k, Variant::Tie), &mut pt, &mut NoTrace);
+            assert_eq!(rs.weights, rt.weights, "n={n} d={d} k={k}");
+            assert_eq!(rs.assignments, rt.assignments, "n={n} d={d} k={k}");
+        }
+    }
+}

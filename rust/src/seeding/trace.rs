@@ -1,0 +1,63 @@
+//! Memory-trace hooks for the cache-behaviour experiments (Fig. 6).
+//!
+//! The §5.3 analysis is about *access patterns*: the standard variant sweeps
+//! points sequentially; the accelerated variants jump between surviving
+//! clusters/partitions. Seeders are generic over a [`TraceSink`] that
+//! receives semantic access events; the [`crate::simcache`] module lowers
+//! them to cache-line addresses. [`NoTrace`] is a zero-cost no-op — the
+//! production monomorphization compiles the hooks away entirely.
+
+/// Receives semantic memory-access events from a seeder run.
+pub trait TraceSink {
+    /// Point row `i` (all `d` coordinates) was read.
+    #[inline(always)]
+    fn read_point(&mut self, _i: usize) {}
+
+    /// Weight `w_i` was read or written.
+    #[inline(always)]
+    fn access_weight(&mut self, _i: usize) {}
+
+    /// Per-point norm/bound entry `i` was read (full variant only).
+    #[inline(always)]
+    fn access_bound(&mut self, _i: usize) {}
+
+    /// Cluster/partition header `j` was read (radius, sum, member ptr).
+    #[inline(always)]
+    fn access_cluster(&mut self, _j: usize) {}
+
+    /// An arithmetic-instruction estimate for the IPC model: `n` flop-like
+    /// operations retired (e.g. one SED of dimension d ≈ 3d ops).
+    #[inline(always)]
+    fn ops(&mut self, _n: u64) {}
+}
+
+/// The zero-cost sink used by all non-instrumented runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoTrace;
+
+impl TraceSink for NoTrace {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn notrace_is_zero_sized() {
+        assert_eq!(std::mem::size_of::<NoTrace>(), 0);
+    }
+
+    struct CountSink(u64);
+    impl TraceSink for CountSink {
+        fn read_point(&mut self, _i: usize) {
+            self.0 += 1;
+        }
+    }
+
+    #[test]
+    fn custom_sink_receives_events() {
+        let mut s = CountSink(0);
+        s.read_point(3);
+        s.read_point(4);
+        assert_eq!(s.0, 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! Trace-driven cache simulator — the §5.3 / Fig. 6 substrate.
+//!
+//! The paper measures hardware counters (L1d miss %, LLC miss %, IPC) on a
+//! 2×12-core cluster under 1–10 concurrent jobs. Those counters aren't
+//! available here, so we reproduce the *mechanisms* with a simulator:
+//!
+//! * [`cache::Cache`] — a set-associative LRU cache;
+//! * [`hierarchy::Hierarchy`] — per-core L1d caches over a shared LLC, with
+//!   multi-job contention modelled by round-robin interleaving of the jobs'
+//!   access streams into the shared level;
+//! * [`trace::TracingSink`] — a [`crate::seeding::TraceSink`] that lowers
+//!   the seeders' semantic access events (point rows, weights, cluster
+//!   headers) to byte addresses with the same layout the real arrays have;
+//! * [`model::IpcModel`] — an analytic instructions-per-cycle estimate from
+//!   the miss rates (memory-latency-bound pipeline model).
+//!
+//! Fig. 6's qualitative claims all fall out of these mechanisms; the
+//! experiment runner (`xp::fig6`) reports them side by side with real
+//! wall-clock measurements from the thread-pool coordinator.
+
+pub mod cache;
+pub mod hierarchy;
+pub mod model;
+pub mod trace;
+
+pub use cache::{Cache, CacheConfig, CacheStats};
+pub use hierarchy::{Hierarchy, HierarchyConfig};
+pub use model::IpcModel;
+pub use trace::TracingSink;

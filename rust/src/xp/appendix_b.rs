@@ -1,0 +1,106 @@
+//! Appendix B ablation — reference points for the norm filter, plus the
+//! dot-product SED decomposition.
+//!
+//! Part 1: runs the full accelerated variant with each reference point on
+//! instances whose *origin* norm variance is low (where the paper predicts
+//! re-referencing helps) and reports distance computations + time.
+//!
+//! Part 2: seeding with and without the dot-product distance trick.
+
+use crate::cli::Args;
+use crate::core::rng::Pcg64;
+use crate::metrics::table::{fnum, Table};
+use crate::seeding::{seed_with, D2Picker, NoTrace, RefPoint, SeedConfig, Variant};
+use crate::xp::sweep::SweepParams;
+use anyhow::Result;
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let mut p = SweepParams::from_args(args)?;
+    if args.get("instances").is_none() {
+        // Low-origin-NV instances: the Appendix-B target cases.
+        p.instances.retain(|i| ["RQ", "YAH", "HPC", "PHY"].contains(&i.name));
+    }
+
+    // Part 1: reference points.
+    let mut t = Table::new(["instance", "k", "refpoint", "nv_pct", "distances", "norm_rejects", "time_s"]);
+    for inst in &p.instances {
+        let n = p.n_of(inst);
+        let data = inst.generate_n(n);
+        for &k in &p.ks_of(n) {
+            for rp in RefPoint::ALL {
+                let mut cfg = SeedConfig::new(k, Variant::Full);
+                cfg.refpoint = rp;
+                let mut times = Vec::new();
+                let mut last = None;
+                for rep in 0..p.reps {
+                    let mut picker = D2Picker::new(Pcg64::seed_stream(p.seed, rep));
+                    let r = seed_with(&data, &cfg, &mut picker, &mut NoTrace);
+                    times.push(r.elapsed.as_secs_f64());
+                    last = Some(r);
+                }
+                let r = last.unwrap();
+                t.row([
+                    inst.name.to_string(),
+                    k.to_string(),
+                    rp.name().to_string(),
+                    fnum(rp.norm_variance(&data), 2),
+                    r.counters.distances.to_string(),
+                    (r.counters.norm_partition_rejects + r.counters.norm_point_rejects).to_string(),
+                    fnum(times.iter().sum::<f64>() / times.len() as f64, 5),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.to_aligned());
+    t.write_csv(p.out_dir.join("appendix_b_refpoints.csv"))?;
+
+    // Part 2: dot-product trick (distance counts identical; time differs).
+    let mut t2 = Table::new(["instance", "k", "variant", "time_plain", "time_dot"]);
+    for inst in &p.instances {
+        let n = p.n_of(inst);
+        let data = inst.generate_n(n);
+        let Some(&k) = p.ks_of(n).last() else { continue };
+        for variant in [Variant::Standard, Variant::Full] {
+            let time_of = |dot: bool| {
+                let mut cfg = SeedConfig::new(k, variant);
+                cfg.dot_trick = dot;
+                let mut times = Vec::new();
+                for rep in 0..p.reps {
+                    let mut picker = D2Picker::new(Pcg64::seed_stream(p.seed, rep));
+                    let r = seed_with(&data, &cfg, &mut picker, &mut NoTrace);
+                    times.push(r.elapsed.as_secs_f64());
+                }
+                times.iter().sum::<f64>() / times.len() as f64
+            };
+            t2.row([
+                inst.name.to_string(),
+                k.to_string(),
+                variant.name().to_string(),
+                fnum(time_of(false), 5),
+                fnum(time_of(true), 5),
+            ]);
+        }
+    }
+    println!("{}", t2.to_aligned());
+    t2.write_csv(p.out_dir.join("appendix_b_dot_trick.csv"))?;
+    println!("wrote appendix_b CSVs to {}", p.out_dir.display());
+
+    // Shape check: the best reference point should cut distance
+    // computations vs origin on at least some of these low-NV instances.
+    let mut helped = 0;
+    let mut groups = 0;
+    let rows = t.rows();
+    let mut i = 0;
+    while i + 4 < rows.len() {
+        let group = &rows[i..i + 5];
+        let origin_d: f64 = group[0][4].parse().unwrap_or(f64::MAX);
+        let best_d = group.iter().filter_map(|r| r[4].parse::<f64>().ok()).fold(f64::MAX, f64::min);
+        groups += 1;
+        if best_d < origin_d * 0.98 {
+            helped += 1;
+        }
+        i += 5;
+    }
+    println!("shape check (re-referencing cuts distances): {helped}/{groups} (instance,k) cells");
+    Ok(())
+}

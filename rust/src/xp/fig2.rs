@@ -1,0 +1,71 @@
+//! Fig. 2 — percentage of examined points (relative to standard k-means++)
+//! for the TIE-only and full accelerated variants, vs k, split into
+//! low-/high-dimensional panels.
+
+use crate::cli::Args;
+use crate::coordinator::Report;
+use crate::metrics::table::{fnum, Table};
+use crate::seeding::Variant;
+use crate::xp::sweep::{run_sweep, SweepParams};
+use anyhow::Result;
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let p = SweepParams::from_args(args)?;
+    let report = run_sweep(&p, &Variant::ALL);
+    let t = emit(&p, &report, "fig2", |c| c.counters.visited_total() as f64)?;
+    shape_check(&t);
+    Ok(())
+}
+
+/// Shared emitter for Figs. 2 and 3 (same sweep, different metric).
+pub(crate) fn emit(
+    p: &SweepParams,
+    report: &Report,
+    fig: &str,
+    metric: fn(&crate::coordinator::report::Cell) -> f64,
+) -> Result<Table> {
+    let mut t = Table::new(["instance", "group", "k", "pct_tie", "pct_full"]);
+    for inst in &p.instances {
+        let n = p.n_of(inst);
+        for &k in &p.ks_of(n) {
+            let pct = |v: Variant| -> Option<f64> {
+                report
+                    .ratio(inst.name, k, v, Variant::Standard, metric)
+                    .map(|r| 100.0 * r)
+            };
+            if let (Some(tie), Some(full)) = (pct(Variant::Tie), pct(Variant::Full)) {
+                t.row([
+                    inst.name.to_string(),
+                    if inst.high_dim { "high-dim".into() } else { "low-dim".to_string() },
+                    k.to_string(),
+                    fnum(tie, 2),
+                    fnum(full, 2),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.to_aligned());
+    t.write_csv(p.out_dir.join(format!("{fig}.csv")))?;
+    println!("wrote {}", p.out_dir.join(format!("{fig}.csv")).display());
+    Ok(t)
+}
+
+/// The paper's qualitative claim: the percentage falls as k grows.
+fn shape_check(t: &Table) {
+    let mut improving = 0;
+    let mut total = 0;
+    let rows = t.rows();
+    for w in rows.windows(2) {
+        if w[0][0] == w[1][0] {
+            total += 1;
+            let a: f64 = w[0][3].parse().unwrap_or(100.0);
+            let b: f64 = w[1][3].parse().unwrap_or(100.0);
+            if b <= a + 1.0 {
+                improving += 1;
+            }
+        }
+    }
+    println!(
+        "shape check (pct examined falls with k): {improving}/{total} adjacent k-steps non-increasing"
+    );
+}

@@ -1,0 +1,16 @@
+//! Fig. 3 — percentage of calculated distances (relative to standard
+//! k-means++), including center–center distances and norm computations,
+//! vs k.
+
+use crate::cli::Args;
+use crate::seeding::Variant;
+use crate::xp::fig2::emit;
+use crate::xp::sweep::{run_sweep, SweepParams};
+use anyhow::Result;
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let p = SweepParams::from_args(args)?;
+    let report = run_sweep(&p, &Variant::ALL);
+    emit(&p, &report, "fig3", |c| c.counters.computations_total() as f64)?;
+    Ok(())
+}

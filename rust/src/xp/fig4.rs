@@ -1,0 +1,62 @@
+//! Fig. 4 — wall-clock speedups: standard/tie, standard/full, tie/full,
+//! vs k.
+
+use crate::cli::Args;
+use crate::metrics::table::{fnum, Table};
+use crate::seeding::Variant;
+use crate::xp::sweep::{run_sweep, SweepParams};
+use anyhow::Result;
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let p = SweepParams::from_args(args)?;
+    let report = run_sweep(&p, &Variant::ALL);
+    emit(&p, &report)
+}
+
+/// Emits the Fig. 4 table from an existing sweep report.
+pub(crate) fn emit(p: &SweepParams, report: &crate::coordinator::Report) -> Result<()> {
+    let mut t = Table::new([
+        "instance", "group", "k", "speedup_std_tie", "speedup_std_full", "speedup_tie_full",
+    ]);
+    for inst in &p.instances {
+        let n = p.n_of(inst);
+        for &k in &p.ks_of(n) {
+            let s = |a: Variant, b: Variant| {
+                report.ratio(inst.name, k, a, b, |c| c.time.mean)
+            };
+            if let (Some(st), Some(sf), Some(tf)) = (
+                s(Variant::Standard, Variant::Tie),
+                s(Variant::Standard, Variant::Full),
+                s(Variant::Tie, Variant::Full),
+            ) {
+                t.row([
+                    inst.name.to_string(),
+                    if inst.high_dim { "high-dim".into() } else { "low-dim".to_string() },
+                    k.to_string(),
+                    fnum(st, 3),
+                    fnum(sf, 3),
+                    fnum(tf, 3),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.to_aligned());
+    t.write_csv(p.out_dir.join("fig4.csv"))?;
+    println!("wrote {}", p.out_dir.join("fig4.csv").display());
+
+    // Shape check: at the largest k, the accelerated variants should beat
+    // the standard algorithm on most instances.
+    let max_k = p.ks.iter().max().copied().unwrap_or(0);
+    let mut wins = 0;
+    let mut total = 0;
+    for row in t.rows() {
+        if row[2] == max_k.to_string() {
+            total += 1;
+            if row[3].parse::<f64>().unwrap_or(0.0) > 1.0 {
+                wins += 1;
+            }
+        }
+    }
+    println!("shape check (tie beats standard at k={max_k}): {wins}/{total} instances");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Fig. 5 — two-dimensional PCA visualizations of a subset of instances
+//! (the paper shows these to explain why TIE struggles on central-mass
+//! shapes and shines on separated ones).
+
+use crate::cli::Args;
+use crate::data::catalog::by_name;
+use crate::data::pca::pca2;
+use crate::metrics::table::{fnum, Table};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// The paper's Fig. 5 rows: 4 low-dim + 4 high-dim instances.
+const DEFAULT_SUBSET: &[&str] = &["CIF-C", "S-NS", "3DR", "YAH", "GSAD", "MNIST", "PTN", "SUSY"];
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
+    let quick = args.has("quick");
+    let names: Vec<String> = match args.get("instances") {
+        Some(_) => args.get_list_or("instances", &[] as &[String]).map_err(anyhow::Error::msg)?,
+        None => DEFAULT_SUBSET.iter().map(|s| s.to_string()).collect(),
+    };
+    let sample: usize = args.get_or("sample", if quick { 500 } else { 2000 }).map_err(anyhow::Error::msg)?;
+
+    let mut summary = Table::new(["instance", "n", "d", "ev1", "ev2", "csv"]);
+    for name in &names {
+        let inst = by_name(name).with_context(|| format!("unknown instance {name:?}"))?;
+        let data = inst.generate_n(inst.default_n.min(sample * 4));
+        let p = pca2(&data, 40, 5);
+        let proj = p.project(&data);
+        let mut t = Table::new(["pc1", "pc2"]);
+        let step = (proj.rows() / sample).max(1);
+        for i in (0..proj.rows()).step_by(step) {
+            t.row([fnum(proj.row(i)[0] as f64, 4), fnum(proj.row(i)[1] as f64, 4)]);
+        }
+        let path = out_dir.join(format!("fig5_{}.csv", inst.name.to_lowercase().replace('-', "_")));
+        t.write_csv(&path)?;
+        summary.row([
+            inst.name.to_string(),
+            data.rows().to_string(),
+            data.cols().to_string(),
+            fnum(p.eigenvalues[0], 2),
+            fnum(p.eigenvalues[1], 2),
+            path.display().to_string(),
+        ]);
+    }
+    println!("{}", summary.to_aligned());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Experiment runners — one per table and figure of the paper's evaluation
+//! (plus the appendix ablations). Each runner regenerates the corresponding
+//! artefact as a printed table + CSV under the output directory.
+//!
+//! | runner | paper artefact |
+//! |---|---|
+//! | [`table1`] | Table 1 — instance list (n, d, NV%) |
+//! | [`fig2`] | Fig. 2 — % examined points vs k |
+//! | [`fig3`] | Fig. 3 — % calculated distances vs k |
+//! | [`fig4`] | Fig. 4 — wall-clock speedups vs k |
+//! | [`fig5`] | Fig. 5 — PCA 2-d visualizations |
+//! | [`fig6`] | Fig. 6 — time / L1 / LLC / IPC × concurrent jobs |
+//! | [`table2`] | Table 2 — NV% per reference point |
+//! | [`appendix_a`] | Appendix A — center-distance avoidance ablation |
+//! | [`appendix_b`] | Appendix B — reference-point + dot-trick ablation |
+
+pub mod appendix_a;
+pub mod appendix_b;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod sweep;
+pub mod table1;
+pub mod table2;
+
+use crate::cli::Args;
+use anyhow::{bail, Result};
+
+/// Dispatches an experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "table1" => table1::run(args),
+        "fig2" => fig2::run(args),
+        "fig3" => fig3::run(args),
+        "fig4" => fig4::run(args),
+        "fig5" => fig5::run(args),
+        "fig6" => fig6::run(args),
+        "table2" => table2::run(args),
+        "appendix-a" | "appendix_a" | "appa" => appendix_a::run(args),
+        "appendix-b" | "appendix_b" | "appb" => appendix_b::run(args),
+        // One sweep, three figures (Figs. 2–4 share the identical run
+        // matrix; regenerating them together avoids re-running it).
+        "figs234" => {
+            let p = sweep::SweepParams::from_args(args)?;
+            let report = sweep::run_sweep(&p, &crate::seeding::Variant::ALL);
+            fig2::emit(&p, &report, "fig2", |c| c.counters.visited_total() as f64)?;
+            fig2::emit(&p, &report, "fig3", |c| c.counters.computations_total() as f64)?;
+            fig4::emit(&p, &report)?;
+            Ok(())
+        }
+        "all" => {
+            for id in ["table1", "table2", "figs234", "fig5", "fig6", "appendix-a", "appendix-b"] {
+                println!("\n================ xp {id} ================");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (see `geokmpp xp --help`)"),
+    }
+}
+
+/// Prints the experiment list.
+pub fn help() {
+    println!(
+        "experiments:\n\
+         \u{20}  table1      Table 1  — instance catalog (n, d, NV%)\n\
+         \u{20}  table2      Table 2  — NV% per reference point\n\
+         \u{20}  fig2        Fig. 2   — % examined points vs k\n\
+         \u{20}  fig3        Fig. 3   — % calculated distances vs k\n\
+         \u{20}  fig4        Fig. 4   — speedups vs k\n\
+         \u{20}  fig5        Fig. 5   — PCA 2-d projections\n\
+         \u{20}  fig6        Fig. 6   — time/L1/LLC/IPC heatmaps vs concurrent jobs\n\
+         \u{20}  appendix-a  App. A   — center-distance avoidance ablation\n\
+         \u{20}  appendix-b  App. B   — reference points + dot-trick ablation\n\
+         \u{20}  all         everything above\n\
+         common flags: --instances A,B --ks 4,64,1024 --reps 3 --scale 0.25\n\
+         \u{20}             --workers N --out results --quick"
+    );
+}

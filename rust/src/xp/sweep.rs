@@ -1,0 +1,147 @@
+//! Shared sweep machinery for Figs. 2–4: run (instance × k × variant × rep)
+//! through the coordinator and aggregate.
+
+use crate::cli::Args;
+use crate::coordinator::{JobSpec, Report, Scheduler};
+use crate::data::catalog::{by_name, catalog, Instance};
+use crate::seeding::Variant;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Parsed sweep parameters (shared CLI flags).
+#[derive(Clone, Debug)]
+pub struct SweepParams {
+    /// Instances to run (paper short names).
+    pub instances: Vec<Instance>,
+    /// k values (powers of two in the paper: 1 … 4096).
+    pub ks: Vec<usize>,
+    /// Repetitions per cell (paper: 10).
+    pub reps: u64,
+    /// Dataset scale factor applied to `default_n`.
+    pub scale: f64,
+    /// Worker threads.
+    pub workers: usize,
+    /// Output directory for CSVs.
+    pub out_dir: PathBuf,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl SweepParams {
+    /// Parses shared sweep flags, with experiment-appropriate defaults.
+    pub fn from_args(args: &Args) -> Result<SweepParams> {
+        let quick = args.has("quick");
+        let names: Vec<String> = match args.get("instances") {
+            Some(_) => args.get_list_or("instances", &[] as &[String]).map_err(anyhow::Error::msg)?,
+            None if quick => vec!["S-NS".into(), "YAH".into(), "GSAD".into(), "PTN".into()],
+            None => catalog().iter().map(|i| i.name.to_string()).collect(),
+        };
+        let instances: Vec<Instance> = names
+            .iter()
+            .map(|n| by_name(n).with_context(|| format!("unknown instance {n:?}")))
+            .collect::<Result<_>>()?;
+        let default_ks: Vec<usize> =
+            if quick { vec![4, 32, 256] } else { vec![1, 4, 16, 64, 256, 1024] };
+        let ks = args.get_list_or("ks", &default_ks).map_err(anyhow::Error::msg)?;
+        let reps = args.get_or("reps", if quick { 1 } else { 3u64 }).map_err(anyhow::Error::msg)?;
+        let scale = args
+            .get_or("scale", if quick { 0.05 } else { 0.25 })
+            .map_err(anyhow::Error::msg)?;
+        let workers = args
+            .get_or("workers", std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4))
+            .map_err(anyhow::Error::msg)?;
+        let out_dir =
+            PathBuf::from(args.get("out").unwrap_or("results"));
+        let seed = args.get_or("seed", 2024u64).map_err(anyhow::Error::msg)?;
+        Ok(SweepParams { instances, ks, reps, scale, workers, out_dir, seed })
+    }
+
+    /// Effective n for an instance under the scale factor.
+    pub fn n_of(&self, inst: &Instance) -> usize {
+        ((inst.default_n as f64 * self.scale) as usize).max(64)
+    }
+
+    /// k values valid for an instance (k ≤ n).
+    pub fn ks_of(&self, n: usize) -> Vec<usize> {
+        self.ks.iter().copied().filter(|&k| k <= n / 2).collect()
+    }
+}
+
+/// Runs the full sweep for the given variants and aggregates per cell.
+pub fn run_sweep(p: &SweepParams, variants: &[Variant]) -> Report {
+    let mut specs = Vec::new();
+    for inst in &p.instances {
+        let n = p.n_of(inst);
+        let data = Arc::new(inst.generate_n(n));
+        for &k in &p.ks_of(n) {
+            for &variant in variants {
+                for rep in 0..p.reps {
+                    specs.push(JobSpec {
+                        instance: inst.name.to_string(),
+                        data: Arc::clone(&data),
+                        k,
+                        variant,
+                        rep,
+                        seed: p.seed,
+                    });
+                }
+            }
+        }
+    }
+    eprintln!(
+        "sweep: {} jobs over {} instances × {:?} × {} variants × {} reps ({} workers)",
+        specs.len(),
+        p.instances.len(),
+        p.ks,
+        variants.len(),
+        p.reps,
+        p.workers
+    );
+    let results = Scheduler::new(p.workers, p.workers * 2).run(specs);
+    Report::aggregate(&results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Args {
+        Args::parse(list.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn params_quick_defaults() {
+        let p = SweepParams::from_args(&args(&["--quick"])).unwrap();
+        assert_eq!(p.instances.len(), 4);
+        assert_eq!(p.reps, 1);
+        assert!(p.scale < 0.1);
+    }
+
+    #[test]
+    fn params_explicit() {
+        let p = SweepParams::from_args(&args(&[
+            "--instances", "MGT,3DR", "--ks", "2,8", "--reps", "2", "--scale", "0.01",
+        ]))
+        .unwrap();
+        assert_eq!(p.instances.len(), 2);
+        assert_eq!(p.ks, vec![2, 8]);
+        assert_eq!(p.reps, 2);
+    }
+
+    #[test]
+    fn params_unknown_instance_errors() {
+        assert!(SweepParams::from_args(&args(&["--instances", "NOPE"])).is_err());
+    }
+
+    #[test]
+    fn tiny_sweep_produces_cells() {
+        let p = SweepParams::from_args(&args(&[
+            "--instances", "MGT", "--ks", "2,4", "--reps", "1", "--scale", "0.01",
+        ]))
+        .unwrap();
+        let report = run_sweep(&p, &[Variant::Standard, Variant::Tie]);
+        assert!(report.cell("MGT", 2, Variant::Standard).is_some());
+        assert!(report.cell("MGT", 4, Variant::Tie).is_some());
+    }
+}

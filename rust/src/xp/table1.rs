@@ -1,0 +1,36 @@
+//! Table 1 — the instance list with n, d and % norm variance, comparing the
+//! paper's reported values against the synthetic mirrors.
+
+use crate::cli::Args;
+use crate::core::norms::{norm_variance_pct, norms};
+use crate::data::catalog::catalog;
+use crate::metrics::table::{fnum, Table};
+use anyhow::Result;
+use std::path::PathBuf;
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
+    let mut t = Table::new([
+        "instance", "group", "paper_n", "n", "d", "paper_nv%", "nv%", "band_ok",
+    ]);
+    for inst in catalog() {
+        let n = if quick { inst.default_n.min(3_000) } else { inst.default_n.min(20_000) };
+        let data = inst.generate_n(n);
+        let nv = norm_variance_pct(&norms(&data));
+        t.row([
+            inst.name.to_string(),
+            if inst.high_dim { "high-dim".into() } else { "low-dim".into() },
+            inst.paper_n.to_string(),
+            inst.default_n.to_string(),
+            inst.d.to_string(),
+            fnum(inst.paper_nv, 2),
+            fnum(nv, 2),
+            if inst.band.contains(nv) { "yes".into() } else { "NO".to_string() },
+        ]);
+    }
+    println!("{}", t.to_aligned());
+    t.write_csv(out_dir.join("table1.csv"))?;
+    println!("wrote {}", out_dir.join("table1.csv").display());
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Table 2 — norm variance (%) per instance for the five Appendix-B
+//! reference points, with the best value per instance marked.
+
+use crate::cli::Args;
+use crate::data::catalog::catalog;
+use crate::metrics::table::{fnum, Table};
+use crate::seeding::RefPoint;
+use anyhow::Result;
+use std::path::PathBuf;
+
+pub(crate) fn run(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
+    let cap = if quick { 2_000 } else { 10_000 };
+
+    let mut t = Table::new([
+        "instance", "origin", "mean", "median", "positive", "mean_norm", "best",
+    ]);
+    for inst in catalog() {
+        let data = inst.generate_n(inst.default_n.min(cap));
+        let values: Vec<f64> = RefPoint::ALL.iter().map(|rp| rp.norm_variance(&data)).collect();
+        let best = RefPoint::ALL
+            .iter()
+            .zip(&values)
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(rp, _)| rp.name())
+            .unwrap_or("-");
+        t.row([
+            inst.name.to_string(),
+            fnum(values[0], 2),
+            fnum(values[1], 2),
+            fnum(values[2], 2),
+            fnum(values[3], 2),
+            fnum(values[4], 2),
+            best.to_string(),
+        ]);
+    }
+    println!("{}", t.to_aligned());
+    t.write_csv(out_dir.join("table2.csv"))?;
+    println!("wrote {}", out_dir.join("table2.csv").display());
+
+    // Shape check (Appendix B): for low-origin-NV instances, some
+    // alternative reference point should improve the variance.
+    let mut improved = 0;
+    let mut low = 0;
+    for row in t.rows() {
+        let origin: f64 = row[1].parse().unwrap_or(0.0);
+        if origin < 15.0 {
+            low += 1;
+            let best_val = row[1..6]
+                .iter()
+                .filter_map(|v| v.parse::<f64>().ok())
+                .fold(f64::MIN, f64::max);
+            if best_val > origin * 1.5 {
+                improved += 1;
+            }
+        }
+    }
+    println!("shape check (alt reference helps low-NV instances): {improved}/{low}");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Cross-module exactness suite — the paper's central claim, checked at
+//! integration level: on catalog instances, all three variants produce
+//! identical weights/assignments when fed the same center sequence, and the
+//! filters are *sound* (no pruned point could have moved).
+
+use geokmpp::core::distance::sed;
+use geokmpp::core::rng::{Pcg64, Rng};
+use geokmpp::data::catalog::by_name;
+use geokmpp::prop::{forall, gens, Config};
+use geokmpp::seeding::{
+    seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant,
+};
+
+/// Scripted-center exactness on real catalog geometry (not just uniform
+/// random data): a central-mass instance, a bimodal one, a polyline one.
+#[test]
+fn exactness_on_catalog_instances() {
+    for name in ["CIF-C", "S-NS", "3DR"] {
+        let inst = by_name(name).unwrap();
+        let data = inst.generate_n(3_000);
+        let k = 24;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(7);
+            let mut p = D2Picker::new(&mut rng);
+            seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let run = |variant: Variant| {
+            let mut p = ScriptedPicker::new(script.clone());
+            seed_with(&data, &SeedConfig::new(k, variant), &mut p, &mut NoTrace)
+        };
+        let std_r = run(Variant::Standard);
+        let tie_r = run(Variant::Tie);
+        let full_r = run(Variant::Full);
+        assert_eq!(std_r.weights, tie_r.weights, "{name}: tie weights");
+        assert_eq!(std_r.weights, full_r.weights, "{name}: full weights");
+        assert_eq!(std_r.assignments, tie_r.assignments, "{name}: tie assignments");
+        assert_eq!(std_r.assignments, full_r.assignments, "{name}: full assignments");
+        // And the accelerated variants actually saved work.
+        assert!(tie_r.counters.distances < std_r.counters.distances, "{name}");
+    }
+}
+
+/// Property: filter soundness by brute force. For random instances and a
+/// random center sequence, every point that the full variant did NOT update
+/// must indeed be closest to its recorded center.
+#[test]
+fn prop_filter_soundness_brute_force() {
+    let gen = gens::matrix_with_k(4, 5.0);
+    forall(
+        "filter soundness",
+        &gen,
+        Config { cases: 40, max_size: 60, ..Config::default() },
+        |(data, k)| {
+            let mut rng = Pcg64::seed_from(99);
+            let mut idx: Vec<usize> = (0..data.rows()).collect();
+            rng.shuffle(&mut idx);
+            let script: Vec<usize> = idx[..*k].to_vec();
+            let mut p = ScriptedPicker::new(script.clone());
+            let r = seed_with(data, &SeedConfig::new(*k, Variant::Full), &mut p, &mut NoTrace);
+            // Brute-force check of final state.
+            (0..data.rows()).all(|i| {
+                let brute = script
+                    .iter()
+                    .map(|&c| sed(data.row(i), data.row(c)))
+                    .fold(f32::INFINITY, f32::min);
+                r.weights[i] == brute
+            })
+        },
+    );
+}
+
+/// Distributional equivalence of real (unscripted) runs: seeding cost
+/// distributions of the three variants must be statistically equal.
+#[test]
+fn variant_cost_distributions_match() {
+    let inst = by_name("MGT").unwrap();
+    let data = inst.generate_n(2_000);
+    let k = 16;
+    let reps = 30u64;
+    let mean_cost = |variant: Variant| -> f64 {
+        (0..reps)
+            .map(|rep| {
+                let mut rng = Pcg64::seed_stream(5, rep);
+                let mut p = D2Picker::new(&mut rng);
+                seed_with(&data, &SeedConfig::new(k, variant), &mut p, &mut NoTrace).cost()
+            })
+            .sum::<f64>()
+            / reps as f64
+    };
+    let ms = mean_cost(Variant::Standard);
+    let mt = mean_cost(Variant::Tie);
+    let mf = mean_cost(Variant::Full);
+    // Same distribution ⇒ means within a loose statistical band.
+    assert!((mt / ms - 1.0).abs() < 0.25, "tie {mt} vs std {ms}");
+    assert!((mf / ms - 1.0).abs() < 0.25, "full {mf} vs std {ms}");
+}
+
+/// Appendix A + Appendix B options composed together stay exact.
+#[test]
+fn options_compose_exactly() {
+    let inst = by_name("GSAD").unwrap();
+    let data = inst.generate_n(1_500);
+    let k = 20;
+    let script: Vec<usize> = {
+        let mut rng = Pcg64::seed_from(3);
+        let mut p = D2Picker::new(&mut rng);
+        seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+            .center_indices
+    };
+    let base = {
+        let mut p = ScriptedPicker::new(script.clone());
+        seed_with(&data, &SeedConfig::new(k, Variant::Full), &mut p, &mut NoTrace)
+    };
+    for rp in geokmpp::seeding::RefPoint::ALL {
+        let mut cfg = SeedConfig::new(k, Variant::Full);
+        cfg.appendix_a = true;
+        cfg.refpoint = rp;
+        let mut p = ScriptedPicker::new(script.clone());
+        let r = seed_with(&data, &cfg, &mut p, &mut NoTrace);
+        assert_eq!(base.weights, r.weights, "{rp:?}");
+        assert_eq!(base.assignments, r.assignments, "{rp:?}");
+    }
+}

@@ -1,0 +1,99 @@
+//! End-to-end pipeline integration: catalog instance → seeding → Lloyd →
+//! quality; coordinator sweep → report; traced run → cache metrics.
+
+use geokmpp::coordinator::{JobSpec, Report, Scheduler};
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::inertia::inertia;
+use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
+use geokmpp::seeding::{seed, Variant};
+use geokmpp::simcache::hierarchy::HierarchyConfig;
+use geokmpp::simcache::TracingSink;
+use std::sync::Arc;
+
+#[test]
+fn seed_then_lloyd_improves_inertia() {
+    let inst = by_name("MGT").unwrap();
+    let data = inst.generate_n(4_000);
+    let mut rng = Pcg64::seed_from(11);
+    for variant in Variant::ALL {
+        let s = seed(&data, 16, variant, &mut rng);
+        let before = inertia(&data, &s.centers);
+        let r = lloyd(&data, &s.centers, &LloydConfig::default());
+        let after = *r.inertia_trace.last().unwrap();
+        assert!(after <= before * 1.0001, "{variant:?}: {after} > {before}");
+        assert!(r.iterations >= 1);
+    }
+}
+
+#[test]
+fn kmeanspp_seeding_beats_random_seeding() {
+    // The classic k-means++ quality claim: with k = #well-separated blobs,
+    // D² sampling covers the blobs while uniform-random seeding regularly
+    // doubles up and strands whole blobs.
+    let mut gen_rng = Pcg64::seed_from(101);
+    let spec = geokmpp::data::synth::GmmSpec {
+        sigma: 0.5,
+        ..geokmpp::data::synth::GmmSpec::new(3_000, 4, 16)
+    };
+    let data = geokmpp::data::synth::gmm(&spec, &mut gen_rng);
+    let k = 16;
+    let mut rng = Pcg64::seed_from(13);
+    let mut pp_cost = 0f64;
+    let mut rand_cost = 0f64;
+    for rep in 0..10u64 {
+        let mut r1 = Pcg64::seed_stream(17, rep);
+        let s = seed(&data, k, Variant::Full, &mut r1);
+        pp_cost += inertia(&data, &s.centers);
+        // Random seeding baseline.
+        let mut idx: Vec<usize> = (0..data.rows()).collect();
+        geokmpp::core::rng::Rng::shuffle(&mut rng, &mut idx);
+        let centers = data.gather_rows(&idx[..k]);
+        rand_cost += inertia(&data, &centers);
+    }
+    assert!(
+        pp_cost < rand_cost * 0.8,
+        "k-means++ ({pp_cost:.0}) should clearly beat random ({rand_cost:.0})"
+    );
+}
+
+#[test]
+fn coordinator_sweep_to_report() {
+    let inst = by_name("S-NS").unwrap();
+    let data = Arc::new(inst.generate_n(2_000));
+    let mut specs = Vec::new();
+    for variant in Variant::ALL {
+        for rep in 0..2 {
+            specs.push(JobSpec {
+                instance: "S-NS".into(),
+                data: Arc::clone(&data),
+                k: 16,
+                variant,
+                rep,
+                seed: 23,
+            });
+        }
+    }
+    let results = Scheduler::new(2, 4).run(specs);
+    assert_eq!(results.len(), 6);
+    let report = Report::aggregate(&results);
+    let speedup_visits = report
+        .ratio("S-NS", 16, Variant::Tie, Variant::Standard, |c| {
+            c.counters.visited_total() as f64
+        })
+        .unwrap();
+    assert!(speedup_visits < 1.0, "tie should visit fewer points: {speedup_visits}");
+}
+
+#[test]
+fn traced_seeding_produces_cache_metrics() {
+    let inst = by_name("3DR").unwrap();
+    let data = inst.generate_n(5_000);
+    let mut sink = TracingSink::new(HierarchyConfig::default(), data.cols());
+    let mut picker = geokmpp::seeding::D2Picker::new(Pcg64::seed_from(29));
+    let cfg = geokmpp::seeding::SeedConfig::new(32, Variant::Tie);
+    geokmpp::seeding::seed_with(&data, &cfg, &mut picker, &mut sink);
+    assert!(sink.hierarchy.loads > 0);
+    assert!(sink.hierarchy.l1_miss_pct() > 0.0);
+    assert!(sink.hierarchy.op_count > 0);
+}

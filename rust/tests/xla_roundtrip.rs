@@ -1,0 +1,72 @@
+//! Full-stack XLA integration: AOT artifacts → PJRT → hybrid seeding →
+//! Lloyd, compared against the scalar reference path. Skips (with a notice)
+//! when `make artifacts` has not been run.
+
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
+use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
+use geokmpp::runtime::{Executor, Manifest};
+use geokmpp::seeding::{seed, Variant};
+
+fn artifacts_built() -> bool {
+    let ok = Manifest::default_dir().join("manifest.txt").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn full_pipeline_xla_vs_scalar_quality() {
+    if !artifacts_built() {
+        return;
+    }
+    let inst = by_name("HPC").unwrap();
+    let data = inst.generate_n(6_000);
+    let k = 12;
+    let mut ex = Executor::open().unwrap();
+
+    let mut r1 = Pcg64::seed_from(31);
+    let hybrid = hybrid_tie_seed(&data, k, BatchPolicy::default(), &mut ex, &mut r1).unwrap();
+    let lx = lloyd_xla(&data, &hybrid.centers, &LloydConfig::default(), &mut ex).unwrap();
+
+    let mut r2 = Pcg64::seed_from(31);
+    let scalar = seed(&data, k, Variant::Tie, &mut r2);
+    let ls = lloyd(&data, &scalar.centers, &LloydConfig::default());
+
+    let a = *lx.inertia_trace.last().unwrap();
+    let b = *ls.inertia_trace.last().unwrap();
+    assert!(
+        (a / b - 1.0).abs() < 0.2,
+        "XLA pipeline quality diverged: {a} vs {b}"
+    );
+    assert!(ex.dispatches > 0);
+}
+
+#[test]
+fn catalog_instance_through_executor_norms() {
+    if !artifacts_built() {
+        return;
+    }
+    let inst = by_name("YAH").unwrap();
+    let data = inst.generate_n(3_000);
+    let mut ex = Executor::open().unwrap();
+    let xla_norms = ex.norms(&data).unwrap();
+    let scalar = geokmpp::core::norms::norms(&data);
+    for (i, (a, b)) in xla_norms.iter().zip(&scalar).enumerate() {
+        assert!((a - b).abs() <= 1e-3 * b.max(1.0), "norm {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn high_dim_instances_fall_back_gracefully() {
+    if !artifacts_built() {
+        return;
+    }
+    // C-10 is d=3072, beyond the largest artifact bucket: the executor must
+    // report unsupported rather than corrupt results.
+    let ex = Executor::open().unwrap();
+    assert!(!ex.supports_d(3072));
+    assert!(ex.supports_d(128));
+}
