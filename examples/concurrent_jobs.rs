@@ -1,8 +1,18 @@
 //! §5.3 demo: the same seeding job under 1..j concurrent copies — measured
 //! wall time (real threads) next to the simulated cache metrics.
 //!
+//! Two orthogonal axes of parallelism compose here:
+//! * `--jobs J`    — J identical jobs on J OS threads (the paper's
+//!   concurrent-jobs experiment, across-job parallelism);
+//! * `--threads T` — the sharded seeding engine *inside* each job
+//!   (`SeedConfig::threads` / `JobSpec::threads`): the point set is split
+//!   into T contiguous shards and each iteration's filter-and-update scan
+//!   runs on T worker threads. Applies to the `full` variant, which is the
+//!   default here so a `--threads` sweep varies only the threading knob
+//!   (pass `--variant tie` for the paper's single-threaded baseline).
+//!
 //! ```sh
-//! cargo run --release --example concurrent_jobs [-- --jobs 8 --k 256]
+//! cargo run --release --example concurrent_jobs [-- --jobs 8 --k 256 --threads 4]
 //! ```
 
 use geokmpp::cli::Args;
@@ -20,33 +30,44 @@ fn main() {
     let max_jobs: usize = args.get_or("jobs", 6).unwrap();
     let k: usize = args.get_or("k", 128).unwrap();
     let n: usize = args.get_or("n", 30_000).unwrap();
+    let threads: usize = args.threads_or("threads", 1).unwrap();
+    let variant = Variant::parse(args.get("variant").unwrap_or("full")).expect("bad --variant");
+    if threads > 1 && variant != Variant::Full {
+        eprintln!("note: --threads shards the full variant; {} ignores it", variant.name());
+    }
 
     let inst = by_name("3DR").unwrap();
     let data = Arc::new(inst.generate_n(n));
     let model = IpcModel::default();
 
-    println!("3DR-like, n={n}, k={k}, variant=tie\n");
-    println!("{:>5}  {:>12}  {:>12}  {:>12}  {:>6}", "jobs", "time mean s", "L1 miss %", "LLC miss %", "IPC");
+    println!("3DR-like, n={n}, k={k}, variant={}, in-job threads={threads}\n", variant.name());
+    println!(
+        "{:>5}  {:>12}  {:>12}  {:>12}  {:>6}",
+        "jobs", "time mean s", "L1 miss %", "LLC miss %", "IPC"
+    );
     for j in 1..=max_jobs {
-        // Measured: j synchronized OS threads.
+        // Measured: j synchronized OS threads, each running a job that may
+        // itself shard its scans over `threads` workers.
         let spec = JobSpec {
             instance: "3DR".into(),
             data: Arc::clone(&data),
             k,
-            variant: Variant::Tie,
+            variant,
             rep: 0,
             seed: 11,
+            threads,
         };
         let times = run_concurrent(&spec, j);
         let mean = times.iter().sum::<f64>() / times.len() as f64;
 
-        // Simulated: capacity-partitioned LLC.
+        // Simulated: capacity-partitioned LLC (single-threaded trace — the
+        // parallel engine does not emit per-point trace events).
         let mut sink = TracingSink::new(
             HierarchyConfig { concurrent_jobs: j, ..Default::default() },
             data.cols(),
         );
         let mut picker = D2Picker::new(Pcg64::seed_from(11));
-        seed_with(&data, &SeedConfig::new(k, Variant::Tie), &mut picker, &mut sink);
+        seed_with(&data, &SeedConfig::new(k, variant), &mut picker, &mut sink);
         println!(
             "{j:>5}  {mean:>12.4}  {:>12.2}  {:>12.2}  {:>6.2}",
             sink.hierarchy.l1_miss_pct(),
@@ -55,4 +76,8 @@ fn main() {
         );
     }
     println!("\nexpect: time and LLC miss % rise with jobs; L1 stays flat (private).");
+    if threads > 1 {
+        println!("in-job sharding (--threads {threads}) cuts each job's scan wall time;");
+        println!("oversubscription (jobs × threads > cores) brings the contention forward.");
+    }
 }

@@ -1,10 +1,11 @@
 """L1 kernel correctness: Pallas (interpret) vs the pure-jnp oracle.
 
-Hypothesis sweeps shapes; fixed cases pin known values and edge cases.
+Hypothesis sweeps shapes when it is installed; without it, the same property
+bodies run over a fixed deterministic parameter grid (the offline test image
+ships no hypothesis wheel). Fixed cases pin known values and edge cases
+either way.
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,10 +14,19 @@ import pytest
 from compile.kernels import ref
 from compile.kernels import sed as K
 
-hypothesis.settings.register_profile(
-    "kernels", deadline=None, max_examples=25, derandomize=True
-)
-hypothesis.settings.load_profile("kernels")
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile(
+        "kernels", deadline=None, max_examples=25, derandomize=True
+    )
+    hypothesis.settings.load_profile("kernels")
 
 
 def rand(key, shape, scale=4.0):
@@ -27,13 +37,7 @@ def rand(key, shape, scale=4.0):
 # pairwise_sed
 
 
-@hypothesis.given(
-    nb=st.integers(1, 4),
-    kb=st.integers(1, 3),
-    d=st.sampled_from([1, 2, 3, 8, 17, 64]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_pairwise_matches_ref(nb, kb, d, seed):
+def check_pairwise_matches_ref(nb, kb, d, seed):
     bn, bk = 8, 8
     key = jax.random.PRNGKey(seed)
     kx, kc = jax.random.split(key)
@@ -42,6 +46,27 @@ def test_pairwise_matches_ref(nb, kb, d, seed):
     got = K.pairwise_sed(x, c, block_n=bn, block_k=bk)
     want = ref.pairwise_sed_ref(x, c)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.given(
+        nb=st.integers(1, 4),
+        kb=st.integers(1, 3),
+        d=st.sampled_from([1, 2, 3, 8, 17, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_pairwise_matches_ref(nb, kb, d, seed):
+        check_pairwise_matches_ref(nb, kb, d, seed)
+
+else:
+
+    @pytest.mark.parametrize(
+        "nb,kb,d,seed",
+        [(1, 1, 1, 0), (2, 1, 2, 1), (4, 3, 3, 7), (1, 2, 8, 42), (3, 1, 17, 5), (2, 2, 64, 123)],
+    )
+    def test_pairwise_matches_ref(nb, kb, d, seed):
+        check_pairwise_matches_ref(nb, kb, d, seed)
 
 
 def test_pairwise_known_values():
@@ -79,12 +104,7 @@ def test_pairwise_default_blocks():
 # min_update
 
 
-@hypothesis.given(
-    nb=st.integers(1, 6),
-    d=st.sampled_from([1, 2, 5, 8, 33, 128]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_min_update_matches_ref(nb, d, seed):
+def check_min_update_matches_ref(nb, d, seed):
     bn = 8
     key = jax.random.PRNGKey(seed)
     kx, kc, kw = jax.random.split(key, 3)
@@ -95,6 +115,26 @@ def test_min_update_matches_ref(nb, d, seed):
     w2_ref, chg_ref = ref.min_update_ref(x, c, w)
     np.testing.assert_allclose(w2, w2_ref, rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(chg, chg_ref)
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.given(
+        nb=st.integers(1, 6),
+        d=st.sampled_from([1, 2, 5, 8, 33, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_min_update_matches_ref(nb, d, seed):
+        check_min_update_matches_ref(nb, d, seed)
+
+else:
+
+    @pytest.mark.parametrize(
+        "nb,d,seed",
+        [(1, 1, 0), (2, 2, 3), (6, 5, 11), (3, 8, 21), (1, 33, 2), (4, 128, 9)],
+    )
+    def test_min_update_matches_ref(nb, d, seed):
+        check_min_update_matches_ref(nb, d, seed)
 
 
 def test_min_update_strictness():
@@ -121,16 +161,30 @@ def test_min_update_self_distance_zero():
 # norms
 
 
-@hypothesis.given(
-    nb=st.integers(1, 4),
-    d=st.sampled_from([1, 3, 8, 100]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_norms_matches_ref(nb, d, seed):
+def check_norms_matches_ref(nb, d, seed):
     bn = 8
     x = rand(jax.random.PRNGKey(seed), (nb * bn, d))
     got = K.norms(x, block_n=bn)
     np.testing.assert_allclose(got, ref.norms_ref(x), rtol=1e-5, atol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+
+    @hypothesis.given(
+        nb=st.integers(1, 4),
+        d=st.sampled_from([1, 3, 8, 100]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_norms_matches_ref(nb, d, seed):
+        check_norms_matches_ref(nb, d, seed)
+
+else:
+
+    @pytest.mark.parametrize(
+        "nb,d,seed", [(1, 1, 0), (2, 3, 5), (4, 8, 13), (3, 100, 29)]
+    )
+    def test_norms_matches_ref(nb, d, seed):
+        check_norms_matches_ref(nb, d, seed)
 
 
 def test_norms_known():

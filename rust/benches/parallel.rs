@@ -1,0 +1,75 @@
+//! Sharded parallel seeding scaling bench: the full accelerated variant at
+//! 1/2/4/8 shard threads on synthetic catalog instances, plus the sharded
+//! scalar executor's dense min-update scan.
+//!
+//! The seeding rows measure the whole run (sampling stays sequential, so
+//! Amdahl caps the end-to-end ratio); the executor rows isolate the pure
+//! scan phase, where speedup should track the thread count until memory
+//! bandwidth saturates. `GEOKMPP_BENCH_QUICK=1` shrinks everything for CI.
+
+use geokmpp::bench::{black_box, Bench};
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::runtime::Executor;
+use geokmpp::seeding::{seed_with, D2Picker, NoTrace, SeedConfig, Variant};
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let quick = std::env::var("GEOKMPP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n = if quick { 4_000 } else { 40_000 };
+    let k = if quick { 32 } else { 256 };
+
+    let mut b = Bench::from_env("parallel");
+
+    // End-to-end seeding: low-dim (TIE territory) and high-dim (norm-filter
+    // territory) instances from the synthetic catalog.
+    for inst_name in ["S-NS", "GSAD"] {
+        let inst = by_name(inst_name).unwrap();
+        let data = inst.generate_n(n.min(inst.default_n));
+        for &threads in &THREADS {
+            let mut rep = 0u64;
+            b.bench(&format!("full_seed/{inst_name}/k{k}/t{threads}"), || {
+                rep += 1;
+                let cfg = SeedConfig::new(k, Variant::Full).with_threads(threads);
+                let mut p = D2Picker::new(Pcg64::seed_stream(42, rep));
+                black_box(seed_with(&data, &cfg, &mut p, &mut NoTrace).counters.distances)
+            });
+        }
+    }
+
+    // Pure scan phase: the sharded scalar executor's fused min-update over
+    // the whole dataset (no sampling, no filter bookkeeping).
+    let inst = by_name("GSAD").unwrap();
+    let data = inst.generate_n(n.min(inst.default_n));
+    let rows: Vec<usize> = (0..data.rows()).collect();
+    let c = data.row(7).to_vec();
+    b.throughput(data.rows() as u64);
+    for &threads in &THREADS {
+        let mut ex = Executor::scalar(threads);
+        b.bench(&format!("scan_min_update/GSAD/t{threads}"), || {
+            black_box(ex.min_update(&data, &rows, &c).unwrap().0.len())
+        });
+    }
+    b.finish();
+
+    // Scaling summary: ratio of the t1 mean to each tN mean.
+    let mean_of = |needle: &str| -> Option<f64> {
+        b.results().iter().find(|r| r.id.contains(needle)).map(|r| r.ns.mean)
+    };
+    for group in ["full_seed/S-NS", "full_seed/GSAD", "scan_min_update/GSAD"] {
+        if let Some(t1) = mean_of(&format!("{group}/k{k}/t1"))
+            .or_else(|| mean_of(&format!("{group}/t1")))
+        {
+            let speedups: Vec<String> = THREADS
+                .iter()
+                .filter_map(|t| {
+                    mean_of(&format!("{group}/k{k}/t{t}"))
+                        .or_else(|| mean_of(&format!("{group}/t{t}")))
+                        .map(|m| format!("t{t}={:.2}x", t1 / m))
+                })
+                .collect();
+            println!("speedup {group}: {}", speedups.join("  "));
+        }
+    }
+}

@@ -83,6 +83,22 @@ impl Args {
         v.parse::<T>().map_err(|_| format!("--{name}: cannot parse {v:?}"))
     }
 
+    /// Thread-count flag (`--threads 8`, `--threads auto`), with default.
+    /// `auto` resolves to the machine's available parallelism; explicit
+    /// values are clamped to at least 1.
+    pub fn threads_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default.max(1)),
+            Some("auto") => Ok(std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)),
+            Some(v) => v
+                .parse::<usize>()
+                .map(|t| t.max(1))
+                .map_err(|_| format!("--{name}: expected a thread count or `auto`, got {v:?}")),
+        }
+    }
+
     /// Comma-separated list flag (`--ks 2,8,32`), with default.
     pub fn get_list_or<T: std::str::FromStr>(
         &self,
@@ -130,6 +146,16 @@ mod tests {
         assert_eq!(a.require::<f64>("ratio").unwrap(), 0.5);
         assert!(a.require::<usize>("missing").is_err());
         assert!(a.get_or("ratio", 1usize).is_err());
+    }
+
+    #[test]
+    fn threads_flag() {
+        let a = parse(&["--threads", "4"]);
+        assert_eq!(a.threads_or("threads", 1).unwrap(), 4);
+        assert_eq!(a.threads_or("missing", 2).unwrap(), 2);
+        assert_eq!(parse(&["--threads", "0"]).threads_or("threads", 1).unwrap(), 1);
+        assert!(parse(&["--threads", "auto"]).threads_or("threads", 1).unwrap() >= 1);
+        assert!(parse(&["--threads", "lots"]).threads_or("threads", 1).is_err());
     }
 
     #[test]

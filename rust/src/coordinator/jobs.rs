@@ -2,7 +2,7 @@
 
 use crate::core::matrix::Matrix;
 use crate::core::rng::{stream_id, Pcg64};
-use crate::seeding::{seed, Counters, SeedResult, Variant};
+use crate::seeding::{seed_with, Counters, D2Picker, NoTrace, SeedConfig, SeedResult, Variant};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -22,6 +22,11 @@ pub struct JobSpec {
     pub rep: u64,
     /// Base seed for the experiment.
     pub seed: u64,
+    /// Worker threads for the sharded seeding engine inside this job
+    /// (`Full` variant only; 1 = single-threaded). This is real thread-level
+    /// parallelism *within* one job, composing with the coordinator's
+    /// across-job worker pool.
+    pub threads: usize,
 }
 
 impl JobSpec {
@@ -39,7 +44,9 @@ impl JobSpec {
     /// Runs the job, returning a compact result.
     pub fn run(&self) -> JobResult {
         let mut rng = self.rng();
-        let r: SeedResult = seed(&self.data, self.k, self.variant, &mut rng);
+        let cfg = SeedConfig::new(self.k, self.variant).with_threads(self.threads.max(1));
+        let mut picker = D2Picker::new(&mut rng);
+        let r: SeedResult = seed_with(&self.data, &cfg, &mut picker, &mut NoTrace);
         JobResult {
             instance: self.instance.clone(),
             k: self.k,
@@ -87,12 +94,33 @@ mod tests {
             variant: Variant::Tie,
             rep: 0,
             seed: 99,
+            threads: 1,
         };
         let a = spec.run();
         let b = spec.run();
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.cost, b.cost);
         assert_eq!(a.k, 8);
+    }
+
+    #[test]
+    fn threaded_full_job_is_deterministic() {
+        let mut rng = Pcg64::seed_from(4);
+        let data = Arc::new(gmm(&GmmSpec::new(600, 3, 4), &mut rng));
+        let spec = JobSpec {
+            instance: "t".into(),
+            data,
+            k: 12,
+            variant: Variant::Full,
+            rep: 0,
+            seed: 31,
+            threads: 4,
+        };
+        let a = spec.run();
+        let b = spec.run();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.cost, b.cost);
+        assert!(a.cost > 0.0);
     }
 
     #[test]
@@ -106,6 +134,7 @@ mod tests {
             variant: Variant::Standard,
             rep,
             seed: 5,
+            threads: 1,
         };
         let a = mk(0).run();
         let b = mk(1).run();

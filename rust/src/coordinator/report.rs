@@ -49,6 +49,7 @@ impl Report {
             // Mean counters.
             let div = reps as u64;
             counters.visited_assign /= div;
+            counters.visited_headers /= div;
             counters.visited_sampling /= div;
             counters.distances /= div;
             counters.center_distances /= div;

@@ -85,6 +85,7 @@ mod tests {
                 variant: Variant::Full,
                 rep: rep as u64,
                 seed: 11,
+                threads: 1,
             })
             .collect()
     }

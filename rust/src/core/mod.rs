@@ -8,3 +8,4 @@ pub mod matrix;
 pub mod norms;
 pub mod rng;
 pub mod sampling;
+pub mod shard;

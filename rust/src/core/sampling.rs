@@ -15,30 +15,46 @@ use crate::core::rng::Rng;
 /// remaining point coincides with a center) an arbitrary valid index `0` is
 /// returned, matching the standard-library-of-the-paper behaviour of
 /// "pick anything, the clustering cost is already 0".
+///
+/// The caller-supplied `total` is only a hint: when it exceeds the true sum
+/// (a stale cached total, or f32→f64 summation-order round-off) the draw is
+/// clamped to the accumulated sum and retried, so the selection stays
+/// proportional to the weights instead of silently collapsing onto the last
+/// positive entry.
 pub fn roulette<R: Rng>(weights: &[f32], total: f64, rng: &mut R) -> usize {
     debug_assert!(!weights.is_empty());
     if total <= 0.0 {
         return 0;
     }
-    let r = rng.uniform_f64() * total;
-    let mut acc = 0f64;
-    for (i, &w) in weights.iter().enumerate() {
-        acc += w as f64;
-        if acc > r {
-            return i;
+    let mut target = total;
+    loop {
+        let r = rng.uniform_f64() * target;
+        let mut acc = 0f64;
+        for (i, &w) in weights.iter().enumerate() {
+            acc += w as f64;
+            if acc > r {
+                return i;
+            }
         }
+        if !acc.is_finite() || acc <= 0.0 {
+            // All weights zero (any valid index keeps cost 0) or a NaN
+            // poisoned the sum — either way a redraw cannot terminate, so
+            // fall back to the last positively-weighted entry.
+            return weights.iter().rposition(|&w| w > 0.0).unwrap_or(0);
+        }
+        // `total` exceeded the measured sum: clamp and redraw against it.
+        // The second pass always terminates (r < acc and prefix sums are
+        // monotone, so some prefix strictly exceeds r).
+        target = acc;
     }
-    // Float round-off: the accumulated sum fell short of `total`; return the
-    // last positively-weighted entry.
-    weights
-        .iter()
-        .rposition(|&w| w > 0.0)
-        .unwrap_or(weights.len() - 1)
 }
 
 /// Roulette over an *indexed subset*: `weights[idx[i]]` for `i` in `idx`.
 /// Used by the two-step procedure's second step, where a cluster stores
 /// member indices into the global weight array.
+///
+/// Like [`roulette`], an inflated `total` is clamped to the measured sum and
+/// the draw retried, keeping the selection proportional to the weights.
 pub fn roulette_indexed<R: Rng>(
     weights: &[f32],
     idx: &[usize],
@@ -49,37 +65,48 @@ pub fn roulette_indexed<R: Rng>(
     if total <= 0.0 {
         return idx[0];
     }
-    let r = rng.uniform_f64() * total;
-    let mut acc = 0f64;
-    for &i in idx {
-        acc += weights[i] as f64;
-        if acc > r {
-            return i;
+    let mut target = total;
+    loop {
+        let r = rng.uniform_f64() * target;
+        let mut acc = 0f64;
+        for &i in idx {
+            acc += weights[i] as f64;
+            if acc > r {
+                return i;
+            }
         }
+        if !acc.is_finite() || acc <= 0.0 {
+            return idx.iter().rev().copied().find(|&i| weights[i] > 0.0).unwrap_or(idx[0]);
+        }
+        target = acc;
     }
-    idx.iter()
-        .rev()
-        .copied()
-        .find(|&i| weights[i] > 0.0)
-        .unwrap_or(*idx.last().unwrap())
 }
 
 /// Roulette over `f64` weights (used for the cluster-selection step, whose
 /// sums are kept in f64 to avoid drift).
+///
+/// Like [`roulette`], an inflated `total` is clamped to the measured sum and
+/// the draw retried.
 pub fn roulette_f64<R: Rng>(weights: &[f64], total: f64, rng: &mut R) -> usize {
     debug_assert!(!weights.is_empty());
     if total <= 0.0 {
         return 0;
     }
-    let r = rng.uniform_f64() * total;
-    let mut acc = 0f64;
-    for (i, &w) in weights.iter().enumerate() {
-        acc += w;
-        if acc > r {
-            return i;
+    let mut target = total;
+    loop {
+        let r = rng.uniform_f64() * target;
+        let mut acc = 0f64;
+        for (i, &w) in weights.iter().enumerate() {
+            acc += w;
+            if acc > r {
+                return i;
+            }
         }
+        if !acc.is_finite() || acc <= 0.0 {
+            return weights.iter().rposition(|&w| w > 0.0).unwrap_or(0);
+        }
+        target = acc;
     }
-    weights.iter().rposition(|&w| w > 0.0).unwrap_or(weights.len() - 1)
 }
 
 /// Cumulative-sum table enabling `O(log n)` weighted draws (§4.2.2's
@@ -133,9 +160,23 @@ impl CumTable {
         if total <= 0.0 {
             return 0;
         }
-        let r = rng.uniform_f64() * total;
+        self.draw_at(rng.uniform_f64() * total)
+    }
+
+    /// The deterministic core of [`CumTable::draw`]: selects the position for
+    /// an already-drawn `r ∈ [0, total]`. `r == total` (unreachable through
+    /// `draw`, whose uniform is strictly below 1) clamps to the last
+    /// positively-weighted position rather than running past the table.
+    fn draw_at(&self, r: f64) -> usize {
         // partition_point: first position whose cumsum exceeds r.
-        self.cum.partition_point(|&c| c <= r).min(self.cum.len() - 1)
+        let pos = self.cum.partition_point(|&c| c <= r);
+        if pos < self.cum.len() {
+            return pos;
+        }
+        // r ≥ final cumsum: clamp to the last position that carries weight
+        // (trailing zero-weight members share the final cumsum value).
+        let last = self.total();
+        self.cum.partition_point(|&c| c < last).min(self.cum.len() - 1)
     }
 }
 
@@ -198,6 +239,93 @@ mod tests {
         assert_eq!(freq[1], 0.0);
         assert!((freq[2] - 0.125).abs() < 0.01);
         assert!((freq[3] - 0.625).abs() < 0.01);
+    }
+
+    /// Regression: a caller-supplied `total` larger than the true sum (stale
+    /// cached total or summation round-off) must not bias the draw toward the
+    /// last positive-weight entry — the draw is clamped to the measured sum.
+    #[test]
+    fn roulette_inflated_total_stays_proportional() {
+        let w = [1.0f32, 3.0, 2.0, 0.0]; // true sum 6
+        let inflated = 12.0; // 2× the true sum: old code returned index 2 ~50% of the time
+        let freq = freq_of(120_000, 4, |rng| roulette(&w, inflated, rng));
+        assert!((freq[0] - 1.0 / 6.0).abs() < 0.01, "{freq:?}");
+        assert!((freq[1] - 3.0 / 6.0).abs() < 0.01, "{freq:?}");
+        assert!((freq[2] - 2.0 / 6.0).abs() < 0.01, "{freq:?}");
+        assert_eq!(freq[3], 0.0, "zero-weight entry drawn");
+    }
+
+    /// Regression: a NaN weight poisons the accumulated sum; the draw must
+    /// terminate with a valid index instead of redrawing forever.
+    #[test]
+    fn roulette_nan_weight_terminates() {
+        let w = [1.0f32, f32::NAN, 2.0];
+        let total: f64 = 3.0; // the NaN never reaches the caller's total
+        let mut rng = Pcg64::seed_from(8);
+        for _ in 0..1000 {
+            let i = roulette(&w, total, &mut rng);
+            assert!(i < 3);
+            let j = roulette_indexed(&w, &[0, 1, 2], total, &mut rng);
+            assert!(j < 3);
+        }
+        let wf = [1.0f64, f64::NAN, 2.0];
+        for _ in 0..1000 {
+            assert!(roulette_f64(&wf, 3.0, &mut rng) < 3);
+        }
+    }
+
+    #[test]
+    fn roulette_indexed_inflated_total_stays_proportional() {
+        let w = [9.0f32, 1.0, 0.0, 3.0];
+        let idx = [1usize, 2, 3]; // true sum 4
+        let mut rng = Pcg64::seed_from(21);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..80_000 {
+            *counts.entry(roulette_indexed(&w, &idx, 40.0, &mut rng)).or_insert(0usize) += 1;
+        }
+        assert!(!counts.contains_key(&2), "zero-weight member drawn");
+        let f1 = counts[&1] as f64 / 80_000.0;
+        let f3 = counts[&3] as f64 / 80_000.0;
+        assert!((f1 - 0.25).abs() < 0.01, "f1={f1}");
+        assert!((f3 - 0.75).abs() < 0.01, "f3={f3}");
+    }
+
+    #[test]
+    fn roulette_f64_inflated_total_stays_proportional() {
+        let w = [2.0f64, 0.0, 6.0]; // true sum 8
+        let freq = freq_of(80_000, 3, |rng| roulette_f64(&w, 800.0, rng));
+        assert!((freq[0] - 0.25).abs() < 0.01, "{freq:?}");
+        assert_eq!(freq[1], 0.0);
+        assert!((freq[2] - 0.75).abs() < 0.01, "{freq:?}");
+    }
+
+    #[test]
+    fn cum_table_single_member() {
+        let w = [4.0f32];
+        let t = CumTable::build(&w, &[0]);
+        let mut rng = Pcg64::seed_from(2);
+        for _ in 0..64 {
+            assert_eq!(t.draw(&mut rng), 0);
+        }
+        // r == total edge case, directly on the deterministic core.
+        assert_eq!(t.draw_at(4.0), 0);
+        assert_eq!(t.draw_at(0.0), 0);
+    }
+
+    #[test]
+    fn cum_table_draw_at_total_clamps_to_weighted() {
+        // Trailing zero-weight members share the final cumsum; r == total
+        // must land on the last *weighted* position, not past the table.
+        let w = [2.0f32, 3.0, 0.0, 0.0];
+        let t = CumTable::build(&w, &[0, 1, 2, 3]);
+        assert_eq!(t.draw_at(t.total()), 1);
+        assert_eq!(t.draw_at(t.total() - 1e-9), 1);
+        assert_eq!(t.draw_at(1.9999), 0);
+        // Leading zero weight: r = 0 lands on the first weighted member.
+        let w2 = [0.0f32, 5.0];
+        let t2 = CumTable::build(&w2, &[0, 1]);
+        assert_eq!(t2.draw_at(0.0), 1);
+        assert_eq!(t2.draw_at(t2.total()), 1);
     }
 
     #[test]

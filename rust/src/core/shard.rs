@@ -1,0 +1,167 @@
+//! Contiguous shard partitioning of a point range — the substrate of the
+//! sharded parallel seeding engine ([`crate::seeding::parallel`]).
+//!
+//! `0..n` is split into at most `t` contiguous, balanced ranges. Contiguity
+//! matters twice over: each shard's scan stays a sequential sweep (the §5.3
+//! locality analysis), and the global `weights`/`assignments`/bounds arrays
+//! can be handed to worker threads as disjoint `&mut` slices with plain
+//! `split_at_mut` — no locks, no unsafe.
+
+use std::ops::Range;
+
+/// A balanced partition of `0..n` into contiguous shards.
+///
+/// The first `n % shards` shards hold one extra element, so shard sizes
+/// differ by at most one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shards {
+    /// Shard boundaries: shard `s` covers `bounds[s]..bounds[s + 1]`.
+    bounds: Vec<usize>,
+}
+
+impl Shards {
+    /// Partitions `0..n` into `min(t, n)` shards (at least one, even for
+    /// `n == 0`, so iteration logic never special-cases emptiness).
+    pub fn new(n: usize, t: usize) -> Shards {
+        let shards = t.max(1).min(n.max(1));
+        let base = n / shards;
+        let extra = n % shards;
+        let mut bounds = Vec::with_capacity(shards + 1);
+        let mut at = 0;
+        bounds.push(at);
+        for s in 0..shards {
+            at += base + usize::from(s < extra);
+            bounds.push(at);
+        }
+        Shards { bounds }
+    }
+
+    /// Number of shards.
+    pub fn count(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total number of elements covered.
+    pub fn len(&self) -> usize {
+        *self.bounds.last().expect("bounds never empty")
+    }
+
+    /// Whether the partitioned range is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The half-open element range of shard `s`.
+    pub fn range(&self, s: usize) -> Range<usize> {
+        self.bounds[s]..self.bounds[s + 1]
+    }
+
+    /// Iterates the shard ranges in order.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.count()).map(|s| self.range(s))
+    }
+
+    /// The shard containing element `i` (binary search over the bounds).
+    ///
+    /// # Panics
+    /// Panics if `i` is outside `0..n`.
+    pub fn shard_of(&self, i: usize) -> usize {
+        assert!(i < self.len(), "element {i} outside 0..{}", self.len());
+        // First boundary strictly above i, minus the leading bound.
+        self.bounds.partition_point(|&b| b <= i) - 1
+    }
+
+    /// Splits a full-length slice into per-shard disjoint mutable slices —
+    /// the hand-off point for `std::thread::scope` workers.
+    ///
+    /// # Panics
+    /// Panics if `slice.len()` differs from the partitioned length.
+    pub fn split_mut<'a, T>(&self, slice: &'a mut [T]) -> Vec<&'a mut [T]> {
+        assert_eq!(slice.len(), self.len(), "slice length mismatch");
+        let mut parts = Vec::with_capacity(self.count());
+        let mut rest = slice;
+        for r in self.ranges() {
+            let (head, tail) = rest.split_at_mut(r.len());
+            parts.push(head);
+            rest = tail;
+        }
+        parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_everything_in_order() {
+        for (n, t) in [(10, 3), (7, 7), (5, 8), (100, 1), (0, 4), (1, 1)] {
+            let s = Shards::new(n, t);
+            let flat: Vec<usize> = s.ranges().flatten().collect();
+            assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} t={t}");
+            assert!(s.count() >= 1);
+            assert!(s.count() <= t.max(1));
+            assert_eq!(s.len(), n);
+        }
+    }
+
+    #[test]
+    fn balanced_within_one() {
+        let s = Shards::new(103, 8);
+        let sizes: Vec<usize> = s.ranges().map(|r| r.len()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 1, "{sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 103);
+    }
+
+    #[test]
+    fn more_threads_than_points_clamps() {
+        let s = Shards::new(3, 16);
+        assert_eq!(s.count(), 3);
+        assert!(s.ranges().all(|r| r.len() == 1));
+    }
+
+    #[test]
+    fn shard_of_matches_ranges() {
+        let s = Shards::new(23, 4);
+        for (idx, r) in s.ranges().enumerate() {
+            for i in r {
+                assert_eq!(s.shard_of(i), idx, "element {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn shard_of_out_of_range_panics() {
+        Shards::new(4, 2).shard_of(4);
+    }
+
+    #[test]
+    fn split_mut_is_disjoint_and_complete() {
+        let s = Shards::new(9, 4);
+        let mut data: Vec<u32> = (0..9).collect();
+        {
+            let parts = s.split_mut(&mut data);
+            assert_eq!(parts.len(), 4);
+            assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 9);
+            for p in parts {
+                for v in p.iter_mut() {
+                    *v += 100;
+                }
+            }
+        }
+        assert_eq!(data, (100..109).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_points_single_empty_shard() {
+        let s = Shards::new(0, 3);
+        assert_eq!(s.count(), 1);
+        assert!(s.is_empty());
+        assert_eq!(s.range(0), 0..0);
+        let mut empty: [f32; 0] = [];
+        assert_eq!(s.split_mut(&mut empty).len(), 1);
+    }
+}

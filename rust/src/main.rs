@@ -3,12 +3,18 @@
 //! ```text
 //! geokmpp data <INSTANCE> [--n N] [--csv out.csv | --bin out.bin]
 //! geokmpp seed   --instance NAME | --file data.csv   --k K
-//!                [--variant standard|tie|full] [--xla] [--appendix-a]
+//!                [--variant standard|tie|full] [--threads T|auto] [--xla]
+//!                [--appendix-a]
 //!                [--refpoint origin|mean|median|positive|mean-norm]
-//! geokmpp kmeans --instance NAME --k K [--iters N] [--xla]
+//! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto] [--xla]
 //! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
 //! geokmpp info
 //! ```
+//!
+//! `--threads` drives the sharded parallel seeding engine (full variant):
+//! the per-iteration filter-and-update scan runs across that many contiguous
+//! point shards on real OS threads. `--xla` without built artifacts falls
+//! back to the sharded scalar executor at the same thread count.
 
 use anyhow::{bail, Context, Result};
 use geokmpp::cli::Args;
@@ -92,22 +98,30 @@ fn cmd_seed(args: &Args) -> Result<()> {
     let variant = Variant::parse(args.get("variant").unwrap_or("full"))
         .context("bad --variant (standard|tie|full)")?;
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
 
     let result = if args.has("xla") {
-        let mut ex = Executor::open().context("open XLA runtime (run `make artifacts`)")?;
+        // open_or_scalar logs the real cause if it has to fall back.
+        let mut ex = Executor::open_or_scalar(threads);
         if variant != Variant::Tie {
             eprintln!("note: --xla uses the hybrid TIE path");
         }
         let threshold = args.get_or("dense-threshold", 2048).map_err(anyhow::Error::msg)?;
         hybrid_tie_seed(&data, k, BatchPolicy { dense_threshold: threshold }, &mut ex, &mut rng)?
     } else {
-        let mut cfg = SeedConfig::new(k, variant);
+        let mut cfg = SeedConfig::new(k, variant).with_threads(threads);
         cfg.appendix_a = args.has("appendix-a");
         cfg.dot_trick = args.has("dot-trick");
         cfg.binary_search_sampling = args.has("binsearch-sampling");
         if let Some(rp) = args.get("refpoint") {
             cfg.refpoint = RefPoint::parse(rp).context("bad --refpoint")?;
+        }
+        if threads > 1 && variant != Variant::Full {
+            eprintln!(
+                "note: --threads shards the full variant; {} stays single-threaded",
+                variant.name()
+            );
         }
         let mut picker = D2Picker::new(&mut rng);
         seed_with(&data, &cfg, &mut picker, &mut NoTrace)
@@ -117,9 +131,11 @@ fn cmd_seed(args: &Args) -> Result<()> {
     println!("instance          {name}");
     println!("variant           {}", variant.name());
     println!("k                 {k}");
+    println!("threads           {threads}");
     println!("time              {}s", fnum(result.elapsed.as_secs_f64(), 4));
     println!("seeding cost      {}", fnum(result.cost(), 2));
     println!("visited (assign)  {}", c.visited_assign);
+    println!("visited (headers) {}", c.visited_headers);
     println!("visited (sample)  {}", c.visited_sampling);
     println!("distances         {}", c.distances);
     println!("center distances  {} (avoided {})", c.center_distances, c.center_distances_avoided);
@@ -138,18 +154,21 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         .context("bad --variant (standard|tie|full)")?;
     let iters: usize = args.get_or("iters", 100).map_err(anyhow::Error::msg)?;
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
     let cfg = LloydConfig { max_iters: iters, ..LloydConfig::default() };
 
-    let s = geokmpp::seeding::seed(&data, k, variant, &mut rng);
+    let seed_cfg = SeedConfig::new(k, variant).with_threads(threads);
+    let mut picker = D2Picker::new(&mut rng);
+    let s = seed_with(&data, &seed_cfg, &mut picker, &mut NoTrace);
     println!(
-        "{name}: seeded k={k} via {} in {:.3}s (cost {:.2})",
+        "{name}: seeded k={k} via {} ({threads} threads) in {:.3}s (cost {:.2})",
         variant.name(),
         s.elapsed.as_secs_f64(),
         s.cost()
     );
     let r = if args.has("xla") {
-        let mut ex = Executor::open().context("open XLA runtime (run `make artifacts`)")?;
+        let mut ex = Executor::open_or_scalar(threads);
         lloyd_xla(&data, &s.centers, &cfg, &mut ex)?
     } else {
         lloyd(&data, &s.centers, &cfg)

@@ -57,11 +57,11 @@ impl Table {
         }
         let mut out = String::new();
         let fmt_row = |out: &mut String, cells: &[String]| {
-            for (i, (c, w)) in cells.iter().zip(&widths).enumerate() {
+            for (i, (c, &w)) in cells.iter().zip(&widths).enumerate() {
                 if i > 0 {
                     out.push_str("  ");
                 }
-                let _ = write!(out, "{c:>w$}", w = w);
+                let _ = write!(out, "{c:>w$}");
             }
             out.push('\n');
         };

@@ -87,7 +87,7 @@ pub fn hybrid_tie_seed<R: Rng>(
 
         let mut moved: Vec<usize> = Vec::new();
         for j in 0..new_j {
-            counters.visited_assign += 1;
+            counters.visited_headers += 1;
             let d_cc = sed(data.row(center_indices[j]), &cn_row);
             counters.center_distances += 1;
             if 4.0 * cs.radius[j] <= d_cc {

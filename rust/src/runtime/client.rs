@@ -1,88 +1,163 @@
 //! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
 //! compile, keep the executable cache.
+//!
+//! The `xla` crate cannot be vendored into the offline build, so the real
+//! client is gated behind the `xla-rt` cargo feature (see `rust/Cargo.toml`
+//! for how to enable it). Without the feature a stub [`Runtime`] with the
+//! same API reports itself unavailable at construction time; every scalar
+//! path — including [`crate::runtime::Executor::scalar`] and its sharded
+//! multi-threaded scans — keeps working.
 
-use crate::runtime::artifacts::{ArtifactEntry, Manifest};
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+#[cfg(feature = "xla-rt")]
+mod imp {
+    use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+    use anyhow::{Context, Result};
+    use std::collections::HashMap;
 
-/// A PJRT client plus the compiled-executable cache, keyed by artifact file.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Decomposed output literal of one execution (re-export of `xla`'s).
+    pub type Literal = xla::Literal;
+
+    /// A PJRT client plus the compiled-executable cache, keyed by artifact
+    /// file.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl Runtime {
+        /// Creates a CPU PJRT client and loads the manifest from the default
+        /// artifacts directory.
+        pub fn new() -> Result<Runtime> {
+            Self::with_dir(Manifest::default_dir())
+        }
+
+        /// Creates a CPU PJRT client with an explicit artifacts directory.
+        pub fn with_dir<P: AsRef<std::path::Path>>(dir: P) -> Result<Runtime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+            Ok(Runtime { client, manifest, cache: HashMap::new() })
+        }
+
+        /// The artifact manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (e.g. `cpu`).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Returns the compiled executable for an artifact, compiling and
+        /// caching on first use (compilation is milliseconds on CPU; caching
+        /// keeps it off the per-dispatch path).
+        pub fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&entry.file) {
+                let path = self.manifest.path_of(entry);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parse HLO text {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {}", entry.file))?;
+                self.cache.insert(entry.file.clone(), exe);
+            }
+            Ok(&self.cache[&entry.file])
+        }
+
+        /// Executes an artifact with f32 inputs of the given shapes; returns
+        /// the decomposed output tuple (aot.py lowers with
+        /// `return_tuple=True`).
+        pub fn run_f32(
+            &mut self,
+            entry: &ArtifactEntry,
+            inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Literal>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(dims).context("reshape input literal")?
+                };
+                literals.push(lit);
+            }
+            let exe = self.executable(entry)?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("execute {}", entry.file))?;
+            let out = result[0][0].to_literal_sync()?;
+            Ok(out.to_tuple()?)
+        }
+    }
 }
 
-impl Runtime {
-    /// Creates a CPU PJRT client and loads the manifest from the default
-    /// artifacts directory.
-    pub fn new() -> Result<Runtime> {
-        Self::with_dir(Manifest::default_dir())
-    }
+#[cfg(not(feature = "xla-rt"))]
+mod imp {
+    use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+    use anyhow::{bail, Result};
 
-    /// Creates a CPU PJRT client with an explicit artifacts directory.
-    pub fn with_dir<P: AsRef<std::path::Path>>(dir: P) -> Result<Runtime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime { client, manifest, cache: HashMap::new() })
-    }
+    /// Stub output literal — uninhabited, because the stub [`Runtime`] can
+    /// never be constructed.
+    pub struct Literal(std::convert::Infallible);
 
-    /// The artifact manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (e.g. `cpu`).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Returns the compiled executable for an artifact, compiling and
-    /// caching on first use (compilation is milliseconds on CPU; caching
-    /// keeps it off the per-dispatch path).
-    pub fn executable(&mut self, entry: &ArtifactEntry) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&entry.file) {
-            let path = self.manifest.path_of(entry);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parse HLO text {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compile {}", entry.file))?;
-            self.cache.insert(entry.file.clone(), exe);
+    impl Literal {
+        /// Decodes the literal into a typed vector (unreachable in the stub).
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            match self.0 {}
         }
-        Ok(&self.cache[&entry.file])
     }
 
-    /// Executes an artifact with f32 inputs of the given shapes; returns the
-    /// decomposed output tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run_f32(
-        &mut self,
-        entry: &ArtifactEntry,
-        inputs: &[(&[f32], &[i64])],
-    ) -> Result<Vec<xla::Literal>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 {
-                lit
-            } else {
-                lit.reshape(dims).context("reshape input literal")?
-            };
-            literals.push(lit);
+    /// Stub runtime: carries the API surface but always fails to construct.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Fails: the build does not include the PJRT runtime.
+        pub fn new() -> Result<Runtime> {
+            Self::with_dir(Manifest::default_dir())
         }
-        let exe = self.executable(entry)?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("execute {}", entry.file))?;
-        let out = result[0][0].to_literal_sync()?;
-        Ok(out.to_tuple()?)
+
+        /// Fails: the build does not include the PJRT runtime.
+        pub fn with_dir<P: AsRef<std::path::Path>>(dir: P) -> Result<Runtime> {
+            let _ = dir;
+            bail!(
+                "built without the `xla-rt` feature; the PJRT runtime is \
+                 unavailable (scalar paths, including Executor::scalar, still work)"
+            )
+        }
+
+        /// The artifact manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name.
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        /// Unreachable in the stub (no instance can exist).
+        pub fn run_f32(
+            &mut self,
+            entry: &ArtifactEntry,
+            _inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Literal>> {
+            bail!("xla-rt disabled: cannot execute {}", entry.file)
+        }
     }
 }
 
-#[cfg(test)]
+pub use imp::{Literal, Runtime};
+
+#[cfg(all(test, feature = "xla-rt"))]
 mod tests {
     use super::*;
+    use crate::runtime::artifacts::Manifest;
 
     /// Full round-trip over a real artifact (skipped until `make artifacts`).
     #[test]

@@ -1,12 +1,24 @@
-//! High-level dispatch: pad-to-bucket marshaling over the [`Runtime`].
+//! High-level dispatch: pad-to-bucket marshaling over the [`Runtime`], with
+//! a sharded multi-threaded scalar backend as the no-artifacts fallback.
 //!
 //! Padding contracts (verified by `python/tests/test_model.py`):
 //! * feature dimension — zero-padded on both operands (SED unchanged);
 //! * points — tail chunks zero-padded with `w = 0`; outputs beyond the real
 //!   row count are ignored;
 //! * centers (Lloyd) — padded at `FAR_AWAY` so they never win the argmin.
+//!
+//! Backends:
+//! * [`Executor::open`] — the PJRT/XLA runtime over the AOT artifacts
+//!   (requires `make artifacts` and the `xla-rt` feature);
+//! * [`Executor::scalar`] — no runtime at all: the same dense ops computed
+//!   by scalar SED kernels sharded across real OS threads
+//!   ([`crate::core::shard::Shards`] + `std::thread::scope`). This is what
+//!   lets coordinator jobs and the CLI run the dense phases with true
+//!   thread-level parallelism on machines without artifacts.
 
+use crate::core::distance::sed;
 use crate::core::matrix::Matrix;
+use crate::core::shard::Shards;
 use crate::runtime::client::Runtime;
 use anyhow::{bail, Context, Result};
 
@@ -24,21 +36,33 @@ fn gather_padded(data: &Matrix, rows: &[usize], chunk: usize, d_pad: usize, buf:
     }
 }
 
-/// High-level executor over the AOT artifacts.
+/// High-level executor over the AOT artifacts (or the scalar fallback).
 pub struct Executor {
-    rt: Runtime,
+    rt: Option<Runtime>,
+    /// Worker threads for the scalar backend.
+    threads: usize,
     // Reused marshaling buffers (allocation-free steady state).
     xbuf: Vec<f32>,
     wbuf: Vec<f32>,
     cbuf: Vec<f32>,
     /// Number of PJRT dispatches issued (perf accounting).
     pub dispatches: u64,
+    /// Number of scalar-backend sharded scans issued (perf accounting).
+    pub scalar_scans: u64,
 }
 
 impl Executor {
     /// Wraps a runtime.
     pub fn new(rt: Runtime) -> Executor {
-        Executor { rt, xbuf: Vec::new(), wbuf: Vec::new(), cbuf: Vec::new(), dispatches: 0 }
+        Executor {
+            rt: Some(rt),
+            threads: 1,
+            xbuf: Vec::new(),
+            wbuf: Vec::new(),
+            cbuf: Vec::new(),
+            dispatches: 0,
+            scalar_scans: 0,
+        }
     }
 
     /// Opens the default runtime (artifacts directory from the environment).
@@ -46,21 +70,104 @@ impl Executor {
         Ok(Executor::new(Runtime::new()?))
     }
 
-    /// Largest feature-dimension bucket available for an op.
+    /// A runtime-free executor computing every op with scalar kernels
+    /// sharded across `threads` OS threads.
+    pub fn scalar(threads: usize) -> Executor {
+        Executor { threads: threads.max(1), ..Executor::new_empty() }
+    }
+
+    /// Opens the XLA runtime if available, otherwise falls back to the
+    /// scalar backend with the given thread count, logging the actual
+    /// reason the runtime was unavailable (missing artifacts, disabled
+    /// feature, PJRT failure, …).
+    pub fn open_or_scalar(threads: usize) -> Executor {
+        match Runtime::new() {
+            Ok(rt) => Executor::new(rt),
+            Err(e) => {
+                eprintln!(
+                    "note: XLA runtime unavailable ({e:#}); \
+                     using the sharded scalar executor ({threads} threads)"
+                );
+                Executor::scalar(threads)
+            }
+        }
+    }
+
+    fn new_empty() -> Executor {
+        Executor {
+            rt: None,
+            threads: 1,
+            xbuf: Vec::new(),
+            wbuf: Vec::new(),
+            cbuf: Vec::new(),
+            dispatches: 0,
+            scalar_scans: 0,
+        }
+    }
+
+    /// Whether the XLA runtime backs this executor (false = scalar backend).
+    pub fn has_runtime(&self) -> bool {
+        self.rt.is_some()
+    }
+
+    /// Worker threads used by the scalar backend.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Largest feature-dimension bucket available for an op (0 without a
+    /// runtime — the scalar backend has no buckets).
     pub fn max_d(&self, op: &str) -> usize {
         self.rt
-            .manifest()
-            .entries
-            .iter()
-            .filter(|e| e.op == op)
-            .map(|e| e.d)
-            .max()
+            .as_ref()
+            .map(|rt| {
+                rt.manifest()
+                    .entries
+                    .iter()
+                    .filter(|e| e.op == op)
+                    .map(|e| e.d)
+                    .max()
+                    .unwrap_or(0)
+            })
             .unwrap_or(0)
     }
 
-    /// Whether the executor can serve a dataset of dimension `d`.
+    /// Whether the XLA runtime can serve a dataset of dimension `d`. The
+    /// scalar backend serves any dimension but reports false here.
     pub fn supports_d(&self, d: usize) -> bool {
         self.max_d("update") >= d
+    }
+
+    /// Sharded scalar fused min-update over `rows` (the fallback dense op).
+    fn scalar_min_update(
+        &mut self,
+        data: &Matrix,
+        rows: &[usize],
+        c_new: &[f32],
+        weights: Option<&[f32]>,
+    ) -> (Vec<f32>, Vec<i32>) {
+        self.scalar_scans += 1;
+        let shards = Shards::new(rows.len(), self.threads);
+        let mut w_out = vec![0f32; rows.len()];
+        let mut chg_out = vec![0i32; rows.len()];
+        {
+            let w_parts = shards.split_mut(&mut w_out);
+            let c_parts = shards.split_mut(&mut chg_out);
+            std::thread::scope(|scope| {
+                for ((range, w), chg) in shards.ranges().zip(w_parts).zip(c_parts) {
+                    let rows = &rows[range];
+                    scope.spawn(move || {
+                        for (slot, &r) in rows.iter().enumerate() {
+                            let dist = sed(data.row(r), c_new);
+                            let cur = weights.map(|ws| ws[r]).unwrap_or(f32::INFINITY);
+                            w[slot] = cur.min(dist);
+                            chg[slot] = i32::from(dist < cur);
+                        }
+                    });
+                }
+            });
+        }
+        (w_out, chg_out)
     }
 
     /// Fused min-update of `weights[rows]` against `c_new` (a dataset row),
@@ -76,7 +183,10 @@ impl Executor {
         c_new: &[f32],
     ) -> Result<(Vec<f32>, Vec<i32>)> {
         let d = data.cols();
-        let entry = match self.rt.manifest().find("update", d, 1) {
+        if self.rt.is_none() {
+            return Ok(self.scalar_min_update(data, rows, c_new, None));
+        }
+        let entry = match self.rt.as_ref().unwrap().manifest().find("update", d, 1) {
             Some(e) => e.clone(),
             None => bail!("no update artifact for d={d} (max {})", self.max_d("update")),
         };
@@ -94,13 +204,10 @@ impl Executor {
         for batch in rows.chunks(chunk) {
             gather_padded(data, batch, chunk, d_pad, &mut xbuf);
             wbuf.clear();
+            // w inputs: +inf means "no current center beats anything" — the
+            // init pass semantics; min_update_with_weights carries real ones.
             wbuf.resize(chunk, f32::INFINITY);
-            // w inputs: +inf means "no current center beats anything" — used
-            // by init passes; callers that carry real weights overwrite below.
-            for (slot, &_r) in batch.iter().enumerate() {
-                wbuf[slot] = f32::INFINITY;
-            }
-            let outs = self.rt.run_f32(
+            let outs = self.rt.as_mut().unwrap().run_f32(
                 &entry,
                 &[
                     (&xbuf, &[chunk as i64, d_pad as i64]),
@@ -129,7 +236,10 @@ impl Executor {
         weights: &[f32],
     ) -> Result<(Vec<f32>, Vec<i32>)> {
         let d = data.cols();
-        let entry = match self.rt.manifest().find("update", d, 1) {
+        if self.rt.is_none() {
+            return Ok(self.scalar_min_update(data, rows, c_new, Some(weights)));
+        }
+        let entry = match self.rt.as_ref().unwrap().manifest().find("update", d, 1) {
             Some(e) => e.clone(),
             None => bail!("no update artifact for d={d}"),
         };
@@ -149,7 +259,7 @@ impl Executor {
             for (slot, &r) in batch.iter().enumerate() {
                 wbuf[slot] = weights[r];
             }
-            let outs = self.rt.run_f32(
+            let outs = self.rt.as_mut().unwrap().run_f32(
                 &entry,
                 &[
                     (&xbuf, &[chunk as i64, d_pad as i64]),
@@ -168,6 +278,40 @@ impl Executor {
         Ok((w_out, chg_out))
     }
 
+    /// Sharded scalar Lloyd assignment (the fallback dense op).
+    fn scalar_lloyd_assign(&mut self, data: &Matrix, centers: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        self.scalar_scans += 1;
+        let n = data.rows();
+        let shards = Shards::new(n, self.threads);
+        let mut assign = vec![0u32; n];
+        let mut mind = vec![0f32; n];
+        {
+            let a_parts = shards.split_mut(&mut assign);
+            let m_parts = shards.split_mut(&mut mind);
+            std::thread::scope(|scope| {
+                for ((range, a), m) in shards.ranges().zip(a_parts).zip(m_parts) {
+                    scope.spawn(move || {
+                        for (slot, i) in range.enumerate() {
+                            let row = data.row(i);
+                            let mut best = f32::INFINITY;
+                            let mut best_j = 0u32;
+                            for j in 0..centers.rows() {
+                                let dist = sed(row, centers.row(j));
+                                if dist < best {
+                                    best = dist;
+                                    best_j = j as u32;
+                                }
+                            }
+                            a[slot] = best_j;
+                            m[slot] = best;
+                        }
+                    });
+                }
+            });
+        }
+        (assign, mind)
+    }
+
     /// Lloyd assignment for all points against `centers` (`k × d`), chunked.
     /// Returns `(assignment, min-SED)` per point.
     pub fn lloyd_assign(
@@ -177,7 +321,10 @@ impl Executor {
     ) -> Result<(Vec<u32>, Vec<f32>)> {
         let d = data.cols();
         let k = centers.rows();
-        let entry = match self.rt.manifest().find("lloyd_assign", d, k) {
+        if self.rt.is_none() {
+            return Ok(self.scalar_lloyd_assign(data, centers));
+        }
+        let entry = match self.rt.as_ref().unwrap().manifest().find("lloyd_assign", d, k) {
             Some(e) => e.clone(),
             None => bail!(
                 "no lloyd_assign artifact for d={d}, k={k} (max d={}, largest k bucket exceeded?)",
@@ -206,7 +353,7 @@ impl Executor {
         let mut xbuf = std::mem::take(&mut self.xbuf);
         for batch in all_rows.chunks(chunk) {
             gather_padded(data, batch, chunk, d_pad, &mut xbuf);
-            let outs = self.rt.run_f32(
+            let outs = self.rt.as_mut().unwrap().run_f32(
                 &entry,
                 &[
                     (&xbuf, &[chunk as i64, d_pad as i64]),
@@ -224,10 +371,28 @@ impl Executor {
         Ok((assign, mind))
     }
 
-    /// Per-point norms via the AOT norms artifact, chunked.
+    /// Per-point norms via the AOT norms artifact, chunked — or the sharded
+    /// scalar kernel without a runtime.
     pub fn norms(&mut self, data: &Matrix) -> Result<Vec<f32>> {
         let d = data.cols();
-        let entry = match self.rt.manifest().find("norms", d, 1) {
+        if self.rt.is_none() {
+            self.scalar_scans += 1;
+            let n = data.rows();
+            let shards = Shards::new(n, self.threads);
+            let mut out = vec![0f32; n];
+            let o_parts = shards.split_mut(&mut out);
+            std::thread::scope(|scope| {
+                for (range, o) in shards.ranges().zip(o_parts) {
+                    scope.spawn(move || {
+                        for (slot, i) in range.enumerate() {
+                            o[slot] = crate::core::distance::sqnorm(data.row(i)).sqrt();
+                        }
+                    });
+                }
+            });
+            return Ok(out);
+        }
+        let entry = match self.rt.as_ref().unwrap().manifest().find("norms", d, 1) {
             Some(e) => e.clone(),
             None => bail!("no norms artifact for d={d}"),
         };
@@ -239,10 +404,11 @@ impl Executor {
         let mut xbuf = std::mem::take(&mut self.xbuf);
         for batch in all_rows.chunks(chunk) {
             gather_padded(data, batch, chunk, d_pad, &mut xbuf);
-            let outs = self
-                .rt
-                .run_f32(&entry, &[(&xbuf, &[chunk as i64, d_pad as i64])])
-                .context("norms dispatch")?;
+            let outs = {
+                let rt = self.rt.as_mut().unwrap();
+                rt.run_f32(&entry, &[(&xbuf, &[chunk as i64, d_pad as i64])])
+                    .context("norms dispatch")?
+            };
             self.dispatches += 1;
             let ns: Vec<f32> = outs[0].to_vec()?;
             out.extend_from_slice(&ns[..batch.len()]);
@@ -266,6 +432,97 @@ mod tests {
     fn random_data(n: usize, d: usize, seed: u64) -> Matrix {
         let mut rng = Pcg64::seed_from(seed);
         Matrix::from_vec((0..n * d).map(|_| rng.uniform_f32() * 6.0 - 3.0).collect(), n, d)
+    }
+
+    #[test]
+    fn scalar_min_update_matches_sed() {
+        let data = random_data(537, 7, 9);
+        let rows: Vec<usize> = (0..data.rows()).collect();
+        let c = data.row(11).to_vec();
+        let mut ex = Executor::scalar(4);
+        assert!(!ex.has_runtime());
+        let (w, chg) = ex.min_update(&data, &rows, &c).unwrap();
+        for i in 0..data.rows() {
+            assert_eq!(w[i], sed(data.row(i), &c), "i={i}");
+        }
+        assert!(chg.iter().all(|&c| c == 1));
+        assert!(ex.scalar_scans >= 1);
+        assert_eq!(ex.dispatches, 0);
+    }
+
+    #[test]
+    fn scalar_backend_thread_count_invariant() {
+        // The sharded scan must be bit-identical at any thread count.
+        let data = random_data(301, 5, 2);
+        let rows: Vec<usize> = (0..data.rows()).collect();
+        let c0 = data.row(0).to_vec();
+        let weights: Vec<f32> = (0..data.rows()).map(|i| sed(data.row(i), &c0)).collect();
+        let c1 = data.row(99).to_vec();
+        let reference = Executor::scalar(1)
+            .min_update_with_weights(&data, &rows, &c1, &weights)
+            .unwrap();
+        for threads in [2usize, 4, 8] {
+            let got = Executor::scalar(threads)
+                .min_update_with_weights(&data, &rows, &c1, &weights)
+                .unwrap();
+            assert_eq!(reference, got, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scalar_min_update_with_weights_strictness() {
+        // Points exactly at their current weight must NOT report changed
+        // (the strict rule that keeps accelerated variants exact).
+        let data = random_data(64, 3, 5);
+        let rows: Vec<usize> = (0..data.rows()).collect();
+        let c = data.row(7).to_vec();
+        let weights: Vec<f32> = (0..data.rows()).map(|i| sed(data.row(i), &c)).collect();
+        let (w, chg) = Executor::scalar(3)
+            .min_update_with_weights(&data, &rows, &c, &weights)
+            .unwrap();
+        assert_eq!(w, weights);
+        assert!(chg.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn scalar_lloyd_assign_matches_bruteforce() {
+        let data = random_data(411, 6, 3);
+        let centers = data.gather_rows(&[1, 50, 200, 333]);
+        let (assign, mind) = Executor::scalar(4).lloyd_assign(&data, &centers).unwrap();
+        for i in 0..data.rows() {
+            let mut best = f32::INFINITY;
+            let mut best_j = 0u32;
+            for j in 0..centers.rows() {
+                let d = sed(data.row(i), centers.row(j));
+                if d < best {
+                    best = d;
+                    best_j = j as u32;
+                }
+            }
+            assert_eq!(assign[i], best_j, "i={i}");
+            assert_eq!(mind[i], best, "i={i}");
+        }
+    }
+
+    #[test]
+    fn scalar_norms_matches_reference() {
+        let data = random_data(123, 9, 4);
+        let ns = Executor::scalar(5).norms(&data).unwrap();
+        let want = crate::core::norms::norms(&data);
+        assert_eq!(ns, want);
+    }
+
+    #[test]
+    fn scalar_serves_dimensions_beyond_any_bucket() {
+        // d=4096 exceeds every AOT bucket; the scalar backend still serves it
+        // (while honestly reporting no XLA bucket support).
+        let data = random_data(16, 4096, 5);
+        let mut ex = Executor::scalar(2);
+        assert!(!ex.supports_d(4096));
+        let rows: Vec<usize> = (0..data.rows()).collect();
+        let c = data.row(0).to_vec();
+        let (w, _) = ex.min_update(&data, &rows, &c).unwrap();
+        assert_eq!(w[0], 0.0);
     }
 
     #[test]

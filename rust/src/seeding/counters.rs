@@ -3,7 +3,10 @@
 //!
 //! The paper's accounting rules, reproduced exactly:
 //! * visited clusters/partitions count as examined points ("to ensure
-//!   fairness, we have counted the visited clusters as points examined");
+//!   fairness, we have counted the visited clusters as points examined") —
+//!   tracked in their own bucket, [`Counters::visited_headers`], so the
+//!   per-point count stays uncontaminated while [`Counters::visited_total`]
+//!   still reports the paper-comparable figure;
 //! * center–center distances are included in the distance count;
 //! * norm computations (first iteration only) are included for the
 //!   norm-filtered variant.
@@ -11,9 +14,15 @@
 /// Counter set collected by every seeder run.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Counters {
-    /// Points examined while updating closest-center assignments
-    /// (includes cluster/partition header checks, per the paper).
+    /// Points examined while updating closest-center assignments — strictly
+    /// per-point visits (one per weight examined in an update scan).
     pub visited_assign: u64,
+    /// Cluster/partition header examinations during the assignment phase
+    /// (radius, sum, norm-bound lookups). Counted separately from
+    /// [`Counters::visited_assign`] so the per-point metric is not inflated;
+    /// the paper's "visited points" figure is their sum via
+    /// [`Counters::visited_total`].
+    pub visited_headers: u64,
     /// Points examined during D² sampling (cluster headers included).
     pub visited_sampling: u64,
     /// Point↔center SED computations.
@@ -35,9 +44,10 @@ pub struct Counters {
 }
 
 impl Counters {
-    /// Total points examined (both phases).
+    /// Total points examined (both phases, headers included — the paper's
+    /// §5.2 accounting).
     pub fn visited_total(&self) -> u64 {
-        self.visited_assign + self.visited_sampling
+        self.visited_assign + self.visited_headers + self.visited_sampling
     }
 
     /// Total distance-like computations: point-center + center-center +
@@ -48,7 +58,14 @@ impl Counters {
 
     /// Element-wise sum (for aggregating repetitions).
     pub fn add(&mut self, other: &Counters) {
+        *self += *other;
+    }
+}
+
+impl std::ops::AddAssign for Counters {
+    fn add_assign(&mut self, other: Counters) {
         self.visited_assign += other.visited_assign;
+        self.visited_headers += other.visited_headers;
         self.visited_sampling += other.visited_sampling;
         self.distances += other.distances;
         self.center_distances += other.center_distances;
@@ -69,22 +86,60 @@ mod tests {
     fn totals_compose() {
         let c = Counters {
             visited_assign: 10,
+            visited_headers: 2,
             visited_sampling: 5,
             distances: 7,
             center_distances: 2,
             norms: 1,
             ..Default::default()
         };
-        assert_eq!(c.visited_total(), 15);
+        assert_eq!(c.visited_total(), 17);
         assert_eq!(c.computations_total(), 10);
     }
 
     #[test]
     fn add_accumulates() {
         let mut a = Counters { distances: 1, ..Default::default() };
-        let b = Counters { distances: 2, norms: 3, ..Default::default() };
+        let b = Counters { distances: 2, norms: 3, visited_headers: 4, ..Default::default() };
         a.add(&b);
         assert_eq!(a.distances, 3);
         assert_eq!(a.norms, 3);
+        assert_eq!(a.visited_headers, 4);
+    }
+
+    #[test]
+    fn add_assign_merges_every_field() {
+        let one = Counters {
+            visited_assign: 1,
+            visited_headers: 2,
+            visited_sampling: 3,
+            distances: 4,
+            center_distances: 5,
+            norms: 6,
+            filter1_rejects: 7,
+            filter2_rejects: 8,
+            norm_partition_rejects: 9,
+            norm_point_rejects: 10,
+            center_distances_avoided: 11,
+        };
+        let mut sum = Counters::default();
+        sum += one;
+        sum += one;
+        assert_eq!(
+            sum,
+            Counters {
+                visited_assign: 2,
+                visited_headers: 4,
+                visited_sampling: 6,
+                distances: 8,
+                center_distances: 10,
+                norms: 12,
+                filter1_rejects: 14,
+                filter2_rejects: 16,
+                norm_partition_rejects: 18,
+                norm_point_rejects: 20,
+                center_distances_avoided: 22,
+            }
+        );
     }
 }

@@ -124,7 +124,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             let mut admit_lower = false;
             let mut admit_upper = false;
             if !clusters[j].lower.members.is_empty() {
-                counters.visited_assign += 1; // partition header examined
+                counters.visited_headers += 1; // partition header examined
                 if clusters[j].lower.norm_bounds_admit(cn_norm) {
                     admit_lower = true;
                 } else {
@@ -132,7 +132,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 }
             }
             if !clusters[j].upper.members.is_empty() {
-                counters.visited_assign += 1;
+                counters.visited_headers += 1;
                 if clusters[j].upper.norm_bounds_admit(cn_norm) {
                     admit_upper = true;
                 } else {
@@ -354,6 +354,55 @@ mod tests {
             assert_eq!(rs.weights, rf.weights, "n={n} d={dims} k={k}");
             assert_eq!(rs.assignments, rf.assignments, "n={n} d={dims} k={k}");
             assert_eq!(rt.weights, rf.weights);
+        }
+    }
+
+    /// End-to-end §4.2.2 check through the full variant: with the first
+    /// center pinned, the *partition-level* two-step draw of the second
+    /// center must follow the flat D² distribution `w_i / Σ w`.
+    #[test]
+    fn partition_two_step_matches_flat_d2_distribution() {
+        use crate::seeding::picker::Pick;
+
+        /// Pins the first center, delegates every later draw to real D².
+        struct FixedFirst {
+            first: usize,
+            inner: D2Picker<Pcg64>,
+        }
+        impl CenterPicker for FixedFirst {
+            fn first(&mut self, _n: usize) -> usize {
+                self.first
+            }
+            fn next(&mut self, ctx: PickCtx<'_>) -> Pick {
+                self.inner.next(ctx)
+            }
+        }
+
+        let n = 32;
+        let data = random_data(n, 2, 77);
+        let first = 5;
+        // Expected flat D² probabilities after the pinned first center.
+        let w: Vec<f64> =
+            (0..n).map(|i| sed(data.row(i), data.row(first)) as f64).collect();
+        let total: f64 = w.iter().sum();
+
+        let reps = 30_000u64;
+        let mut counts = vec![0u64; n];
+        for rep in 0..reps {
+            let mut p = FixedFirst { first, inner: D2Picker::new(Pcg64::seed_stream(13, rep)) };
+            let r = run(&data, &SeedConfig::new(2, Variant::Full), &mut p, &mut NoTrace);
+            counts[r.center_indices[1]] += 1;
+        }
+        assert_eq!(counts[first], 0, "zero-weight first center re-drawn");
+        for i in 0..n {
+            let expect = w[i] / total;
+            let got = counts[i] as f64 / reps as f64;
+            // ~5σ band at 30k reps — loose enough to be draw-stable, tight
+            // enough to catch any distribution distortion.
+            assert!(
+                (got - expect).abs() < 0.015,
+                "point {i}: observed {got:.4} vs flat D² {expect:.4}"
+            );
         }
     }
 

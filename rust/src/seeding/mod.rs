@@ -15,11 +15,20 @@
 //! Options (off by default, matching the paper's baseline configuration):
 //! Appendix-A center–center distance avoidance, Appendix-B reference points
 //! and the dot-product SED decomposition.
+//!
+//! Setting [`SeedConfig::threads`] above 1 routes the `Full` variant through
+//! the sharded multi-threaded engine ([`parallel`]): the per-iteration
+//! filter-and-update scan runs across contiguous point shards with
+//! per-shard partition state, while sampling stays sequential and
+//! distribution-identical. Scripted runs are bit-identical at any thread
+//! count. `Standard` and `Tie` currently ignore the knob (their scans stay
+//! single-threaded).
 
 pub mod centerdist;
 pub mod clusters;
 pub mod counters;
 pub mod full;
+pub mod parallel;
 pub mod partitions;
 pub mod picker;
 pub mod refpoint;
@@ -89,11 +98,18 @@ pub struct SeedConfig {
     /// cluster is untouched and draw members by binary search (`Tie` only;
     /// the `Full` variant's partitions churn too often to amortize tables).
     pub binary_search_sampling: bool,
+    /// Worker threads for the sharded parallel engine (`Full` only; 1 =
+    /// single-threaded). The point set is split into `threads` contiguous
+    /// shards, each with its own per-cluster partition state; per-shard
+    /// partial sums are merged so the sequential two-step sampler sees the
+    /// exact same distribution, and scripted runs stay bit-identical at any
+    /// thread count. See [`parallel`].
+    pub threads: usize,
 }
 
 impl SeedConfig {
     /// Default configuration for a variant (paper baseline: origin reference
-    /// point, no Appendix-A/B extras).
+    /// point, no Appendix-A/B extras, single-threaded).
     pub fn new(k: usize, variant: Variant) -> Self {
         Self {
             k,
@@ -102,7 +118,14 @@ impl SeedConfig {
             appendix_a: false,
             dot_trick: false,
             binary_search_sampling: false,
+            threads: 1,
         }
+    }
+
+    /// Sets the worker-thread count (builder style).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 }
 
@@ -154,6 +177,7 @@ pub fn seed_with<P: CenterPicker, T: TraceSink>(
     let mut result = match cfg.variant {
         Variant::Standard => standard::run(data, cfg, picker, trace),
         Variant::Tie => tie::run(data, cfg, picker, trace),
+        Variant::Full if cfg.threads > 1 => parallel::run(data, cfg, picker, trace),
         Variant::Full => full::run(data, cfg, picker, trace),
     };
     result.elapsed = sw.elapsed();
@@ -209,6 +233,47 @@ mod tests {
         let data = toy_data();
         let mut rng = Pcg64::seed_from(5);
         seed(&data, 41, Variant::Standard, &mut rng);
+    }
+
+    /// `visited_assign` must count exactly the per-point examinations (one
+    /// per weight access in an update scan) in every variant — cluster and
+    /// partition header reads go to `visited_headers`. Pinned by comparing
+    /// against the `access_weight` trace-event count.
+    #[test]
+    fn visited_assign_counts_per_point_visits_only() {
+        struct WeightCountSink(u64);
+        impl TraceSink for WeightCountSink {
+            fn access_weight(&mut self, _i: usize) {
+                self.0 += 1;
+            }
+        }
+
+        let data = toy_data();
+        let k = 6;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(17);
+            let mut p = D2Picker::new(&mut rng);
+            seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let mut per_variant = Vec::new();
+        for variant in Variant::ALL {
+            let mut sink = WeightCountSink(0);
+            let mut p = ScriptedPicker::new(script.clone());
+            let r = seed_with(&data, &SeedConfig::new(k, variant), &mut p, &mut sink);
+            assert_eq!(
+                r.counters.visited_assign, sink.0,
+                "{variant:?}: visited_assign diverged from per-point accesses"
+            );
+            per_variant.push(r.counters);
+        }
+        // Standard has no headers; the accelerated variants do, and their
+        // per-point visits can only shrink (they scan subsets).
+        assert_eq!(per_variant[0].visited_headers, 0);
+        assert!(per_variant[1].visited_assign <= per_variant[0].visited_assign);
+        assert!(per_variant[2].visited_assign <= per_variant[0].visited_assign);
+        assert!(per_variant[1].visited_headers > 0);
+        assert!(per_variant[2].visited_headers > 0);
     }
 
     #[test]

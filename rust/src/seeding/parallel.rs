@@ -1,0 +1,639 @@
+//! Sharded multi-threaded seeding engine — the full accelerated variant
+//! (Algorithm 2 + §4.3 norm filters) with the per-iteration filter-and-update
+//! scan parallelized across `cfg.threads` contiguous point shards.
+//!
+//! ## Design
+//!
+//! The point set `0..n` is split into `T` contiguous shards
+//! ([`crate::core::shard::Shards`]). Every shard owns, for every cluster, its
+//! *own* partition state — member lists, SED radii, weight sums and norm
+//! bounds over the shard-local members only ([`NormCluster`] per
+//! (shard, cluster)). Because shards are contiguous, the global `weights`,
+//! `assignments` and cached `l(x)`/`u(x)` bound arrays are handed to
+//! `std::thread::scope` workers as disjoint `&mut` slices: no locks, no
+//! unsafe, no cross-thread writes.
+//!
+//! Each iteration:
+//! 1. **Sampling (sequential)** — per-shard partition weight sums are
+//!    presented to the picker as the two-step groups. Partitions tile the
+//!    point set, so the two-step draw over them is distribution-equivalent
+//!    to the single-threaded path (§4.2.2 equivalence holds for *any*
+//!    tiling).
+//! 2. **Pre-pass (sequential)** — per cluster, the shard partition norm
+//!    bounds are consulted (lookups only); if any shard admits the new
+//!    center's norm, the center–center distance is computed once (with the
+//!    Appendix-A rule when enabled, using the global cluster radius = max
+//!    over shard partition radii).
+//! 3. **Scan (parallel)** — one worker per shard runs the same filter
+//!    cascade as [`crate::seeding::full`] over its shard partitions:
+//!    per-shard Filter 1 (tighter — shard radii are no larger than global
+//!    ones), then per point Filter 2, the point norm filter, and the strict
+//!    min-update. Per-shard [`Counters`] are merged with `+=`.
+//!
+//! ## Exactness
+//!
+//! Every filter is exact (it only ever skips points whose weight provably
+//! cannot change), and per-point arithmetic is identical to the
+//! single-threaded path, so the engine produces **bit-identical**
+//! `weights`/`assignments`/`center_indices` to [`crate::seeding::full`] for
+//! a fixed [`crate::seeding::ScriptedPicker`] script, regardless of thread
+//! count. With the production D² picker, draws consume the RNG differently
+//! (groups are per-shard), so runs are deterministic per `(seed, threads)`
+//! and distribution-identical across thread counts.
+//!
+//! ## Tracing
+//!
+//! Workers cannot share the `&mut TraceSink`, so the parallel engine emits
+//! only the sequential-phase events (cluster headers, center rows). Use
+//! `threads = 1` for cache-trace experiments ([`crate::simcache`]).
+
+use crate::core::distance::{sed, sed_dot};
+use crate::core::matrix::Matrix;
+use crate::core::norms::{norms as compute_norms, norms_from, sqnorms};
+use crate::core::shard::Shards;
+use crate::seeding::centerdist::CenterGeom;
+use crate::seeding::counters::Counters;
+use crate::seeding::partitions::{NormCluster, Part};
+use crate::seeding::picker::{CenterPicker, PickCtx};
+use crate::seeding::refpoint::RefPoint;
+use crate::seeding::trace::TraceSink;
+use crate::seeding::{SeedConfig, SeedResult};
+use std::thread;
+use std::time::Duration;
+
+/// Per-shard slice of the cluster structure: for every cluster, the members
+/// that fall inside this shard's contiguous point range, with partition
+/// stats computed over those members only.
+struct ShardState {
+    /// First global point index of the shard.
+    start: usize,
+    /// `clusters[j]` — shard-local partition state of cluster `j`.
+    clusters: Vec<NormCluster>,
+}
+
+/// Point–center SED with the optional Appendix-B dot decomposition.
+#[inline]
+fn point_dist(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    sq: &[f32],
+    a: usize,
+    b: usize,
+    c: &mut Counters,
+) -> f32 {
+    c.distances += 1;
+    if cfg.dot_trick {
+        sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+    } else {
+        sed(data.row(a), data.row(b))
+    }
+}
+
+/// Recomputes a shard partition's stats from the shard-local weight and
+/// cached-bound slices (`k = i - start` maps global members to slice slots).
+fn refresh_part(part: &mut Part, start: usize, w: &[f32], lo: &[f32], up: &[f32]) {
+    let (mut r, mut s) = (0f32, 0f64);
+    let (mut lb, mut ub) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &i in &part.members {
+        let k = i - start;
+        if w[k] > r {
+            r = w[k];
+        }
+        s += w[k] as f64;
+        if lo[k] < lb {
+            lb = lo[k];
+        }
+        if up[k] > ub {
+            ub = up[k];
+        }
+    }
+    part.radius = r;
+    part.sum = s;
+    part.lb = lb;
+    part.ub = ub;
+}
+
+/// Initial pass of one shard: weights/bounds against the first center, all
+/// shard points routed into cluster 0's norm partitions.
+#[allow(clippy::too_many_arguments)]
+fn init_shard(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    sq: &[f32],
+    norms: &[f32],
+    first: usize,
+    state: &mut ShardState,
+    w: &mut [f32],
+    lo: &mut [f32],
+    up: &mut [f32],
+) -> Counters {
+    let mut c = Counters::default();
+    let start = state.start;
+    for k in 0..w.len() {
+        let i = start + k;
+        let dv = point_dist(data, cfg, sq, i, first, &mut c);
+        w[k] = dv;
+        let e = dv.sqrt();
+        lo[k] = norms[i] - e;
+        up[k] = norms[i] + e;
+        state.clusters[0].insert(i, norms[i]);
+    }
+    c.visited_assign += w.len() as u64;
+    refresh_part(&mut state.clusters[0].lower, start, w, lo, up);
+    refresh_part(&mut state.clusters[0].upper, start, w, lo, up);
+    c
+}
+
+/// One shard's filter-and-update scan for a newly selected center — the
+/// parallel counterpart of the per-cluster loop in [`crate::seeding::full`].
+#[allow(clippy::too_many_arguments)]
+fn scan_shard(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    sq: &[f32],
+    norms: &[f32],
+    state: &mut ShardState,
+    w: &mut [f32],
+    assign: &mut [u32],
+    lo: &mut [f32],
+    up: &mut [f32],
+    d_cc: &[f32],
+    c_new: usize,
+    slot: usize,
+    cn_norm: f32,
+) -> Counters {
+    let mut c = Counters::default();
+    let start = state.start;
+    let mut new_cluster = NormCluster::new(cn_norm);
+    for (j, &dcc) in d_cc.iter().enumerate() {
+        if dcc.is_nan() {
+            // Cluster skipped globally (no shard admitted, or Appendix A
+            // proved no member can move).
+            continue;
+        }
+        let cluster = &mut state.clusters[j];
+        for is_lower in [true, false] {
+            let part: &mut Part =
+                if is_lower { &mut cluster.lower } else { &mut cluster.upper };
+            // Per-shard partition norm bounds — tighter than the merged
+            // bounds the pre-pass used (header reads counted there).
+            if !part.norm_bounds_admit(cn_norm) {
+                continue;
+            }
+            // Filter 1 (Eq. 9) with the shard-partition radius, which is no
+            // larger than the global partition radius — strictly more
+            // rejections than the single-threaded scan, never fewer.
+            if 4.0 * part.radius <= dcc {
+                c.filter1_rejects += 1;
+                continue;
+            }
+            // Fused filter/update pass, recomputing the partition stats for
+            // retained points — identical per-point arithmetic to full.rs.
+            let members = std::mem::take(&mut part.members);
+            let mut retained = Vec::with_capacity(members.len());
+            let (mut r, mut s) = (0f32, 0f64);
+            let (mut lb, mut ub) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &i in &members {
+                c.visited_assign += 1;
+                let k = i - start;
+                // Filter 2 (TIE, Eq. 5), then the point norm filter (Eq. 8),
+                // then the strict min-update.
+                let keep = if 4.0 * w[k] <= dcc {
+                    c.filter2_rejects += 1;
+                    true
+                } else {
+                    let dn = cn_norm - norms[i];
+                    if dn * dn >= w[k] {
+                        c.norm_point_rejects += 1;
+                        true
+                    } else {
+                        let dnew = point_dist(data, cfg, sq, i, c_new, &mut c);
+                        if dnew < w[k] {
+                            w[k] = dnew;
+                            assign[k] = slot as u32;
+                            let e = dnew.sqrt();
+                            lo[k] = norms[i] - e;
+                            up[k] = norms[i] + e;
+                            new_cluster.insert(i, norms[i]);
+                            false
+                        } else {
+                            true
+                        }
+                    }
+                };
+                if keep {
+                    retained.push(i);
+                    if w[k] > r {
+                        r = w[k];
+                    }
+                    s += w[k] as f64;
+                    if lo[k] < lb {
+                        lb = lo[k];
+                    }
+                    if up[k] > ub {
+                        ub = up[k];
+                    }
+                }
+            }
+            part.members = retained;
+            part.radius = r;
+            part.sum = s;
+            part.lb = lb;
+            part.ub = ub;
+        }
+    }
+    refresh_part(&mut new_cluster.lower, start, w, lo, up);
+    refresh_part(&mut new_cluster.upper, start, w, lo, up);
+    state.clusters.push(new_cluster);
+    c
+}
+
+pub(crate) fn run<P: CenterPicker, T: TraceSink>(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    picker: &mut P,
+    trace: &mut T,
+) -> SeedResult {
+    let n = data.rows();
+    let d = data.cols();
+    let shards = Shards::new(n, cfg.threads.max(1));
+    let mut counters = Counters::default();
+
+    // Norm precomputation (§4.3), identical to the single-threaded path.
+    let norms: Vec<f32> = match &cfg.refpoint {
+        RefPoint::Origin => compute_norms(data),
+        rp => {
+            let reference = rp.coordinates(data);
+            norms_from(data, &reference)
+        }
+    };
+    counters.norms += n as u64;
+    let sq = if cfg.dot_trick {
+        counters.norms += n as u64;
+        sqnorms(data)
+    } else {
+        Vec::new()
+    };
+
+    let first = picker.first(n);
+    let mut center_indices = vec![first];
+    let mut weights = vec![0f32; n];
+    let mut assignments = vec![0u32; n];
+    let mut lo = vec![0f32; n];
+    let mut up = vec![0f32; n];
+    let mut geom = CenterGeom::new(cfg.appendix_a);
+
+    let mut states: Vec<ShardState> = shards
+        .ranges()
+        .map(|r| ShardState { start: r.start, clusters: vec![NormCluster::new(norms[first])] })
+        .collect();
+
+    // --- Initialization: parallel per-shard weight pass.
+    {
+        let w_parts = shards.split_mut(&mut weights);
+        let lo_parts = shards.split_mut(&mut lo);
+        let up_parts = shards.split_mut(&mut up);
+        let per_shard: Vec<Counters> = thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(states.len());
+            for (((state, w), l), u) in
+                states.iter_mut().zip(w_parts).zip(lo_parts).zip(up_parts)
+            {
+                let norms = &norms;
+                let sq = &sq;
+                handles.push(scope.spawn(move || {
+                    init_shard(data, cfg, sq, norms, first, state, w, l, u)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("init worker panicked"))
+                .collect()
+        });
+        for c in per_shard {
+            counters += c;
+        }
+    }
+
+    // --- Main loop.
+    while center_indices.len() < cfg.k {
+        // Two-step sampling over per-shard partitions (a tiling of the
+        // clusters — distribution-equivalent, §4.2.2).
+        let m = states[0].clusters.len();
+        let mut groups: Vec<&[usize]> = Vec::with_capacity(states.len() * m * 2);
+        let mut sums: Vec<f64> = Vec::with_capacity(states.len() * m * 2);
+        for state in &states {
+            for cl in &state.clusters {
+                groups.push(cl.lower.members.as_slice());
+                sums.push(cl.lower.sum);
+                groups.push(cl.upper.members.as_slice());
+                sums.push(cl.upper.sum);
+            }
+        }
+        let total: f64 = sums.iter().sum();
+        let pick = picker.next(PickCtx::TwoStep {
+            weights: &weights,
+            groups: &groups,
+            sums: &sums,
+            total,
+        });
+        drop(groups);
+        counters.visited_sampling += pick.visited;
+
+        let c_new = pick.index;
+        let src = assignments[c_new] as usize;
+        let d_src_ed = weights[c_new].sqrt();
+        let slot = center_indices.len();
+        center_indices.push(c_new);
+        let cn_norm = norms[c_new];
+
+        // Sequential pre-pass: merged norm-bound admission (lookups only)
+        // and one center–center distance per surviving cluster. Assignment-
+        // phase counters follow full.rs accounting — one header examination
+        // and at most one norm-partition reject per *merged* cluster
+        // partition — so `visited_assign`/`visited_headers` do not scale
+        // with the thread count. `visited_sampling` still does (the sampler
+        // really scans the T× per-shard group headers each draw; see the
+        // ROADMAP item on merged-group sampling).
+        let mut d_cc = vec![f32::NAN; m]; // NaN ⇒ skip the whole cluster
+        for (j, d_cc_j) in d_cc.iter_mut().enumerate() {
+            trace.access_cluster(j);
+            let mut admit = false;
+            let mut r_cluster = 0f32;
+            for lower in [true, false] {
+                // Merge the shard partitions of this side into the global
+                // partition full.rs would hold: union bounds, max radius.
+                let mut exists = false;
+                let (mut lb, mut ub) = (f32::INFINITY, f32::NEG_INFINITY);
+                for state in &states {
+                    let cl = &state.clusters[j];
+                    let part = if lower { &cl.lower } else { &cl.upper };
+                    if part.members.is_empty() {
+                        continue;
+                    }
+                    exists = true;
+                    r_cluster = r_cluster.max(part.radius);
+                    lb = lb.min(part.lb);
+                    ub = ub.max(part.ub);
+                }
+                if exists {
+                    counters.visited_headers += 1;
+                    if cn_norm > lb && cn_norm < ub {
+                        admit = true;
+                    } else {
+                        counters.norm_partition_rejects += 1;
+                    }
+                }
+            }
+            if !admit {
+                continue;
+            }
+            match geom.sed_to(
+                j,
+                src,
+                d_src_ed,
+                r_cluster,
+                data.row(center_indices[j]),
+                data.row(c_new),
+            ) {
+                None => {
+                    counters.center_distances_avoided += 1;
+                    counters.filter1_rejects += 1;
+                }
+                Some(v) => {
+                    counters.center_distances += 1;
+                    trace.read_point(center_indices[j]);
+                    trace.ops(3 * d as u64);
+                    *d_cc_j = v;
+                }
+            }
+        }
+        geom.commit_center(m);
+
+        // Parallel filter-and-update scan, one worker per shard.
+        {
+            let w_parts = shards.split_mut(&mut weights);
+            let a_parts = shards.split_mut(&mut assignments);
+            let lo_parts = shards.split_mut(&mut lo);
+            let up_parts = shards.split_mut(&mut up);
+            let d_cc = &d_cc;
+            let per_shard: Vec<Counters> = thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(states.len());
+                for ((((state, w), a), l), u) in states
+                    .iter_mut()
+                    .zip(w_parts)
+                    .zip(a_parts)
+                    .zip(lo_parts)
+                    .zip(up_parts)
+                {
+                    let norms = &norms;
+                    let sq = &sq;
+                    handles.push(scope.spawn(move || {
+                        scan_shard(
+                            data, cfg, sq, norms, state, w, a, l, u, d_cc, c_new, slot, cn_norm,
+                        )
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("scan worker panicked"))
+                    .collect()
+            });
+            for c in per_shard {
+                counters += c;
+            }
+        }
+
+        #[cfg(debug_assertions)]
+        check_invariants(&states, n, &weights, &norms);
+    }
+
+    SeedResult {
+        centers: data.gather_rows(&center_indices),
+        center_indices,
+        assignments,
+        weights,
+        counters,
+        elapsed: Duration::ZERO,
+    }
+}
+
+/// Debug invariants: shard-partition membership is disjoint and covers all
+/// points; norm routing and radii are respected per shard partition.
+#[cfg(any(test, debug_assertions))]
+fn check_invariants(states: &[ShardState], n: usize, weights: &[f32], norms: &[f32]) {
+    let mut seen = vec![false; n];
+    for state in states {
+        for cl in &state.clusters {
+            for (part, lower) in [(&cl.lower, true), (&cl.upper, false)] {
+                for &i in &part.members {
+                    assert!(!seen[i], "point {i} in two shard partitions");
+                    seen[i] = true;
+                    assert!(i >= state.start, "point {i} before its shard start");
+                    if lower {
+                        assert!(norms[i] <= cl.center_norm, "lower partition norm violation");
+                    } else {
+                        assert!(norms[i] > cl.center_norm, "upper partition norm violation");
+                    }
+                    assert!(weights[i] <= part.radius, "radius not covering member {i}");
+                }
+            }
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "some point unassigned");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::sed;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::seeding::picker::{D2Picker, ScriptedPicker};
+    use crate::seeding::trace::NoTrace;
+    use crate::seeding::{full, standard, Variant};
+
+    fn random_data(n: usize, dims: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let data = (0..n * dims).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect();
+        Matrix::from_vec(data, n, dims)
+    }
+
+    fn scripted(data: &Matrix, k: usize, seed: u64) -> Vec<usize> {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut p = D2Picker::new(&mut rng);
+        standard::run(data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+            .center_indices
+    }
+
+    /// THE acceptance test: bit-identical weights/assignments/center_indices
+    /// to the single-threaded full variant for a fixed script at 1, 2, 4 and
+    /// 8 threads.
+    #[test]
+    fn bit_identical_to_full_across_thread_counts() {
+        for seed in 0..3u64 {
+            let data = random_data(257, 4, seed); // odd n: uneven shards
+            let k = 16;
+            let script = scripted(&data, k, seed ^ 0x5A);
+            let reference = full::run(
+                &data,
+                &SeedConfig::new(k, Variant::Full),
+                &mut ScriptedPicker::new(script.clone()),
+                &mut NoTrace,
+            );
+            for threads in [1usize, 2, 4, 8] {
+                let mut cfg = SeedConfig::new(k, Variant::Full);
+                cfg.threads = threads;
+                let r = run(
+                    &data,
+                    &cfg,
+                    &mut ScriptedPicker::new(script.clone()),
+                    &mut NoTrace,
+                );
+                assert_eq!(reference.weights, r.weights, "seed {seed} threads {threads}");
+                assert_eq!(
+                    reference.assignments, r.assignments,
+                    "seed {seed} threads {threads}"
+                );
+                assert_eq!(
+                    reference.center_indices, r.center_indices,
+                    "seed {seed} threads {threads}"
+                );
+            }
+        }
+    }
+
+    /// Exactness vs the standard algorithm, with options composed in.
+    #[test]
+    fn exact_vs_standard_with_options() {
+        let data = random_data(300, 3, 11);
+        let k = 20;
+        let script = scripted(&data, k, 7);
+        let rs = standard::run(
+            &data,
+            &SeedConfig::new(k, Variant::Standard),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        for (appendix_a, refpoint) in
+            [(false, RefPoint::Origin), (true, RefPoint::Mean), (true, RefPoint::MeanNorm)]
+        {
+            let mut cfg = SeedConfig::new(k, Variant::Full);
+            cfg.threads = 4;
+            cfg.appendix_a = appendix_a;
+            cfg.refpoint = refpoint;
+            let r = run(&data, &cfg, &mut ScriptedPicker::new(script.clone()), &mut NoTrace);
+            assert_eq!(rs.weights, r.weights, "appendix_a={appendix_a} {refpoint:?}");
+            assert_eq!(rs.assignments, r.assignments, "appendix_a={appendix_a} {refpoint:?}");
+        }
+    }
+
+    /// Sharded Filter 1 uses per-shard radii (no larger than global ones),
+    /// so the engine never computes more point–center distances than the
+    /// single-threaded full variant.
+    #[test]
+    fn no_more_distances_than_single_threaded() {
+        let data = random_data(600, 5, 23);
+        let k = 48;
+        let script = scripted(&data, k, 3);
+        let reference = full::run(
+            &data,
+            &SeedConfig::new(k, Variant::Full),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        let mut cfg = SeedConfig::new(k, Variant::Full);
+        cfg.threads = 4;
+        let r = run(&data, &cfg, &mut ScriptedPicker::new(script), &mut NoTrace);
+        assert!(
+            r.counters.distances <= reference.counters.distances,
+            "parallel {} > full {}",
+            r.counters.distances,
+            reference.counters.distances
+        );
+    }
+
+    /// Real D² picker: deterministic per (seed, threads), weights stay true
+    /// min-distances, and the per-point visit count stays uninflated.
+    #[test]
+    fn d2_runs_are_deterministic_and_sound() {
+        let data = random_data(400, 3, 31);
+        let k = 24;
+        let mut cfg = SeedConfig::new(k, Variant::Full);
+        cfg.threads = 4;
+        let run_once = || {
+            let mut p = D2Picker::new(Pcg64::seed_from(77));
+            run(&data, &cfg, &mut p, &mut NoTrace)
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.center_indices, b.center_indices);
+        for i in 0..data.rows() {
+            let brute = a
+                .center_indices
+                .iter()
+                .map(|&c| sed(data.row(i), data.row(c)))
+                .fold(f32::INFINITY, f32::min);
+            assert_eq!(a.weights[i], brute, "point {i}");
+        }
+        // Per-point visits can never exceed the standard algorithm's k scans.
+        assert!(a.counters.visited_assign <= (data.rows() * k) as u64);
+    }
+
+    /// Thread counts beyond n degenerate gracefully to one point per shard.
+    #[test]
+    fn more_threads_than_points() {
+        let data = random_data(6, 2, 1);
+        let script = scripted(&data, 3, 2);
+        let reference = full::run(
+            &data,
+            &SeedConfig::new(3, Variant::Full),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        let mut cfg = SeedConfig::new(3, Variant::Full);
+        cfg.threads = 64;
+        let r = run(&data, &cfg, &mut ScriptedPicker::new(script), &mut NoTrace);
+        assert_eq!(reference.weights, r.weights);
+        assert_eq!(reference.assignments, r.assignments);
+    }
+}

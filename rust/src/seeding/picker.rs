@@ -204,6 +204,61 @@ mod tests {
         assert_eq!(pick.visited, 3);
     }
 
+    /// §4.2.2 equivalence under the real D² picker: two-step draw
+    /// frequencies must match the flat D² distribution `w_i / Σ w`,
+    /// chi-squared goodness-of-fit over the positive-weight bins.
+    #[test]
+    fn d2_two_step_matches_flat_distribution_chi_squared() {
+        let w = [1.0f32, 3.0, 0.0, 2.0, 6.0, 4.0, 0.5, 3.5]; // Σ = 20
+        let groups: Vec<&[usize]> = vec![&[0, 1, 2], &[3, 4], &[5, 6, 7]];
+        let sums = [4.0f64, 8.0, 8.0];
+        let total = 20.0f64;
+        let n_draws = 200_000u64;
+
+        let chi2_of = |counts: &[u64; 8]| -> f64 {
+            let mut chi2 = 0.0;
+            for i in 0..8 {
+                let expect = n_draws as f64 * w[i] as f64 / 20.0;
+                if w[i] == 0.0 {
+                    assert_eq!(counts[i], 0, "zero-weight point {i} drawn");
+                    continue;
+                }
+                let d = counts[i] as f64 - expect;
+                chi2 += d * d / expect;
+            }
+            chi2
+        };
+
+        // Plain two-step.
+        let mut counts = [0u64; 8];
+        let mut p = D2Picker::new(Pcg64::seed_from(99));
+        for _ in 0..n_draws {
+            let pick =
+                p.next(PickCtx::TwoStep { weights: &w, groups: &groups, sums: &sums, total });
+            counts[pick.index] += 1;
+        }
+        // 7 positive bins ⇒ df = 6; the 99.99th percentile is 27.86.
+        let chi2 = chi2_of(&counts);
+        assert!(chi2 < 27.86, "two-step chi2={chi2}, counts={counts:?}");
+
+        // Binary-search cached variant must follow the same distribution.
+        let mut counts = [0u64; 8];
+        let mut tables = vec![CumTable::default(); groups.len()];
+        let mut p = D2Picker::new(Pcg64::seed_from(123));
+        for _ in 0..n_draws {
+            let pick = p.next(PickCtx::TwoStepCached {
+                weights: &w,
+                groups: &groups,
+                sums: &sums,
+                total,
+                tables: &mut tables,
+            });
+            counts[pick.index] += 1;
+        }
+        let chi2 = chi2_of(&counts);
+        assert!(chi2 < 27.86, "cached two-step chi2={chi2}, counts={counts:?}");
+    }
+
     #[test]
     fn scripted_replays() {
         let mut p = ScriptedPicker::new(vec![7, 3]);

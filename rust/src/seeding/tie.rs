@@ -119,8 +119,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         let mut moved: Vec<usize> = Vec::new();
         for j in 0..m {
             trace.access_cluster(j);
-            // Cluster header check counts as an examined point (§5.2).
-            counters.visited_assign += 1;
+            // Cluster header check counts as an examined point (§5.2) — in
+            // its own bucket so per-point visits stay uncontaminated.
+            counters.visited_headers += 1;
 
             // Center–center distance (possibly skipped via Appendix A).
             let d_cc = match geom.sed_to(

@@ -125,6 +125,7 @@ pub(crate) fn run(args: &Args) -> Result<()> {
                     variant,
                     rep: 0,
                     seed: 7,
+                    threads: 1,
                 };
                 let mut times = Vec::new();
                 for rep in 0..reps {

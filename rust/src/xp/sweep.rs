@@ -84,6 +84,7 @@ pub fn run_sweep(p: &SweepParams, variants: &[Variant]) -> Report {
                         variant,
                         rep,
                         seed: p.seed,
+                        threads: 1,
                     });
                 }
             }

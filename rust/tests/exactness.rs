@@ -70,6 +70,39 @@ fn prop_filter_soundness_brute_force() {
     );
 }
 
+/// The sharded parallel engine on real catalog geometry: bit-identical
+/// weights/assignments/center_indices to the single-threaded full variant
+/// for a fixed script at 1, 2, 4 and 8 threads.
+#[test]
+fn parallel_engine_exact_on_catalog_instances() {
+    for name in ["S-NS", "GSAD"] {
+        let inst = by_name(name).unwrap();
+        let data = inst.generate_n(2_001); // odd n: uneven shard boundaries
+        let k = 16;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(41);
+            let mut p = D2Picker::new(&mut rng);
+            seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let reference = {
+            let mut p = ScriptedPicker::new(script.clone());
+            seed_with(&data, &SeedConfig::new(k, Variant::Full), &mut p, &mut NoTrace)
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let cfg = SeedConfig::new(k, Variant::Full).with_threads(threads);
+            let mut p = ScriptedPicker::new(script.clone());
+            let r = seed_with(&data, &cfg, &mut p, &mut NoTrace);
+            assert_eq!(reference.weights, r.weights, "{name} threads={threads}");
+            assert_eq!(reference.assignments, r.assignments, "{name} threads={threads}");
+            assert_eq!(
+                reference.center_indices, r.center_indices,
+                "{name} threads={threads}"
+            );
+        }
+    }
+}
+
 /// Distributional equivalence of real (unscripted) runs: seeding cost
 /// distributions of the three variants must be statistically equal.
 #[test]

@@ -71,6 +71,7 @@ fn coordinator_sweep_to_report() {
                 variant,
                 rep,
                 seed: 23,
+                threads: 1,
             });
         }
     }

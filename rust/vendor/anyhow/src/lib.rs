@@ -1,0 +1,235 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no crates.io mirror, so
+//! this vendored crate implements exactly the subset of the `anyhow` API the
+//! workspace uses — drop-in source compatible, dependency free:
+//!
+//! * [`Error`] — a context-chained error value ([`Error::msg`], `From<E>` for
+//!   any `std::error::Error`);
+//! * [`Result`] — `Result<T, Error>` alias with a defaulted error type;
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on `Result` and
+//!   `Option`;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! `Display` shows the outermost message; the alternate form (`{:#}`) joins
+//! the whole chain with `": "`, matching real `anyhow`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error value.
+pub struct Error {
+    /// Context layers, outermost first.
+    context: Vec<String>,
+    /// Root cause when built from a `std::error::Error`.
+    root: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Creates an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { context: vec![message.to_string()], root: None }
+    }
+
+    /// Wraps the error in an outer context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// All layers, outermost first (contexts, then the root cause).
+    fn layers(&self) -> Vec<String> {
+        let mut out = self.context.clone();
+        if let Some(root) = &self.root {
+            out.push(root.to_string());
+        }
+        if out.is_empty() {
+            out.push("unknown error".to_string());
+        }
+        out
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { context: Vec::new(), root: Some(Box::new(e)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let layers = self.layers();
+        if f.alternate() {
+            write!(f, "{}", layers.join(": "))
+        } else {
+            write!(f, "{}", layers[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let layers = self.layers();
+        write!(f, "{}", layers[0])?;
+        if layers.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for layer in &layers[1..] {
+                write!(f, "\n    {layer}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)`.
+pub trait Context<T> {
+    /// Wraps the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Constructs an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Returns early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Returns early with an error if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = Result::<(), _>::Err(io_err()).context("open config").unwrap_err();
+        assert_eq!(format!("{e}"), "open config");
+    }
+
+    #[test]
+    fn alternate_display_joins_chain() {
+        let e: Error = Result::<(), _>::Err(io_err())
+            .context("open config")
+            .context("load app")
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "load app: open config: missing file");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Result::<(), _>::Err(io_err()).context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("missing file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always fails with {}", 42);
+        }
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", f(true).unwrap_err()), "always fails with 42");
+    }
+
+    #[test]
+    fn error_msg_from_string() {
+        let e = Error::msg(String::from("boom"));
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32, std::io::Error> = Ok(5);
+        let v = ok.with_context(|| {
+            called = true;
+            "never"
+        });
+        assert_eq!(v.unwrap(), 5);
+        assert!(!called);
+    }
+}
