@@ -56,6 +56,7 @@ fn main() {
             rep: 0,
             seed: 11,
             threads,
+            lloyd: None,
         };
         let times = run_concurrent(&spec, j);
         let mean = times.iter().sum::<f64>() / times.len() as f64;

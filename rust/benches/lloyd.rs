@@ -1,0 +1,98 @@
+//! Bounds-accelerated Lloyd strategy comparison: naive vs Hamerly vs Elkan
+//! on a low-dimensional instance (where Hamerly's cheap bookkeeping should
+//! win) and a high-dimensional one (where Elkan's per-center bounds and the
+//! norm filter amortize), at small and large k.
+//!
+//! Every strategy is exact — bit-identical assignments and inertia traces —
+//! so the rows differ only in how much work the geometric filters skipped.
+//! The summary prints wall-clock speedups and the distance-computation
+//! ratio per strategy (the clustering-phase analogue of the paper's Table 2
+//! accounting). `GEOKMPP_BENCH_QUICK=1` shrinks everything for CI.
+
+use geokmpp::bench::{black_box, Bench};
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::accel::{run_warm, Strategy};
+use geokmpp::kmeans::lloyd::LloydConfig;
+use geokmpp::seeding::{seed, Variant};
+
+fn main() {
+    let quick = std::env::var("GEOKMPP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n = if quick { 2_000 } else { 20_000 };
+    let ks: &[usize] = if quick { &[16] } else { &[16, 128] };
+    let max_iters = if quick { 10 } else { 25 };
+    let threads = 1; // strategy comparison first; threads are benched below
+
+    let mut b = Bench::from_env("lloyd");
+    let mut distance_rows: Vec<(String, u64)> = Vec::new();
+
+    for inst_name in ["S-NS", "GSAD"] {
+        let inst = by_name(inst_name).unwrap();
+        let data = inst.generate_n(n.min(inst.default_n));
+        for &k in ks {
+            // One shared seeding per (instance, k): the bench isolates the
+            // clustering phase, and the warm start is part of the design.
+            let mut rng = Pcg64::seed_from(2024);
+            let s = seed(&data, k, Variant::Full, &mut rng);
+            for strategy in Strategy::ALL {
+                let cfg = LloydConfig { max_iters, strategy, threads, ..LloydConfig::default() };
+                let mut last = 0u64;
+                b.bench(&format!("{}/k{k}/{}", inst_name, strategy.name()), || {
+                    let r = run_warm(&data, &s, &cfg);
+                    last = r.stats.distances;
+                    black_box(r.iterations)
+                });
+                distance_rows.push((format!("{}/k{k}/{}", inst_name, strategy.name()), last));
+            }
+        }
+    }
+
+    // Thread scaling of the sharded assignment step (Hamerly, large k).
+    {
+        let inst = by_name("GSAD").unwrap();
+        let data = inst.generate_n(n.min(inst.default_n));
+        let k = *ks.last().unwrap();
+        let mut rng = Pcg64::seed_from(2024);
+        let s = seed(&data, k, Variant::Full, &mut rng);
+        for t in [1usize, 2, 4, 8] {
+            let cfg = LloydConfig {
+                max_iters,
+                strategy: Strategy::Hamerly,
+                threads: t,
+                ..LloydConfig::default()
+            };
+            b.bench(&format!("threads/GSAD/k{k}/t{t}"), || {
+                black_box(run_warm(&data, &s, &cfg).iterations)
+            });
+        }
+    }
+    b.finish();
+
+    // Summary: per (instance, k), speedup and distance ratio vs naive.
+    // (BenchResult ids carry the `lloyd/` group prefix; distance_rows don't.)
+    let mean_of = |id: &str| {
+        let full = format!("lloyd/{id}");
+        b.results().iter().find(|r| r.id == full).map(|r| r.ns.mean)
+    };
+    let dist_of = |id: &str| distance_rows.iter().find(|r| r.0 == id).map(|r| r.1);
+    for inst_name in ["S-NS", "GSAD"] {
+        for &k in ks {
+            let base_id = format!("{inst_name}/k{k}/naive");
+            if let (Some(t1), Some(d1)) = (mean_of(&base_id), dist_of(&base_id)) {
+                let mut parts = Vec::new();
+                for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+                    let id = format!("{inst_name}/k{k}/{}", strategy.name());
+                    if let (Some(tn), Some(dn)) = (mean_of(&id), dist_of(&id)) {
+                        parts.push(format!(
+                            "{}: {:.2}x time, {:.1}% of naive distances",
+                            strategy.name(),
+                            t1 / tn,
+                            100.0 * dn as f64 / d1.max(1) as f64
+                        ));
+                    }
+                }
+                println!("vs naive {inst_name}/k{k}  {}", parts.join("  |  "));
+            }
+        }
+    }
+}

@@ -2,9 +2,29 @@
 
 use crate::core::matrix::Matrix;
 use crate::core::rng::{stream_id, Pcg64};
+use crate::kmeans::accel::{run_warm, Strategy};
+use crate::kmeans::lloyd::LloydConfig;
+use crate::metrics::lloyd::LloydStats;
 use crate::seeding::{seed_with, Counters, D2Picker, NoTrace, SeedConfig, SeedResult, Variant};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Optional clustering phase appended after seeding: the bounds-accelerated
+/// Lloyd engine, warm-started from the job's seeding result (the seeder's
+/// exact D² weights initialize the upper bounds for free).
+#[derive(Clone, Copy, Debug)]
+pub struct LloydPhase {
+    /// Pruning strategy for the assignment step.
+    pub strategy: Strategy,
+    /// Iteration cap handed to [`LloydConfig::max_iters`].
+    pub max_iters: usize,
+}
+
+impl Default for LloydPhase {
+    fn default() -> Self {
+        Self { strategy: Strategy::Hamerly, max_iters: 100 }
+    }
+}
 
 /// One seeding job: (shared dataset, k, variant, repetition).
 #[derive(Clone)]
@@ -25,8 +45,12 @@ pub struct JobSpec {
     /// Worker threads for the sharded seeding engine inside this job
     /// (`Full` variant only; 1 = single-threaded). This is real thread-level
     /// parallelism *within* one job, composing with the coordinator's
-    /// across-job worker pool.
+    /// across-job worker pool. A [`LloydPhase`] shards its assignment step
+    /// over the same count.
     pub threads: usize,
+    /// Clustering phase after seeding; `None` = seeding-only job (the
+    /// paper's Table-2 scope).
+    pub lloyd: Option<LloydPhase>,
 }
 
 impl JobSpec {
@@ -47,6 +71,24 @@ impl JobSpec {
         let cfg = SeedConfig::new(self.k, self.variant).with_threads(self.threads.max(1));
         let mut picker = D2Picker::new(&mut rng);
         let r: SeedResult = seed_with(&self.data, &cfg, &mut picker, &mut NoTrace);
+        let lloyd = self.lloyd.map(|phase| {
+            let lcfg = LloydConfig {
+                max_iters: phase.max_iters,
+                strategy: phase.strategy,
+                threads: self.threads.max(1),
+                ..LloydConfig::default()
+            };
+            let started = std::time::Instant::now();
+            let lr = run_warm(&self.data, &r, &lcfg);
+            LloydSummary {
+                strategy: phase.strategy,
+                stats: lr.stats,
+                iterations: lr.iterations,
+                converged: lr.converged,
+                inertia: lr.inertia_trace.last().copied().unwrap_or(f64::NAN),
+                elapsed: started.elapsed(),
+            }
+        });
         JobResult {
             instance: self.instance.clone(),
             k: self.k,
@@ -55,8 +97,29 @@ impl JobSpec {
             counters: r.counters,
             elapsed: r.elapsed,
             cost: r.cost(),
+            lloyd,
         }
     }
+}
+
+/// Compact result of a job's clustering phase (no per-point arrays).
+#[derive(Clone, Copy, Debug)]
+pub struct LloydSummary {
+    /// Strategy that ran the assignment steps.
+    pub strategy: Strategy,
+    /// Clustering-phase efficiency counters (the Table-2-style accounting
+    /// extended past seeding).
+    pub stats: LloydStats,
+    /// Lloyd iterations executed.
+    pub iterations: usize,
+    /// Whether the tolerance criterion stopped the run.
+    pub converged: bool,
+    /// Final inertia (NaN when the phase ran zero iterations — a
+    /// `max_iters = 0` phase has no trace, and 0.0 would read as a
+    /// perfect clustering).
+    pub inertia: f64,
+    /// Wall-clock time of the clustering phase.
+    pub elapsed: Duration,
 }
 
 /// Compact result of one job (no per-point arrays — sweeps run thousands).
@@ -76,6 +139,8 @@ pub struct JobResult {
     pub elapsed: Duration,
     /// Final seeding cost Σ w_i.
     pub cost: f64,
+    /// Clustering-phase summary, when the spec requested a [`LloydPhase`].
+    pub lloyd: Option<LloydSummary>,
 }
 
 #[cfg(test)]
@@ -95,12 +160,14 @@ mod tests {
             rep: 0,
             seed: 99,
             threads: 1,
+            lloyd: None,
         };
         let a = spec.run();
         let b = spec.run();
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.cost, b.cost);
         assert_eq!(a.k, 8);
+        assert!(a.lloyd.is_none());
     }
 
     #[test]
@@ -115,12 +182,47 @@ mod tests {
             rep: 0,
             seed: 31,
             threads: 4,
+            lloyd: None,
         };
         let a = spec.run();
         let b = spec.run();
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.cost, b.cost);
         assert!(a.cost > 0.0);
+    }
+
+    /// A job with a clustering phase runs the bounds-accelerated engine
+    /// warm-started from its own seeding: deterministic, and the bounded
+    /// strategies report strictly fewer distances than the naive phase.
+    #[test]
+    fn lloyd_phase_runs_deterministically_and_prunes() {
+        let mut rng = Pcg64::seed_from(8);
+        let data = Arc::new(gmm(&GmmSpec::new(600, 4, 4), &mut rng));
+        let mk = |strategy| JobSpec {
+            instance: "t".into(),
+            data: Arc::clone(&data),
+            k: 12,
+            variant: Variant::Full,
+            rep: 0,
+            seed: 17,
+            threads: 2,
+            lloyd: Some(LloydPhase { strategy, max_iters: 50 }),
+        };
+        let naive = mk(Strategy::Naive).run().lloyd.unwrap();
+        for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+            let a = mk(strategy).run().lloyd.unwrap();
+            let b = mk(strategy).run().lloyd.unwrap();
+            assert_eq!(a.stats, b.stats, "{strategy:?} not deterministic");
+            assert_eq!(a.inertia, b.inertia, "{strategy:?} not deterministic");
+            assert_eq!(a.inertia, naive.inertia, "{strategy:?} diverged from naive");
+            assert_eq!(a.iterations, naive.iterations);
+            assert!(
+                a.stats.distances < naive.stats.distances,
+                "{strategy:?}: {} !< {}",
+                a.stats.distances,
+                naive.stats.distances
+            );
+        }
     }
 
     #[test]
@@ -135,6 +237,7 @@ mod tests {
             rep,
             seed: 5,
             threads: 1,
+            lloyd: None,
         };
         let a = mk(0).run();
         let b = mk(1).run();

@@ -11,7 +11,7 @@ pub mod queue;
 pub mod report;
 pub mod scheduler;
 
-pub use jobs::{JobResult, JobSpec};
+pub use jobs::{JobResult, JobSpec, LloydPhase, LloydSummary};
 pub use queue::BoundedQueue;
 pub use report::Report;
 pub use scheduler::{run_concurrent, Scheduler};

@@ -1,10 +1,25 @@
 //! Aggregation of job results into per-(instance, k, variant) rows.
 
 use crate::coordinator::jobs::JobResult;
+use crate::metrics::lloyd::LloydStats;
 use crate::metrics::table::{fnum, Table};
 use crate::metrics::timer::Stats;
 use crate::seeding::{Counters, Variant};
 use std::collections::BTreeMap;
+
+/// Aggregated clustering-phase metrics for one cell (jobs that ran a
+/// [`crate::coordinator::jobs::LloydPhase`]).
+#[derive(Clone, Debug)]
+pub struct LloydCell {
+    /// Mean clustering-phase counters over repetitions.
+    pub stats: LloydStats,
+    /// Clustering wall-time stats in seconds.
+    pub time: Stats,
+    /// Mean final inertia.
+    pub mean_inertia: f64,
+    /// Mean Lloyd iterations.
+    pub mean_iterations: f64,
+}
 
 /// Aggregated metrics for one (instance, k, variant) cell.
 #[derive(Clone, Debug)]
@@ -17,6 +32,8 @@ pub struct Cell {
     pub mean_cost: f64,
     /// Number of repetitions aggregated.
     pub reps: usize,
+    /// Clustering-phase aggregate, when the cell's jobs ran one.
+    pub lloyd: Option<LloydCell>,
 }
 
 /// A report: cells keyed by (instance, k, variant name).
@@ -59,9 +76,37 @@ impl Report {
             counters.norm_partition_rejects /= div;
             counters.norm_point_rejects /= div;
             counters.center_distances_avoided /= div;
+            // Clustering-phase aggregate over the repetitions that ran one
+            // (within a cell either all jobs carry a phase or none do).
+            let lrs: Vec<_> = rs.iter().filter_map(|r| r.lloyd.as_ref()).collect();
+            let lloyd = (!lrs.is_empty()).then(|| {
+                let mut stats = LloydStats::default();
+                let mut inertia = 0f64;
+                let mut iters = 0f64;
+                let mut ltimes = Vec::with_capacity(lrs.len());
+                for l in &lrs {
+                    stats += l.stats;
+                    inertia += l.inertia;
+                    iters += l.iterations as f64;
+                    ltimes.push(l.elapsed.as_secs_f64());
+                }
+                stats.div(lrs.len() as u64);
+                LloydCell {
+                    stats,
+                    time: Stats::of(&ltimes),
+                    mean_inertia: inertia / lrs.len() as f64,
+                    mean_iterations: iters / lrs.len() as f64,
+                }
+            });
             cells.insert(
                 key,
-                Cell { counters, time: Stats::of(&times), mean_cost: cost / reps as f64, reps },
+                Cell {
+                    counters,
+                    time: Stats::of(&times),
+                    mean_cost: cost / reps as f64,
+                    reps,
+                    lloyd,
+                },
             );
         }
         Report { cells }
@@ -97,13 +142,22 @@ impl Report {
         }
     }
 
-    /// Renders the full report as a table.
+    /// Renders the full report as a table. Clustering-phase columns show
+    /// `-` for seeding-only cells.
     pub fn to_table(&self) -> Table {
         let mut t = Table::new([
             "instance", "k", "variant", "reps", "time_s", "visited", "distances",
-            "center_dists", "norms", "cost",
+            "center_dists", "norms", "cost", "lloyd_dists", "lloyd_prunes", "inertia",
         ]);
         for ((inst, k, variant), c) in &self.cells {
+            let (ld, lp, li) = match &c.lloyd {
+                Some(l) => (
+                    l.stats.distances.to_string(),
+                    l.stats.prunes_total().to_string(),
+                    fnum(l.mean_inertia, 2),
+                ),
+                None => ("-".into(), "-".into(), "-".into()),
+            };
             t.row([
                 inst.clone(),
                 k.to_string(),
@@ -115,6 +169,9 @@ impl Report {
                 c.counters.center_distances.to_string(),
                 c.counters.norms.to_string(),
                 fnum(c.mean_cost, 2),
+                ld,
+                lp,
+                li,
             ]);
         }
         t
@@ -135,6 +192,7 @@ mod tests {
             counters: Counters { distances, ..Default::default() },
             elapsed: Duration::from_millis(10 + rep),
             cost: 100.0 + rep as f64,
+            lloyd: None,
         }
     }
 
@@ -161,5 +219,33 @@ mod tests {
         let rs = vec![result(Variant::Tie, 0, 1), result(Variant::Full, 0, 2)];
         let t = Report::aggregate(&rs).to_table();
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn lloyd_summaries_aggregate_to_means() {
+        use crate::coordinator::jobs::LloydSummary;
+        use crate::kmeans::accel::{LloydStats, Strategy};
+        let mk = |rep: u64, distances: u64, inertia: f64| {
+            let mut r = result(Variant::Full, rep, 1);
+            r.lloyd = Some(LloydSummary {
+                strategy: Strategy::Hamerly,
+                stats: LloydStats { distances, bound_prunes: 4, ..Default::default() },
+                iterations: 10,
+                converged: true,
+                inertia,
+                elapsed: Duration::from_millis(5),
+            });
+            r
+        };
+        let rep = Report::aggregate(&[mk(0, 10, 50.0), mk(1, 30, 70.0)]);
+        let cell = rep.cell("i", 4, Variant::Full).unwrap();
+        let l = cell.lloyd.as_ref().unwrap();
+        assert_eq!(l.stats.distances, 20);
+        assert_eq!(l.stats.bound_prunes, 4);
+        assert_eq!(l.mean_inertia, 60.0);
+        assert_eq!(l.mean_iterations, 10.0);
+        // Seeding-only cells render `-` in the clustering columns.
+        let t = Report::aggregate(&[result(Variant::Tie, 0, 1)]).to_table();
+        assert_eq!(t.rows()[0].last().unwrap(), "-");
     }
 }

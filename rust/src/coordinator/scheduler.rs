@@ -86,6 +86,7 @@ mod tests {
                 rep: rep as u64,
                 seed: 11,
                 threads: 1,
+                lloyd: None,
             })
             .collect()
     }

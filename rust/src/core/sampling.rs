@@ -61,22 +61,64 @@ pub fn roulette_indexed<R: Rng>(
     total: f64,
     rng: &mut R,
 ) -> usize {
-    debug_assert!(!idx.is_empty());
+    // One-segment case of the segmented draw — a single implementation of
+    // the subtle clamp-and-retry/fallback core keeps the RNG streams of the
+    // flat and sharded paths aligned by construction.
+    roulette_segmented(weights, &[idx], total, rng).0
+}
+
+/// Roulette over a *segmented* indexed subset: the members of one logical
+/// group stored as several consecutive slices (the sharded engine keeps one
+/// member list per shard; their shard-order concatenation is the merged
+/// group). Semantically identical to [`roulette_indexed`] over the
+/// concatenation — same RNG consumption, same clamp-and-retry on an
+/// inflated `total` — so the draw does not depend on where the segment
+/// boundaries fall.
+///
+/// Returns `(selected index, position in the concatenated order)`; the
+/// position feeds the paper's "points examined during sampling" accounting.
+pub fn roulette_segmented<R: Rng>(
+    weights: &[f32],
+    segments: &[&[usize]],
+    total: f64,
+    rng: &mut R,
+) -> (usize, usize) {
+    let first = *segments
+        .iter()
+        .flat_map(|s| s.iter())
+        .next()
+        .expect("segmented roulette over an empty group");
     if total <= 0.0 {
-        return idx[0];
+        return (first, 0);
     }
     let mut target = total;
     loop {
         let r = rng.uniform_f64() * target;
         let mut acc = 0f64;
-        for &i in idx {
-            acc += weights[i] as f64;
-            if acc > r {
-                return i;
+        let mut pos = 0usize;
+        for seg in segments {
+            for &i in *seg {
+                acc += weights[i] as f64;
+                if acc > r {
+                    return (i, pos);
+                }
+                pos += 1;
             }
         }
         if !acc.is_finite() || acc <= 0.0 {
-            return idx.iter().rev().copied().find(|&i| weights[i] > 0.0).unwrap_or(idx[0]);
+            // All weights zero or a NaN poisoned the sum: fall back to the
+            // last positively-weighted member (matching roulette_indexed).
+            let mut fallback = (first, 0);
+            let mut p = 0usize;
+            for seg in segments {
+                for &i in *seg {
+                    if weights[i] > 0.0 {
+                        fallback = (i, p);
+                    }
+                    p += 1;
+                }
+            }
+            return fallback;
         }
         target = acc;
     }
@@ -226,6 +268,51 @@ mod tests {
         assert!(counts.keys().all(|i| idx.contains(i)));
         let f1 = counts[&1] as f64 / 50_000.0;
         assert!((f1 - 0.2).abs() < 0.01, "f1={f1}");
+    }
+
+    /// A segmented draw must consume the RNG identically to the flat
+    /// indexed draw over the concatenation, for every segmentation.
+    #[test]
+    fn roulette_segmented_matches_indexed_for_any_split() {
+        let w = [5.0f32, 1.0, 2.0, 0.0, 2.0, 4.0];
+        let idx = [1usize, 2, 4, 5, 0];
+        let total: f64 = idx.iter().map(|&i| w[i] as f64).sum();
+        for split in [vec![5], vec![2, 3], vec![1, 1, 3], vec![1, 2, 1, 1]] {
+            let mut segs: Vec<&[usize]> = Vec::new();
+            let mut at = 0;
+            for len in &split {
+                segs.push(&idx[at..at + len]);
+                at += len;
+            }
+            let mut ra = Pcg64::seed_from(11);
+            let mut rb = Pcg64::seed_from(11);
+            for _ in 0..2_000 {
+                let want = roulette_indexed(&w, &idx, total, &mut ra);
+                let (got, pos) = roulette_segmented(&w, &segs, total, &mut rb);
+                assert_eq!(got, want, "split {split:?}");
+                assert_eq!(idx[pos], got, "position wrong for split {split:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn roulette_segmented_zero_total_and_inflated_total() {
+        let w = [0.0f32, 0.0, 3.0, 1.0];
+        let a = [0usize, 1];
+        let b = [2usize, 3];
+        let mut rng = Pcg64::seed_from(5);
+        // All-zero group: first member, position 0.
+        assert_eq!(roulette_segmented(&w, &[&a], 0.0, &mut rng), (0, 0));
+        // Inflated total stays proportional over the positive members.
+        let mut hits2 = 0usize;
+        let n = 40_000;
+        for _ in 0..n {
+            let (i, _) = roulette_segmented(&w, &[&a, &b], 40.0, &mut rng);
+            assert!(i >= 2, "zero-weight member drawn");
+            hits2 += usize::from(i == 2);
+        }
+        let f2 = hits2 as f64 / n as f64;
+        assert!((f2 - 0.75).abs() < 0.01, "f2={f2}");
     }
 
     #[test]

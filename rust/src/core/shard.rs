@@ -77,11 +77,23 @@ impl Shards {
     /// # Panics
     /// Panics if `slice.len()` differs from the partitioned length.
     pub fn split_mut<'a, T>(&self, slice: &'a mut [T]) -> Vec<&'a mut [T]> {
-        assert_eq!(slice.len(), self.len(), "slice length mismatch");
+        self.split_mut_stride(slice, 1)
+    }
+
+    /// Like [`Shards::split_mut`] for a slice holding `stride` consecutive
+    /// values per element (row-major `n × stride` storage, e.g. the Elkan
+    /// per-point-per-center lower-bound matrix): shard `s` receives
+    /// `stride · |s|` values.
+    ///
+    /// # Panics
+    /// Panics if `stride` is zero or `slice.len() != stride · n`.
+    pub fn split_mut_stride<'a, T>(&self, slice: &'a mut [T], stride: usize) -> Vec<&'a mut [T]> {
+        assert!(stride > 0, "stride must be positive");
+        assert_eq!(slice.len(), self.len() * stride, "slice length mismatch");
         let mut parts = Vec::with_capacity(self.count());
         let mut rest = slice;
         for r in self.ranges() {
-            let (head, tail) = rest.split_at_mut(r.len());
+            let (head, tail) = rest.split_at_mut(r.len() * stride);
             parts.push(head);
             rest = tail;
         }
@@ -153,6 +165,25 @@ mod tests {
             }
         }
         assert_eq!(data, (100..109).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_mut_stride_partitions_rows() {
+        let s = Shards::new(5, 2); // shards of 3 and 2 elements
+        let mut data: Vec<u32> = (0..15).collect(); // stride 3
+        let parts = s.split_mut_stride(&mut data, 3);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].len(), 9);
+        assert_eq!(parts[1].len(), 6);
+        assert_eq!(parts[1][0], 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn split_mut_stride_checks_length() {
+        let s = Shards::new(4, 2);
+        let mut data = [0u8; 7];
+        s.split_mut_stride(&mut data, 2);
     }
 
     #[test]

@@ -1,0 +1,95 @@
+//! Elkan's per-center-bound assignment step, per shard.
+//!
+//! Per (point, center) the engine keeps an ED lower bound `l(x, c_j)`,
+//! maintained under center motion as `l ← max(l − δ_j, 0)`, plus the shared
+//! upper bound `u` on the incumbent distance. Candidate `j` is skipped when
+//!
+//! ```text
+//! u ≤ l(x, c_j)        or        u ≤ ED(c_a, c_j) / 2
+//! ```
+//!
+//! (the second is the triangle-inequality separation argument over the
+//! per-iteration center–center matrix). A whole point is skipped when
+//! `u ≤ s(a)/2`. The incumbent distance is tightened to exact before any
+//! candidate is examined — the inertia trace needs it regardless — so every
+//! surviving comparison is against the true distance. The §4.3 norm filter
+//! runs before each candidate's distance; a norm-rejected candidate still
+//! improves its lower bound to `|‖x‖ − ‖c_j‖|`. Candidates are examined in
+//! the naive reference's center order with strict comparisons, so the final
+//! incumbent is the reference argmin.
+
+use super::{IterCtx, ShardView};
+use crate::core::distance::sed;
+use crate::metrics::lloyd::LloydStats;
+
+pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
+    let mut st = LloydStats::default();
+    let k = ctx.k;
+    for s in 0..v.assign.len() {
+        let i = v.start + s;
+        st.visited_points += 1;
+        let mut a = v.assign[s] as usize;
+        let lrow = &mut v.lbs[s * k..(s + 1) * k];
+
+        // Motion-adjusted bounds (δ from the previous update step).
+        let da = ctx.deltas[a];
+        if da > 0.0 {
+            v.ub[s] += da;
+            v.tight[s] = false;
+        }
+        for (l, &dj) in lrow.iter_mut().zip(ctx.deltas) {
+            if dj > 0.0 {
+                *l = (*l - dj).max(0.0);
+            }
+        }
+
+        // Tighten the incumbent distance (needed for the inertia trace even
+        // when every candidate is pruned).
+        if !v.tight[s] {
+            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            st.distances += 1;
+            v.dist[s] = dv;
+            v.ub[s] = (dv as f64).sqrt();
+            v.tight[s] = true;
+        }
+        lrow[a] = v.ub[s]; // the exact incumbent ED is also a lower bound
+
+        if v.ub[s] <= ctx.s_half[a] {
+            st.bound_prunes += 1;
+            continue;
+        }
+
+        let row = ctx.data.row(i);
+        for j in 0..k {
+            if j == a {
+                continue;
+            }
+            if v.ub[s] <= lrow[j] || v.ub[s] <= ctx.cc_half[a * k + j] {
+                st.center_prunes += 1;
+                continue;
+            }
+            let dn = ctx.norms[i] - ctx.cnorms[j];
+            if dn * dn >= v.dist[s] {
+                st.norm_prunes += 1;
+                let e = dn.abs() as f64;
+                if e > lrow[j] {
+                    lrow[j] = e;
+                }
+                continue;
+            }
+            let dv = sed(row, ctx.centers.row(j));
+            st.distances += 1;
+            let e = (dv as f64).sqrt();
+            lrow[j] = e;
+            if dv < v.dist[s] {
+                // The old incumbent's exact ED stays behind as its bound.
+                lrow[a] = v.ub[s];
+                a = j;
+                v.dist[s] = dv;
+                v.ub[s] = e;
+            }
+        }
+        v.assign[s] = a as u32;
+    }
+    st
+}

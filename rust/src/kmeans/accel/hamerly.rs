@@ -1,0 +1,120 @@
+//! Hamerly's one-bound assignment step, per shard.
+//!
+//! Per point the engine keeps an ED upper bound `u` on the distance to the
+//! assigned center and one global ED lower bound `l` on the distance to
+//! every *other* center. After centers move `δ_j`, `u += δ_a` and
+//! `l -= max_{j≠a} δ_j` stay valid, and the point's assignment is provably
+//! unchanged whenever
+//!
+//! ```text
+//! u ≤ max( s(a)/2 , l )        s(a) = min_{j≠a} ED(c_a, c_j)
+//! ```
+//!
+//! (the `s(a)/2` term is the center-separation argument: no point within
+//! half the distance to the nearest other center can switch). When the test
+//! fails with a loose bound, `u` is first tightened to the exact distance —
+//! which the inertia trace needs anyway — and re-tested; only then does the
+//! point pay a full candidate scan. The scan itself runs in the naive
+//! reference's center order with strict comparisons, reuses the exact
+//! cached distance for the incumbent, and applies the paper's §4.3 point
+//! norm filter (`(‖x‖ − ‖c_j‖)² ≥ d²_best` skips candidate `j` from a
+//! lookup); skipped candidates still contribute `|‖x‖ − ‖c_j‖|` as a lower
+//! bound, so the refreshed `l` (second-smallest candidate bound) stays
+//! valid over every non-assigned center.
+
+use super::{IterCtx, ShardView};
+use crate::core::distance::sed;
+use crate::metrics::lloyd::LloydStats;
+
+pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
+    let mut st = LloydStats::default();
+    let (d1, d2) = ctx.dmax;
+    for s in 0..v.assign.len() {
+        let i = v.start + s;
+        st.visited_points += 1;
+        let a = v.assign[s] as usize;
+
+        // Motion-adjusted bounds (δ from the previous update step).
+        let da = ctx.deltas[a];
+        if da > 0.0 {
+            v.ub[s] += da;
+            v.tight[s] = false;
+        }
+        let drop = if da == d1 { d2 } else { d1 };
+        if drop > 0.0 {
+            v.lb[s] = (v.lb[s] - drop).max(0.0);
+        }
+
+        let thresh = ctx.s_half[a].max(v.lb[s]);
+        if v.tight[s] && v.ub[s] <= thresh {
+            st.bound_prunes += 1;
+            continue;
+        }
+        if !v.tight[s] && v.ub[s].is_finite() {
+            // Tighten: one exact distance to the incumbent (required for the
+            // inertia trace regardless), then re-test the bound.
+            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            st.distances += 1;
+            v.dist[s] = dv;
+            v.ub[s] = (dv as f64).sqrt();
+            v.tight[s] = true;
+            if v.ub[s] <= thresh {
+                st.bound_prunes += 1;
+                continue;
+            }
+        }
+
+        // Full candidate scan, naive order, strict comparisons.
+        st.full_scans += 1;
+        let row = ctx.data.row(i);
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        // Two smallest candidate EDs (exact, or the norm-filter lower bound
+        // for skipped candidates) and the owner of the smallest.
+        let mut e1 = f64::INFINITY;
+        let mut e1_j = usize::MAX;
+        let mut e2 = f64::INFINITY;
+        for j in 0..ctx.k {
+            let cand_ed = if j == a && v.tight[s] {
+                // The cached distance is exactly what `sed` would return —
+                // the incumbent's center has not moved since it was computed.
+                let dv = v.dist[s];
+                if dv < best {
+                    best = dv;
+                    best_j = j as u32;
+                }
+                v.ub[s]
+            } else {
+                let dn = ctx.norms[i] - ctx.cnorms[j];
+                if dn * dn >= best {
+                    // Norm filter: candidate j cannot strictly beat the
+                    // incumbent best; |dn| stays a valid ED lower bound.
+                    st.norm_prunes += 1;
+                    dn.abs() as f64
+                } else {
+                    let dv = sed(row, ctx.centers.row(j));
+                    st.distances += 1;
+                    if dv < best {
+                        best = dv;
+                        best_j = j as u32;
+                    }
+                    (dv as f64).sqrt()
+                }
+            };
+            if cand_ed < e1 {
+                e2 = e1;
+                e1 = cand_ed;
+                e1_j = j;
+            } else if cand_ed < e2 {
+                e2 = cand_ed;
+            }
+        }
+        v.assign[s] = best_j;
+        v.dist[s] = best;
+        v.ub[s] = (best as f64).sqrt();
+        v.tight[s] = true;
+        // Min over j ≠ best_j of the candidate lower bounds.
+        v.lb[s] = if e1_j == best_j as usize { e2 } else { e1 };
+    }
+    st
+}

@@ -1,0 +1,558 @@
+//! Bounds-accelerated exact Lloyd engine — the paper's geometric filters
+//! carried past seeding into the full clustering loop.
+//!
+//! The naive Lloyd assignment step is an `O(n·k)` scan per iteration. The
+//! classic triangle-inequality accelerations (Hamerly's one-bound and
+//! Elkan's per-center-bound algorithms — see PAPERS.md, "Fast k-means with
+//! accurate bounds") skip the overwhelming majority of those distance
+//! computations *exactly*: a candidate center is only examined when the
+//! cached bounds cannot prove the assignment unchanged. This module adds a
+//! third, paper-specific filter on top: the §4.3 norm filter
+//! (`(‖x‖ − ‖c‖)² ≥ d²_best` rejects a candidate from a norm lookup), reusing
+//! the per-point norms the seeder already computed.
+//!
+//! ## Strategies
+//!
+//! * [`Strategy::Naive`] — the reference `O(n·k)` scan (sharded, no bounds).
+//! * [`Strategy::Hamerly`] — one global lower bound + one upper bound per
+//!   point; cheapest bookkeeping, wins at low dimension / small k.
+//! * [`Strategy::Elkan`] — per-(point, center) lower bounds plus the
+//!   center–center half-distance matrix; more memory and `O(n·k)` bound
+//!   maintenance, wins when distances are expensive (high dimension).
+//!
+//! ## Exactness
+//!
+//! All strategies produce **bit-identical** assignments, centers and inertia
+//! traces to the naive reference ([`crate::kmeans::lloyd::lloyd`] with the
+//! default configuration), at any thread count:
+//!
+//! * every prune is backed by a triangle-inequality or norm argument, with
+//!   strict comparisons so ties fall through to the exact scan;
+//! * the exact per-point distance to the assigned center is (re)computed
+//!   whenever its center moved, so the inertia trace is a sum of exactly the
+//!   same f32 distances the naive scan produces, accumulated in the same
+//!   index order;
+//! * the centroid update is the naive reference's sequential f64
+//!   accumulation, byte for byte;
+//! * the assignment step shards points over [`crate::core::shard::Shards`]
+//!   with `std::thread::scope` (the `seeding::parallel` pattern) and every
+//!   per-point decision depends only on that point's state plus shared
+//!   read-only geometry, so shard boundaries cannot change any result.
+//!
+//! Bound maintenance is done in f64 (center movements accumulate ulps far
+//! below f32 distance granularity). As everywhere else in this repo, filter
+//! soundness is stated over the f32-computed distances the naive scan also
+//! uses; exact f32 distance *ties* between distinct centers are the one
+//! measure-zero case where a pruned point could keep a different (equally
+//! close) center than the reference — the exactness suite pins catalog
+//! instances where this does not occur.
+//!
+//! ## Warm start
+//!
+//! [`run_warm`] seeds the engine directly from [`crate::seeding`] output:
+//! the seeder's final per-point D² weights *are* exact distances to the
+//! initial centers, so the upper bounds start tight for free, and the
+//! seeder's per-point norms (when computed relative to the origin) feed the
+//! norm filter without recomputation — the "free lunch" the seeding phase
+//! already paid for.
+
+// This subsystem is clippy-clean by construction and CI keeps it that way
+// (lint findings here are hard errors, unlike the advisory repo-wide pass).
+#![deny(clippy::all)]
+
+mod elkan;
+mod hamerly;
+mod naive;
+
+pub use crate::metrics::lloyd::LloydStats;
+
+use crate::core::distance::{sed, sqnorm};
+use crate::core::matrix::Matrix;
+use crate::core::norms::norms as compute_norms;
+use crate::core::shard::Shards;
+use crate::kmeans::lloyd::{LloydConfig, LloydResult};
+use crate::seeding::SeedResult;
+use std::thread;
+
+/// Pruning strategy of the accelerated Lloyd engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Reference `O(n·k)` scan per iteration (no bounds, no filters).
+    Naive,
+    /// One upper + one global lower bound per point (Hamerly).
+    Hamerly,
+    /// Per-(point, center) lower bounds + center–center matrix (Elkan).
+    Elkan,
+}
+
+impl Strategy {
+    /// All strategies, cheapest bookkeeping first.
+    pub const ALL: [Strategy; 3] = [Strategy::Naive, Strategy::Hamerly, Strategy::Elkan];
+
+    /// Short identifier used in reports and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Naive => "naive",
+            Strategy::Hamerly => "hamerly",
+            Strategy::Elkan => "elkan",
+        }
+    }
+
+    /// Parses a CLI name.
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "naive" => Some(Strategy::Naive),
+            "hamerly" => Some(Strategy::Hamerly),
+            "elkan" => Some(Strategy::Elkan),
+            _ => None,
+        }
+    }
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Strategy, String> {
+        Strategy::parse(s).ok_or_else(|| format!("unknown lloyd strategy {s:?}"))
+    }
+}
+
+/// Read-only per-iteration geometry shared by every shard worker.
+struct IterCtx<'a> {
+    data: &'a Matrix,
+    centers: &'a Matrix,
+    k: usize,
+    /// Per-point norms (reference point = origin); empty for `Naive`.
+    norms: &'a [f32],
+    /// Current center norms; empty for `Naive`.
+    cnorms: &'a [f32],
+    /// `0.5 · min_{j'≠j} ED(c_j, c_j')` per center (∞ for k = 1).
+    s_half: &'a [f64],
+    /// `k × k` half center–center ED matrix (Elkan only; empty otherwise).
+    cc_half: &'a [f64],
+    /// Center movement (ED) since the bounds were last adjusted.
+    deltas: &'a [f64],
+    /// Largest and second-largest entries of `deltas`.
+    dmax: (f64, f64),
+}
+
+/// One shard's mutable view of the per-point engine state.
+struct ShardView<'a> {
+    /// First global point index of the shard.
+    start: usize,
+    /// Point → center assignment.
+    assign: &'a mut [u32],
+    /// SED to the assigned center — exact iff `tight`.
+    dist: &'a mut [f32],
+    /// Whether `dist` is the exact distance under the *current* centers.
+    tight: &'a mut [bool],
+    /// ED upper bound on the distance to the assigned center.
+    ub: &'a mut [f64],
+    /// Hamerly's global lower bound (ED) to any non-assigned center.
+    lb: &'a mut [f64],
+    /// Elkan's per-center lower bounds, row-major `len × k`.
+    lbs: &'a mut [f64],
+}
+
+/// Runs the engine from explicit initial centers (cold start: the first
+/// iteration establishes the bounds with full scans, exactly like naive).
+pub fn run(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> LloydResult {
+    engine(data, initial_centers.clone(), cfg, None)
+}
+
+/// Runs the engine warm-started from a seeding result: initial centers are
+/// the seeder's, upper bounds are initialized from the seeder's exact D²
+/// weights, and the seeder's origin norms (if present) feed the norm filter.
+///
+/// Produces bit-identical results to `run(data, &seed.centers, cfg)` — the
+/// warm state only removes work, it never changes a decision.
+pub fn run_warm(data: &Matrix, seed: &SeedResult, cfg: &LloydConfig) -> LloydResult {
+    assert_eq!(seed.assignments.len(), data.rows(), "seed result is for different data");
+    engine(data, seed.centers.clone(), cfg, Some(seed))
+}
+
+fn engine(
+    data: &Matrix,
+    mut centers: Matrix,
+    cfg: &LloydConfig,
+    warm: Option<&SeedResult>,
+) -> LloydResult {
+    let n = data.rows();
+    let d = data.cols();
+    let k = centers.rows();
+    assert!(k >= 1 && n >= k);
+    assert_eq!(d, centers.cols());
+
+    let strategy = cfg.strategy;
+    let bounded = strategy != Strategy::Naive;
+    let shards = Shards::new(n, cfg.threads.max(1));
+    let mut stats = LloydStats::default();
+
+    // Per-point norms for the norm filter — reused from the seeder when it
+    // already computed them relative to the origin (then they are free: the
+    // seeding counters carry their cost), otherwise computed once here.
+    let norms: Vec<f32> = if !bounded {
+        Vec::new()
+    } else if let Some(s) = warm.filter(|s| s.norms.len() == n) {
+        s.norms.clone()
+    } else {
+        stats.norms += n as u64;
+        compute_norms(data)
+    };
+
+    // Per-point state. A warm start adopts the seeder's assignments and
+    // exact D² weights; a cold start leaves the bounds uninformative so the
+    // first iteration falls through to full scans.
+    let (mut assignments, mut dist, mut tight, mut ub) = match warm {
+        Some(s) => (
+            s.assignments.clone(),
+            s.weights.clone(),
+            vec![true; n],
+            s.weights.iter().map(|&w| (w as f64).sqrt()).collect::<Vec<f64>>(),
+        ),
+        None => (vec![0u32; n], vec![f32::INFINITY; n], vec![false; n], vec![f64::INFINITY; n]),
+    };
+    let mut lb = if strategy == Strategy::Hamerly { vec![0f64; n] } else { Vec::new() };
+    let mut lbs = if strategy == Strategy::Elkan { vec![0f64; n * k] } else { Vec::new() };
+
+    let mut deltas = vec![0f64; k];
+    let mut dmax = (0f64, 0f64);
+    let mut inertia_trace = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+
+    // Center-geometry buffers, refilled in place each iteration (k×k f64 is
+    // too big to reallocate inside the hot loop at large k).
+    let mut cnorms = vec![0f32; if bounded { k } else { 0 }];
+    let mut s_half = vec![0f64; if bounded { k } else { 0 }];
+    let mut cc_half = vec![0f64; if strategy == Strategy::Elkan { k * k } else { 0 }];
+
+    for _ in 0..cfg.max_iters {
+        iterations += 1;
+
+        // --- Center geometry (sequential): norms, separations, cc matrix.
+        if bounded {
+            for (j, cn) in cnorms.iter_mut().enumerate() {
+                *cn = sqnorm(centers.row(j)).sqrt();
+            }
+            stats.norms += k as u64;
+            s_half.fill(f64::INFINITY);
+            for a in 0..k {
+                for b in a + 1..k {
+                    let h = 0.5 * (sed(centers.row(a), centers.row(b)) as f64).sqrt();
+                    stats.center_distances += 1;
+                    if !cc_half.is_empty() {
+                        cc_half[a * k + b] = h;
+                        cc_half[b * k + a] = h;
+                    }
+                    if h < s_half[a] {
+                        s_half[a] = h;
+                    }
+                    if h < s_half[b] {
+                        s_half[b] = h;
+                    }
+                }
+            }
+        }
+
+        // --- Assignment step: one worker per shard, disjoint &mut state.
+        {
+            let ctx = IterCtx {
+                data,
+                centers: &centers,
+                k,
+                norms: &norms,
+                cnorms: &cnorms,
+                s_half: &s_half,
+                cc_half: &cc_half,
+                deltas: &deltas,
+                dmax,
+            };
+            let a_parts = shards.split_mut(&mut assignments);
+            let d_parts = shards.split_mut(&mut dist);
+            let t_parts = shards.split_mut(&mut tight);
+            let u_parts = shards.split_mut(&mut ub);
+            let l_parts: Vec<&mut [f64]> = if lb.is_empty() {
+                (0..shards.count()).map(|_| Default::default()).collect()
+            } else {
+                shards.split_mut(&mut lb)
+            };
+            let m_parts: Vec<&mut [f64]> = if lbs.is_empty() {
+                (0..shards.count()).map(|_| Default::default()).collect()
+            } else {
+                shards.split_mut_stride(&mut lbs, k)
+            };
+            let per_shard: Vec<LloydStats> = thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(shards.count());
+                for (((((range, a), di), ti), u), (l, m)) in shards
+                    .ranges()
+                    .zip(a_parts)
+                    .zip(d_parts)
+                    .zip(t_parts)
+                    .zip(u_parts)
+                    .zip(l_parts.into_iter().zip(m_parts))
+                {
+                    let ctx = &ctx;
+                    handles.push(scope.spawn(move || {
+                        let mut view = ShardView {
+                            start: range.start,
+                            assign: a,
+                            dist: di,
+                            tight: ti,
+                            ub: u,
+                            lb: l,
+                            lbs: m,
+                        };
+                        match strategy {
+                            Strategy::Naive => naive::scan(ctx, &mut view),
+                            Strategy::Hamerly => hamerly::scan(ctx, &mut view),
+                            Strategy::Elkan => elkan::scan(ctx, &mut view),
+                        }
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("assignment worker panicked"))
+                    .collect()
+            });
+            for s in per_shard {
+                stats += s;
+            }
+        }
+        debug_assert!(tight.iter().all(|&t| t), "stale distance after assignment step");
+
+        // --- Inertia (sequential, the naive reference's summation order).
+        let mut cost = 0f64;
+        for &dv in &dist {
+            cost += dv as f64;
+        }
+        inertia_trace.push(cost);
+        if inertia_trace.len() >= 2 {
+            let prev = inertia_trace[inertia_trace.len() - 2];
+            if prev - cost <= cfg.tol * prev.abs().max(1e-12) {
+                converged = true;
+                break;
+            }
+        }
+
+        // --- Update step: the naive reference's sequential f64 centroid
+        // accumulation (empty clusters keep their stale center), plus the
+        // per-center movement the bound maintenance needs.
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let j = assignments[i] as usize;
+            counts[j] += 1;
+            for (s, &v) in sums[j * d..(j + 1) * d].iter_mut().zip(data.row(i)) {
+                *s += v as f64;
+            }
+        }
+        for j in 0..k {
+            deltas[j] = 0.0;
+            if counts[j] == 0 {
+                continue; // stale center: zero movement, bounds stay valid
+            }
+            let row = centers.row_mut(j);
+            let mut moved = 0f64;
+            for (c, s) in row.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                let new = (*s / counts[j] as f64) as f32;
+                if bounded {
+                    let diff = new as f64 - *c as f64;
+                    moved += diff * diff;
+                }
+                *c = new;
+            }
+            deltas[j] = moved.sqrt();
+            if bounded {
+                // The movement norm is a center–center distance the bounded
+                // strategies pay for their bookkeeping; naive pays none.
+                stats.center_distances += 1;
+            }
+        }
+        if bounded {
+            dmax = (0.0, 0.0);
+            for &dj in &deltas {
+                if dj > dmax.0 {
+                    dmax = (dj, dmax.0);
+                } else if dj > dmax.1 {
+                    dmax.1 = dj;
+                }
+            }
+        }
+    }
+
+    LloydResult { centers, assignments, inertia_trace, iterations, converged, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::kmeans::lloyd::lloyd;
+    use crate::seeding::{seed, Variant};
+
+    fn random_data(n: usize, dims: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        Matrix::from_vec((0..n * dims).map(|_| rng.uniform_f32() * 8.0 - 4.0).collect(), n, dims)
+    }
+
+    fn cfg_of(strategy: Strategy, threads: usize) -> LloydConfig {
+        LloydConfig { strategy, threads, ..LloydConfig::default() }
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+            assert_eq!(s.name().parse::<Strategy>().unwrap(), s);
+        }
+        assert_eq!(Strategy::parse("nope"), None);
+        assert!("nope".parse::<Strategy>().is_err());
+    }
+
+    /// The engine's Naive strategy is the reference loop, sharded: results
+    /// must be bit-identical to `lloyd()` at every thread count.
+    #[test]
+    fn naive_strategy_matches_reference_across_threads() {
+        let data = random_data(311, 4, 9); // odd n: uneven shards
+        let init = data.gather_rows(&[3, 71, 144, 250, 301]);
+        let reference = lloyd(&data, &init, &LloydConfig::default());
+        for threads in [1usize, 2, 4, 8] {
+            let r = run(&data, &init, &cfg_of(Strategy::Naive, threads));
+            assert_eq!(reference.assignments, r.assignments, "threads {threads}");
+            assert_eq!(reference.inertia_trace, r.inertia_trace, "threads {threads}");
+            assert_eq!(reference.centers, r.centers, "threads {threads}");
+            assert_eq!(reference.iterations, r.iterations);
+            assert_eq!(reference.converged, r.converged);
+        }
+    }
+
+    /// Hamerly and Elkan agree with the reference bit for bit, and the
+    /// bounds actually prune (fewer distances than naive for k ≥ 8).
+    #[test]
+    fn bounded_strategies_exact_and_cheaper() {
+        for seed_v in 0..3u64 {
+            let data = random_data(420, 5, seed_v);
+            let idx: Vec<usize> = (0..16).map(|j| j * 26 + 1).collect();
+            let init = data.gather_rows(&idx);
+            let reference = lloyd(&data, &init, &LloydConfig::default());
+            for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+                for threads in [1usize, 4] {
+                    let r = run(&data, &init, &cfg_of(strategy, threads));
+                    assert_eq!(
+                        reference.assignments, r.assignments,
+                        "{strategy:?} t{threads} seed {seed_v}"
+                    );
+                    assert_eq!(
+                        reference.inertia_trace, r.inertia_trace,
+                        "{strategy:?} t{threads} seed {seed_v}"
+                    );
+                    assert_eq!(reference.centers, r.centers);
+                    assert!(
+                        r.stats.distances < reference.stats.distances,
+                        "{strategy:?}: {} !< {}",
+                        r.stats.distances,
+                        reference.stats.distances
+                    );
+                    assert!(r.stats.prunes_total() > 0, "{strategy:?} never pruned");
+                }
+            }
+        }
+    }
+
+    /// Stats are thread-count invariant (per-point decisions do not depend
+    /// on shard boundaries).
+    #[test]
+    fn stats_are_thread_invariant() {
+        let data = random_data(257, 3, 4);
+        let init = data.gather_rows(&[0, 50, 100, 150, 200, 250]);
+        for strategy in Strategy::ALL {
+            let base = run(&data, &init, &cfg_of(strategy, 1)).stats;
+            for threads in [2usize, 8] {
+                let r = run(&data, &init, &cfg_of(strategy, threads));
+                assert_eq!(base, r.stats, "{strategy:?} t{threads}");
+            }
+        }
+    }
+
+    /// Warm start from seeding is bit-identical to the cold start on the
+    /// same centers, and reuses the seeder's exact weights (iteration 1 of
+    /// a bounded strategy needs no tightening distances for pruned points).
+    #[test]
+    fn warm_start_matches_cold_start() {
+        let data = random_data(300, 4, 7);
+        let mut rng = Pcg64::seed_from(21);
+        let s = seed(&data, 12, Variant::Full, &mut rng);
+        for strategy in Strategy::ALL {
+            let cold = run(&data, &s.centers, &cfg_of(strategy, 2));
+            let warmr = run_warm(&data, &s, &cfg_of(strategy, 2));
+            assert_eq!(cold.assignments, warmr.assignments, "{strategy:?}");
+            assert_eq!(cold.inertia_trace, warmr.inertia_trace, "{strategy:?}");
+            assert_eq!(cold.centers, warmr.centers, "{strategy:?}");
+            if strategy != Strategy::Naive {
+                assert!(
+                    warmr.stats.distances <= cold.stats.distances,
+                    "{strategy:?}: warm start must not add work"
+                );
+            }
+        }
+    }
+
+    /// Bound maintenance must survive an empty cluster keeping its stale
+    /// center. Center 1 duplicates center 0 at the exact (f32) centroid of
+    /// the left blob: every left point ties and the strict argmin sends it
+    /// to index 0, so cluster 1 is empty from the first assignment on and
+    /// its stale center has δ = 0 forever — while centers 2 and 3 really
+    /// move between iterations, exercising the bound updates with the dead
+    /// cluster in the geometry (s(c₀) is 0: the twins coincide). Every
+    /// bounded strategy must match the reference bit for bit throughout.
+    #[test]
+    fn empty_cluster_bounds_stay_exact() {
+        #[rustfmt::skip]
+        let data = Matrix::from_vec(vec![
+            0.0, 0.0,   1.0, 0.0,   0.0, 2.0,   1.0, 2.0,   // left blob
+            10.0, 0.0,  11.0, 0.0,  10.0, 2.0,  11.0, 2.0,  // right blob
+            5.0, 5.0,   6.0, 5.0,                            // middle pair
+        ], 10, 2);
+        // c0 = c1 = exact left centroid; c2/c3 start on data points and
+        // move to their blob centroids over the run.
+        #[rustfmt::skip]
+        let init = Matrix::from_vec(vec![
+            0.5, 1.0,   0.5, 1.0,   10.0, 0.0,   5.0, 5.0,
+        ], 4, 2);
+        let reference = lloyd(&data, &init, &LloydConfig::default());
+        assert!(reference.iterations >= 3, "want movement after the cluster empties");
+        assert!(
+            reference.assignments.iter().all(|&a| a != 1),
+            "test setup: cluster 1 should be empty"
+        );
+        assert_eq!(reference.centers.row(1), &[0.5, 1.0], "stale center moved");
+        for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+            for threads in [1usize, 4] {
+                let r = run(&data, &init, &cfg_of(strategy, threads));
+                assert_eq!(
+                    reference.assignments, r.assignments,
+                    "{strategy:?} t{threads}: assignments"
+                );
+                assert_eq!(
+                    reference.inertia_trace, r.inertia_trace,
+                    "{strategy:?} t{threads}: inertia trace"
+                );
+                assert_eq!(reference.centers, r.centers, "{strategy:?} t{threads}");
+                assert_eq!(r.centers.row(1), &[0.5, 1.0], "{strategy:?}: stale center");
+            }
+        }
+    }
+
+    /// k = 1 degenerates to the mean with zero candidate pruning drama.
+    #[test]
+    fn single_center_converges_to_mean() {
+        let data = Matrix::from_vec(vec![0.0, 0.0, 2.0, 0.0, 4.0, 0.0], 3, 2);
+        let init = Matrix::from_vec(vec![100.0, 100.0], 1, 2);
+        for strategy in Strategy::ALL {
+            let r = run(&data, &init, &cfg_of(strategy, 2));
+            assert!((r.centers.row(0)[0] - 2.0).abs() < 1e-5, "{strategy:?}");
+            assert!(r.converged, "{strategy:?}");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! The reference assignment step: a plain `O(|shard|·k)` scan, sharded.
+//!
+//! This is `kmeans::lloyd`'s inner loop per shard — the baseline every
+//! bounded strategy is pinned against, and the `Naive` strategy's way of
+//! getting thread-level parallelism without any bookkeeping.
+
+use super::{IterCtx, ShardView};
+use crate::core::distance::sed;
+use crate::metrics::lloyd::LloydStats;
+
+pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
+    let mut st = LloydStats::default();
+    for s in 0..v.assign.len() {
+        let i = v.start + s;
+        st.visited_points += 1;
+        let row = ctx.data.row(i);
+        let mut best = f32::INFINITY;
+        let mut best_j = 0u32;
+        for j in 0..ctx.k {
+            let dv = sed(row, ctx.centers.row(j));
+            st.distances += 1;
+            if dv < best {
+                best = dv;
+                best_j = j as u32;
+            }
+        }
+        v.assign[s] = best_j;
+        v.dist[s] = best;
+        v.tight[s] = true;
+    }
+    st
+}

@@ -1,12 +1,17 @@
 //! Lloyd's algorithm (batch k-means).
 //!
 //! Assignment steps can optionally be dispatched to the AOT XLA executables
-//! via the runtime's batcher (see `runtime::batcher`); this module is the
-//! pure-scalar implementation used both standalone and as the reference for
-//! the XLA path.
+//! via the runtime's batcher (see `runtime::batcher`); this module holds the
+//! single-threaded naive reference implementation, used standalone and as
+//! the exactness oracle for both the XLA path and the bounds-accelerated
+//! engine ([`crate::kmeans::accel`]). Selecting a non-default
+//! [`LloydConfig::strategy`] or thread count routes [`lloyd`] through that
+//! engine (bit-identical results, fewer distance computations).
 
 use crate::core::distance::sed;
 use crate::core::matrix::Matrix;
+use crate::kmeans::accel::Strategy;
+use crate::metrics::lloyd::LloydStats;
 
 /// Lloyd's configuration.
 #[derive(Clone, Copy, Debug)]
@@ -15,11 +20,17 @@ pub struct LloydConfig {
     pub max_iters: usize,
     /// Stop when relative inertia improvement falls below this.
     pub tol: f64,
+    /// Pruning strategy for the assignment step (`Naive` = the reference
+    /// scan; `Hamerly`/`Elkan` skip provably-unchanged candidates exactly).
+    pub strategy: Strategy,
+    /// Worker threads for the sharded assignment step (1 = sequential).
+    /// Results are bit-identical at any thread count.
+    pub threads: usize,
 }
 
 impl Default for LloydConfig {
     fn default() -> Self {
-        Self { max_iters: 100, tol: 1e-6 }
+        Self { max_iters: 100, tol: 1e-6, strategy: Strategy::Naive, threads: 1 }
     }
 }
 
@@ -36,10 +47,25 @@ pub struct LloydResult {
     pub iterations: usize,
     /// Whether the tolerance criterion stopped the run (vs. max_iters).
     pub converged: bool,
+    /// Clustering-phase efficiency counters (visited points, distances,
+    /// prunes) — the seeding `Counters` accounting extended to Lloyd.
+    pub stats: LloydStats,
 }
 
 /// Runs Lloyd's algorithm from the given initial centers.
+///
+/// The default configuration runs the naive single-threaded reference; any
+/// other [`LloydConfig::strategy`]/[`LloydConfig::threads`] combination is
+/// served by the bounds-accelerated engine, bit-identically.
 pub fn lloyd(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> LloydResult {
+    if cfg.strategy != Strategy::Naive || cfg.threads > 1 {
+        return crate::kmeans::accel::run(data, initial_centers, cfg);
+    }
+    reference(data, initial_centers, cfg)
+}
+
+/// The naive reference loop (single-threaded full scans).
+fn reference(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> LloydResult {
     let n = data.rows();
     let d = data.cols();
     let k = initial_centers.rows();
@@ -51,6 +77,7 @@ pub fn lloyd(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
     let mut inertia_trace = Vec::new();
     let mut converged = false;
     let mut iterations = 0;
+    let mut stats = LloydStats::default();
 
     for _ in 0..cfg.max_iters {
         iterations += 1;
@@ -70,6 +97,8 @@ pub fn lloyd(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
             assignments[i] = best_j;
             cost += best as f64;
         }
+        stats.visited_points += n as u64;
+        stats.distances += (n * k) as u64;
         inertia_trace.push(cost);
 
         // Convergence check against the previous iteration.
@@ -103,7 +132,7 @@ pub fn lloyd(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
         }
     }
 
-    LloydResult { centers, assignments, inertia_trace, iterations, converged }
+    LloydResult { centers, assignments, inertia_trace, iterations, converged, stats }
 }
 
 #[cfg(test)]
@@ -166,5 +195,53 @@ mod tests {
         let r = lloyd(&data, &init, &LloydConfig::default());
         assert!((r.centers.row(0)[0] - 2.0).abs() < 1e-5);
         assert!((r.centers.row(0)[1] - 0.0).abs() < 1e-5);
+    }
+
+    /// Empty-cluster safeguard: a duplicated initial center loses every
+    /// point to its lower-index twin (strict argmin) and must keep its old
+    /// coordinates, while the run still converges normally.
+    #[test]
+    fn empty_cluster_keeps_stale_center() {
+        let data = Matrix::from_vec(vec![0.0, 0.0, 1.0, 0.0, 10.0, 0.0, 11.0, 0.0], 4, 2);
+        // Centers 0 and 1 are identical: cluster 1 empties immediately.
+        let init = Matrix::from_vec(vec![0.5, 0.0, 0.5, 0.0, 10.5, 0.0], 3, 2);
+        let r = lloyd(&data, &init, &LloydConfig::default());
+        assert!(r.converged);
+        assert!(r.assignments.iter().all(|&a| a != 1), "empty cluster won a point");
+        assert_eq!(r.centers.row(1), &[0.5, 0.0], "stale center moved");
+        assert!((r.centers.row(0)[0] - 0.5).abs() < 1e-5);
+        assert!((r.centers.row(2)[0] - 10.5).abs() < 1e-5);
+    }
+
+    /// `max_iters = 0` runs nothing: empty trace, initial centers untouched.
+    #[test]
+    fn zero_max_iters_is_a_noop() {
+        let data = Matrix::from_vec(vec![0.0, 0.0, 4.0, 0.0], 2, 2);
+        let init = Matrix::from_vec(vec![1.0, 0.0], 1, 2);
+        let cfg = LloydConfig { max_iters: 0, ..LloydConfig::default() };
+        let r = lloyd(&data, &init, &cfg);
+        assert!(r.inertia_trace.is_empty());
+        assert_eq!(r.iterations, 0);
+        assert!(!r.converged);
+        assert_eq!(r.centers, init);
+        assert_eq!(r.stats.distances, 0);
+    }
+
+    /// `tol = 0` keeps iterating until the inertia stops strictly
+    /// decreasing — it must still terminate (and be flagged converged)
+    /// before `max_iters` on a fixed point.
+    #[test]
+    fn zero_tol_stops_at_fixed_point() {
+        let mut rng = Pcg64::seed_from(6);
+        let data = gmm(&GmmSpec::new(200, 2, 3), &mut rng);
+        let s = seed(&data, 3, Variant::Standard, &mut rng);
+        let cfg = LloydConfig { tol: 0.0, max_iters: 500, ..LloydConfig::default() };
+        let r = lloyd(&data, &s.centers, &cfg);
+        assert!(r.converged, "tol=0 never reached a fixed point in 500 iters");
+        let t = &r.inertia_trace;
+        assert!(t[t.len() - 2] - t[t.len() - 1] <= 0.0);
+        for w in t.windows(2) {
+            assert!(w[1] <= w[0], "inertia increased under tol=0: {w:?}");
+        }
     }
 }

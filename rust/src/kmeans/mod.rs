@@ -1,6 +1,12 @@
 //! Lloyd's k-means on top of any seeding — the end-to-end consumer that the
 //! paper's seeding feeds (and the quality check that exact acceleration
 //! preserves the clustering).
+//!
+//! [`lloyd`] holds the naive reference loop; [`accel`] is the
+//! bounds-accelerated engine (Hamerly/Elkan triangle-inequality pruning plus
+//! the paper's norm filter), bit-identical to the reference and warm-started
+//! directly from seeding output.
 
+pub mod accel;
 pub mod inertia;
 pub mod lloyd;

@@ -6,7 +6,8 @@
 //!                [--variant standard|tie|full] [--threads T|auto] [--xla]
 //!                [--appendix-a]
 //!                [--refpoint origin|mean|median|positive|mean-norm]
-//! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto] [--xla]
+//! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto]
+//!                [--lloyd-strategy naive|hamerly|elkan] [--xla]
 //! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
 //! geokmpp info
 //! ```
@@ -15,6 +16,12 @@
 //! the per-iteration filter-and-update scan runs across that many contiguous
 //! point shards on real OS threads. `--xla` without built artifacts falls
 //! back to the sharded scalar executor at the same thread count.
+//!
+//! `--lloyd-strategy` selects the pruning strategy of the bounds-accelerated
+//! Lloyd engine (`kmeans::accel`), warm-started from the seeding result so
+//! the seeder's exact D² weights initialize the upper bounds for free. All
+//! strategies produce bit-identical clusterings; `hamerly`/`elkan` skip most
+//! distance computations (the printed clustering counters show how many).
 
 use anyhow::{bail, Context, Result};
 use geokmpp::cli::Args;
@@ -22,7 +29,8 @@ use geokmpp::core::matrix::Matrix;
 use geokmpp::core::rng::Pcg64;
 use geokmpp::data::catalog::by_name;
 use geokmpp::data::{io, stats};
-use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
+use geokmpp::kmeans::accel::{run_warm, Strategy};
+use geokmpp::kmeans::lloyd::LloydConfig;
 use geokmpp::metrics::table::fnum;
 use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
 use geokmpp::runtime::Executor;
@@ -155,8 +163,10 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let iters: usize = args.get_or("iters", 100).map_err(anyhow::Error::msg)?;
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
     let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
+    let strategy: Strategy =
+        args.get_or("lloyd-strategy", Strategy::Naive).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
-    let cfg = LloydConfig { max_iters: iters, ..LloydConfig::default() };
+    let cfg = LloydConfig { max_iters: iters, strategy, threads, ..LloydConfig::default() };
 
     let seed_cfg = SeedConfig::new(k, variant).with_threads(threads);
     let mut picker = D2Picker::new(&mut rng);
@@ -168,17 +178,39 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         s.cost()
     );
     let r = if args.has("xla") {
+        if strategy != Strategy::Naive {
+            eprintln!("note: --xla dispatches dense assignments; --lloyd-strategy ignored");
+        }
         let mut ex = Executor::open_or_scalar(threads);
         lloyd_xla(&data, &s.centers, &cfg, &mut ex)?
     } else {
-        lloyd(&data, &s.centers, &cfg)
+        // Warm start: the seeder's exact D² weights seed the upper bounds.
+        run_warm(&data, &s, &cfg)
+    };
+    let (i_first, i_last) = match (r.inertia_trace.first(), r.inertia_trace.last()) {
+        (Some(&a), Some(&b)) => (fnum(a, 2), fnum(b, 2)),
+        _ => ("-".into(), "-".into()), // --iters 0: nothing ran
     };
     println!(
-        "lloyd: {} iterations, converged={}, inertia {} → {}",
+        "lloyd [{}]: {} iterations, converged={}, inertia {} → {}",
+        strategy.name(),
         r.iterations,
         r.converged,
-        fnum(r.inertia_trace[0], 2),
-        fnum(*r.inertia_trace.last().unwrap(), 2)
+        i_first,
+        i_last
+    );
+    let st = &r.stats;
+    println!("lloyd visited     {}", st.visited_points);
+    println!(
+        "lloyd distances   {} (naive would pay {})",
+        st.distances,
+        st.visited_points * k as u64
+    );
+    println!("lloyd center dist {}", st.center_distances);
+    println!("lloyd norms       {}", st.norms);
+    println!(
+        "lloyd prunes      bound={} center={} norm={} full-scans={}",
+        st.bound_prunes, st.center_prunes, st.norm_prunes, st.full_scans
     );
     Ok(())
 }

@@ -1,0 +1,124 @@
+//! Clustering-phase intrinsic-efficiency counters — the Table-2-style
+//! accounting of [`crate::seeding::Counters`] extended past seeding into the
+//! Lloyd iterations (`kmeans::accel`).
+//!
+//! The same fairness rules apply: every point examined in an assignment step
+//! counts, point–center and center–center SEDs are counted separately, and
+//! norm computations are included for the norm-filtered paths. The pruning
+//! buckets record *why* work was skipped, so strategy comparisons can report
+//! not just "fewer distances" but which geometric filter paid for it.
+
+/// Counter set collected by every accelerated-Lloyd run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LloydStats {
+    /// Points examined across all assignment steps (one per point per
+    /// iteration — every strategy touches every point at least for the
+    /// bound maintenance and the exact inertia term).
+    pub visited_points: u64,
+    /// Point↔center SED computations.
+    pub distances: u64,
+    /// Center↔center SED computations (Hamerly's `s(c)` separations, Elkan's
+    /// pairwise matrix) plus the per-iteration center-movement distances —
+    /// the accelerated strategies' overhead, naive pays none.
+    pub center_distances: u64,
+    /// Norm computations (per-point norms once, center norms per iteration).
+    pub norms: u64,
+    /// Points whose assignment was proven unchanged by the upper/lower
+    /// bound test alone (no candidate scan at all).
+    pub bound_prunes: u64,
+    /// Candidate centers skipped inside a scan by a per-center bound
+    /// (Elkan's `l(x, c)` / center–center half-distance tests).
+    pub center_prunes: u64,
+    /// Candidate centers skipped by the norm filter
+    /// (`(‖x‖ − ‖c‖)² ≥ d²_best`, the seeding §4.3 filter carried over).
+    pub norm_prunes: u64,
+    /// Points that fell through every bound and paid a full k-candidate scan.
+    pub full_scans: u64,
+}
+
+impl LloydStats {
+    /// Total distance-like computations (point–center + center–center +
+    /// norms) — the figure to compare against naive's `n·k` per iteration.
+    pub fn computations_total(&self) -> u64 {
+        self.distances + self.center_distances + self.norms
+    }
+
+    /// Total candidate-center prunes across all filters.
+    pub fn prunes_total(&self) -> u64 {
+        self.bound_prunes + self.center_prunes + self.norm_prunes
+    }
+
+    /// Element-wise division (for aggregating repetitions into means).
+    pub fn div(&mut self, d: u64) {
+        self.visited_points /= d;
+        self.distances /= d;
+        self.center_distances /= d;
+        self.norms /= d;
+        self.bound_prunes /= d;
+        self.center_prunes /= d;
+        self.norm_prunes /= d;
+        self.full_scans /= d;
+    }
+}
+
+impl std::ops::AddAssign for LloydStats {
+    fn add_assign(&mut self, other: LloydStats) {
+        self.visited_points += other.visited_points;
+        self.distances += other.distances;
+        self.center_distances += other.center_distances;
+        self.norms += other.norms;
+        self.bound_prunes += other.bound_prunes;
+        self.center_prunes += other.center_prunes;
+        self.norm_prunes += other.norm_prunes;
+        self.full_scans += other.full_scans;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled() -> LloydStats {
+        LloydStats {
+            visited_points: 1,
+            distances: 2,
+            center_distances: 3,
+            norms: 4,
+            bound_prunes: 5,
+            center_prunes: 6,
+            norm_prunes: 7,
+            full_scans: 8,
+        }
+    }
+
+    #[test]
+    fn totals_compose() {
+        let s = filled();
+        assert_eq!(s.computations_total(), 9);
+        assert_eq!(s.prunes_total(), 18);
+    }
+
+    #[test]
+    fn add_assign_merges_every_field() {
+        let mut sum = LloydStats::default();
+        sum += filled();
+        sum += filled();
+        assert_eq!(sum.visited_points, 2);
+        assert_eq!(sum.distances, 4);
+        assert_eq!(sum.center_distances, 6);
+        assert_eq!(sum.norms, 8);
+        assert_eq!(sum.bound_prunes, 10);
+        assert_eq!(sum.center_prunes, 12);
+        assert_eq!(sum.norm_prunes, 14);
+        assert_eq!(sum.full_scans, 16);
+    }
+
+    #[test]
+    fn div_scales_every_field() {
+        let mut sum = LloydStats::default();
+        sum += filled();
+        sum += filled();
+        sum.div(2);
+        assert_eq!(sum, filled());
+    }
+}

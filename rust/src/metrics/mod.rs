@@ -1,4 +1,6 @@
-//! Measurement utilities: timers and tabular/CSV report writers.
+//! Measurement utilities: timers, tabular/CSV report writers, and the
+//! clustering-phase counter set.
 
+pub mod lloyd;
 pub mod table;
 pub mod timer;

@@ -118,25 +118,26 @@ pub fn hybrid_tie_seed<R: Rng>(
                     }
                 }
             } else {
-                // Scalar path: Filter 2 pruning.
-                for &i in &members {
-                    if 4.0 * weights[i] > d_cc {
-                        counters.distances += 1;
-                        let dnew = sed(data.row(i), &cn_row);
-                        if dnew < weights[i] {
-                            weights[i] = dnew;
-                            assignments[i] = slot as u32;
-                            moved.push(i);
-                            continue;
-                        }
+                // Scalar path: Filter-2-pruned min-update, sharded across
+                // the executor's worker threads (the same `core::shard`
+                // engine the dense fallback uses — ROADMAP "executor-sharded
+                // hybrid seeding").
+                let (w2, chg, computed) =
+                    ex.min_update_tie(data, &members, &cn_row, &weights, d_cc);
+                counters.distances += computed;
+                counters.filter2_rejects += members.len() as u64 - computed;
+                for (pos, &i) in members.iter().enumerate() {
+                    if chg[pos] == 1 {
+                        weights[i] = w2[pos];
+                        assignments[i] = slot as u32;
+                        moved.push(i);
                     } else {
-                        counters.filter2_rejects += 1;
+                        retained.push(i);
+                        if weights[i] > new_r {
+                            new_r = weights[i];
+                        }
+                        new_s += weights[i] as f64;
                     }
-                    retained.push(i);
-                    if weights[i] > new_r {
-                        new_r = weights[i];
-                    }
-                    new_s += weights[i] as f64;
                 }
             }
             cs.members[j] = retained;
@@ -152,6 +153,7 @@ pub fn hybrid_tie_seed<R: Rng>(
         center_indices,
         assignments,
         weights,
+        norms: Vec::new(), // the hybrid TIE path computes no norms
         counters,
         elapsed: started.elapsed(),
     })
@@ -173,10 +175,14 @@ pub fn lloyd_xla(
     let mut assignments = vec![0u32; n];
     let mut converged = false;
     let mut iterations = 0;
+    let mut stats = crate::metrics::lloyd::LloydStats::default();
 
     for _ in 0..cfg.max_iters {
         iterations += 1;
         let (assign, mind) = ex.lloyd_assign(data, &centers)?;
+        // The dense dispatch computes every point–center distance.
+        stats.visited_points += n as u64;
+        stats.distances += (n * k) as u64;
         assignments = assign;
         let cost: f64 = mind.iter().map(|&m| m as f64).sum();
         inertia_trace.push(cost);
@@ -206,7 +212,7 @@ pub fn lloyd_xla(
         }
     }
 
-    Ok(LloydResult { centers, assignments, inertia_trace, iterations, converged })
+    Ok(LloydResult { centers, assignments, inertia_trace, iterations, converged, stats })
 }
 
 #[cfg(test)]

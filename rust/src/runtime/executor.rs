@@ -170,6 +170,80 @@ impl Executor {
         (w_out, chg_out)
     }
 
+    /// Sharded TIE-filtered min-update (always the scalar backend — the
+    /// pruning is pointless inside a dense dispatch): per member, Filter 2
+    /// (Eq. 5, `4·w ≤ d_cc` proves the new center cannot win) skips the
+    /// distance entirely; survivors get the strict min-update. Returns
+    /// per-`rows`-position `(w', changed)` plus the number of distances
+    /// actually computed (`filter-2 rejects = rows.len() − computed`).
+    ///
+    /// Bit-identical to the sequential scan at any thread count: each
+    /// member's outcome depends only on its own weight and `d_cc`.
+    ///
+    /// Small member lists (this op serves the *sub-dense-threshold* clusters
+    /// of the hybrid path) run inline: a thread spawn costs ~µs, which would
+    /// dominate a tens-of-member scan.
+    pub fn min_update_tie(
+        &mut self,
+        data: &Matrix,
+        rows: &[usize],
+        c_new: &[f32],
+        weights: &[f32],
+        d_cc: f32,
+    ) -> (Vec<f32>, Vec<i32>, u64) {
+        self.scalar_scans += 1;
+        if self.threads <= 1 || rows.len() < 256 * self.threads {
+            let mut w_out = Vec::with_capacity(rows.len());
+            let mut chg_out = Vec::with_capacity(rows.len());
+            let mut computed = 0u64;
+            for &r in rows {
+                let cur = weights[r];
+                if 4.0 * cur > d_cc {
+                    computed += 1;
+                    let dist = sed(data.row(r), c_new);
+                    w_out.push(cur.min(dist));
+                    chg_out.push(i32::from(dist < cur));
+                } else {
+                    w_out.push(cur);
+                    chg_out.push(0);
+                }
+            }
+            return (w_out, chg_out, computed);
+        }
+        let shards = Shards::new(rows.len(), self.threads);
+        let mut w_out = vec![0f32; rows.len()];
+        let mut chg_out = vec![0i32; rows.len()];
+        let mut computed = vec![0u64; shards.count()];
+        {
+            let w_parts = shards.split_mut(&mut w_out);
+            let c_parts = shards.split_mut(&mut chg_out);
+            std::thread::scope(|scope| {
+                for (((range, w), chg), cnt) in
+                    shards.ranges().zip(w_parts).zip(c_parts).zip(computed.iter_mut())
+                {
+                    let rows = &rows[range];
+                    scope.spawn(move || {
+                        let mut local = 0u64;
+                        for (slot, &r) in rows.iter().enumerate() {
+                            let cur = weights[r];
+                            if 4.0 * cur > d_cc {
+                                local += 1;
+                                let dist = sed(data.row(r), c_new);
+                                w[slot] = cur.min(dist);
+                                chg[slot] = i32::from(dist < cur);
+                            } else {
+                                w[slot] = cur;
+                                chg[slot] = 0;
+                            }
+                        }
+                        *cnt = local;
+                    });
+                }
+            });
+        }
+        (w_out, chg_out, computed.iter().sum())
+    }
+
     /// Fused min-update of `weights[rows]` against `c_new` (a dataset row),
     /// dispatched chunk-by-chunk. Returns per-`rows`-position `(w', changed)`.
     ///

@@ -117,6 +117,12 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
         let m = clusters.len();
         let mut new_cluster = NormCluster::new(cn_norm);
+        // Points captured by the new center, routed into its partitions in
+        // ascending index order after the scan — every partition member list
+        // stays sorted, so the sharded engine's per-shard lists concatenate
+        // to exactly this order at any thread count (the invariant behind
+        // thread-count-invariant D² sampling; see `parallel`).
+        let mut moved: Vec<usize> = Vec::new();
         for j in 0..m {
             trace.access_cluster(j);
 
@@ -228,7 +234,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                         let e = dnew.sqrt();
                         lo[i] = norms[i] - e;
                         up[i] = norms[i] + e;
-                        new_cluster.insert(i, norms[i]);
+                        moved.push(i);
                     } else {
                         keep!(i);
                     }
@@ -243,6 +249,10 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         }
         geom.commit_center(m);
 
+        moved.sort_unstable();
+        for &i in &moved {
+            new_cluster.insert(i, norms[i]);
+        }
         new_cluster.lower.refresh(&weights, &norms);
         new_cluster.upper.refresh(&weights, &norms);
         clusters.push(new_cluster);
@@ -256,6 +266,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         center_indices,
         assignments,
         weights,
+        // Only origin norms are reusable downstream (a shifted reference
+        // frame would need its coordinates carried along too).
+        norms: if matches!(cfg.refpoint, RefPoint::Origin) { norms } else { Vec::new() },
         counters,
         elapsed: Duration::ZERO,
     }

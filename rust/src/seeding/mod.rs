@@ -141,6 +141,11 @@ pub struct SeedResult {
     pub assignments: Vec<u32>,
     /// Final per-point weights `w_i = SED(x_i, c_{a(i)})`.
     pub weights: Vec<f32>,
+    /// Per-point origin norms `‖x_i‖`, when the variant computed them with
+    /// the default origin reference point (`Full` only; empty otherwise).
+    /// Downstream consumers — the bounds-accelerated Lloyd engine's norm
+    /// filter ([`crate::kmeans::accel`]) — reuse them for free.
+    pub norms: Vec<f32>,
     /// The paper's intrinsic-efficiency counters.
     pub counters: Counters,
     /// Wall-clock time of the run.

@@ -14,11 +14,12 @@
 //! unsafe, no cross-thread writes.
 //!
 //! Each iteration:
-//! 1. **Sampling (sequential)** — per-shard partition weight sums are
-//!    presented to the picker as the two-step groups. Partitions tile the
-//!    point set, so the two-step draw over them is distribution-equivalent
-//!    to the single-threaded path (§4.2.2 equivalence holds for *any*
-//!    tiling).
+//! 1. **Sampling (sequential)** — per-shard partition sums are folded into
+//!    *global* per-(cluster, side) sums and the member lists presented as
+//!    consecutive segments of the merged member list, so the two-step draw
+//!    is the same draw the single-threaded path performs — not merely
+//!    distribution-equivalent but consuming the RNG identically regardless
+//!    of the shard count.
 //! 2. **Pre-pass (sequential)** — per cluster, the shard partition norm
 //!    bounds are consulted (lookups only); if any shard admits the new
 //!    center's norm, the center–center distance is computed once (with the
@@ -37,9 +38,13 @@
 //! single-threaded path, so the engine produces **bit-identical**
 //! `weights`/`assignments`/`center_indices` to [`crate::seeding::full`] for
 //! a fixed [`crate::seeding::ScriptedPicker`] script, regardless of thread
-//! count. With the production D² picker, draws consume the RNG differently
-//! (groups are per-shard), so runs are deterministic per `(seed, threads)`
-//! and distribution-identical across thread counts.
+//! count. With the production D² picker, the merged-group sampling makes
+//! runs thread-count invariant too: partition member lists are kept in
+//! ascending index order on both paths, so the merged member sequence, the
+//! RNG stream and `visited_sampling` match the single-threaded engine (the
+//! only residual difference is f64 fold-order round-off in the merged sums,
+//! which can flip a draw only when it lands within an ulp of a group
+//! boundary).
 //!
 //! ## Tracing
 //!
@@ -165,6 +170,12 @@ fn scan_shard(
     let mut c = Counters::default();
     let start = state.start;
     let mut new_cluster = NormCluster::new(cn_norm);
+    // Captured points, routed into the new cluster's partitions in ascending
+    // index order after the scan (mirroring full.rs): every partition member
+    // list stays sorted, so the shard lists concatenate to the same merged
+    // order at any thread count — the invariant behind the thread-count-
+    // invariant two-step sampling.
+    let mut moved: Vec<usize> = Vec::new();
     for (j, &dcc) in d_cc.iter().enumerate() {
         if dcc.is_nan() {
             // Cluster skipped globally (no shard admitted, or Appendix A
@@ -214,7 +225,7 @@ fn scan_shard(
                             let e = dnew.sqrt();
                             lo[k] = norms[i] - e;
                             up[k] = norms[i] + e;
-                            new_cluster.insert(i, norms[i]);
+                            moved.push(i);
                             false
                         } else {
                             true
@@ -241,6 +252,10 @@ fn scan_shard(
             part.lb = lb;
             part.ub = ub;
         }
+    }
+    moved.sort_unstable();
+    for &i in &moved {
+        new_cluster.insert(i, norms[i]);
     }
     refresh_part(&mut new_cluster.lower, start, w, lo, up);
     refresh_part(&mut new_cluster.upper, start, w, lo, up);
@@ -316,27 +331,41 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     // --- Main loop.
     while center_indices.len() < cfg.k {
-        // Two-step sampling over per-shard partitions (a tiling of the
-        // clusters — distribution-equivalent, §4.2.2).
+        // Two-step sampling over *merged* per-(cluster, side) groups: the
+        // per-shard partition sums are folded (shard order) into one sum per
+        // global partition, and the member draw walks the shard member lists
+        // as consecutive segments of the merged list. Member lists are kept
+        // ascending per shard, so the merged order — and with it the RNG
+        // stream and the `visited_sampling` accounting — is thread-count
+        // invariant (group draws can differ across thread counts only if a
+        // draw lands within one f64 fold-order ulp of a group boundary).
         let m = states[0].clusters.len();
-        let mut groups: Vec<&[usize]> = Vec::with_capacity(states.len() * m * 2);
-        let mut sums: Vec<f64> = Vec::with_capacity(states.len() * m * 2);
-        for state in &states {
-            for cl in &state.clusters {
-                groups.push(cl.lower.members.as_slice());
-                sums.push(cl.lower.sum);
-                groups.push(cl.upper.members.as_slice());
-                sums.push(cl.upper.sum);
+        let mut segments: Vec<Vec<&[usize]>> = Vec::with_capacity(m * 2);
+        let mut sums: Vec<f64> = Vec::with_capacity(m * 2);
+        for j in 0..m {
+            for lower in [true, false] {
+                let mut segs: Vec<&[usize]> = Vec::with_capacity(states.len());
+                let mut sum = 0f64;
+                for state in &states {
+                    let cl = &state.clusters[j];
+                    let part = if lower { &cl.lower } else { &cl.upper };
+                    if !part.members.is_empty() {
+                        segs.push(part.members.as_slice());
+                        sum += part.sum;
+                    }
+                }
+                segments.push(segs);
+                sums.push(sum);
             }
         }
         let total: f64 = sums.iter().sum();
-        let pick = picker.next(PickCtx::TwoStep {
+        let pick = picker.next(PickCtx::TwoStepMerged {
             weights: &weights,
-            groups: &groups,
+            segments: &segments,
             sums: &sums,
             total,
         });
-        drop(groups);
+        drop(segments);
         counters.visited_sampling += pick.visited;
 
         let c_new = pick.index;
@@ -350,10 +379,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         // and one center–center distance per surviving cluster. Assignment-
         // phase counters follow full.rs accounting — one header examination
         // and at most one norm-partition reject per *merged* cluster
-        // partition — so `visited_assign`/`visited_headers` do not scale
-        // with the thread count. `visited_sampling` still does (the sampler
-        // really scans the T× per-shard group headers each draw; see the
-        // ROADMAP item on merged-group sampling).
+        // partition — so, like the merged-group `visited_sampling` above,
+        // none of the counters scale with the thread count.
         let mut d_cc = vec![f32::NAN; m]; // NaN ⇒ skip the whole cluster
         for (j, d_cc_j) in d_cc.iter_mut().enumerate() {
             trace.access_cluster(j);
@@ -452,6 +479,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         center_indices,
         assignments,
         weights,
+        // Only origin norms are reusable downstream (see full.rs).
+        norms: if matches!(cfg.refpoint, RefPoint::Origin) { norms } else { Vec::new() },
         counters,
         elapsed: Duration::ZERO,
     }
@@ -589,6 +618,52 @@ mod tests {
             r.counters.distances,
             reference.counters.distances
         );
+    }
+
+    /// The deterministic cross-thread sampling claim, head on: with the
+    /// real D² picker, merged-group sampling makes the engine thread-count
+    /// invariant — identical center sequences, weights and sampling-visit
+    /// counts at T = 1, 2, 4 and 8.
+    #[test]
+    fn d2_sampling_is_thread_count_invariant() {
+        let data = random_data(501, 4, 13); // odd n: uneven shard boundaries
+        let k = 24;
+        let run_t = |threads: usize| {
+            let mut cfg = SeedConfig::new(k, Variant::Full);
+            cfg.threads = threads;
+            let mut p = D2Picker::new(Pcg64::seed_from(2024));
+            run(&data, &cfg, &mut p, &mut NoTrace)
+        };
+        let base = run_t(1);
+        for threads in [2usize, 4, 8] {
+            let r = run_t(threads);
+            assert_eq!(base.center_indices, r.center_indices, "threads {threads}");
+            assert_eq!(base.weights, r.weights, "threads {threads}");
+            assert_eq!(base.assignments, r.assignments, "threads {threads}");
+            assert_eq!(
+                base.counters.visited_sampling, r.counters.visited_sampling,
+                "sampling visits depend on the thread count (threads {threads})"
+            );
+        }
+    }
+
+    /// At one shard the engine *is* the single-threaded full variant: the
+    /// member lists, partition sums and merged groups coincide, so even
+    /// real D² runs (not just scripted ones) are bit-identical to full.rs.
+    #[test]
+    fn single_shard_d2_matches_full_variant() {
+        let data = random_data(400, 3, 77);
+        let k = 20;
+        let mut cfg = SeedConfig::new(k, Variant::Full);
+        cfg.threads = 1;
+        let mut p1 = D2Picker::new(Pcg64::seed_from(9));
+        let a = run(&data, &cfg, &mut p1, &mut NoTrace);
+        let mut p2 = D2Picker::new(Pcg64::seed_from(9));
+        let b =
+            full::run(&data, &SeedConfig::new(k, Variant::Full), &mut p2, &mut NoTrace);
+        assert_eq!(a.center_indices, b.center_indices);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.counters.visited_sampling, b.counters.visited_sampling);
     }
 
     /// Real D² picker: deterministic per (seed, threads), weights stay true

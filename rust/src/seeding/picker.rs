@@ -10,7 +10,9 @@
 //!   (an exact acceleration must then produce bit-identical weights).
 
 use crate::core::rng::Rng;
-use crate::core::sampling::{roulette, roulette_f64, roulette_indexed, CumTable};
+use crate::core::sampling::{
+    roulette, roulette_f64, roulette_indexed, roulette_segmented, CumTable,
+};
 
 /// What a picker returns: the chosen point index plus how many entries the
 /// selection procedure examined (the paper's "points examined during the D²
@@ -42,6 +44,22 @@ pub enum PickCtx<'a> {
         /// Per-group member lists.
         groups: &'a [&'a [usize]],
         /// Per-group weight sums `s_j`.
+        sums: &'a [f64],
+        /// Precomputed `Σ s_j`.
+        total: f64,
+    },
+    /// Two-step sampling over *merged* groups whose member lists are stored
+    /// as several consecutive segments (the sharded engine's per-shard
+    /// partition slices, concatenated in shard order). One draw consumes the
+    /// RNG exactly like [`PickCtx::TwoStep`] over the concatenations, so the
+    /// stream does not depend on where the segment boundaries fall — the
+    /// basis of thread-count-invariant D² sampling.
+    TwoStepMerged {
+        /// Global per-point weights `w_i`.
+        weights: &'a [f32],
+        /// Per-group segment lists (each segment a member-index slice).
+        segments: &'a [Vec<&'a [usize]>],
+        /// Per-group weight sums `s_j` (folded over the segments).
         sums: &'a [f64],
         /// Precomputed `Σ s_j`.
         total: f64,
@@ -115,6 +133,21 @@ impl<R: Rng> CenterPicker for D2Picker<R> {
                 // does NOT add headers again.
                 Pick { index, visited: (g as u64 + 1) + (pos as u64 + 1) }
             }
+            PickCtx::TwoStepMerged { weights, segments, sums, total } => {
+                if total <= 0.0 {
+                    let g = segments
+                        .iter()
+                        .position(|segs| segs.iter().any(|s| !s.is_empty()))
+                        .expect("no points");
+                    let first = segments[g].iter().find(|s| !s.is_empty()).unwrap()[0];
+                    return Pick { index: first, visited: g as u64 + 2 };
+                }
+                let g = roulette_f64(sums, total, &mut self.rng);
+                let (index, pos) = roulette_segmented(weights, &segments[g], sums[g], &mut self.rng);
+                // Merged-group-header scan (g+1) + member scan (pos+1) —
+                // identical accounting to the unmerged TwoStep path.
+                Pick { index, visited: (g as u64 + 1) + (pos as u64 + 1) }
+            }
             PickCtx::TwoStepCached { weights, groups, sums, total, tables } => {
                 if total <= 0.0 {
                     let g = groups.iter().position(|g| !g.is_empty()).expect("no points");
@@ -166,11 +199,20 @@ impl CenterPicker for ScriptedPicker {
         let index = self.advance();
         // Sanity: a scripted center must still be selectable (w > 0 or the
         // context contains it); catches test-script bugs early.
-        if let PickCtx::TwoStep { groups, .. } = ctx {
-            debug_assert!(
-                groups.iter().any(|g| g.contains(&index)),
-                "scripted center {index} not present in any group"
-            );
+        match ctx {
+            PickCtx::TwoStep { groups, .. } => {
+                debug_assert!(
+                    groups.iter().any(|g| g.contains(&index)),
+                    "scripted center {index} not present in any group"
+                );
+            }
+            PickCtx::TwoStepMerged { segments, .. } => {
+                debug_assert!(
+                    segments.iter().any(|segs| segs.iter().any(|s| s.contains(&index))),
+                    "scripted center {index} not present in any merged group"
+                );
+            }
+            _ => {}
         }
         Pick { index, visited: 0 }
     }
@@ -202,6 +244,50 @@ mod tests {
         assert_eq!(pick.index, 2);
         // group 1 (headers: 2) + member position 0 (1) = 3
         assert_eq!(pick.visited, 3);
+    }
+
+    /// The merged-group context must consume the RNG and count visits
+    /// exactly like the unmerged two-step context over the concatenations,
+    /// for any segmentation of the member lists.
+    #[test]
+    fn d2_two_step_merged_matches_unmerged() {
+        let w = [1.0f32, 3.0, 0.0, 2.0, 6.0, 4.0, 0.5, 3.5];
+        let g0 = [0usize, 1, 2];
+        let g1 = [3usize, 4];
+        let g2 = [5usize, 6, 7];
+        let groups: Vec<&[usize]> = vec![&g0, &g1, &g2];
+        let sums = [4.0f64, 8.0, 8.0];
+        // Segment the same member lists as a 2-shard engine would.
+        let segments: Vec<Vec<&[usize]>> =
+            vec![vec![&g0[..2], &g0[2..]], vec![&g1[..1], &g1[1..]], vec![&g2[..2], &g2[2..]]];
+        let mut pa = D2Picker::new(Pcg64::seed_from(31));
+        let mut pb = D2Picker::new(Pcg64::seed_from(31));
+        for _ in 0..5_000 {
+            let a = pa.next(PickCtx::TwoStep {
+                weights: &w,
+                groups: &groups,
+                sums: &sums,
+                total: 20.0,
+            });
+            let b = pb.next(PickCtx::TwoStepMerged {
+                weights: &w,
+                segments: &segments,
+                sums: &sums,
+                total: 20.0,
+            });
+            assert_eq!(a, b);
+        }
+        // Degenerate all-zero totals pick the first member of the first
+        // non-empty group in both contexts.
+        let z = [0.0f32; 8];
+        let a = pa.next(PickCtx::TwoStep { weights: &z, groups: &groups, sums: &[0.0; 3], total: 0.0 });
+        let b = pb.next(PickCtx::TwoStepMerged {
+            weights: &z,
+            segments: &segments,
+            sums: &[0.0; 3],
+            total: 0.0,
+        });
+        assert_eq!(a, b);
     }
 
     /// §4.2.2 equivalence under the real D² picker: two-step draw

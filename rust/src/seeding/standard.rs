@@ -92,6 +92,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         center_indices,
         assignments,
         weights,
+        norms: Vec::new(), // the standard variant computes no norms
         counters,
         elapsed: Duration::ZERO, // filled by seed_with
     }

@@ -211,6 +211,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         center_indices,
         assignments,
         weights,
+        norms: Vec::new(), // the TIE variant computes no norms
         counters,
         elapsed: Duration::ZERO,
     }

@@ -126,6 +126,7 @@ pub(crate) fn run(args: &Args) -> Result<()> {
                     rep: 0,
                     seed: 7,
                     threads: 1,
+                    lloyd: None,
                 };
                 let mut times = Vec::new();
                 for rep in 0..reps {

@@ -85,6 +85,7 @@ pub fn run_sweep(p: &SweepParams, variants: &[Variant]) -> Report {
                         rep,
                         seed: p.seed,
                         threads: 1,
+                        lloyd: None,
                     });
                 }
             }

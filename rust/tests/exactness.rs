@@ -6,9 +6,11 @@
 use geokmpp::core::distance::sed;
 use geokmpp::core::rng::{Pcg64, Rng};
 use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::accel::{self, Strategy};
+use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
 use geokmpp::prop::{forall, gens, Config};
 use geokmpp::seeding::{
-    seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant,
+    seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant,
 };
 
 /// Scripted-center exactness on real catalog geometry (not just uniform
@@ -100,6 +102,71 @@ fn parallel_engine_exact_on_catalog_instances() {
                 "{name} threads={threads}"
             );
         }
+    }
+}
+
+/// The bounds-accelerated Lloyd engine on real catalog geometry: Hamerly
+/// and Elkan produce bit-identical assignments, centers and inertia traces
+/// to the naive reference at 1, 2, 4 and 8 threads, while their
+/// clustering-phase counters show strictly fewer distance computations
+/// (k = 16 ≥ 8, where the bounds have room to pay off).
+#[test]
+fn lloyd_strategies_exact_on_catalog_instances() {
+    for name in ["CIF-C", "S-NS", "GSAD"] {
+        let inst = by_name(name).unwrap();
+        let data = inst.generate_n(2_001); // odd n: uneven shard boundaries
+        let k = 16;
+        let mut rng = Pcg64::seed_from(11);
+        let s = seed(&data, k, Variant::Full, &mut rng);
+        let cfg = LloydConfig { max_iters: 40, ..LloydConfig::default() };
+        let reference = lloyd(&data, &s.centers, &cfg);
+        for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+            for threads in [1usize, 2, 4, 8] {
+                let c = LloydConfig { strategy, threads, ..cfg };
+                let r = accel::run(&data, &s.centers, &c);
+                assert_eq!(
+                    reference.assignments, r.assignments,
+                    "{name} {strategy:?} threads={threads}: assignments"
+                );
+                assert_eq!(
+                    reference.inertia_trace, r.inertia_trace,
+                    "{name} {strategy:?} threads={threads}: inertia trace"
+                );
+                assert_eq!(reference.centers, r.centers, "{name} {strategy:?}");
+                assert_eq!(reference.iterations, r.iterations);
+                assert_eq!(reference.converged, r.converged);
+                assert!(
+                    r.stats.distances < reference.stats.distances,
+                    "{name} {strategy:?}: {} !< {} distances",
+                    r.stats.distances,
+                    reference.stats.distances
+                );
+            }
+        }
+    }
+}
+
+/// Warm-starting the engine from the seeder's exact D² weights (the free
+/// lunch the seeding phase already paid for) changes nothing but the work:
+/// bit-identical results to the cold start, never more distances.
+#[test]
+fn lloyd_warm_start_exact_on_catalog_instances() {
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(2_000);
+    let mut rng = Pcg64::seed_from(23);
+    let s = seed(&data, 24, Variant::Full, &mut rng);
+    for strategy in Strategy::ALL {
+        let cfg =
+            LloydConfig { max_iters: 40, strategy, threads: 4, ..LloydConfig::default() };
+        let cold = accel::run(&data, &s.centers, &cfg);
+        let warm = accel::run_warm(&data, &s, &cfg);
+        assert_eq!(cold.assignments, warm.assignments, "{strategy:?}");
+        assert_eq!(cold.inertia_trace, warm.inertia_trace, "{strategy:?}");
+        assert_eq!(cold.centers, warm.centers, "{strategy:?}");
+        assert!(
+            warm.stats.distances <= cold.stats.distances,
+            "{strategy:?}: warm start added distance work"
+        );
     }
 }
 

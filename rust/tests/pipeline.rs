@@ -1,7 +1,8 @@
 //! End-to-end pipeline integration: catalog instance → seeding → Lloyd →
 //! quality; coordinator sweep → report; traced run → cache metrics.
 
-use geokmpp::coordinator::{JobSpec, Report, Scheduler};
+use geokmpp::coordinator::{JobSpec, LloydPhase, Report, Scheduler};
+use geokmpp::kmeans::accel::Strategy;
 use geokmpp::core::rng::Pcg64;
 use geokmpp::data::catalog::by_name;
 use geokmpp::kmeans::inertia::inertia;
@@ -72,6 +73,7 @@ fn coordinator_sweep_to_report() {
                 rep,
                 seed: 23,
                 threads: 1,
+                lloyd: Some(LloydPhase { strategy: Strategy::Hamerly, max_iters: 20 }),
             });
         }
     }
@@ -84,6 +86,18 @@ fn coordinator_sweep_to_report() {
         })
         .unwrap();
     assert!(speedup_visits < 1.0, "tie should visit fewer points: {speedup_visits}");
+    // The clustering phase rode along: every cell aggregates Lloyd counters,
+    // and the bounds pruned (fewer distances than the naive n·k·iters).
+    for variant in Variant::ALL {
+        let cell = report.cell("S-NS", 16, variant).unwrap();
+        let l = cell.lloyd.as_ref().expect("cell missing clustering phase");
+        assert!(l.stats.visited_points > 0, "{variant:?}");
+        assert!(l.mean_iterations >= 1.0, "{variant:?}");
+        assert!(
+            l.stats.distances < l.stats.visited_points * 16,
+            "{variant:?}: Hamerly never pruned"
+        );
+    }
 }
 
 #[test]
