@@ -11,15 +11,21 @@
 //!   default here so a `--threads` sweep varies only the threading knob
 //!   (pass `--variant tie` for the paper's single-threaded baseline).
 //!
+//! `--lloyd-strategy NAME` appends a clustering phase to every job. The
+//! name is parsed through `Strategy`'s `FromStr` — the engine's single
+//! source of truth — so every strategy the engine knows about (see
+//! `Strategy::ALL`) is runnable here without touching this example.
+//!
 //! ```sh
 //! cargo run --release --example concurrent_jobs [-- --jobs 8 --k 256 --threads 4]
 //! ```
 
 use geokmpp::cli::Args;
-use geokmpp::coordinator::jobs::JobSpec;
+use geokmpp::coordinator::jobs::{JobSpec, LloydPhase};
 use geokmpp::coordinator::scheduler::run_concurrent;
 use geokmpp::core::rng::Pcg64;
 use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::accel::Strategy;
 use geokmpp::seeding::{seed_with, D2Picker, SeedConfig, Variant};
 use geokmpp::simcache::hierarchy::HierarchyConfig;
 use geokmpp::simcache::{IpcModel, TracingSink};
@@ -35,15 +41,27 @@ fn main() {
     if threads > 1 && variant != Variant::Full {
         eprintln!("note: --threads shards the full variant; {} ignores it", variant.name());
     }
+    let lloyd = args.get("lloyd-strategy").map(|s| LloydPhase {
+        strategy: s.parse::<Strategy>().expect("bad --lloyd-strategy"),
+        max_iters: args.get_or("lloyd-iters", 50).unwrap(),
+    });
 
     let inst = by_name("3DR").unwrap();
     let data = Arc::new(inst.generate_n(n));
     let model = IpcModel::default();
 
-    println!("3DR-like, n={n}, k={k}, variant={}, in-job threads={threads}\n", variant.name());
+    let phase = lloyd.map_or("-".to_string(), |p| p.strategy.name().to_string());
+    println!(
+        "3DR-like, n={n}, k={k}, variant={}, in-job threads={threads}, lloyd={phase}\n",
+        variant.name()
+    );
     println!(
         "{:>5}  {:>12}  {:>12}  {:>12}  {:>6}",
-        "jobs", "time mean s", "L1 miss %", "LLC miss %", "IPC"
+        "jobs",
+        "time mean s",
+        "L1 miss %",
+        "LLC miss %",
+        "IPC"
     );
     for j in 1..=max_jobs {
         // Measured: j synchronized OS threads, each running a job that may
@@ -56,7 +74,7 @@ fn main() {
             rep: 0,
             seed: 11,
             threads,
-            lloyd: None,
+            lloyd,
         };
         let times = run_concurrent(&spec, j);
         let mean = times.iter().sum::<f64>() / times.len() as f64;

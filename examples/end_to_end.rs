@@ -25,9 +25,7 @@ use geokmpp::data::catalog::by_name;
 use geokmpp::kmeans::lloyd::LloydConfig;
 use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
 use geokmpp::runtime::{Executor, Manifest};
-use geokmpp::seeding::{
-    seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant,
-};
+use geokmpp::seeding::{seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant};
 
 fn main() {
     let n = 60_000;
@@ -74,8 +72,8 @@ fn main() {
         );
 
         println!("\n[3/4] Lloyd via XLA assignment executable");
-        let lr = lloyd_xla(&data, &hybrid.centers, &LloydConfig { max_iters: 30, ..Default::default() }, &mut ex)
-            .expect("lloyd");
+        let cfg = LloydConfig { max_iters: 30, ..Default::default() };
+        let lr = lloyd_xla(&data, &hybrid.centers, &cfg, &mut ex).expect("lloyd");
         print!("  inertia curve:");
         for (i, v) in lr.inertia_trace.iter().enumerate() {
             if i % 5 == 0 || i + 1 == lr.inertia_trace.len() {

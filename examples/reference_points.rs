@@ -19,7 +19,11 @@ fn main() {
     println!("instance YAH-like (n={}, d={}), full variant, k={k}:\n", data.rows(), data.cols());
     println!(
         "{:>10}  {:>8}  {:>12}  {:>14}  {:>9}",
-        "refpoint", "NV%", "distances", "norm rejects", "time ms"
+        "refpoint",
+        "NV%",
+        "distances",
+        "norm rejects",
+        "time ms"
     );
     for rp in RefPoint::ALL {
         let nv = rp.norm_variance(&data);

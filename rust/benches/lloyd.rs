@@ -1,13 +1,17 @@
-//! Bounds-accelerated Lloyd strategy comparison: naive vs Hamerly vs Elkan
-//! on a low-dimensional instance (where Hamerly's cheap bookkeeping should
-//! win) and a high-dimensional one (where Elkan's per-center bounds and the
-//! norm filter amortize), at small and large k.
+//! Bounds-accelerated Lloyd strategy comparison across the full
+//! `Strategy::ALL` matrix (naive / hamerly / annulus / yinyang / elkan) on
+//! a low-dimensional instance (where the cheap TI bookkeeping should win)
+//! and a high-dimensional high-norm-variance one (where the per-center
+//! bounds and the norm machinery amortize), at small and large k.
 //!
 //! Every strategy is exact — bit-identical assignments and inertia traces —
 //! so the rows differ only in how much work the geometric filters skipped.
-//! The summary prints wall-clock speedups and the distance-computation
-//! ratio per strategy (the clustering-phase analogue of the paper's Table 2
-//! accounting). `GEOKMPP_BENCH_QUICK=1` shrinks everything for CI.
+//! The summary prints wall-clock speedups, the distance-computation ratio
+//! and the prune breakdown per strategy (the clustering-phase analogue of
+//! the paper's Table 2 accounting). Iterating `Strategy::ALL` /
+//! `Strategy::ACCELERATED` keeps the bench in lockstep with the engine: a
+//! new strategy lands here without touching this file.
+//! `GEOKMPP_BENCH_QUICK=1` shrinks everything for CI.
 
 use geokmpp::bench::{black_box, Bench};
 use geokmpp::core::rng::Pcg64;
@@ -24,7 +28,7 @@ fn main() {
     let threads = 1; // strategy comparison first; threads are benched below
 
     let mut b = Bench::from_env("lloyd");
-    let mut distance_rows: Vec<(String, u64)> = Vec::new();
+    let mut distance_rows: Vec<(String, u64, String)> = Vec::new();
 
     for inst_name in ["S-NS", "GSAD"] {
         let inst = by_name(inst_name).unwrap();
@@ -37,12 +41,14 @@ fn main() {
             for strategy in Strategy::ALL {
                 let cfg = LloydConfig { max_iters, strategy, threads, ..LloydConfig::default() };
                 let mut last = 0u64;
+                let mut mix = String::new();
                 b.bench(&format!("{}/k{k}/{}", inst_name, strategy.name()), || {
                     let r = run_warm(&data, &s, &cfg);
                     last = r.stats.distances;
+                    mix = r.stats.prune_mix();
                     black_box(r.iterations)
                 });
-                distance_rows.push((format!("{}/k{k}/{}", inst_name, strategy.name()), last));
+                distance_rows.push((format!("{}/k{k}/{}", inst_name, strategy.name()), last, mix));
             }
         }
     }
@@ -68,30 +74,33 @@ fn main() {
     }
     b.finish();
 
-    // Summary: per (instance, k), speedup and distance ratio vs naive.
+    // Summary: per (instance, k), speedup, distance ratio and prune
+    // breakdown (bound/center/group/annulus/norm) vs naive.
     // (BenchResult ids carry the `lloyd/` group prefix; distance_rows don't.)
     let mean_of = |id: &str| {
         let full = format!("lloyd/{id}");
         b.results().iter().find(|r| r.id == full).map(|r| r.ns.mean)
     };
     let dist_of = |id: &str| distance_rows.iter().find(|r| r.0 == id).map(|r| r.1);
+    let mix_of = |id: &str| distance_rows.iter().find(|r| r.0 == id).map(|r| r.2.clone());
     for inst_name in ["S-NS", "GSAD"] {
         for &k in ks {
             let base_id = format!("{inst_name}/k{k}/naive");
             if let (Some(t1), Some(d1)) = (mean_of(&base_id), dist_of(&base_id)) {
-                let mut parts = Vec::new();
-                for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+                println!("vs naive {inst_name}/k{k}");
+                for strategy in Strategy::ACCELERATED {
                     let id = format!("{inst_name}/k{k}/{}", strategy.name());
-                    if let (Some(tn), Some(dn)) = (mean_of(&id), dist_of(&id)) {
-                        parts.push(format!(
-                            "{}: {:.2}x time, {:.1}% of naive distances",
+                    if let (Some(tn), Some(dn), Some(mix)) =
+                        (mean_of(&id), dist_of(&id), mix_of(&id))
+                    {
+                        println!(
+                            "  {:<8} {:.2}x time, {:.1}% of naive dists, b/c/g/a/n {mix}",
                             strategy.name(),
                             t1 / tn,
                             100.0 * dn as f64 / d1.max(1) as f64
-                        ));
+                        );
                     }
                 }
-                println!("vs naive {inst_name}/k{k}  {}", parts.join("  |  "));
             }
         }
     }

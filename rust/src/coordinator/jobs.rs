@@ -209,7 +209,7 @@ mod tests {
             lloyd: Some(LloydPhase { strategy, max_iters: 50 }),
         };
         let naive = mk(Strategy::Naive).run().lloyd.unwrap();
-        for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+        for strategy in Strategy::ACCELERATED {
             let a = mk(strategy).run().lloyd.unwrap();
             let b = mk(strategy).run().lloyd.unwrap();
             assert_eq!(a.stats, b.stats, "{strategy:?} not deterministic");

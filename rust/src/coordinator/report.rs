@@ -143,20 +143,35 @@ impl Report {
     }
 
     /// Renders the full report as a table. Clustering-phase columns show
-    /// `-` for seeding-only cells.
+    /// `-` for seeding-only cells; `lloyd_prune_mix` breaks the prune total
+    /// into its `bound/center/group/annulus/norm` buckets so strategy
+    /// comparisons show *which* geometric filter paid for the savings.
     pub fn to_table(&self) -> Table {
         let mut t = Table::new([
-            "instance", "k", "variant", "reps", "time_s", "visited", "distances",
-            "center_dists", "norms", "cost", "lloyd_dists", "lloyd_prunes", "inertia",
+            "instance",
+            "k",
+            "variant",
+            "reps",
+            "time_s",
+            "visited",
+            "distances",
+            "center_dists",
+            "norms",
+            "cost",
+            "lloyd_dists",
+            "lloyd_prunes",
+            "lloyd_prune_mix",
+            "inertia",
         ]);
         for ((inst, k, variant), c) in &self.cells {
-            let (ld, lp, li) = match &c.lloyd {
+            let (ld, lp, lm, li) = match &c.lloyd {
                 Some(l) => (
                     l.stats.distances.to_string(),
                     l.stats.prunes_total().to_string(),
+                    l.stats.prune_mix(),
                     fnum(l.mean_inertia, 2),
                 ),
-                None => ("-".into(), "-".into(), "-".into()),
+                None => ("-".into(), "-".into(), "-".into(), "-".into()),
             };
             t.row([
                 inst.clone(),
@@ -171,6 +186,7 @@ impl Report {
                 fnum(c.mean_cost, 2),
                 ld,
                 lp,
+                lm,
                 li,
             ]);
         }
@@ -244,8 +260,13 @@ mod tests {
         assert_eq!(l.stats.bound_prunes, 4);
         assert_eq!(l.mean_inertia, 60.0);
         assert_eq!(l.mean_iterations, 10.0);
+        // The prune breakdown column carries the per-bucket means.
+        let t = rep.to_table();
+        let mix_col = t.headers().iter().position(|h| h == "lloyd_prune_mix").unwrap();
+        assert_eq!(t.rows()[0][mix_col], "4/0/0/0/0");
         // Seeding-only cells render `-` in the clustering columns.
         let t = Report::aggregate(&[result(Variant::Tie, 0, 1)]).to_table();
         assert_eq!(t.rows()[0].last().unwrap(), "-");
+        assert_eq!(t.rows()[0][mix_col], "-");
     }
 }

@@ -97,7 +97,9 @@ impl Instance {
             // CIF-C: dense central mass, low NV.
             ("CIF-C", _) => synth::core_halo(n, d, 0.9, 2.0, 30.0, &mut rng),
             // CIF-T: like CIF-C but norm-spread (bimodal radial structure).
-            ("CIF-T", _) => synth::gmm_radial(n, d, &[20.0, 23.0, 160.0, 166.0], 6.0, true, &mut rng),
+            ("CIF-T", _) => {
+                synth::gmm_radial(n, d, &[20.0, 23.0, 160.0, 166.0], 6.0, true, &mut rng)
+            }
             // RQ: two clusters *equidistant from the origin* — origin norms
             // are unimodal/tight (very low NV, paper: 2.60) while a
             // reference point inside either cluster sees a bimodal distance
@@ -105,7 +107,9 @@ impl Instance {
             ("RQ", _) => synth::gmm_radial(n, d, &[250.0, 250.0, 251.0], 2.5, true, &mut rng),
             // S-NS: skin/non-skin pixels — dark vs light clusters in the
             // positive RGB cube → strongly bimodal norms.
-            ("S-NS", _) => synth::gmm_radial(n, d, &[40.0, 44.0, 380.0, 390.0], 6.0, true, &mut rng),
+            ("S-NS", _) => {
+                synth::gmm_radial(n, d, &[40.0, 44.0, 380.0, 390.0], 6.0, true, &mut rng)
+            }
             // 3DR: road polylines, positive coordinates near the origin.
             ("3DR", _) => synth::polyline(n, d, 24, 0.3, &mut rng),
             // RNA: central mass, low NV.
@@ -116,7 +120,10 @@ impl Instance {
             }
             // HPC: household power — tight operating-point cloud, offset.
             ("HPC", _) => {
-                let mut m = synth::gmm(&synth::GmmSpec { box_side: 15.0, sigma: 2.0, ..synth::GmmSpec::new(n, d, 4) }, &mut rng);
+                let mut m = synth::gmm(
+                    &synth::GmmSpec { box_side: 15.0, sigma: 2.0, ..synth::GmmSpec::new(n, d, 4) },
+                    &mut rng,
+                );
                 m.shift_by(&vec![-180.0; d]);
                 m
             }
@@ -138,10 +145,15 @@ impl Instance {
 
             // --- High-dimensional group ------------------------------------
             // GSAD: well-separated sensor-drift batches, high NV.
-            ("GSAD", _) => synth::gmm_radial(n, d, &[20.0, 22.0, 900.0, 905.0], 3.0, false, &mut rng),
+            ("GSAD", _) => {
+                synth::gmm_radial(n, d, &[20.0, 22.0, 900.0, 905.0], 3.0, false, &mut rng)
+            }
             // PHY: particle-physics features, concentrated norms.
             ("PHY", _) => {
-                let mut m = synth::gmm(&synth::GmmSpec { box_side: 8.0, sigma: 2.5, ..synth::GmmSpec::new(n, d, 5) }, &mut rng);
+                let mut m = synth::gmm(
+                    &synth::GmmSpec { box_side: 8.0, sigma: 2.5, ..synth::GmmSpec::new(n, d, 5) },
+                    &mut rng,
+                );
                 m.shift_by(&vec![-40.0; d]);
                 m
             }
@@ -174,7 +186,9 @@ impl Instance {
                 m
             }
             // PTN: protein features, bimodal high NV + separated clusters.
-            ("PTN", _) => synth::gmm_radial(n, d, &[20.0, 23.0, 700.0, 706.0], 4.0, false, &mut rng),
+            ("PTN", _) => {
+                synth::gmm_radial(n, d, &[20.0, 23.0, 700.0, 706.0], 4.0, false, &mut rng)
+            }
             // YP: year-prediction audio features, spread radial profile.
             ("YP", _) => synth::shells(n, d, &[20.0, 22.0, 250.0, 260.0, 270.0], 8.0, &mut rng),
             // SUSY: single cloud with a spread radial profile, mid NV.

@@ -123,7 +123,13 @@ pub fn core_halo<R: Rng>(
 
 /// Points along a random polyline network — the 3D-road-network shape
 /// (low-dimensional, spatially spread, locally 1-D).
-pub fn polyline<R: Rng>(n: usize, dims: usize, segments: usize, jitter: f32, rng: &mut R) -> Matrix {
+pub fn polyline<R: Rng>(
+    n: usize,
+    dims: usize,
+    segments: usize,
+    jitter: f32,
+    rng: &mut R,
+) -> Matrix {
     assert!(segments >= 1);
     // Random waypoints in [0, 100]^dims.
     let mut waypoints = Vec::with_capacity((segments + 1) * dims);
@@ -147,7 +153,13 @@ pub fn polyline<R: Rng>(n: usize, dims: usize, segments: usize, jitter: f32, rng
 /// Low-rank "image-like" data: points = nonneg mixture of `rank` basis
 /// patterns + noise, all coordinates clamped to `[0, 255]` (MNIST/CIFAR-ish:
 /// high ambient dimension, much lower intrinsic dimension).
-pub fn lowrank_image<R: Rng>(n: usize, dims: usize, rank: usize, noise: f32, rng: &mut R) -> Matrix {
+pub fn lowrank_image<R: Rng>(
+    n: usize,
+    dims: usize,
+    rank: usize,
+    noise: f32,
+    rng: &mut R,
+) -> Matrix {
     let mut basis = Vec::with_capacity(rank * dims);
     for _ in 0..rank * dims {
         basis.push(rng.uniform_f32() * 255.0);

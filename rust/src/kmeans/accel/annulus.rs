@@ -1,0 +1,148 @@
+//! Annulus-restricted assignment step, per shard — Hamerly's bounds plus
+//! the §4.3 norm filter resolved *once per point* by binary search instead
+//! of once per candidate (Newling & Fleuret's exact-bounds framing).
+//!
+//! The per-point state is exactly Hamerly's: an ED upper bound `u` on the
+//! incumbent distance and one global ED lower bound `l`, maintained under
+//! center motion and tested (after tightening `u` to exact) against
+//! `max(s(a)/2, l)`. The difference is the candidate scan of a surviving
+//! point: any center that could strictly beat the incumbent satisfies
+//! `ED(x, c) < u`, and since `|‖x‖ − ‖c‖| ≤ ED(x, c)`, its norm must lie in
+//! the open annulus `(‖x‖ − u, ‖x‖ + u)`. Centers are sorted by norm once
+//! per iteration, so the surviving candidate set is one `partition_point`
+//! window — every center outside it is skipped without even a norm-gap
+//! comparison (`annulus_prunes`). Inside the window the per-candidate norm
+//! filter still applies against the shrinking best (`norm_prunes`), exactly
+//! as in the Hamerly scan.
+//!
+//! The window visits candidates in norm order, not index order, so the
+//! in-window argmin uses an explicit `(distance, index)` tie-break to
+//! reproduce the naive reference's lowest-index-wins argmin. The refreshed
+//! `l` is the second-smallest candidate ED bound, where the whole outside
+//! region contributes its nearest norm gaps (`‖x‖ − ‖c_below‖` and
+//! `‖c_above‖ − ‖x‖` at the window edges — valid lower bounds for every
+//! skipped center, both ≥ u by construction).
+
+use super::{IterCtx, ShardView};
+use crate::core::distance::sed;
+use crate::metrics::lloyd::LloydStats;
+
+/// Owner id for lower-bound contributions that no center owns (the
+/// outside-annulus region): never equal to a center index.
+const NO_OWNER: usize = usize::MAX;
+
+/// Two-smallest tracking of candidate ED lower bounds (Hamerly-style).
+#[inline]
+fn push(e: f64, j: usize, e1: &mut f64, e1_j: &mut usize, e2: &mut f64) {
+    if e < *e1 {
+        *e2 = *e1;
+        *e1 = e;
+        *e1_j = j;
+    } else if e < *e2 {
+        *e2 = e;
+    }
+}
+
+pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
+    let mut st = LloydStats::default();
+    let (d1, d2) = ctx.dmax;
+    let k = ctx.k;
+    for s in 0..v.assign.len() {
+        let i = v.start + s;
+        st.visited_points += 1;
+        let a = v.assign[s] as usize;
+
+        // Motion-adjusted bounds (δ from the previous update step).
+        let da = ctx.deltas[a];
+        if da > 0.0 {
+            v.ub[s] += da;
+            v.tight[s] = false;
+        }
+        let drop = if da == d1 { d2 } else { d1 };
+        if drop > 0.0 {
+            v.lb[s] = (v.lb[s] - drop).max(0.0);
+        }
+
+        let thresh = ctx.s_half[a].max(v.lb[s]);
+        if v.tight[s] && v.ub[s] <= thresh {
+            st.bound_prunes += 1;
+            continue;
+        }
+        if !v.tight[s] && v.ub[s].is_finite() {
+            // Tighten: one exact distance to the incumbent (required for the
+            // inertia trace regardless), then re-test the bound.
+            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            st.distances += 1;
+            v.dist[s] = dv;
+            v.ub[s] = (dv as f64).sqrt();
+            v.tight[s] = true;
+            if v.ub[s] <= thresh {
+                st.bound_prunes += 1;
+                continue;
+            }
+        }
+
+        // Annulus-restricted candidate scan. `u` is the exact incumbent ED
+        // here (∞ only on the cold-start iteration, where the window
+        // degenerates to all of 0..k and the scan is the naive one).
+        st.full_scans += 1;
+        let row = ctx.data.row(i);
+        let x = ctx.norms[i] as f64;
+        let u = v.ub[s];
+        let lo = ctx.csorted.partition_point(|&(cn, _)| cn <= x - u);
+        let hi = ctx.csorted.partition_point(|&(cn, _)| cn < x + u);
+
+        let (mut best, mut best_j) =
+            if v.tight[s] { (v.dist[s], a as u32) } else { (f32::INFINITY, 0u32) };
+        let mut e1 = f64::INFINITY;
+        let mut e1_j = NO_OWNER;
+        let mut e2 = f64::INFINITY;
+        if v.tight[s] {
+            // The incumbent participates with its cached exact distance,
+            // whether or not its norm falls inside the window.
+            push(u, a, &mut e1, &mut e1_j, &mut e2);
+        }
+        // The outside region's nearest norm gaps bound every skipped center.
+        if lo > 0 {
+            push(x - ctx.csorted[lo - 1].0, NO_OWNER, &mut e1, &mut e1_j, &mut e2);
+        }
+        if hi < k {
+            push(ctx.csorted[hi].0 - x, NO_OWNER, &mut e1, &mut e1_j, &mut e2);
+        }
+        let mut outside = (k - (hi - lo)) as u64;
+        if outside > 0 && v.tight[s] && (x - ctx.cnorms[a] as f64).abs() >= u {
+            outside -= 1; // the incumbent on the window edge was not pruned
+        }
+        st.annulus_prunes += outside;
+
+        for &(_, id) in &ctx.csorted[lo..hi] {
+            let j = id as usize;
+            if j == a && v.tight[s] {
+                continue; // cached and already contributed above
+            }
+            let dn = ctx.norms[i] - ctx.cnorms[j];
+            if dn * dn >= best {
+                // Norm filter against the shrinking best, as in Hamerly.
+                st.norm_prunes += 1;
+                push(dn.abs() as f64, j, &mut e1, &mut e1_j, &mut e2);
+                continue;
+            }
+            let dv = sed(row, ctx.centers.row(j));
+            st.distances += 1;
+            push((dv as f64).sqrt(), j, &mut e1, &mut e1_j, &mut e2);
+            // Norm order, not index order: lexicographic (distance, index)
+            // reproduces the naive reference's lowest-index-wins argmin.
+            if dv < best || (dv == best && (j as u32) < best_j) {
+                best = dv;
+                best_j = j as u32;
+            }
+        }
+        v.assign[s] = best_j;
+        v.dist[s] = best;
+        v.ub[s] = (best as f64).sqrt();
+        v.tight[s] = true;
+        // Min over candidates ≠ best_j of the candidate lower bounds.
+        v.lb[s] = if e1_j == best_j as usize { e2 } else { e1 };
+    }
+    st
+}

@@ -16,6 +16,14 @@
 //! * [`Strategy::Naive`] — the reference `O(n·k)` scan (sharded, no bounds).
 //! * [`Strategy::Hamerly`] — one global lower bound + one upper bound per
 //!   point; cheapest bookkeeping, wins at low dimension / small k.
+//! * [`Strategy::Annulus`] — Hamerly's bounds plus a norm annulus: centers
+//!   sorted by norm, candidates restricted by binary search to
+//!   `(‖x‖ − u, ‖x‖ + u)` (Newling & Fleuret's exact-bounds framing of the
+//!   §4.3 norm filter); wins when norm variance is high.
+//! * [`Strategy::Yinyang`] — one upper bound plus per-*group* lower bounds
+//!   (centers partitioned into ~k/10 groups by k-means over the centers at
+//!   init); group-drift filtering sits between Hamerly's single bound and
+//!   Elkan's k bounds, wins at moderate-to-large k.
 //! * [`Strategy::Elkan`] — per-(point, center) lower bounds plus the
 //!   center–center half-distance matrix; more memory and `O(n·k)` bound
 //!   maintenance, wins when distances are expensive (high dimension).
@@ -60,9 +68,11 @@
 // (lint findings here are hard errors, unlike the advisory repo-wide pass).
 #![deny(clippy::all)]
 
+mod annulus;
 mod elkan;
 mod hamerly;
 mod naive;
+mod yinyang;
 
 pub use crate::metrics::lloyd::LloydStats;
 
@@ -81,31 +91,48 @@ pub enum Strategy {
     Naive,
     /// One upper + one global lower bound per point (Hamerly).
     Hamerly,
+    /// Hamerly's bounds + candidate restriction to the norm annulus
+    /// `(‖x‖ − u, ‖x‖ + u)` over centers sorted by norm (Newling & Fleuret).
+    Annulus,
+    /// One upper bound + per-group lower bounds over ~k/10 center groups
+    /// (Yinyang-style group-drift filtering).
+    Yinyang,
     /// Per-(point, center) lower bounds + center–center matrix (Elkan).
     Elkan,
 }
 
 impl Strategy {
-    /// All strategies, cheapest bookkeeping first.
-    pub const ALL: [Strategy; 3] = [Strategy::Naive, Strategy::Hamerly, Strategy::Elkan];
+    /// All strategies, cheapest bookkeeping first. The single source of
+    /// truth for sweeps, benches and CI gates — new strategies added here
+    /// are picked up everywhere (see also [`Strategy::ACCELERATED`]).
+    pub const ALL: [Strategy; 5] = [
+        Strategy::Naive,
+        Strategy::Hamerly,
+        Strategy::Annulus,
+        Strategy::Yinyang,
+        Strategy::Elkan,
+    ];
+
+    /// Every bounded strategy — [`Strategy::ALL`] minus the naive reference.
+    /// Exactness suites pin each of these against naive; the CI perf-smoke
+    /// gate requires each to report strictly fewer distance computations.
+    pub const ACCELERATED: [Strategy; 4] =
+        [Strategy::Hamerly, Strategy::Annulus, Strategy::Yinyang, Strategy::Elkan];
 
     /// Short identifier used in reports and CLI flags.
     pub fn name(&self) -> &'static str {
         match self {
             Strategy::Naive => "naive",
             Strategy::Hamerly => "hamerly",
+            Strategy::Annulus => "annulus",
+            Strategy::Yinyang => "yinyang",
             Strategy::Elkan => "elkan",
         }
     }
 
     /// Parses a CLI name.
     pub fn parse(s: &str) -> Option<Strategy> {
-        match s {
-            "naive" => Some(Strategy::Naive),
-            "hamerly" => Some(Strategy::Hamerly),
-            "elkan" => Some(Strategy::Elkan),
-            _ => None,
-        }
+        Strategy::ALL.into_iter().find(|v| v.name() == s)
     }
 }
 
@@ -130,6 +157,14 @@ struct IterCtx<'a> {
     s_half: &'a [f64],
     /// `k × k` half center–center ED matrix (Elkan only; empty otherwise).
     cc_half: &'a [f64],
+    /// Center → group id (Yinyang only; empty otherwise).
+    group_of: &'a [u32],
+    /// Per-group max center movement this iteration (Yinyang only).
+    gdrift: &'a [f64],
+    /// `(‖c‖, center id)` sorted ascending by norm, then id (Annulus only;
+    /// empty otherwise). Norms are the f64-widened `cnorms` entries, so the
+    /// binary-searched window and the per-candidate norm gap agree.
+    csorted: &'a [(f64, u32)],
     /// Center movement (ED) since the bounds were last adjusted.
     deltas: &'a [f64],
     /// Largest and second-largest entries of `deltas`.
@@ -148,9 +183,12 @@ struct ShardView<'a> {
     tight: &'a mut [bool],
     /// ED upper bound on the distance to the assigned center.
     ub: &'a mut [f64],
-    /// Hamerly's global lower bound (ED) to any non-assigned center.
+    /// Global lower bound (ED) to any non-assigned center (Hamerly and
+    /// Annulus).
     lb: &'a mut [f64],
-    /// Elkan's per-center lower bounds, row-major `len × k`.
+    /// Per-candidate lower bounds, row-major `len × stride`: stride `k` for
+    /// Elkan (one bound per center), stride `groups` for Yinyang (one bound
+    /// per center group, excluding the assigned center).
     lbs: &'a mut [f64],
 }
 
@@ -212,8 +250,33 @@ fn engine(
         ),
         None => (vec![0u32; n], vec![f32::INFINITY; n], vec![false; n], vec![f64::INFINITY; n]),
     };
-    let mut lb = if strategy == Strategy::Hamerly { vec![0f64; n] } else { Vec::new() };
-    let mut lbs = if strategy == Strategy::Elkan { vec![0f64; n * k] } else { Vec::new() };
+    let mut lb = if matches!(strategy, Strategy::Hamerly | Strategy::Annulus) {
+        vec![0f64; n]
+    } else {
+        Vec::new()
+    };
+
+    // Yinyang center groups: fixed for the whole run, built by a small
+    // deterministic k-means over the *initial* centers. The grouping only
+    // affects how much work is pruned, never the result.
+    let (group_of, groups) = if strategy == Strategy::Yinyang {
+        let t = yinyang::group_count(k);
+        let (g, grouping_dists) = yinyang::group_centers(&centers, t);
+        stats.center_distances += grouping_dists;
+        (g, t)
+    } else {
+        (Vec::new(), 0)
+    };
+    let mut gdrift = vec![0f64; groups];
+
+    // Per-candidate lower bounds: stride k for Elkan, stride `groups` for
+    // Yinyang (see `ShardView::lbs`).
+    let lbs_stride = match strategy {
+        Strategy::Elkan => k,
+        Strategy::Yinyang => groups,
+        _ => 0,
+    };
+    let mut lbs = vec![0f64; n * lbs_stride];
 
     let mut deltas = vec![0f64; k];
     let mut dmax = (0f64, 0f64);
@@ -226,6 +289,8 @@ fn engine(
     let mut cnorms = vec![0f32; if bounded { k } else { 0 }];
     let mut s_half = vec![0f64; if bounded { k } else { 0 }];
     let mut cc_half = vec![0f64; if strategy == Strategy::Elkan { k * k } else { 0 }];
+    let mut csorted: Vec<(f64, u32)> =
+        if strategy == Strategy::Annulus { Vec::with_capacity(k) } else { Vec::new() };
 
     for _ in 0..cfg.max_iters {
         iterations += 1;
@@ -253,6 +318,20 @@ fn engine(
                     }
                 }
             }
+            if strategy == Strategy::Annulus {
+                csorted.clear();
+                csorted.extend(cnorms.iter().enumerate().map(|(j, &cn)| (cn as f64, j as u32)));
+                csorted.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            }
+            if strategy == Strategy::Yinyang {
+                gdrift.fill(0.0);
+                for (j, &dj) in deltas.iter().enumerate() {
+                    let g = group_of[j] as usize;
+                    if dj > gdrift[g] {
+                        gdrift[g] = dj;
+                    }
+                }
+            }
         }
 
         // --- Assignment step: one worker per shard, disjoint &mut state.
@@ -265,6 +344,9 @@ fn engine(
                 cnorms: &cnorms,
                 s_half: &s_half,
                 cc_half: &cc_half,
+                group_of: &group_of,
+                gdrift: &gdrift,
+                csorted: &csorted,
                 deltas: &deltas,
                 dmax,
             };
@@ -280,7 +362,7 @@ fn engine(
             let m_parts: Vec<&mut [f64]> = if lbs.is_empty() {
                 (0..shards.count()).map(|_| Default::default()).collect()
             } else {
-                shards.split_mut_stride(&mut lbs, k)
+                shards.split_mut_stride(&mut lbs, lbs_stride)
             };
             let per_shard: Vec<LloydStats> = thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(shards.count());
@@ -306,6 +388,8 @@ fn engine(
                         match strategy {
                             Strategy::Naive => naive::scan(ctx, &mut view),
                             Strategy::Hamerly => hamerly::scan(ctx, &mut view),
+                            Strategy::Annulus => annulus::scan(ctx, &mut view),
+                            Strategy::Yinyang => yinyang::scan(ctx, &mut view),
                             Strategy::Elkan => elkan::scan(ctx, &mut view),
                         }
                     }));
@@ -410,6 +494,16 @@ mod tests {
         assert!("nope".parse::<Strategy>().is_err());
     }
 
+    /// `ACCELERATED` is exactly `ALL` minus the naive reference — the two
+    /// constants cannot drift apart when a strategy is added.
+    #[test]
+    fn accelerated_is_all_minus_naive() {
+        let bounded: Vec<Strategy> =
+            Strategy::ALL.into_iter().filter(|&s| s != Strategy::Naive).collect();
+        assert_eq!(bounded, Strategy::ACCELERATED.to_vec());
+        assert!(Strategy::ALL.contains(&Strategy::Naive));
+    }
+
     /// The engine's Naive strategy is the reference loop, sharded: results
     /// must be bit-identical to `lloyd()` at every thread count.
     #[test]
@@ -436,7 +530,7 @@ mod tests {
             let idx: Vec<usize> = (0..16).map(|j| j * 26 + 1).collect();
             let init = data.gather_rows(&idx);
             let reference = lloyd(&data, &init, &LloydConfig::default());
-            for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+            for strategy in Strategy::ACCELERATED {
                 for threads in [1usize, 4] {
                     let r = run(&data, &init, &cfg_of(strategy, threads));
                     assert_eq!(
@@ -527,7 +621,7 @@ mod tests {
             "test setup: cluster 1 should be empty"
         );
         assert_eq!(reference.centers.row(1), &[0.5, 1.0], "stale center moved");
-        for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+        for strategy in Strategy::ACCELERATED {
             for threads in [1usize, 4] {
                 let r = run(&data, &init, &cfg_of(strategy, threads));
                 assert_eq!(
@@ -542,6 +636,47 @@ mod tests {
                 assert_eq!(r.centers.row(1), &[0.5, 1.0], "{strategy:?}: stale center");
             }
         }
+    }
+
+    /// The strategy-specific pruning buckets actually fire: Yinyang's group
+    /// bounds and the annulus window both skip candidates on a run where the
+    /// bounds have room to pay off (k = 16), and each strategy's counters
+    /// land in its own buckets.
+    #[test]
+    fn new_strategies_use_their_own_prune_buckets() {
+        let data = random_data(420, 5, 1);
+        let idx: Vec<usize> = (0..16).map(|j| j * 26 + 1).collect();
+        let init = data.gather_rows(&idx);
+        let yy = run(&data, &init, &cfg_of(Strategy::Yinyang, 1)).stats;
+        assert!(yy.group_prunes > 0, "yinyang never group-pruned: {yy:?}");
+        assert_eq!(yy.annulus_prunes, 0, "yinyang counted annulus prunes");
+        assert_eq!(yy.center_prunes, 0, "yinyang counted Elkan prunes");
+        let an = run(&data, &init, &cfg_of(Strategy::Annulus, 1)).stats;
+        assert!(an.annulus_prunes > 0, "annulus window never pruned: {an:?}");
+        assert_eq!(an.group_prunes, 0, "annulus counted group prunes");
+        assert_eq!(an.center_prunes, 0, "annulus counted Elkan prunes");
+    }
+
+    /// Yinyang's center grouping is deterministic, covers every center, and
+    /// uses ~k/10 groups; `t >= k` degenerates to the identity grouping.
+    #[test]
+    fn center_grouping_is_deterministic_and_complete() {
+        assert_eq!(yinyang::group_count(1), 1);
+        assert_eq!(yinyang::group_count(10), 1);
+        assert_eq!(yinyang::group_count(11), 2);
+        assert_eq!(yinyang::group_count(64), 7);
+        let centers = random_data(32, 4, 3);
+        let t = yinyang::group_count(32);
+        let (a, da) = yinyang::group_centers(&centers, t);
+        let (b, db) = yinyang::group_centers(&centers, t);
+        assert_eq!(a, b, "grouping not deterministic");
+        assert_eq!(da, db);
+        assert!(da > 0, "grouping paid no center distances");
+        assert_eq!(a.len(), 32);
+        assert!(a.iter().all(|&g| (g as usize) < t));
+        let (id, d0) = yinyang::group_centers(&centers, 32);
+        assert_eq!(id, (0..32u32).collect::<Vec<_>>());
+        assert_eq!(d0, 0);
     }
 
     /// k = 1 degenerates to the mean with zero candidate pruning drama.

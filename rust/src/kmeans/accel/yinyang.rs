@@ -1,0 +1,183 @@
+//! Yinyang-style group-bound assignment step, per shard.
+//!
+//! Per point the engine keeps the ED upper bound `u` on the incumbent
+//! distance plus one ED lower bound per *center group* (`lbg[g]`, valid for
+//! every center in group `g` except the assigned center). Groups are fixed
+//! for the whole run: ~k/10 of them, built once by a small deterministic
+//! k-means over the initial centers ([`group_centers`]). After centers move,
+//! `u += δ_a` and `lbg[g] -= max_{j∈g} δ_j` stay valid — the *group drift*
+//! filter: one subtraction per group instead of Elkan's one per center.
+//!
+//! A point is skipped entirely when `u ≤ max(s(a)/2, min_g lbg[g])` (the
+//! Hamerly global test, with the group minimum as the global lower bound;
+//! `u` is tightened to exact and re-tested first, as everywhere in this
+//! engine). A surviving point pays an index-order candidate scan seeded
+//! with the incumbent's exact cached distance (so every filter fires
+//! against the tightest bound from the first candidate on, and the
+//! lexicographic tie-break keeps naive's lowest-index-wins argmin): whole
+//! groups are pruned (`d_best ≤ lbg[g]` — no member of `g` can strictly
+//! beat the incumbent, counted per skipped candidate in `group_prunes`)
+//! before the paper's §4.3 point norm filter and the exact distance. Every
+//! candidate — cached, group-pruned, norm-pruned or computed — contributes
+//! a valid ED lower bound to its group's two smallest, so the refreshed
+//! `lbg` row stays valid for the next iteration (second-smallest when the
+//! smallest belongs to the new incumbent, Hamerly-style).
+
+use super::{IterCtx, ShardView};
+use crate::core::distance::sed;
+use crate::core::matrix::Matrix;
+use crate::kmeans::lloyd::{lloyd, LloydConfig};
+use crate::metrics::lloyd::LloydStats;
+
+/// Number of center groups for `k` centers (~k/10, at least one).
+pub(super) fn group_count(k: usize) -> usize {
+    k.div_ceil(10).max(1)
+}
+
+/// Iteration cap of the deterministic grouping k-means (tiny: it runs over
+/// `k` centers, not `n` points, and usually converges much earlier).
+const GROUPING_ITERS: usize = 8;
+
+/// Partitions the `k` centers into `t` groups by a small Lloyd run over the
+/// centers themselves: evenly spaced centers seed the reference
+/// [`crate::kmeans::lloyd::lloyd`] loop (deterministic, single-threaded, the
+/// same centroid and empty-cluster semantics as everywhere else). Returns
+/// the center → group map and the number of distance computations spent
+/// (charged to the strategy's bookkeeping in
+/// `LloydStats::center_distances` — these are center–center distances).
+pub(super) fn group_centers(centers: &Matrix, t: usize) -> (Vec<u32>, u64) {
+    let k = centers.rows();
+    if t >= k {
+        return ((0..k as u32).collect(), 0);
+    }
+    let seeds: Vec<usize> = (0..t).map(|g| g * k / t).collect();
+    let init = centers.gather_rows(&seeds);
+    let cfg = LloydConfig { max_iters: GROUPING_ITERS, ..LloydConfig::default() };
+    let r = lloyd(centers, &init, &cfg);
+    (r.assignments, r.stats.distances)
+}
+
+pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
+    let mut st = LloydStats::default();
+    let t = ctx.gdrift.len();
+    // Per-group two-smallest candidate bounds, reused across points.
+    let mut e1 = vec![f64::INFINITY; t];
+    let mut e1_j = vec![usize::MAX; t];
+    let mut e2 = vec![f64::INFINITY; t];
+    for s in 0..v.assign.len() {
+        let i = v.start + s;
+        st.visited_points += 1;
+        let a = v.assign[s] as usize;
+        let lrow = &mut v.lbs[s * t..(s + 1) * t];
+
+        // Motion-adjusted bounds (δ from the previous update step).
+        let da = ctx.deltas[a];
+        if da > 0.0 {
+            v.ub[s] += da;
+            v.tight[s] = false;
+        }
+        for (l, &gd) in lrow.iter_mut().zip(ctx.gdrift) {
+            if gd > 0.0 {
+                *l = (*l - gd).max(0.0);
+            }
+        }
+
+        // Global test: the group minimum is Hamerly's global lower bound.
+        let mut glb = f64::INFINITY;
+        for &l in lrow.iter() {
+            if l < glb {
+                glb = l;
+            }
+        }
+        let thresh = ctx.s_half[a].max(glb);
+        if v.tight[s] && v.ub[s] <= thresh {
+            st.bound_prunes += 1;
+            continue;
+        }
+        if !v.tight[s] && v.ub[s].is_finite() {
+            // Tighten: one exact distance to the incumbent (required for the
+            // inertia trace regardless), then re-test the bound.
+            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            st.distances += 1;
+            v.dist[s] = dv;
+            v.ub[s] = (dv as f64).sqrt();
+            v.tight[s] = true;
+            if v.ub[s] <= thresh {
+                st.bound_prunes += 1;
+                continue;
+            }
+        }
+
+        // Group-filtered candidate scan. The exact cached incumbent seeds
+        // the running best (as in the annulus scan), so the group and norm
+        // filters fire against the tightest available bound from the first
+        // candidate on; the lexicographic (distance, index) tie-break then
+        // reproduces the naive reference's lowest-index-wins argmin.
+        st.full_scans += 1;
+        let row = ctx.data.row(i);
+        let (mut best, mut best_j, mut best_ed) = if v.tight[s] {
+            (v.dist[s], a as u32, v.ub[s])
+        } else {
+            (f32::INFINITY, 0u32, f64::INFINITY)
+        };
+        e1.fill(f64::INFINITY);
+        e1_j.fill(usize::MAX);
+        e2.fill(f64::INFINITY);
+        if v.tight[s] {
+            // The incumbent's exact ED is its group's first contribution
+            // (its cached distance is exactly what `sed` would return — its
+            // center has not moved since it was computed).
+            let ga = ctx.group_of[a] as usize;
+            e1[ga] = v.ub[s];
+            e1_j[ga] = a;
+        }
+        for j in 0..ctx.k {
+            if j == a && v.tight[s] {
+                continue; // cached and already contributed above
+            }
+            let g = ctx.group_of[j] as usize;
+            let cand_ed = if best_ed <= lrow[g] {
+                // Group-drift filter: no center in group g (the incumbent
+                // is excluded from its group's bound and handled above) can
+                // strictly beat the current best; the group bound stays a
+                // valid ED lower bound for this candidate.
+                st.group_prunes += 1;
+                lrow[g]
+            } else {
+                let dn = ctx.norms[i] - ctx.cnorms[j];
+                if dn * dn >= best {
+                    // Norm filter: candidate j cannot strictly beat the
+                    // incumbent best; |dn| stays a valid ED lower bound.
+                    st.norm_prunes += 1;
+                    dn.abs() as f64
+                } else {
+                    let dv = sed(row, ctx.centers.row(j));
+                    st.distances += 1;
+                    let e = (dv as f64).sqrt();
+                    if dv < best || (dv == best && (j as u32) < best_j) {
+                        best = dv;
+                        best_j = j as u32;
+                        best_ed = e;
+                    }
+                    e
+                }
+            };
+            if cand_ed < e1[g] {
+                e2[g] = e1[g];
+                e1[g] = cand_ed;
+                e1_j[g] = j;
+            } else if cand_ed < e2[g] {
+                e2[g] = cand_ed;
+            }
+        }
+        v.assign[s] = best_j;
+        v.dist[s] = best;
+        v.ub[s] = best_ed;
+        v.tight[s] = true;
+        // Per group: min over members ≠ best_j of the candidate bounds.
+        for (g, l) in lrow.iter_mut().enumerate() {
+            *l = if e1_j[g] == best_j as usize { e2[g] } else { e1[g] };
+        }
+    }
+    st
+}

@@ -20,8 +20,9 @@ pub struct LloydConfig {
     pub max_iters: usize,
     /// Stop when relative inertia improvement falls below this.
     pub tol: f64,
-    /// Pruning strategy for the assignment step (`Naive` = the reference
-    /// scan; `Hamerly`/`Elkan` skip provably-unchanged candidates exactly).
+    /// Pruning strategy for the assignment step: `Naive` is the reference
+    /// scan; every strategy in [`Strategy::ACCELERATED`] (Hamerly, Annulus,
+    /// Yinyang, Elkan) skips provably-unchanged candidates exactly.
     pub strategy: Strategy,
     /// Worker threads for the sharded assignment step (1 = sequential).
     /// Results are bit-identical at any thread count.

@@ -7,7 +7,8 @@
 //!                [--appendix-a]
 //!                [--refpoint origin|mean|median|positive|mean-norm]
 //! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto]
-//!                [--lloyd-strategy naive|hamerly|elkan] [--xla]
+//!                [--lloyd-strategy naive|hamerly|annulus|yinyang|elkan]
+//!                [--xla]
 //! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
 //! geokmpp info
 //! ```
@@ -20,8 +21,10 @@
 //! `--lloyd-strategy` selects the pruning strategy of the bounds-accelerated
 //! Lloyd engine (`kmeans::accel`), warm-started from the seeding result so
 //! the seeder's exact D² weights initialize the upper bounds for free. All
-//! strategies produce bit-identical clusterings; `hamerly`/`elkan` skip most
-//! distance computations (the printed clustering counters show how many).
+//! strategies produce bit-identical clusterings; the accelerated ones
+//! (`hamerly`, `annulus`, `yinyang`, `elkan`) skip most distance
+//! computations (the printed clustering counters show how many, and which
+//! filter — bound, per-center, group, annulus window or norm — paid for it).
 
 use anyhow::{bail, Context, Result};
 use geokmpp::cli::Args;
@@ -209,8 +212,13 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     println!("lloyd center dist {}", st.center_distances);
     println!("lloyd norms       {}", st.norms);
     println!(
-        "lloyd prunes      bound={} center={} norm={} full-scans={}",
-        st.bound_prunes, st.center_prunes, st.norm_prunes, st.full_scans
+        "lloyd prunes      bound={} center={} group={} annulus={} norm={} full-scans={}",
+        st.bound_prunes,
+        st.center_prunes,
+        st.group_prunes,
+        st.annulus_prunes,
+        st.norm_prunes,
+        st.full_scans
     );
     Ok(())
 }

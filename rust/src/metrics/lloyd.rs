@@ -29,6 +29,12 @@ pub struct LloydStats {
     /// Candidate centers skipped inside a scan by a per-center bound
     /// (Elkan's `l(x, c)` / center–center half-distance tests).
     pub center_prunes: u64,
+    /// Candidate centers skipped inside a scan by a Yinyang group bound
+    /// (the whole group's lower bound already exceeds the incumbent).
+    pub group_prunes: u64,
+    /// Candidate centers skipped by the annulus window over the sorted
+    /// center norms (`|‖x‖ − ‖c‖| ≥ u(x)` resolved by binary search).
+    pub annulus_prunes: u64,
     /// Candidate centers skipped by the norm filter
     /// (`(‖x‖ − ‖c‖)² ≥ d²_best`, the seeding §4.3 filter carried over).
     pub norm_prunes: u64,
@@ -45,7 +51,24 @@ impl LloydStats {
 
     /// Total candidate-center prunes across all filters.
     pub fn prunes_total(&self) -> u64 {
-        self.bound_prunes + self.center_prunes + self.norm_prunes
+        self.bound_prunes
+            + self.center_prunes
+            + self.group_prunes
+            + self.annulus_prunes
+            + self.norm_prunes
+    }
+
+    /// Compact `bound/center/group/annulus/norm` prune breakdown for report
+    /// columns (one cell instead of five).
+    pub fn prune_mix(&self) -> String {
+        format!(
+            "{}/{}/{}/{}/{}",
+            self.bound_prunes,
+            self.center_prunes,
+            self.group_prunes,
+            self.annulus_prunes,
+            self.norm_prunes
+        )
     }
 
     /// Element-wise division (for aggregating repetitions into means).
@@ -56,6 +79,8 @@ impl LloydStats {
         self.norms /= d;
         self.bound_prunes /= d;
         self.center_prunes /= d;
+        self.group_prunes /= d;
+        self.annulus_prunes /= d;
         self.norm_prunes /= d;
         self.full_scans /= d;
     }
@@ -69,6 +94,8 @@ impl std::ops::AddAssign for LloydStats {
         self.norms += other.norms;
         self.bound_prunes += other.bound_prunes;
         self.center_prunes += other.center_prunes;
+        self.group_prunes += other.group_prunes;
+        self.annulus_prunes += other.annulus_prunes;
         self.norm_prunes += other.norm_prunes;
         self.full_scans += other.full_scans;
     }
@@ -86,6 +113,8 @@ mod tests {
             norms: 4,
             bound_prunes: 5,
             center_prunes: 6,
+            group_prunes: 9,
+            annulus_prunes: 10,
             norm_prunes: 7,
             full_scans: 8,
         }
@@ -95,7 +124,8 @@ mod tests {
     fn totals_compose() {
         let s = filled();
         assert_eq!(s.computations_total(), 9);
-        assert_eq!(s.prunes_total(), 18);
+        assert_eq!(s.prunes_total(), 37);
+        assert_eq!(s.prune_mix(), "5/6/9/10/7");
     }
 
     #[test]
@@ -109,6 +139,8 @@ mod tests {
         assert_eq!(sum.norms, 8);
         assert_eq!(sum.bound_prunes, 10);
         assert_eq!(sum.center_prunes, 12);
+        assert_eq!(sum.group_prunes, 18);
+        assert_eq!(sum.annulus_prunes, 20);
         assert_eq!(sum.norm_prunes, 14);
         assert_eq!(sum.full_scans, 16);
     }

@@ -187,7 +187,8 @@ mod tests {
         let msg = *r.unwrap_err().downcast::<String>().unwrap();
         // The reported minimal case should be a 2-element vector (size hint 2
         // is the smallest failing size, and the dump prints both elements).
-        let lines = msg.lines().filter(|l| l.trim_start().starts_with('-') || l.contains(',')).count();
+        let lines =
+            msg.lines().filter(|l| l.trim_start().starts_with('-') || l.contains(',')).count();
         assert!(msg.contains("smallest failing case"), "{msg}");
         assert!(lines < 20, "shrink did not reduce: {msg}");
     }

@@ -76,7 +76,12 @@ pub fn hybrid_tie_seed<R: Rng>(
     while center_indices.len() < k {
         let total = cs.total();
         let groups: Vec<&[usize]> = cs.members.iter().map(|m| m.as_slice()).collect();
-        let pick = picker.next(PickCtx::TwoStep { weights: &weights, groups: &groups, sums: &cs.sums, total });
+        let pick = picker.next(PickCtx::TwoStep {
+            weights: &weights,
+            groups: &groups,
+            sums: &cs.sums,
+            total,
+        });
         drop(groups);
         counters.visited_sampling += pick.visited;
         let c_new = pick.index;

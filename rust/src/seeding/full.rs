@@ -51,17 +51,16 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     } else {
         Vec::new()
     };
-    let dist =
-        |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
-            c.distances += 1;
-            t.read_point(a);
-            t.ops(3 * d as u64);
-            if cfg.dot_trick {
-                sed_dot(data.row(a), data.row(b), sq[a], sq[b])
-            } else {
-                sed(data.row(a), data.row(b))
-            }
-        };
+    let dist = |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
+        c.distances += 1;
+        t.read_point(a);
+        t.ops(3 * d as u64);
+        if cfg.dot_trick {
+            sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+        } else {
+            sed(data.row(a), data.row(b))
+        }
+    };
 
     // --- Initialization: one cluster holding everything.
     let first = picker.first(n);
@@ -103,7 +102,12 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             sums.push(c.upper.sum);
         }
         let total: f64 = sums.iter().sum();
-        let pick = picker.next(PickCtx::TwoStep { weights: &weights, groups: &groups, sums: &sums, total });
+        let pick = picker.next(PickCtx::TwoStep {
+            weights: &weights,
+            groups: &groups,
+            sums: &sums,
+            total,
+        });
         drop(groups);
         counters.visited_sampling += pick.visited;
 
@@ -179,7 +183,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 if !admitted {
                     continue;
                 }
-                let part: &mut Part = if is_lower { &mut cluster.lower } else { &mut cluster.upper };
+                let part: &mut Part =
+                    if is_lower { &mut cluster.lower } else { &mut cluster.upper };
                 if 4.0 * part.radius <= d_cc {
                     counters.filter1_rejects += 1;
                     continue;
@@ -327,7 +332,8 @@ mod tests {
             };
             let mut ps = ScriptedPicker::new(script.clone());
             let mut pf = ScriptedPicker::new(script.clone());
-            let rs = standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut ps, &mut NoTrace);
+            let rs =
+                standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut ps, &mut NoTrace);
             let rf = run(&data, &SeedConfig::new(k, Variant::Full), &mut pf, &mut NoTrace);
             assert_eq!(rs.weights, rf.weights, "seed {seed}");
             assert_eq!(rs.assignments, rf.assignments, "seed {seed}");
@@ -395,8 +401,7 @@ mod tests {
         let data = random_data(n, 2, 77);
         let first = 5;
         // Expected flat D² probabilities after the pinned first center.
-        let w: Vec<f64> =
-            (0..n).map(|i| sed(data.row(i), data.row(first)) as f64).collect();
+        let w: Vec<f64> = (0..n).map(|i| sed(data.row(i), data.row(first)) as f64).collect();
         let total: f64 = w.iter().sum();
 
         let reps = 30_000u64;
@@ -447,7 +452,13 @@ mod tests {
             standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
                 .center_indices
         };
-        for rp in [RefPoint::Origin, RefPoint::Mean, RefPoint::Median, RefPoint::Positive, RefPoint::MeanNorm] {
+        for rp in [
+            RefPoint::Origin,
+            RefPoint::Mean,
+            RefPoint::Median,
+            RefPoint::Positive,
+            RefPoint::MeanNorm,
+        ] {
             let mut cfg = SeedConfig::new(k, Variant::Full);
             cfg.refpoint = rp;
             let rf = run(&data, &cfg, &mut ScriptedPicker::new(script.clone()), &mut NoTrace);

@@ -184,8 +184,7 @@ fn scan_shard(
         }
         let cluster = &mut state.clusters[j];
         for is_lower in [true, false] {
-            let part: &mut Part =
-                if is_lower { &mut cluster.lower } else { &mut cluster.upper };
+            let part: &mut Part = if is_lower { &mut cluster.lower } else { &mut cluster.upper };
             // Per-shard partition norm bounds — tighter than the merged
             // bounds the pre-pass used (header reads counted there).
             if !part.norm_bounds_admit(cn_norm) {
@@ -659,8 +658,7 @@ mod tests {
         let mut p1 = D2Picker::new(Pcg64::seed_from(9));
         let a = run(&data, &cfg, &mut p1, &mut NoTrace);
         let mut p2 = D2Picker::new(Pcg64::seed_from(9));
-        let b =
-            full::run(&data, &SeedConfig::new(k, Variant::Full), &mut p2, &mut NoTrace);
+        let b = full::run(&data, &SeedConfig::new(k, Variant::Full), &mut p2, &mut NoTrace);
         assert_eq!(a.center_indices, b.center_indices);
         assert_eq!(a.weights, b.weights);
         assert_eq!(a.counters.visited_sampling, b.counters.visited_sampling);

@@ -33,7 +33,13 @@ pub struct Part {
 impl Part {
     /// An empty partition with neutral bounds.
     pub fn empty() -> Self {
-        Self { members: Vec::new(), radius: 0.0, sum: 0.0, lb: f32::INFINITY, ub: f32::NEG_INFINITY }
+        Self {
+            members: Vec::new(),
+            radius: 0.0,
+            sum: 0.0,
+            lb: f32::INFINITY,
+            ub: f32::NEG_INFINITY,
+        }
     }
 
     /// Whether a center with norm `c_norm` survives the partition-level norm

@@ -10,9 +10,7 @@
 //!   (an exact acceleration must then produce bit-identical weights).
 
 use crate::core::rng::Rng;
-use crate::core::sampling::{
-    roulette, roulette_f64, roulette_indexed, roulette_segmented, CumTable,
-};
+use crate::core::sampling::{roulette, roulette_f64, roulette_indexed, roulette_segmented, CumTable};
 
 /// What a picker returns: the chosen point index plus how many entries the
 /// selection procedure examined (the paper's "points examined during the D²
@@ -143,7 +141,8 @@ impl<R: Rng> CenterPicker for D2Picker<R> {
                     return Pick { index: first, visited: g as u64 + 2 };
                 }
                 let g = roulette_f64(sums, total, &mut self.rng);
-                let (index, pos) = roulette_segmented(weights, &segments[g], sums[g], &mut self.rng);
+                let (index, pos) =
+                    roulette_segmented(weights, &segments[g], sums[g], &mut self.rng);
                 // Merged-group-header scan (g+1) + member scan (pos+1) —
                 // identical accounting to the unmerged TwoStep path.
                 Pick { index, visited: (g as u64 + 1) + (pos as u64 + 1) }
@@ -240,7 +239,8 @@ mod tests {
         let w = [0.0f32, 0.0, 5.0];
         let groups: Vec<&[usize]> = vec![&[0, 1], &[2]];
         let sums = [0.0f64, 5.0];
-        let pick = p.next(PickCtx::TwoStep { weights: &w, groups: &groups, sums: &sums, total: 5.0 });
+        let pick =
+            p.next(PickCtx::TwoStep { weights: &w, groups: &groups, sums: &sums, total: 5.0 });
         assert_eq!(pick.index, 2);
         // group 1 (headers: 2) + member position 0 (1) = 3
         assert_eq!(pick.visited, 3);
@@ -280,7 +280,12 @@ mod tests {
         // Degenerate all-zero totals pick the first member of the first
         // non-empty group in both contexts.
         let z = [0.0f32; 8];
-        let a = pa.next(PickCtx::TwoStep { weights: &z, groups: &groups, sums: &[0.0; 3], total: 0.0 });
+        let a = pa.next(PickCtx::TwoStep {
+            weights: &z,
+            groups: &groups,
+            sums: &[0.0; 3],
+            total: 0.0,
+        });
         let b = pb.next(PickCtx::TwoStepMerged {
             weights: &z,
             segments: &segments,

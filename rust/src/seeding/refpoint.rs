@@ -27,8 +27,13 @@ pub enum RefPoint {
 
 impl RefPoint {
     /// All strategies in Table 2's column order.
-    pub const ALL: [RefPoint; 5] =
-        [RefPoint::Origin, RefPoint::Mean, RefPoint::Median, RefPoint::Positive, RefPoint::MeanNorm];
+    pub const ALL: [RefPoint; 5] = [
+        RefPoint::Origin,
+        RefPoint::Mean,
+        RefPoint::Median,
+        RefPoint::Positive,
+        RefPoint::MeanNorm,
+    ];
 
     /// Short identifier for CLI flags and report columns.
     pub fn name(&self) -> &'static str {

@@ -40,17 +40,16 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     } else {
         Vec::new()
     };
-    let dist =
-        |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
-            c.distances += 1;
-            t.read_point(a);
-            t.ops(3 * d as u64);
-            if cfg.dot_trick {
-                sed_dot(data.row(a), data.row(b), sq[a], sq[b])
-            } else {
-                sed(data.row(a), data.row(b))
-            }
-        };
+    let dist = |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
+        c.distances += 1;
+        t.read_point(a);
+        t.ops(3 * d as u64);
+        if cfg.dot_trick {
+            sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+        } else {
+            sed(data.row(a), data.row(b))
+        }
+    };
 
     // --- Initialization (Algorithm 2 lines 1–7).
     let first = picker.first(n);
@@ -156,8 +155,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             // no extra memory traversal.
             let members = std::mem::take(&mut cs.members[j]);
             let mut retained = Vec::with_capacity(members.len());
-            let mut cum: Vec<f64> =
-                if cfg.binary_search_sampling { Vec::with_capacity(members.len()) } else { Vec::new() };
+            let mut cum: Vec<f64> = if cfg.binary_search_sampling {
+                Vec::with_capacity(members.len())
+            } else {
+                Vec::new()
+            };
             let mut new_r = 0f32;
             let mut new_s = 0f64;
             for &i in &members {
@@ -400,7 +402,8 @@ mod tests {
             let script: Vec<usize> = idx[..k].to_vec();
             let mut ps = ScriptedPicker::new(script.clone());
             let mut pt = ScriptedPicker::new(script.clone());
-            let rs = standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut ps, &mut NoTrace);
+            let rs =
+                standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut ps, &mut NoTrace);
             let rt = run(&data, &SeedConfig::new(k, Variant::Tie), &mut pt, &mut NoTrace);
             assert_eq!(rs.weights, rt.weights, "n={n} d={d} k={k}");
             assert_eq!(rs.assignments, rt.assignments, "n={n} d={d} k={k}");

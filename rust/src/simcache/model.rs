@@ -37,7 +37,14 @@ pub struct IpcModel {
 
 impl Default for IpcModel {
     fn default() -> Self {
-        Self { ipc_peak: 4.6, alpha: 1.0, beta: 1.0, lat_l1_miss: 14.0, lat_mem: 190.0, overlap: 0.65 }
+        Self {
+            ipc_peak: 4.6,
+            alpha: 1.0,
+            beta: 1.0,
+            lat_l1_miss: 14.0,
+            lat_mem: 190.0,
+            overlap: 0.65,
+        }
     }
 }
 

@@ -20,7 +20,14 @@ pub(crate) fn run(args: &Args) -> Result<()> {
         p.instances.retain(|i| ["MGT", "S-NS", "GSAD", "PTN"].contains(&i.name));
     }
     let mut t = Table::new([
-        "instance", "k", "center_dists_off", "center_dists_on", "avoided", "saved_pct", "time_off", "time_on",
+        "instance",
+        "k",
+        "center_dists_off",
+        "center_dists_on",
+        "avoided",
+        "saved_pct",
+        "time_off",
+        "time_on",
     ]);
     for inst in &p.instances {
         let n = p.n_of(inst);

@@ -22,7 +22,8 @@ pub(crate) fn run(args: &Args) -> Result<()> {
     }
 
     // Part 1: reference points.
-    let mut t = Table::new(["instance", "k", "refpoint", "nv_pct", "distances", "norm_rejects", "time_s"]);
+    let mut t =
+        Table::new(["instance", "k", "refpoint", "nv_pct", "distances", "norm_rejects", "time_s"]);
     for inst in &p.instances {
         let n = p.n_of(inst);
         let data = inst.generate_n(n);

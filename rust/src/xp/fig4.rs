@@ -16,7 +16,12 @@ pub(crate) fn run(args: &Args) -> Result<()> {
 /// Emits the Fig. 4 table from an existing sweep report.
 pub(crate) fn emit(p: &SweepParams, report: &crate::coordinator::Report) -> Result<()> {
     let mut t = Table::new([
-        "instance", "group", "k", "speedup_std_tie", "speedup_std_full", "speedup_tie_full",
+        "instance",
+        "group",
+        "k",
+        "speedup_std_tie",
+        "speedup_std_full",
+        "speedup_tie_full",
     ]);
     for inst in &p.instances {
         let n = p.n_of(inst);

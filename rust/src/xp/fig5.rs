@@ -19,7 +19,8 @@ pub(crate) fn run(args: &Args) -> Result<()> {
         Some(_) => args.get_list_or("instances", &[] as &[String]).map_err(anyhow::Error::msg)?,
         None => DEFAULT_SUBSET.iter().map(|s| s.to_string()).collect(),
     };
-    let sample: usize = args.get_or("sample", if quick { 500 } else { 2000 }).map_err(anyhow::Error::msg)?;
+    let sample: usize =
+        args.get_or("sample", if quick { 500 } else { 2000 }).map_err(anyhow::Error::msg)?;
 
     let mut summary = Table::new(["instance", "n", "d", "ev1", "ev2", "csv"]);
     for name in &names {

@@ -43,7 +43,9 @@ impl MultiSink {
         };
         let hierarchies = jobs
             .iter()
-            .map(|&j| Hierarchy::new(HierarchyConfig { llc, concurrent_jobs: j, ..Default::default() }))
+            .map(|&j| {
+                Hierarchy::new(HierarchyConfig { llc, concurrent_jobs: j, ..Default::default() })
+            })
             .collect();
         Self { hierarchies, row_bytes: (d * 4) as u64 }
     }
@@ -89,21 +91,30 @@ pub(crate) fn run(args: &Args) -> Result<()> {
     let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
     let instance = args.get("instance").unwrap_or("3DR");
     let inst = by_name(instance).with_context(|| format!("unknown instance {instance:?}"))?;
-    let n: usize = args.get_or("n", if quick { 5_000 } else { 40_000 }).map_err(anyhow::Error::msg)?;
+    let n: usize =
+        args.get_or("n", if quick { 5_000 } else { 40_000 }).map_err(anyhow::Error::msg)?;
     let default_ks: Vec<usize> = if quick { vec![32, 128] } else { vec![32, 128, 512, 2048] };
     let ks = args.get_list_or("ks", &default_ks).map_err(anyhow::Error::msg)?;
-    let max_jobs: usize = args.get_or("jobs", if quick { 4 } else { 10usize }).map_err(anyhow::Error::msg)?;
+    let max_jobs: usize =
+        args.get_or("jobs", if quick { 4 } else { 10usize }).map_err(anyhow::Error::msg)?;
     let jobs: Vec<usize> = (1..=max_jobs).collect();
     let reps: u64 = args.get_or("reps", if quick { 1 } else { 3u64 }).map_err(anyhow::Error::msg)?;
     // Default scaled LLC: same working-set/LLC ratio as the paper's testbed
     // (435k × 3 × 4 B ≈ 5 MB vs 30 MiB LLC → ratio ≈ 1/6).
     let working_set_kb = n * (inst.d + 2) * 4 / 1024;
-    let llc_kb: usize = args.get_or("llc-kb", (working_set_kb * 3).max(256)).map_err(anyhow::Error::msg)?;
+    let llc_kb: usize =
+        args.get_or("llc-kb", (working_set_kb * 3).max(256)).map_err(anyhow::Error::msg)?;
 
     let data = Arc::new(inst.generate_n(n));
     let model = IpcModel::default();
     let mut t = Table::new([
-        "variant", "k", "jobs", "time_s", "l1_miss_pct", "llc_miss_pct", "ipc",
+        "variant",
+        "k",
+        "jobs",
+        "time_s",
+        "l1_miss_pct",
+        "llc_miss_pct",
+        "ipc",
     ]);
 
     for variant in Variant::ALL {
@@ -182,7 +193,10 @@ fn shape_checks(t: &Table, max_jobs: usize) {
     // 3. LLC misses grow with jobs.
     let llc1 = avg(&get("standard", Some("1"), 5));
     let llcj = avg(&get("standard", Some(&max_j), 5));
-    println!("shape check (LLC misses grow with jobs): {llc1:.1}% → {llcj:.1}%: {}", llcj >= llc1);
+    println!(
+        "shape check (LLC misses grow with jobs): {llc1:.1}% → {llcj:.1}%: {}",
+        llcj >= llc1
+    );
 }
 
 fn avg(v: &[f64]) -> f64 {

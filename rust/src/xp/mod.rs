@@ -13,6 +13,11 @@
 //! | [`table2`] | Table 2 — NV% per reference point |
 //! | [`appendix_a`] | Appendix A — center-distance avoidance ablation |
 //! | [`appendix_b`] | Appendix B — reference-point + dot-trick ablation |
+//!
+//! [`perf_smoke`] is not a paper artefact: it is the CI counter gate — a
+//! tiny deterministic sweep over the full Lloyd strategy matrix that emits
+//! `BENCH_ci.json` and fails when an accelerated strategy stops strictly
+//! beating the naive reference's distance count.
 
 pub mod appendix_a;
 pub mod appendix_b;
@@ -21,6 +26,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod perf_smoke;
 pub mod sweep;
 pub mod table1;
 pub mod table2;
@@ -40,6 +46,7 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         "table2" => table2::run(args),
         "appendix-a" | "appendix_a" | "appa" => appendix_a::run(args),
         "appendix-b" | "appendix_b" | "appb" => appendix_b::run(args),
+        "perf-smoke" | "perf_smoke" | "smoke" => perf_smoke::run(args),
         // One sweep, three figures (Figs. 2–4 share the identical run
         // matrix; regenerating them together avoids re-running it).
         "figs234" => {
@@ -74,7 +81,8 @@ pub fn help() {
          \u{20}  fig6        Fig. 6   — time/L1/LLC/IPC heatmaps vs concurrent jobs\n\
          \u{20}  appendix-a  App. A   — center-distance avoidance ablation\n\
          \u{20}  appendix-b  App. B   — reference points + dot-trick ablation\n\
-         \u{20}  all         everything above\n\
+         \u{20}  perf-smoke  CI gate  — Lloyd strategy counter sweep → BENCH_ci.json\n\
+         \u{20}  all         every paper artefact above (perf-smoke runs separately)\n\
          common flags: --instances A,B --ks 4,64,1024 --reps 3 --scale 0.25\n\
          \u{20}             --workers N --out results --quick"
     );

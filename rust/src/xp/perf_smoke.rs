@@ -1,0 +1,197 @@
+//! CI perf-smoke gate: a tiny deterministic catalog sweep over the full
+//! Lloyd strategy matrix, emitting the counter trajectory as
+//! `BENCH_ci.json` and failing when any accelerated strategy stops paying
+//! for itself.
+//!
+//! Wall-clock on shared CI runners is noise; the engine's intrinsic
+//! counters ([`crate::metrics::lloyd::LloydStats`]) are exact and
+//! hardware-independent, so the gate is deterministic: for every
+//! (instance, k) cell, each strategy in [`Strategy::ACCELERATED`] must
+//! produce the naive reference's exact clustering (assignments + inertia
+//! trace) with **strictly fewer** point–center distance computations. A
+//! regression in any pruning path — or a new strategy that silently stops
+//! pruning — turns the build red instead of quietly shipping a slower
+//! engine. The JSON artifact is uploaded per run, so the perf trajectory
+//! of every counter is recoverable from CI history.
+
+use crate::cli::Args;
+use crate::core::rng::Pcg64;
+use crate::data::catalog::by_name;
+use crate::kmeans::accel::{run_warm, Strategy};
+use crate::kmeans::lloyd::{LloydConfig, LloydResult};
+use crate::metrics::table::Table;
+use crate::seeding::{seed, Variant};
+use anyhow::{bail, Context, Result};
+
+/// One (instance, k, strategy) measurement row of the smoke sweep.
+struct Row {
+    instance: &'static str,
+    k: usize,
+    result: LloydResult,
+}
+
+impl Row {
+    /// The row as a JSON object (hand-rolled: serde is not in the offline
+    /// crate set, and the schema is flat).
+    fn to_json(&self, strategy: Strategy) -> String {
+        let st = &self.result.stats;
+        // A zero-iteration run has no trace; emit null, not a bare NaN.
+        let inertia = match self.result.inertia_trace.last() {
+            Some(v) => format!("{v:.6}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"instance\":\"{}\",\"k\":{},\"strategy\":\"{}\",\"iterations\":{},\
+             \"converged\":{},\"inertia\":{},\"lloyd_dists\":{},\
+             \"lloyd_center_dists\":{},\"lloyd_norms\":{},\"lloyd_prunes\":{},\
+             \"bound_prunes\":{},\"center_prunes\":{},\"group_prunes\":{},\
+             \"annulus_prunes\":{},\"norm_prunes\":{},\"full_scans\":{}}}",
+            self.instance,
+            self.k,
+            strategy.name(),
+            self.result.iterations,
+            self.result.converged,
+            inertia,
+            st.distances,
+            st.center_distances,
+            st.norms,
+            st.prunes_total(),
+            st.bound_prunes,
+            st.center_prunes,
+            st.group_prunes,
+            st.annulus_prunes,
+            st.norm_prunes,
+            st.full_scans,
+        )
+    }
+}
+
+/// Runs the smoke sweep, writes the JSON artifact, then enforces the gate.
+pub fn run(args: &Args) -> Result<()> {
+    let out = args.get("out").unwrap_or("BENCH_ci.json");
+    let n: usize = args.get_or("n", 1_200).map_err(anyhow::Error::msg)?;
+    let ks: Vec<usize> = args.get_list_or("ks", &[8, 32]).map_err(anyhow::Error::msg)?;
+    let max_iters: usize = args.get_or("iters", 20).map_err(anyhow::Error::msg)?;
+    if max_iters == 0 {
+        bail!("--iters must be >= 1: the gate compares per-iteration counters");
+    }
+    let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    // One low-dimensional instance (TI bounds dominate) and one
+    // high-dimensional high-norm-variance one (norm filters dominate).
+    let instances = ["S-NS", "GSAD"];
+
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+    let mut t =
+        Table::new(["instance", "k", "strategy", "iters", "distances", "prunes", "vs_naive"]);
+
+    for name in instances {
+        let inst = by_name(name).context("smoke instance missing from catalog")?;
+        let data = inst.generate_n(n);
+        for &k in &ks {
+            // One shared seeding per cell: every strategy warm-starts from
+            // the same centers, so the runs are directly comparable. The
+            // naive reference runs first, explicitly — the gate must not
+            // depend on where Naive sits in `Strategy::ALL` (ALL is exactly
+            // Naive + ACCELERATED; a unit test pins that).
+            let mut rng = Pcg64::seed_from(seed_v);
+            let s = seed(&data, k, Variant::Full, &mut rng);
+            let naive_cfg = LloydConfig { max_iters, ..LloydConfig::default() };
+            let naive = Row { instance: name, k, result: run_warm(&data, &s, &naive_cfg) };
+            json_rows.push(naive.to_json(Strategy::Naive));
+            t.row([
+                name.to_string(),
+                k.to_string(),
+                Strategy::Naive.name().to_string(),
+                naive.result.iterations.to_string(),
+                naive.result.stats.distances.to_string(),
+                naive.result.stats.prunes_total().to_string(),
+                "-".to_string(),
+            ]);
+            for strategy in Strategy::ACCELERATED {
+                let cfg = LloydConfig { max_iters, strategy, ..LloydConfig::default() };
+                let row = Row { instance: name, k, result: run_warm(&data, &s, &cfg) };
+                json_rows.push(row.to_json(strategy));
+                let (dists, prunes) = (row.result.stats.distances, row.result.stats.prunes_total());
+                let cell = format!("{name}/k{k}/{}", strategy.name());
+                if row.result.assignments != naive.result.assignments
+                    || row.result.inertia_trace != naive.result.inertia_trace
+                {
+                    violations.push(format!("{cell}: diverged from the naive reference"));
+                }
+                if dists >= naive.result.stats.distances {
+                    violations.push(format!(
+                        "{cell}: {dists} distance computations, naive paid only {}",
+                        naive.result.stats.distances
+                    ));
+                }
+                let vs =
+                    format!("{:.1}%", 100.0 * dists as f64 / naive.result.stats.distances as f64);
+                t.row([
+                    name.to_string(),
+                    k.to_string(),
+                    strategy.name().to_string(),
+                    row.result.iterations.to_string(),
+                    dists.to_string(),
+                    prunes.to_string(),
+                    vs,
+                ]);
+            }
+        }
+    }
+
+    let json = format!(
+        "{{\n  \"schema\": \"geokmpp-perf-smoke/v1\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
+         \"max_iters\": {max_iters},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        json_rows.join(",\n    ")
+    );
+    std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
+    println!("{}", t.to_aligned());
+    println!("wrote {} rows to {out}", json_rows.len());
+
+    if !violations.is_empty() {
+        bail!(
+            "perf-smoke gate failed — accelerated strategies must be exact and strictly \
+             cheaper than naive:\n  {}",
+            violations.join("\n  ")
+        );
+    }
+    println!(
+        "perf-smoke gate passed: every accelerated strategy is exact and strictly \
+         cheaper than naive"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Args {
+        Args::parse(list.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    /// The real gate on a shrunken sweep: runs green, writes parseable
+    /// rows for every strategy in the matrix.
+    #[test]
+    fn smoke_gate_passes_and_emits_all_strategies() {
+        let dir = std::env::temp_dir().join("geokmpp_perf_smoke_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_ci.json");
+        let out_s = out.to_str().unwrap().to_string();
+        run(&args(&["--out", &out_s, "--n", "400", "--ks", "8", "--iters", "8"])).unwrap();
+        let body = std::fs::read_to_string(&out).unwrap();
+        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v1\""));
+        for s in Strategy::ALL {
+            assert!(
+                body.contains(&format!("\"strategy\":\"{}\"", s.name())),
+                "{} missing from {body}",
+                s.name()
+            );
+        }
+        assert!(body.contains("\"lloyd_dists\""));
+        assert!(body.contains("\"group_prunes\""));
+        assert!(body.contains("\"annulus_prunes\""));
+        std::fs::remove_file(&out).ok();
+    }
+}

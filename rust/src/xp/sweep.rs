@@ -2,8 +2,10 @@
 //! through the coordinator and aggregate.
 
 use crate::cli::Args;
+use crate::coordinator::jobs::LloydPhase;
 use crate::coordinator::{JobSpec, Report, Scheduler};
 use crate::data::catalog::{by_name, catalog, Instance};
+use crate::kmeans::accel::Strategy;
 use crate::seeding::Variant;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
@@ -26,6 +28,11 @@ pub struct SweepParams {
     pub out_dir: PathBuf,
     /// Base seed.
     pub seed: u64,
+    /// Clustering phase appended to every job (`--lloyd-strategy NAME`,
+    /// parsed through [`Strategy`]'s `FromStr` — the same source of truth
+    /// as `Strategy::ALL`, so sweeps can never drop a strategy the engine
+    /// knows about). `None` = seeding-only sweep (the paper's scope).
+    pub lloyd: Option<LloydPhase>,
 }
 
 impl SweepParams {
@@ -51,10 +58,16 @@ impl SweepParams {
         let workers = args
             .get_or("workers", std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4))
             .map_err(anyhow::Error::msg)?;
-        let out_dir =
-            PathBuf::from(args.get("out").unwrap_or("results"));
+        let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
         let seed = args.get_or("seed", 2024u64).map_err(anyhow::Error::msg)?;
-        Ok(SweepParams { instances, ks, reps, scale, workers, out_dir, seed })
+        let lloyd = match args.get("lloyd-strategy") {
+            None => None,
+            Some(s) => Some(LloydPhase {
+                strategy: s.parse::<Strategy>().map_err(anyhow::Error::msg)?,
+                max_iters: args.get_or("lloyd-iters", 100).map_err(anyhow::Error::msg)?,
+            }),
+        };
+        Ok(SweepParams { instances, ks, reps, scale, workers, out_dir, seed, lloyd })
     }
 
     /// Effective n for an instance under the scale factor.
@@ -85,7 +98,7 @@ pub fn run_sweep(p: &SweepParams, variants: &[Variant]) -> Report {
                         rep,
                         seed: p.seed,
                         threads: 1,
-                        lloyd: None,
+                        lloyd: p.lloyd,
                     });
                 }
             }
@@ -123,7 +136,14 @@ mod tests {
     #[test]
     fn params_explicit() {
         let p = SweepParams::from_args(&args(&[
-            "--instances", "MGT,3DR", "--ks", "2,8", "--reps", "2", "--scale", "0.01",
+            "--instances",
+            "MGT,3DR",
+            "--ks",
+            "2,8",
+            "--reps",
+            "2",
+            "--scale",
+            "0.01",
         ]))
         .unwrap();
         assert_eq!(p.instances.len(), 2);
@@ -136,14 +156,69 @@ mod tests {
         assert!(SweepParams::from_args(&args(&["--instances", "NOPE"])).is_err());
     }
 
+    /// `--lloyd-strategy` goes through `Strategy`'s `FromStr`: every name
+    /// in `Strategy::ALL` parses, unknown names error, absence means a
+    /// seeding-only sweep.
+    #[test]
+    fn params_lloyd_strategy_uses_from_str() {
+        assert!(SweepParams::from_args(&args(&["--quick"])).unwrap().lloyd.is_none());
+        for s in Strategy::ALL {
+            let p = SweepParams::from_args(&args(&[
+                "--quick",
+                "--lloyd-strategy",
+                s.name(),
+                "--lloyd-iters",
+                "7",
+            ]))
+            .unwrap();
+            let phase = p.lloyd.expect("phase parsed");
+            assert_eq!(phase.strategy, s);
+            assert_eq!(phase.max_iters, 7);
+        }
+        assert!(SweepParams::from_args(&args(&["--lloyd-strategy", "nope"])).is_err());
+    }
+
     #[test]
     fn tiny_sweep_produces_cells() {
         let p = SweepParams::from_args(&args(&[
-            "--instances", "MGT", "--ks", "2,4", "--reps", "1", "--scale", "0.01",
+            "--instances",
+            "MGT",
+            "--ks",
+            "2,4",
+            "--reps",
+            "1",
+            "--scale",
+            "0.01",
         ]))
         .unwrap();
         let report = run_sweep(&p, &[Variant::Standard, Variant::Tie]);
         assert!(report.cell("MGT", 2, Variant::Standard).is_some());
         assert!(report.cell("MGT", 4, Variant::Tie).is_some());
+    }
+
+    /// A sweep with a clustering phase carries it into every job: the
+    /// aggregated cells expose the Lloyd counters.
+    #[test]
+    fn sweep_with_lloyd_phase_fills_lloyd_cells() {
+        let p = SweepParams::from_args(&args(&[
+            "--instances",
+            "MGT",
+            "--ks",
+            "4",
+            "--reps",
+            "1",
+            "--scale",
+            "0.01",
+            "--lloyd-strategy",
+            "yinyang",
+            "--lloyd-iters",
+            "10",
+        ]))
+        .unwrap();
+        let report = run_sweep(&p, &[Variant::Full]);
+        let cell = report.cell("MGT", 4, Variant::Full).expect("cell");
+        let lloyd = cell.lloyd.as_ref().expect("lloyd aggregate");
+        assert!(lloyd.stats.visited_points > 0);
+        assert!(lloyd.mean_iterations >= 1.0);
     }
 }

@@ -12,7 +12,14 @@ pub(crate) fn run(args: &Args) -> Result<()> {
     let quick = args.has("quick");
     let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
     let mut t = Table::new([
-        "instance", "group", "paper_n", "n", "d", "paper_nv%", "nv%", "band_ok",
+        "instance",
+        "group",
+        "paper_n",
+        "n",
+        "d",
+        "paper_nv%",
+        "nv%",
+        "band_ok",
     ]);
     for inst in catalog() {
         let n = if quick { inst.default_n.min(3_000) } else { inst.default_n.min(20_000) };

@@ -14,7 +14,13 @@ pub(crate) fn run(args: &Args) -> Result<()> {
     let cap = if quick { 2_000 } else { 10_000 };
 
     let mut t = Table::new([
-        "instance", "origin", "mean", "median", "positive", "mean_norm", "best",
+        "instance",
+        "origin",
+        "mean",
+        "median",
+        "positive",
+        "mean_norm",
+        "best",
     ]);
     for inst in catalog() {
         let data = inst.generate_n(inst.default_n.min(cap));

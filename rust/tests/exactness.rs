@@ -9,9 +9,7 @@ use geokmpp::data::catalog::by_name;
 use geokmpp::kmeans::accel::{self, Strategy};
 use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
 use geokmpp::prop::{forall, gens, Config};
-use geokmpp::seeding::{
-    seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant,
-};
+use geokmpp::seeding::{seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant};
 
 /// Scripted-center exactness on real catalog geometry (not just uniform
 /// random data): a central-mass instance, a bimodal one, a polyline one.
@@ -105,11 +103,12 @@ fn parallel_engine_exact_on_catalog_instances() {
     }
 }
 
-/// The bounds-accelerated Lloyd engine on real catalog geometry: Hamerly
-/// and Elkan produce bit-identical assignments, centers and inertia traces
-/// to the naive reference at 1, 2, 4 and 8 threads, while their
-/// clustering-phase counters show strictly fewer distance computations
-/// (k = 16 ≥ 8, where the bounds have room to pay off).
+/// The bounds-accelerated Lloyd engine on real catalog geometry: every
+/// strategy in `Strategy::ACCELERATED` (Hamerly, Annulus, Yinyang, Elkan)
+/// produces bit-identical assignments, centers and inertia traces to the
+/// naive reference at 1, 2, 4 and 8 threads, while its clustering-phase
+/// counters show strictly fewer distance computations (k = 16 ≥ 8, where
+/// the bounds have room to pay off).
 #[test]
 fn lloyd_strategies_exact_on_catalog_instances() {
     for name in ["CIF-C", "S-NS", "GSAD"] {
@@ -120,7 +119,7 @@ fn lloyd_strategies_exact_on_catalog_instances() {
         let s = seed(&data, k, Variant::Full, &mut rng);
         let cfg = LloydConfig { max_iters: 40, ..LloydConfig::default() };
         let reference = lloyd(&data, &s.centers, &cfg);
-        for strategy in [Strategy::Hamerly, Strategy::Elkan] {
+        for strategy in Strategy::ACCELERATED {
             for threads in [1usize, 2, 4, 8] {
                 let c = LloydConfig { strategy, threads, ..cfg };
                 let r = accel::run(&data, &s.centers, &c);
@@ -146,6 +145,50 @@ fn lloyd_strategies_exact_on_catalog_instances() {
     }
 }
 
+/// Empty-cluster bound maintenance at integration level, for every bounded
+/// strategy including Yinyang (whose group drift must treat the dead
+/// cluster's stale center as zero-motion) and Annulus (whose sorted norm
+/// window must keep carrying the duplicate-norm stale center): a duplicated
+/// initial center loses every point to its lower-index twin and keeps its
+/// stale coordinates, while the others converge — bit-identical to naive
+/// throughout.
+#[test]
+fn lloyd_empty_cluster_exact_for_all_strategies() {
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(600);
+    // Converge once, then restart from the converged centers with center 1
+    // duplicating center 0 bit for bit (every tie resolves to the strict
+    // argmin's lower index, so cluster 1 is empty from the first assignment
+    // on and its stale center has zero motion forever) and center 2 kicked
+    // out to a raw data point (so real center motion keeps exercising the
+    // bound maintenance around the dead twin).
+    let mut rng = Pcg64::seed_from(31);
+    let s = seed(&data, 7, Variant::Full, &mut rng);
+    let cfg = LloydConfig { max_iters: 60, ..LloydConfig::default() };
+    let converged = lloyd(&data, &s.centers, &cfg);
+    let mut init = converged.centers.clone();
+    let twin = init.row(0).to_vec();
+    init.row_mut(1).copy_from_slice(&twin);
+    let kick = data.row(0).to_vec();
+    init.row_mut(2).copy_from_slice(&kick);
+    let reference = lloyd(&data, &init, &cfg);
+    assert!(reference.iterations >= 2, "want center motion after the cluster empties");
+    assert!(
+        reference.assignments.iter().all(|&a| a != 1),
+        "setup: the duplicated center should stay empty"
+    );
+    for strategy in Strategy::ACCELERATED {
+        for threads in [1usize, 4] {
+            let c = LloydConfig { strategy, threads, ..cfg };
+            let r = accel::run(&data, &init, &c);
+            assert_eq!(reference.assignments, r.assignments, "{strategy:?} t{threads}");
+            assert_eq!(reference.inertia_trace, r.inertia_trace, "{strategy:?} t{threads}");
+            assert_eq!(reference.centers, r.centers, "{strategy:?} t{threads}");
+            assert_eq!(r.centers.row(1), init.row(1), "{strategy:?}: stale center moved");
+        }
+    }
+}
+
 /// Warm-starting the engine from the seeder's exact D² weights (the free
 /// lunch the seeding phase already paid for) changes nothing but the work:
 /// bit-identical results to the cold start, never more distances.
@@ -156,8 +199,7 @@ fn lloyd_warm_start_exact_on_catalog_instances() {
     let mut rng = Pcg64::seed_from(23);
     let s = seed(&data, 24, Variant::Full, &mut rng);
     for strategy in Strategy::ALL {
-        let cfg =
-            LloydConfig { max_iters: 40, strategy, threads: 4, ..LloydConfig::default() };
+        let cfg = LloydConfig { max_iters: 40, strategy, threads: 4, ..LloydConfig::default() };
         let cold = accel::run(&data, &s.centers, &cfg);
         let warm = accel::run_warm(&data, &s, &cfg);
         assert_eq!(cold.assignments, warm.assignments, "{strategy:?}");
