@@ -61,9 +61,16 @@ if HAVE_HYPOTHESIS:
 
 else:
 
+    # Full cross of the shapes hypothesis would sweep, with seeds derived
+    # from the coordinates so every cell exercises distinct data.
     @pytest.mark.parametrize(
         "nb,kb,d,seed",
-        [(1, 1, 1, 0), (2, 1, 2, 1), (4, 3, 3, 7), (1, 2, 8, 42), (3, 1, 17, 5), (2, 2, 64, 123)],
+        [
+            (nb, kb, d, 31 * nb + 7 * kb + d)
+            for nb in (1, 2, 4)
+            for kb in (1, 2, 3)
+            for d in (1, 2, 3, 8, 17, 64)
+        ],
     )
     def test_pairwise_matches_ref(nb, kb, d, seed):
         check_pairwise_matches_ref(nb, kb, d, seed)
@@ -131,7 +138,11 @@ else:
 
     @pytest.mark.parametrize(
         "nb,d,seed",
-        [(1, 1, 0), (2, 2, 3), (6, 5, 11), (3, 8, 21), (1, 33, 2), (4, 128, 9)],
+        [
+            (nb, d, 17 * nb + d)
+            for nb in (1, 2, 3, 6)
+            for d in (1, 2, 5, 8, 33, 128)
+        ],
     )
     def test_min_update_matches_ref(nb, d, seed):
         check_min_update_matches_ref(nb, d, seed)
@@ -181,7 +192,8 @@ if HAVE_HYPOTHESIS:
 else:
 
     @pytest.mark.parametrize(
-        "nb,d,seed", [(1, 1, 0), (2, 3, 5), (4, 8, 13), (3, 100, 29)]
+        "nb,d,seed",
+        [(nb, d, 13 * nb + d) for nb in (1, 2, 3, 4) for d in (1, 3, 8, 100)],
     )
     def test_norms_matches_ref(nb, d, seed):
         check_norms_matches_ref(nb, d, seed)

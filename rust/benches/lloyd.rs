@@ -18,7 +18,9 @@ use geokmpp::core::rng::Pcg64;
 use geokmpp::data::catalog::by_name;
 use geokmpp::kmeans::accel::{run_warm, Strategy};
 use geokmpp::kmeans::lloyd::LloydConfig;
+use geokmpp::runtime::WorkerPool;
 use geokmpp::seeding::{seed, Variant};
+use std::sync::Arc;
 
 fn main() {
     let quick = std::env::var("GEOKMPP_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
@@ -53,7 +55,10 @@ fn main() {
         }
     }
 
-    // Thread scaling of the sharded assignment step (Hamerly, large k).
+    // Thread scaling of the sharded assignment step (Hamerly, large k) on
+    // one shared persistent pool: every width reuses the same parked
+    // workers (the shard split follows `threads`, so results don't change).
+    let pool = Arc::new(WorkerPool::new(8));
     {
         let inst = by_name("GSAD").unwrap();
         let data = inst.generate_n(n.min(inst.default_n));
@@ -65,6 +70,7 @@ fn main() {
                 max_iters,
                 strategy: Strategy::Hamerly,
                 threads: t,
+                pool: Some(Arc::clone(&pool)),
                 ..LloydConfig::default()
             };
             b.bench(&format!("threads/GSAD/k{k}/t{t}"), || {
@@ -73,6 +79,7 @@ fn main() {
         }
     }
     b.finish();
+    println!("{}", pool.stats());
 
     // Summary: per (instance, k), speedup, distance ratio and prune
     // breakdown (bound/center/group/annulus/norm) vs naive.

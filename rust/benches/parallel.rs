@@ -10,8 +10,9 @@
 use geokmpp::bench::{black_box, Bench};
 use geokmpp::core::rng::Pcg64;
 use geokmpp::data::catalog::by_name;
-use geokmpp::runtime::Executor;
+use geokmpp::runtime::{Executor, WorkerPool};
 use geokmpp::seeding::{seed_with, D2Picker, NoTrace, SeedConfig, Variant};
+use std::sync::Arc;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
 
@@ -21,6 +22,9 @@ fn main() {
     let k = if quick { 32 } else { 256 };
 
     let mut b = Bench::from_env("parallel");
+    // One persistent pool for every sharded row: what production reuses, the
+    // bench reuses (the shard split follows each cfg's `threads`).
+    let pool = Arc::new(WorkerPool::new(*THREADS.last().unwrap()));
 
     // End-to-end seeding: low-dim (TIE territory) and high-dim (norm-filter
     // territory) instances from the synthetic catalog.
@@ -31,7 +35,9 @@ fn main() {
             let mut rep = 0u64;
             b.bench(&format!("full_seed/{inst_name}/k{k}/t{threads}"), || {
                 rep += 1;
-                let cfg = SeedConfig::new(k, Variant::Full).with_threads(threads);
+                let cfg = SeedConfig::new(k, Variant::Full)
+                    .with_threads(threads)
+                    .with_pool(Arc::clone(&pool));
                 let mut p = D2Picker::new(Pcg64::seed_stream(42, rep));
                 black_box(seed_with(&data, &cfg, &mut p, &mut NoTrace).counters.distances)
             });
@@ -46,12 +52,13 @@ fn main() {
     let c = data.row(7).to_vec();
     b.throughput(data.rows() as u64);
     for &threads in &THREADS {
-        let mut ex = Executor::scalar(threads);
+        let mut ex = Executor::scalar(threads).with_pool(Arc::clone(&pool));
         b.bench(&format!("scan_min_update/GSAD/t{threads}"), || {
             black_box(ex.min_update(&data, &rows, &c).unwrap().0.len())
         });
     }
     b.finish();
+    println!("{}", pool.stats());
 
     // Scaling summary: ratio of the t1 mean to each tN mean.
     let mean_of = |needle: &str| -> Option<f64> {

@@ -5,6 +5,7 @@ use crate::core::rng::{stream_id, Pcg64};
 use crate::kmeans::accel::{run_warm, Strategy};
 use crate::kmeans::lloyd::LloydConfig;
 use crate::metrics::lloyd::LloydStats;
+use crate::runtime::pool::WorkerPool;
 use crate::seeding::{seed_with, Counters, D2Picker, NoTrace, SeedConfig, SeedResult, Variant};
 use std::sync::Arc;
 use std::time::Duration;
@@ -43,10 +44,10 @@ pub struct JobSpec {
     /// Base seed for the experiment.
     pub seed: u64,
     /// Worker threads for the sharded seeding engine inside this job
-    /// (`Full` variant only; 1 = single-threaded). This is real thread-level
-    /// parallelism *within* one job, composing with the coordinator's
-    /// across-job worker pool. A [`LloydPhase`] shards its assignment step
-    /// over the same count.
+    /// (every variant shards its scans; 1 = single-threaded). This is real
+    /// thread-level parallelism *within* one job, composing with the
+    /// coordinator's across-job scheduler. A [`LloydPhase`] shards its
+    /// assignment step over the same count.
     pub threads: usize,
     /// Clustering phase after seeding; `None` = seeding-only job (the
     /// paper's Table-2 scope).
@@ -65,10 +66,28 @@ impl JobSpec {
         Pcg64::seed_stream(self.seed, stream)
     }
 
-    /// Runs the job, returning a compact result.
+    /// Runs the job, returning a compact result. Each sharded phase builds
+    /// (and reuses) a private worker pool; schedulers that run many jobs
+    /// should prefer [`JobSpec::run_with_pool`] so seeding and every Lloyd
+    /// iteration share one set of parked workers.
     pub fn run(&self) -> JobResult {
+        self.run_inner(None)
+    }
+
+    /// Runs the job on a shared persistent [`WorkerPool`]: both the seeding
+    /// scans and the Lloyd assignment steps dispatch onto `pool`'s parked
+    /// workers. The shard split is still governed by [`JobSpec::threads`],
+    /// so results are bit-identical to [`JobSpec::run`].
+    pub fn run_with_pool(&self, pool: &Arc<WorkerPool>) -> JobResult {
+        self.run_inner(Some(pool))
+    }
+
+    fn run_inner(&self, pool: Option<&Arc<WorkerPool>>) -> JobResult {
         let mut rng = self.rng();
-        let cfg = SeedConfig::new(self.k, self.variant).with_threads(self.threads.max(1));
+        let mut cfg = SeedConfig::new(self.k, self.variant).with_threads(self.threads.max(1));
+        if let Some(pool) = pool {
+            cfg = cfg.with_pool(Arc::clone(pool));
+        }
         let mut picker = D2Picker::new(&mut rng);
         let r: SeedResult = seed_with(&self.data, &cfg, &mut picker, &mut NoTrace);
         let lloyd = self.lloyd.map(|phase| {
@@ -76,6 +95,7 @@ impl JobSpec {
                 max_iters: phase.max_iters,
                 strategy: phase.strategy,
                 threads: self.threads.max(1),
+                pool: pool.map(Arc::clone),
                 ..LloydConfig::default()
             };
             let started = std::time::Instant::now();
@@ -222,6 +242,35 @@ mod tests {
                 a.stats.distances,
                 naive.stats.distances
             );
+        }
+    }
+
+    /// One shared pool across a seeding + Lloyd job must reproduce the
+    /// private-pool path bit-for-bit, and actually dispatch onto it.
+    #[test]
+    fn shared_pool_matches_private_pools() {
+        let mut rng = Pcg64::seed_from(21);
+        let data = Arc::new(gmm(&GmmSpec::new(700, 3, 4), &mut rng));
+        for variant in [Variant::Standard, Variant::Tie, Variant::Full] {
+            let spec = JobSpec {
+                instance: "t".into(),
+                data: Arc::clone(&data),
+                k: 10,
+                variant,
+                rep: 0,
+                seed: 13,
+                threads: 4,
+                lloyd: Some(LloydPhase { strategy: Strategy::Yinyang, max_iters: 30 }),
+            };
+            let pool = Arc::new(crate::runtime::pool::WorkerPool::new(4));
+            let a = spec.run();
+            let b = spec.run_with_pool(&pool);
+            assert_eq!(a.counters, b.counters, "{variant:?}");
+            assert_eq!(a.cost, b.cost, "{variant:?}");
+            let (al, bl) = (a.lloyd.unwrap(), b.lloyd.unwrap());
+            assert_eq!(al.stats, bl.stats, "{variant:?}");
+            assert_eq!(al.inertia, bl.inertia, "{variant:?}");
+            assert!(pool.stats().dispatches > 0, "{variant:?}: shared pool unused");
         }
     }
 

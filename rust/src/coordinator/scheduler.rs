@@ -1,7 +1,13 @@
 //! Worker-pool scheduler over the bounded queue.
+//!
+//! Each scheduler worker owns one persistent [`WorkerPool`] sized for the
+//! widest job in the batch and reuses it for *every* job it consumes — a
+//! coordinator sweep parks its shard workers once instead of respawning
+//! them per job (and per Lloyd iteration).
 
 use crate::coordinator::jobs::{JobResult, JobSpec};
 use crate::coordinator::queue::BoundedQueue;
+use crate::runtime::pool::{PoolStats, WorkerPool};
 use std::sync::{Arc, Mutex};
 use std::thread;
 
@@ -20,6 +26,17 @@ impl Scheduler {
 
     /// Runs all jobs to completion, returning results in completion order.
     pub fn run(&self, specs: Vec<JobSpec>) -> Vec<JobResult> {
+        self.run_with_stats(specs).0
+    }
+
+    /// Runs all jobs to completion, returning results in completion order
+    /// plus the aggregated [`PoolStats`] over every worker's persistent
+    /// shard pool (`workers` entries absorbed into one).
+    pub fn run_with_stats(&self, specs: Vec<JobSpec>) -> (Vec<JobResult>, PoolStats) {
+        // One shard pool per scheduler worker, wide enough for any job in
+        // the batch; jobs narrower than the pool still split by their own
+        // `threads` (the split, not the pool, governs results).
+        let lanes = specs.iter().map(|s| s.threads.max(1)).max().unwrap_or(1);
         let queue: BoundedQueue<JobSpec> = BoundedQueue::new(self.queue_capacity);
         let results = Arc::new(Mutex::new(Vec::with_capacity(specs.len())));
 
@@ -28,10 +45,12 @@ impl Scheduler {
             let q = queue.clone();
             let out = Arc::clone(&results);
             handles.push(thread::spawn(move || {
+                let pool = Arc::new(WorkerPool::new(lanes));
                 while let Some(spec) = q.pop() {
-                    let result = spec.run();
+                    let result = spec.run_with_pool(&pool);
                     out.lock().unwrap().push(result);
                 }
+                pool.stats()
             }));
         }
         // Producer side: backpressure via the bounded queue.
@@ -39,10 +58,13 @@ impl Scheduler {
             queue.push(spec).ok();
         }
         queue.close();
+        let mut stats = PoolStats::default();
         for h in handles {
-            h.join().expect("worker panicked");
+            stats.absorb(&h.join().expect("worker panicked"));
         }
-        Arc::try_unwrap(results).map(|m| m.into_inner().unwrap()).unwrap_or_default()
+        let results =
+            Arc::try_unwrap(results).map(|m| m.into_inner().unwrap()).unwrap_or_default();
+        (results, stats)
     }
 }
 
@@ -113,6 +135,28 @@ mod tests {
         let times = run_concurrent(spec, 4);
         assert_eq!(times.len(), 4);
         assert!(times.iter().all(|&t| t > 0.0));
+    }
+
+    /// Sharded jobs dispatch onto the per-worker persistent pools, the
+    /// aggregated stats see every pool, and results stay bit-identical to
+    /// serial single-job runs.
+    #[test]
+    fn sharded_jobs_reuse_worker_pools() {
+        let mut specs = specs(12);
+        for s in &mut specs {
+            s.threads = 2;
+        }
+        let serial: Vec<f64> = specs.iter().map(|s| s.run().cost).collect();
+        let (results, stats) = Scheduler::new(3, 4).run_with_stats(specs);
+        assert_eq!(results.len(), 12);
+        for r in &results {
+            assert_eq!(r.cost, serial[r.rep as usize]);
+        }
+        // 3 scheduler workers × one 2-lane pool each = 3 parked shard
+        // workers; 12 two-shard jobs dispatched somewhere among them.
+        assert_eq!(stats.workers, 3);
+        assert!(stats.dispatches >= 12, "dispatches={}", stats.dispatches);
+        assert!(stats.tasks >= 24, "tasks={}", stats.tasks);
     }
 
     #[test]

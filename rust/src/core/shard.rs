@@ -72,7 +72,7 @@ impl Shards {
     }
 
     /// Splits a full-length slice into per-shard disjoint mutable slices —
-    /// the hand-off point for `std::thread::scope` workers.
+    /// the hand-off point for [`crate::runtime::pool::WorkerPool`] tasks.
     ///
     /// # Panics
     /// Panics if `slice.len()` differs from the partitioned length.

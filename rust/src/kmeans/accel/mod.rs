@@ -43,9 +43,11 @@
 //! * the centroid update is the naive reference's sequential f64
 //!   accumulation, byte for byte;
 //! * the assignment step shards points over [`crate::core::shard::Shards`]
-//!   with `std::thread::scope` (the `seeding::parallel` pattern) and every
-//!   per-point decision depends only on that point's state plus shared
-//!   read-only geometry, so shard boundaries cannot change any result.
+//!   and dispatches the shards through the persistent
+//!   [`crate::runtime::pool::WorkerPool`] (one pool per run, reused across
+//!   every iteration); every per-point decision depends only on that
+//!   point's state plus shared read-only geometry, so shard boundaries —
+//!   and pool width — cannot change any result.
 //!
 //! Bound maintenance is done in f64 (center movements accumulate ulps far
 //! below f32 distance granularity). As everywhere else in this repo, filter
@@ -81,8 +83,9 @@ use crate::core::matrix::Matrix;
 use crate::core::norms::norms as compute_norms;
 use crate::core::shard::Shards;
 use crate::kmeans::lloyd::{LloydConfig, LloydResult};
+use crate::runtime::pool::WorkerPool;
 use crate::seeding::SeedResult;
-use std::thread;
+use std::sync::Arc;
 
 /// Pruning strategy of the accelerated Lloyd engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -226,6 +229,15 @@ fn engine(
     let shards = Shards::new(n, cfg.threads.max(1));
     let mut stats = LloydStats::default();
 
+    // The execution seam: one pool for the whole run (a shared one when the
+    // config carries it — coordinator jobs reuse theirs across seeding and
+    // every Lloyd iteration), created once here otherwise. The old per-call
+    // scope fan-out respawned ~iters×shards OS threads per run.
+    let pool = match &cfg.pool {
+        Some(p) => Arc::clone(p),
+        None => Arc::new(WorkerPool::new(cfg.threads.max(1))),
+    };
+
     // Per-point norms for the norm filter — reused from the seeder when it
     // already computed them relative to the origin (then they are free: the
     // seeding counters carry their cost), otherwise computed once here.
@@ -364,18 +376,16 @@ fn engine(
             } else {
                 shards.split_mut_stride(&mut lbs, lbs_stride)
             };
-            let per_shard: Vec<LloydStats> = thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(shards.count());
-                for (((((range, a), di), ti), u), (l, m)) in shards
-                    .ranges()
-                    .zip(a_parts)
-                    .zip(d_parts)
-                    .zip(t_parts)
-                    .zip(u_parts)
-                    .zip(l_parts.into_iter().zip(m_parts))
-                {
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(a_parts)
+                .zip(d_parts)
+                .zip(t_parts)
+                .zip(u_parts)
+                .zip(l_parts.into_iter().zip(m_parts))
+                .map(|(((((range, a), di), ti), u), (l, m))| {
                     let ctx = &ctx;
-                    handles.push(scope.spawn(move || {
+                    move || {
                         let mut view = ShardView {
                             start: range.start,
                             assign: a,
@@ -392,14 +402,11 @@ fn engine(
                             Strategy::Yinyang => yinyang::scan(ctx, &mut view),
                             Strategy::Elkan => elkan::scan(ctx, &mut view),
                         }
-                    }));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("assignment worker panicked"))
-                    .collect()
-            });
-            for s in per_shard {
+                    }
+                })
+                .collect();
+            // Merge in shard order — `scoped` returns results task-indexed.
+            for s in pool.scoped(tasks) {
                 stats += s;
             }
         }

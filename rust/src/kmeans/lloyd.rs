@@ -12,9 +12,11 @@ use crate::core::distance::sed;
 use crate::core::matrix::Matrix;
 use crate::kmeans::accel::Strategy;
 use crate::metrics::lloyd::LloydStats;
+use crate::runtime::pool::WorkerPool;
+use std::sync::Arc;
 
 /// Lloyd's configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct LloydConfig {
     /// Maximum number of iterations.
     pub max_iters: usize,
@@ -27,11 +29,17 @@ pub struct LloydConfig {
     /// Worker threads for the sharded assignment step (1 = sequential).
     /// Results are bit-identical at any thread count.
     pub threads: usize,
+    /// Shared worker pool for the sharded assignment step. `None` lets the
+    /// engine build a private pool per run (still reused across every
+    /// iteration); coordinator jobs pass one so seeding and Lloyd share the
+    /// same parked workers. The shard split is governed by `threads`, so
+    /// results never depend on the pool.
+    pub pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for LloydConfig {
     fn default() -> Self {
-        Self { max_iters: 100, tol: 1e-6, strategy: Strategy::Naive, threads: 1 }
+        Self { max_iters: 100, tol: 1e-6, strategy: Strategy::Naive, threads: 1, pool: None }
     }
 }
 

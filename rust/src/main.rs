@@ -13,10 +13,11 @@
 //! geokmpp info
 //! ```
 //!
-//! `--threads` drives the sharded parallel seeding engine (full variant):
-//! the per-iteration filter-and-update scan runs across that many contiguous
-//! point shards on real OS threads. `--xla` without built artifacts falls
-//! back to the sharded scalar executor at the same thread count.
+//! `--threads` drives the sharded seeding engine (every variant): the
+//! per-iteration scans run across that many contiguous point shards on the
+//! persistent worker pool (`runtime::pool`), whose dispatch counters are
+//! printed after each run. `--xla` without built artifacts falls back to
+//! the sharded scalar executor on the same pool.
 //!
 //! `--lloyd-strategy` selects the pruning strategy of the bounds-accelerated
 //! Lloyd engine (`kmeans::accel`), warm-started from the seeding result so
@@ -36,8 +37,9 @@ use geokmpp::kmeans::accel::{run_warm, Strategy};
 use geokmpp::kmeans::lloyd::LloydConfig;
 use geokmpp::metrics::table::fnum;
 use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
-use geokmpp::runtime::Executor;
+use geokmpp::runtime::{Executor, WorkerPool};
 use geokmpp::seeding::{seed_with, D2Picker, NoTrace, RefPoint, SeedConfig, Variant};
+use std::sync::Arc;
 
 fn main() {
     let args = match Args::from_env() {
@@ -111,28 +113,25 @@ fn cmd_seed(args: &Args) -> Result<()> {
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
     let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
+    // One persistent pool for every sharded scan in this run.
+    let pool = Arc::new(WorkerPool::new(threads));
 
     let result = if args.has("xla") {
         // open_or_scalar logs the real cause if it has to fall back.
-        let mut ex = Executor::open_or_scalar(threads);
+        let mut ex = Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool));
         if variant != Variant::Tie {
             eprintln!("note: --xla uses the hybrid TIE path");
         }
         let threshold = args.get_or("dense-threshold", 2048).map_err(anyhow::Error::msg)?;
         hybrid_tie_seed(&data, k, BatchPolicy { dense_threshold: threshold }, &mut ex, &mut rng)?
     } else {
-        let mut cfg = SeedConfig::new(k, variant).with_threads(threads);
+        let mut cfg =
+            SeedConfig::new(k, variant).with_threads(threads).with_pool(Arc::clone(&pool));
         cfg.appendix_a = args.has("appendix-a");
         cfg.dot_trick = args.has("dot-trick");
         cfg.binary_search_sampling = args.has("binsearch-sampling");
         if let Some(rp) = args.get("refpoint") {
             cfg.refpoint = RefPoint::parse(rp).context("bad --refpoint")?;
-        }
-        if threads > 1 && variant != Variant::Full {
-            eprintln!(
-                "note: --threads shards the full variant; {} stays single-threaded",
-                variant.name()
-            );
         }
         let mut picker = D2Picker::new(&mut rng);
         seed_with(&data, &cfg, &mut picker, &mut NoTrace)
@@ -155,6 +154,7 @@ fn cmd_seed(args: &Args) -> Result<()> {
         "filter rejects    f1={} f2={} norm-part={} norm-point={}",
         c.filter1_rejects, c.filter2_rejects, c.norm_partition_rejects, c.norm_point_rejects
     );
+    println!("{}", pool.stats());
     Ok(())
 }
 
@@ -169,9 +169,18 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let strategy: Strategy =
         args.get_or("lloyd-strategy", Strategy::Naive).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
-    let cfg = LloydConfig { max_iters: iters, strategy, threads, ..LloydConfig::default() };
+    // One persistent pool shared by seeding and every Lloyd iteration.
+    let pool = Arc::new(WorkerPool::new(threads));
+    let cfg = LloydConfig {
+        max_iters: iters,
+        strategy,
+        threads,
+        pool: Some(Arc::clone(&pool)),
+        ..LloydConfig::default()
+    };
 
-    let seed_cfg = SeedConfig::new(k, variant).with_threads(threads);
+    let seed_cfg =
+        SeedConfig::new(k, variant).with_threads(threads).with_pool(Arc::clone(&pool));
     let mut picker = D2Picker::new(&mut rng);
     let s = seed_with(&data, &seed_cfg, &mut picker, &mut NoTrace);
     println!(
@@ -184,7 +193,7 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         if strategy != Strategy::Naive {
             eprintln!("note: --xla dispatches dense assignments; --lloyd-strategy ignored");
         }
-        let mut ex = Executor::open_or_scalar(threads);
+        let mut ex = Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool));
         lloyd_xla(&data, &s.centers, &cfg, &mut ex)?
     } else {
         // Warm start: the seeder's exact D² weights seed the upper bounds.
@@ -220,6 +229,7 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         st.norm_prunes,
         st.full_scans
     );
+    println!("{}", pool.stats());
     Ok(())
 }
 

@@ -12,15 +12,18 @@
 //!   (requires `make artifacts` and the `xla-rt` feature);
 //! * [`Executor::scalar`] — no runtime at all: the same dense ops computed
 //!   by scalar SED kernels sharded across real OS threads
-//!   ([`crate::core::shard::Shards`] + `std::thread::scope`). This is what
-//!   lets coordinator jobs and the CLI run the dense phases with true
-//!   thread-level parallelism on machines without artifacts.
+//!   ([`crate::core::shard::Shards`] splits dispatched through the
+//!   persistent [`WorkerPool`]). This is what lets coordinator jobs and the
+//!   CLI run the dense phases with true thread-level parallelism on
+//!   machines without artifacts.
 
 use crate::core::distance::sed;
 use crate::core::matrix::Matrix;
 use crate::core::shard::Shards;
 use crate::runtime::client::Runtime;
+use crate::runtime::pool::{PoolStats, WorkerPool};
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 /// Matches `model.FAR_AWAY` in `python/compile/model.py`.
 pub const FAR_AWAY: f32 = 1.0e18;
@@ -39,8 +42,12 @@ fn gather_padded(data: &Matrix, rows: &[usize], chunk: usize, d_pad: usize, buf:
 /// High-level executor over the AOT artifacts (or the scalar fallback).
 pub struct Executor {
     rt: Option<Runtime>,
-    /// Worker threads for the scalar backend.
+    /// Worker threads for the scalar backend (governs the shard split).
     threads: usize,
+    /// Execution seam for the sharded scalar scans. Defaults to a private
+    /// pool sized to `threads`; [`Executor::with_pool`] swaps in a shared
+    /// one so a whole job reuses the same workers.
+    pool: Arc<WorkerPool>,
     // Reused marshaling buffers (allocation-free steady state).
     xbuf: Vec<f32>,
     wbuf: Vec<f32>,
@@ -54,15 +61,7 @@ pub struct Executor {
 impl Executor {
     /// Wraps a runtime.
     pub fn new(rt: Runtime) -> Executor {
-        Executor {
-            rt: Some(rt),
-            threads: 1,
-            xbuf: Vec::new(),
-            wbuf: Vec::new(),
-            cbuf: Vec::new(),
-            dispatches: 0,
-            scalar_scans: 0,
-        }
+        Executor { rt: Some(rt), ..Executor::new_empty() }
     }
 
     /// Opens the default runtime (artifacts directory from the environment).
@@ -71,9 +70,22 @@ impl Executor {
     }
 
     /// A runtime-free executor computing every op with scalar kernels
-    /// sharded across `threads` OS threads.
+    /// sharded across `threads` OS threads (a private [`WorkerPool`]).
     pub fn scalar(threads: usize) -> Executor {
-        Executor { threads: threads.max(1), ..Executor::new_empty() }
+        let threads = threads.max(1);
+        Executor {
+            threads,
+            pool: Arc::new(WorkerPool::new(threads)),
+            ..Executor::new_empty()
+        }
+    }
+
+    /// Swaps in a shared worker pool (the shard split stays governed by
+    /// this executor's `threads`, so results are unchanged — see the
+    /// determinism contract in [`crate::runtime::pool`]).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Executor {
+        self.pool = pool;
+        self
     }
 
     /// Opens the XLA runtime if available, otherwise falls back to the
@@ -97,6 +109,7 @@ impl Executor {
         Executor {
             rt: None,
             threads: 1,
+            pool: Arc::new(WorkerPool::new(1)),
             xbuf: Vec::new(),
             wbuf: Vec::new(),
             cbuf: Vec::new(),
@@ -113,6 +126,11 @@ impl Executor {
     /// Worker threads used by the scalar backend.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Counters of the pool backing the scalar scans.
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// Largest feature-dimension bucket available for an op (0 without a
@@ -153,19 +171,23 @@ impl Executor {
         {
             let w_parts = shards.split_mut(&mut w_out);
             let c_parts = shards.split_mut(&mut chg_out);
-            std::thread::scope(|scope| {
-                for ((range, w), chg) in shards.ranges().zip(w_parts).zip(c_parts) {
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(w_parts)
+                .zip(c_parts)
+                .map(|((range, w), chg)| {
                     let rows = &rows[range];
-                    scope.spawn(move || {
+                    move || {
                         for (slot, &r) in rows.iter().enumerate() {
                             let dist = sed(data.row(r), c_new);
                             let cur = weights.map(|ws| ws[r]).unwrap_or(f32::INFINITY);
                             w[slot] = cur.min(dist);
                             chg[slot] = i32::from(dist < cur);
                         }
-                    });
-                }
-            });
+                    }
+                })
+                .collect();
+            self.pool.scoped(tasks);
         }
         (w_out, chg_out)
     }
@@ -181,8 +203,8 @@ impl Executor {
     /// member's outcome depends only on its own weight and `d_cc`.
     ///
     /// Small member lists (this op serves the *sub-dense-threshold* clusters
-    /// of the hybrid path) run inline: a thread spawn costs ~µs, which would
-    /// dominate a tens-of-member scan.
+    /// of the hybrid path) run inline: even a parked-pool dispatch costs a
+    /// wake/latch round-trip, which would dominate a tens-of-member scan.
     pub fn min_update_tie(
         &mut self,
         data: &Matrix,
@@ -213,16 +235,16 @@ impl Executor {
         let shards = Shards::new(rows.len(), self.threads);
         let mut w_out = vec![0f32; rows.len()];
         let mut chg_out = vec![0i32; rows.len()];
-        let mut computed = vec![0u64; shards.count()];
-        {
+        let computed: u64 = {
             let w_parts = shards.split_mut(&mut w_out);
             let c_parts = shards.split_mut(&mut chg_out);
-            std::thread::scope(|scope| {
-                for (((range, w), chg), cnt) in
-                    shards.ranges().zip(w_parts).zip(c_parts).zip(computed.iter_mut())
-                {
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(w_parts)
+                .zip(c_parts)
+                .map(|((range, w), chg)| {
                     let rows = &rows[range];
-                    scope.spawn(move || {
+                    move || {
                         let mut local = 0u64;
                         for (slot, &r) in rows.iter().enumerate() {
                             let cur = weights[r];
@@ -236,12 +258,13 @@ impl Executor {
                                 chg[slot] = 0;
                             }
                         }
-                        *cnt = local;
-                    });
-                }
-            });
-        }
-        (w_out, chg_out, computed.iter().sum())
+                        local
+                    }
+                })
+                .collect();
+            self.pool.scoped(tasks).iter().sum()
+        };
+        (w_out, chg_out, computed)
     }
 
     /// Fused min-update of `weights[rows]` against `c_new` (a dataset row),
@@ -362,9 +385,12 @@ impl Executor {
         {
             let a_parts = shards.split_mut(&mut assign);
             let m_parts = shards.split_mut(&mut mind);
-            std::thread::scope(|scope| {
-                for ((range, a), m) in shards.ranges().zip(a_parts).zip(m_parts) {
-                    scope.spawn(move || {
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(a_parts)
+                .zip(m_parts)
+                .map(|((range, a), m)| {
+                    move || {
                         for (slot, i) in range.enumerate() {
                             let row = data.row(i);
                             let mut best = f32::INFINITY;
@@ -379,9 +405,10 @@ impl Executor {
                             a[slot] = best_j;
                             m[slot] = best;
                         }
-                    });
-                }
-            });
+                    }
+                })
+                .collect();
+            self.pool.scoped(tasks);
         }
         (assign, mind)
     }
@@ -455,15 +482,18 @@ impl Executor {
             let shards = Shards::new(n, self.threads);
             let mut out = vec![0f32; n];
             let o_parts = shards.split_mut(&mut out);
-            std::thread::scope(|scope| {
-                for (range, o) in shards.ranges().zip(o_parts) {
-                    scope.spawn(move || {
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(o_parts)
+                .map(|(range, o)| {
+                    move || {
                         for (slot, i) in range.enumerate() {
                             o[slot] = crate::core::distance::sqnorm(data.row(i)).sqrt();
                         }
-                    });
-                }
-            });
+                    }
+                })
+                .collect();
+            self.pool.scoped(tasks);
             return Ok(out);
         }
         let entry = match self.rt.as_ref().unwrap().manifest().find("norms", d, 1) {

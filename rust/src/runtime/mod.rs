@@ -9,8 +9,10 @@ pub mod artifacts;
 pub mod batcher;
 pub mod client;
 pub mod executor;
+pub mod pool;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use batcher::BatchPolicy;
 pub use client::Runtime;
 pub use executor::Executor;
+pub use pool::{PoolStats, WorkerPool};

@@ -1,0 +1,572 @@
+//! Persistent worker pool — the one execution seam for sharded work.
+//!
+//! Every parallel scan in the tree (the seeding scans, the Lloyd assignment
+//! step, the scalar executor fallbacks) used to respawn OS threads through
+//! a per-call scope fan-out — often once per Lloyd *iteration*. A
+//! [`WorkerPool`] spawns its workers once and parks them on condvars between
+//! dispatches, so a coordinator job reuses the same threads across seeding
+//! and every Lloyd iteration instead of paying ~iters×shards spawns.
+//!
+//! The pool is hand-rolled on `std::sync` (`Mutex` + `Condvar` + atomics):
+//! the tree is dependency-free, so no crossbeam.
+//!
+//! # Determinism contract
+//!
+//! [`WorkerPool::scoped`] preserves the bit-identical determinism contract of
+//! the scope fan-outs it replaced:
+//!
+//! * callers decide the shard split ([`crate::core::shard::Shards`]) — the
+//!   pool never re-partitions work, so shard boundaries depend only on the
+//!   caller's `threads` knob, never on pool width;
+//! * task `i` of a dispatch always runs on lane `i % lanes` and each lane
+//!   executes its batch in ascending task order (fixed shard→worker
+//!   assignment);
+//! * results come back indexed by task order, so callers merge in shard
+//!   order no matter which worker finished first.
+//!
+//! Result values therefore depend only on the closures themselves: `scoped`
+//! output is bit-identical to calling the same closures sequentially, at any
+//! pool width.
+//!
+//! # Panic policy
+//!
+//! A panicking task never kills a worker. Panics are caught per task, the
+//! first payload is stashed, the remaining tasks of the dispatch still run,
+//! and the payload is re-raised on the *calling* thread once the dispatch
+//! drains — the pool stays fully usable afterwards.
+
+use std::fmt;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A lifetime-erased unit of work: one shard closure of one dispatch.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// What a worker finds in its slot when it checks for work.
+enum SlotState {
+    /// Nothing to do — park.
+    Idle,
+    /// A batch of tasks to run in order.
+    Batch(Vec<Task>),
+    /// The pool is dropping — exit the worker loop.
+    Shutdown,
+}
+
+/// State shared between one worker thread and the pool handle.
+struct WorkerShared {
+    slot: Mutex<SlotState>,
+    cv: Condvar,
+    parks: AtomicU64,
+    wakes: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+/// Completion latch for one dispatch: counts outstanding tasks.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { remaining: Mutex::new(count), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            // Notify while holding the lock: the waiter cannot observe zero
+            // and destroy the latch before we are done touching it.
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = self.cv.wait(remaining).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: &WorkerShared) {
+    loop {
+        let batch = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                match std::mem::replace(&mut *slot, SlotState::Idle) {
+                    SlotState::Batch(batch) => break batch,
+                    SlotState::Shutdown => return,
+                    SlotState::Idle => {
+                        shared.parks.fetch_add(1, Ordering::Relaxed);
+                        slot = shared.cv.wait(slot).unwrap();
+                        shared.wakes.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        };
+        let start = Instant::now();
+        for task in batch {
+            task();
+        }
+        shared.busy_ns.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// A persistent pool of parked workers executing sharded dispatches.
+///
+/// `WorkerPool::new(threads)` sizes the pool for a `--threads N` run: the
+/// calling thread is lane 0 and `threads - 1` workers are lanes `1..N`, so a
+/// dispatch of `N` shards saturates exactly `N` OS threads. `threads <= 1`
+/// spawns nothing and [`WorkerPool::scoped`] runs every task inline.
+pub struct WorkerPool {
+    workers: Vec<std::sync::Arc<WorkerShared>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes dispatches: worker slots are refilled only after the
+    /// previous dispatch fully drained, so `scoped` is safe to call from
+    /// several threads sharing one `Arc<WorkerPool>`.
+    gate: Mutex<()>,
+    dispatches: AtomicU64,
+    inline_dispatches: AtomicU64,
+    tasks: AtomicU64,
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("lanes", &self.lanes())
+            .field("dispatches", &self.dispatches.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Builds a pool for `threads`-wide dispatches (spawns `threads - 1`
+    /// workers; the caller is the remaining lane).
+    pub fn new(threads: usize) -> WorkerPool {
+        let spawn = threads.max(1) - 1;
+        let mut workers = Vec::with_capacity(spawn);
+        let mut handles = Vec::with_capacity(spawn);
+        for w in 0..spawn {
+            let shared = std::sync::Arc::new(WorkerShared {
+                slot: Mutex::new(SlotState::Idle),
+                cv: Condvar::new(),
+                parks: AtomicU64::new(0),
+                wakes: AtomicU64::new(0),
+                busy_ns: AtomicU64::new(0),
+            });
+            let for_thread = std::sync::Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("geokmpp-pool-{w}"))
+                .spawn(move || worker_loop(&for_thread))
+                .expect("spawning pool worker");
+            workers.push(shared);
+            handles.push(handle);
+        }
+        WorkerPool {
+            workers,
+            handles,
+            gate: Mutex::new(()),
+            dispatches: AtomicU64::new(0),
+            inline_dispatches: AtomicU64::new(0),
+            tasks: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of spawned workers (excludes the calling thread's lane).
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execution width of a dispatch: spawned workers + the calling thread.
+    pub fn lanes(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Runs one closure per shard and returns their results in task order.
+    ///
+    /// The closures may borrow from the caller's stack (disjoint `&mut`
+    /// shard slices split off one buffer, read-only views, …) exactly as
+    /// with `std::thread::scope`: the call blocks until every task has run,
+    /// so no borrow outlives the frame that owns it.
+    pub fn scoped<'env, T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.tasks.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+        if self.workers.is_empty() || tasks.len() <= 1 {
+            // threads=1 bypass (and the trivial single-task dispatch): no
+            // synchronization, no boxing — just run in order right here.
+            self.inline_dispatches.fetch_add(1, Ordering::Relaxed);
+            return tasks.into_iter().map(|task| task()).collect();
+        }
+
+        let lanes = self.lanes();
+        let n = tasks.len();
+        let latch = Latch::new(n);
+        let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+        let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+
+        /// Erases a task's borrow lifetime so it can sit in a worker slot.
+        ///
+        /// # Safety
+        /// The caller must not let the erased box outlive the borrows the
+        /// closure captures. `scoped` upholds this by blocking on the
+        /// dispatch latch until every erased task has been consumed and run,
+        /// all within the frame that owns the borrowed state.
+        unsafe fn erase<'a>(f: Box<dyn FnOnce() + Send + 'a>) -> Task {
+            unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(f) }
+        }
+
+        // Lane 0 runs on the calling thread; lanes 1.. go to the workers.
+        // Task i always lands on lane i % lanes — the fixed shard→worker
+        // assignment of the determinism contract.
+        let mut inline_batch: Vec<Task> = Vec::new();
+        let mut batches: Vec<Vec<Task>> = (1..lanes).map(|_| Vec::new()).collect();
+        for (i, (task, out)) in tasks.into_iter().zip(results.iter_mut()).enumerate() {
+            let latch_ref = &latch;
+            let panic_ref = &first_panic;
+            let job = move || {
+                match catch_unwind(AssertUnwindSafe(task)) {
+                    Ok(value) => *out = Some(value),
+                    Err(payload) => {
+                        let mut slot = panic_ref.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                }
+                latch_ref.count_down();
+            };
+            // SAFETY: the job borrows only the task's captures, the result
+            // slot, the latch, and the panic slot — all owned by this stack
+            // frame. `scoped` blocks on `latch.wait()` below until every job
+            // has run and counted down, so none of those borrows is dangling
+            // while a worker can still call the job.
+            let erased = unsafe { erase(Box::new(job)) };
+            let lane = i % lanes;
+            if lane == 0 {
+                inline_batch.push(erased);
+            } else {
+                batches[lane - 1].push(erased);
+            }
+        }
+
+        {
+            // One dispatch in flight at a time: a worker's slot is Idle by
+            // the time the previous dispatch's `wait` returned, so refills
+            // never clobber a pending batch.
+            let _gate = self.gate.lock().unwrap();
+            for (worker, batch) in self.workers.iter().zip(batches) {
+                if batch.is_empty() {
+                    continue;
+                }
+                let mut slot = worker.slot.lock().unwrap();
+                *slot = SlotState::Batch(batch);
+                worker.cv.notify_one();
+            }
+            for task in inline_batch {
+                task();
+            }
+            latch.wait();
+        }
+
+        if let Some(payload) = first_panic.into_inner().unwrap() {
+            resume_unwind(payload);
+        }
+        results.into_iter().map(|slot| slot.expect("pool task finished without a result")).collect()
+    }
+
+    /// Snapshot of the pool's lifetime counters.
+    ///
+    /// `tasks`/`dispatches`/`spawns_avoided` are deterministic for a fixed
+    /// workload; `parks`/`wakes`/`busy_ns` depend on scheduling timing and
+    /// are observability-only (never gate on them).
+    pub fn stats(&self) -> PoolStats {
+        let tasks = self.tasks.load(Ordering::Relaxed);
+        PoolStats {
+            workers: self.workers.len(),
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            inline_dispatches: self.inline_dispatches.load(Ordering::Relaxed),
+            tasks,
+            spawns_avoided: tasks.saturating_sub(self.workers.len() as u64),
+            parks: self.workers.iter().map(|w| w.parks.load(Ordering::Relaxed)).sum(),
+            wakes: self.workers.iter().map(|w| w.wakes.load(Ordering::Relaxed)).sum(),
+            busy_ns: self.workers.iter().map(|w| w.busy_ns.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for worker in &self.workers {
+            let mut slot = worker.slot.lock().unwrap();
+            *slot = SlotState::Shutdown;
+            worker.cv.notify_one();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Lifetime counters of a [`WorkerPool`] (see [`WorkerPool::stats`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Spawned workers (the calling thread adds one more lane).
+    pub workers: usize,
+    /// `scoped` calls served.
+    pub dispatches: u64,
+    /// Dispatches that ran entirely on the calling thread (threads=1 pools
+    /// and single-task dispatches).
+    pub inline_dispatches: u64,
+    /// Total tasks executed across all dispatches.
+    pub tasks: u64,
+    /// OS-thread spawns saved vs. the old per-call scope fan-out, which
+    /// spawned one thread per task: `tasks - workers` (saturating).
+    pub spawns_avoided: u64,
+    /// Times a worker parked on its condvar (timing-dependent).
+    pub parks: u64,
+    /// Times a parked worker was woken (timing-dependent).
+    pub wakes: u64,
+    /// Per-worker busy time in nanoseconds (timing-dependent).
+    pub busy_ns: Vec<u64>,
+}
+
+impl PoolStats {
+    /// Folds another pool's counters into this one (coordinator aggregation
+    /// across per-worker pools).
+    pub fn absorb(&mut self, other: &PoolStats) {
+        self.workers += other.workers;
+        self.dispatches += other.dispatches;
+        self.inline_dispatches += other.inline_dispatches;
+        self.tasks += other.tasks;
+        self.spawns_avoided += other.spawns_avoided;
+        self.parks += other.parks;
+        self.wakes += other.wakes;
+        self.busy_ns.extend_from_slice(&other.busy_ns);
+    }
+
+    /// Total worker busy time in milliseconds.
+    pub fn busy_ms_total(&self) -> f64 {
+        self.busy_ns.iter().map(|&ns| ns as f64 / 1e6).sum()
+    }
+
+    /// The stats as a flat JSON object (hand-rolled: serde is not in the
+    /// offline crate set).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"workers\":{},\"dispatches\":{},\"inline_dispatches\":{},\"tasks\":{},\
+             \"spawns_avoided\":{},\"parks\":{},\"wakes\":{},\"busy_ms_total\":{:.3}}}",
+            self.workers,
+            self.dispatches,
+            self.inline_dispatches,
+            self.tasks,
+            self.spawns_avoided,
+            self.parks,
+            self.wakes,
+            self.busy_ms_total(),
+        )
+    }
+}
+
+impl fmt::Display for PoolStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "pool: workers={} dispatches={} ({} inline) tasks={} spawns_avoided={} \
+             parks={} wakes={} busy_ms={:.1}",
+            self.workers,
+            self.dispatches,
+            self.inline_dispatches,
+            self.tasks,
+            self.spawns_avoided,
+            self.parks,
+            self.wakes,
+            self.busy_ms_total(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Results come back in task order and match a sequential run, across
+    /// repeated dispatches on the same (reused) pool.
+    #[test]
+    fn results_match_sequential_across_reused_dispatches() {
+        let pool = WorkerPool::new(4);
+        for round in 0..10usize {
+            let n = 1 + (round * 7) % 13; // vary batch size, incl. n < lanes
+            let tasks: Vec<_> = (0..n).map(|i| move || i * i + round).collect();
+            let got = pool.scoped(tasks);
+            let want: Vec<_> = (0..n).map(|i| i * i + round).collect();
+            assert_eq!(got, want, "round {round}");
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.workers, 3);
+        assert_eq!(stats.dispatches, 10);
+        assert_eq!(stats.tasks, (0..10usize).map(|r| (1 + (r * 7) % 13) as u64).sum::<u64>());
+        assert_eq!(stats.spawns_avoided, stats.tasks - 3);
+    }
+
+    /// threads <= 1 spawns no workers and every dispatch runs inline.
+    #[test]
+    fn single_thread_pool_bypasses_workers() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 0);
+        assert_eq!(pool.lanes(), 1);
+        let got = pool.scoped((0..5).map(|i| move || i * 2).collect::<Vec<_>>());
+        assert_eq!(got, vec![0, 2, 4, 6, 8]);
+        let stats = pool.stats();
+        assert_eq!(stats.dispatches, 1);
+        assert_eq!(stats.inline_dispatches, 1);
+        assert_eq!((stats.parks, stats.wakes), (0, 0));
+        assert!(stats.busy_ns.is_empty());
+        // new(0) behaves like new(1).
+        assert_eq!(WorkerPool::new(0).lanes(), 1);
+    }
+
+    /// Tasks may borrow disjoint `&mut` shard slices from the caller's
+    /// stack, exactly like the scope fan-outs the pool replaced.
+    #[test]
+    fn mutable_shard_handoff() {
+        let pool = WorkerPool::new(3);
+        let mut buf = vec![0u32; 100];
+        {
+            let mut parts: Vec<&mut [u32]> = Vec::new();
+            let mut rest = buf.as_mut_slice();
+            for _ in 0..4 {
+                let (head, tail) = rest.split_at_mut(25);
+                parts.push(head);
+                rest = tail;
+            }
+            let tasks: Vec<_> = parts
+                .into_iter()
+                .enumerate()
+                .map(|(s, part)| {
+                    move || {
+                        for (j, v) in part.iter_mut().enumerate() {
+                            *v = (s * 25 + j) as u32;
+                        }
+                        part.len()
+                    }
+                })
+                .collect();
+            let sizes = pool.scoped(tasks);
+            assert_eq!(sizes, vec![25; 4]);
+        }
+        let want: Vec<u32> = (0..100).collect();
+        assert_eq!(buf, want);
+    }
+
+    /// A panicking task reaches the caller as a panic, and the pool stays
+    /// fully usable afterwards — no poisoned worker.
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8)
+                .map(|i| {
+                    let task: Box<dyn FnOnce() -> usize + Send> = if i == 5 {
+                        Box::new(|| panic!("shard 5 exploded"))
+                    } else {
+                        Box::new(move || i)
+                    };
+                    task
+                })
+                .collect();
+            pool.scoped(tasks.into_iter().map(|t| move || t()).collect::<Vec<_>>());
+        }));
+        let payload = caught.expect_err("panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "shard 5 exploded");
+        // The pool survives: the next dispatch completes normally.
+        let got = pool.scoped((0..6).map(|i| move || i + 1).collect::<Vec<_>>());
+        assert_eq!(got, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    /// The pool's output is bit-identical to the old `thread::scope` path
+    /// for a shard-sum workload (the only sanctioned `thread::scope` left in
+    /// the tree lives in this test).
+    #[test]
+    fn matches_thread_scope_reference() {
+        let data: Vec<f32> = (0..997).map(|i| (i as f32) * 0.37 - 180.0).collect();
+        let chunk = data.len().div_ceil(4);
+        let shards: Vec<&[f32]> = data.chunks(chunk).collect();
+
+        let via_scope: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|part| s.spawn(move || part.iter().fold(0f64, |t, &v| t + v as f64)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("scope worker")).collect()
+        });
+
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<_> = shards
+            .iter()
+            .map(|part| move || part.iter().fold(0f64, |t, &v| t + v as f64))
+            .collect();
+        let via_pool = pool.scoped(tasks);
+
+        assert_eq!(via_pool.len(), via_scope.len());
+        for (a, b) in via_pool.iter().zip(&via_scope) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// More tasks than lanes: batches queue per lane and still come back in
+    /// task order.
+    #[test]
+    fn more_tasks_than_lanes() {
+        let pool = WorkerPool::new(2);
+        let n = 13;
+        let got = pool.scoped((0..n).map(|i| move || i * 3).collect::<Vec<_>>());
+        let want: Vec<_> = (0..n).map(|i| i * 3).collect();
+        assert_eq!(got, want);
+    }
+
+    /// Pool width does not change results: the same 8-shard workload on
+    /// 1/2/4/8-lane pools yields identical outputs.
+    #[test]
+    fn results_invariant_to_pool_width() {
+        let run = |threads: usize| -> Vec<u64> {
+            let pool = WorkerPool::new(threads);
+            let tasks: Vec<_> = (0..8u64)
+                .map(|s| move || (0..1000).fold(s, |a, b| a.wrapping_mul(31) ^ b))
+                .collect();
+            pool.scoped(tasks)
+        };
+        let base = run(1);
+        for threads in [2, 4, 8] {
+            assert_eq!(run(threads), base, "threads={threads}");
+        }
+    }
+
+    /// Stats aggregation across pools and the JSON/Display surfaces.
+    #[test]
+    fn stats_absorb_and_render() {
+        let pool = WorkerPool::new(2);
+        pool.scoped((0..4).map(|i| move || i).collect::<Vec<_>>());
+        let mut agg = pool.stats();
+        let other = PoolStats { workers: 3, dispatches: 5, tasks: 20, ..PoolStats::default() };
+        agg.absorb(&other);
+        assert_eq!(agg.workers, 4);
+        assert_eq!(agg.dispatches, 6);
+        assert_eq!(agg.tasks, 24);
+        let json = agg.to_json();
+        assert!(json.contains("\"spawns_avoided\""));
+        assert!(json.contains("\"workers\":4"));
+        let line = format!("{agg}");
+        assert!(line.starts_with("pool: workers=4"));
+    }
+}

@@ -16,13 +16,14 @@
 //! Appendix-A center–center distance avoidance, Appendix-B reference points
 //! and the dot-product SED decomposition.
 //!
-//! Setting [`SeedConfig::threads`] above 1 routes the `Full` variant through
-//! the sharded multi-threaded engine ([`parallel`]): the per-iteration
-//! filter-and-update scan runs across contiguous point shards with
-//! per-shard partition state, while sampling stays sequential and
-//! distribution-identical. Scripted runs are bit-identical at any thread
-//! count. `Standard` and `Tie` currently ignore the knob (their scans stay
-//! single-threaded).
+//! Setting [`SeedConfig::threads`] above 1 shards every variant's update
+//! scans across the persistent worker pool
+//! ([`crate::runtime::pool::WorkerPool`]): `Full` routes through the
+//! sharded engine ([`parallel`]) with per-shard partition state;
+//! `Standard` and `Tie` shard their per-center scans in place (see
+//! [`standard`] and [`tie`]). Sampling stays sequential and
+//! distribution-identical everywhere, so scripted runs are bit-identical
+//! at any thread count.
 
 pub mod centerdist;
 pub mod clusters;
@@ -44,6 +45,8 @@ pub use trace::{NoTrace, TraceSink};
 use crate::core::matrix::Matrix;
 use crate::core::rng::Rng;
 use crate::metrics::timer::Stopwatch;
+use crate::runtime::pool::WorkerPool;
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Which seeding algorithm to run.
@@ -98,13 +101,20 @@ pub struct SeedConfig {
     /// cluster is untouched and draw members by binary search (`Tie` only;
     /// the `Full` variant's partitions churn too often to amortize tables).
     pub binary_search_sampling: bool,
-    /// Worker threads for the sharded parallel engine (`Full` only; 1 =
-    /// single-threaded). The point set is split into `threads` contiguous
-    /// shards, each with its own per-cluster partition state; per-shard
-    /// partial sums are merged so the sequential two-step sampler sees the
-    /// exact same distribution, and scripted runs stay bit-identical at any
-    /// thread count. See [`parallel`].
+    /// Worker threads for the sharded scans (1 = single-threaded). The
+    /// point set is split into `threads` contiguous shards (per-cluster
+    /// partition state for `Full`, per-center scan slices for `Standard`
+    /// and `Tie`); per-shard partial results are merged in shard order so
+    /// the sequential samplers see the exact same distribution, and
+    /// scripted runs stay bit-identical at any thread count. See
+    /// [`parallel`], [`standard`] and [`tie`].
     pub threads: usize,
+    /// Shared worker pool for the sharded scans. `None` lets each run build
+    /// a private pool (still reused across all `k` scans); coordinator jobs
+    /// pass one so seeding and the Lloyd phase share the same parked
+    /// workers. The shard split is governed by `threads`, so results never
+    /// depend on the pool.
+    pub pool: Option<Arc<WorkerPool>>,
 }
 
 impl SeedConfig {
@@ -119,6 +129,7 @@ impl SeedConfig {
             dot_trick: false,
             binary_search_sampling: false,
             threads: 1,
+            pool: None,
         }
     }
 
@@ -126,6 +137,21 @@ impl SeedConfig {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
+    }
+
+    /// Attaches a shared worker pool (builder style).
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The pool the scans should dispatch through: the attached shared one,
+    /// or a fresh private pool sized to `threads`.
+    pub(crate) fn pool_or_new(&self) -> Arc<WorkerPool> {
+        match &self.pool {
+            Some(p) => Arc::clone(p),
+            None => Arc::new(WorkerPool::new(self.threads.max(1))),
+        }
     }
 }
 

@@ -9,9 +9,10 @@
 //! *own* partition state — member lists, SED radii, weight sums and norm
 //! bounds over the shard-local members only ([`NormCluster`] per
 //! (shard, cluster)). Because shards are contiguous, the global `weights`,
-//! `assignments` and cached `l(x)`/`u(x)` bound arrays are handed to
-//! `std::thread::scope` workers as disjoint `&mut` slices: no locks, no
-//! unsafe, no cross-thread writes.
+//! `assignments` and cached `l(x)`/`u(x)` bound arrays are handed to the
+//! persistent worker pool ([`crate::runtime::pool::WorkerPool`], one
+//! dispatch per scan) as disjoint `&mut` slices: no locks, no cross-thread
+//! writes.
 //!
 //! Each iteration:
 //! 1. **Sampling (sequential)** — per-shard partition sums are folded into
@@ -63,7 +64,6 @@ use crate::seeding::picker::{CenterPicker, PickCtx};
 use crate::seeding::refpoint::RefPoint;
 use crate::seeding::trace::TraceSink;
 use crate::seeding::{SeedConfig, SeedResult};
-use std::thread;
 use std::time::Duration;
 
 /// Per-shard slice of the cluster structure: for every cluster, the members
@@ -271,6 +271,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let n = data.rows();
     let d = data.cols();
     let shards = Shards::new(n, cfg.threads.max(1));
+    // One pool (shared or private) for the init pass and all k scans.
+    let pool = cfg.pool_or_new();
     let mut counters = Counters::default();
 
     // Norm precomputation (§4.3), identical to the single-threaded path.
@@ -307,23 +309,18 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         let w_parts = shards.split_mut(&mut weights);
         let lo_parts = shards.split_mut(&mut lo);
         let up_parts = shards.split_mut(&mut up);
-        let per_shard: Vec<Counters> = thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(states.len());
-            for (((state, w), l), u) in
-                states.iter_mut().zip(w_parts).zip(lo_parts).zip(up_parts)
-            {
+        let tasks: Vec<_> = states
+            .iter_mut()
+            .zip(w_parts)
+            .zip(lo_parts)
+            .zip(up_parts)
+            .map(|(((state, w), l), u)| {
                 let norms = &norms;
                 let sq = &sq;
-                handles.push(scope.spawn(move || {
-                    init_shard(data, cfg, sq, norms, first, state, w, l, u)
-                }));
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("init worker panicked"))
-                .collect()
-        });
-        for c in per_shard {
+                move || init_shard(data, cfg, sq, norms, first, state, w, l, u)
+            })
+            .collect();
+        for c in pool.scoped(tasks) {
             counters += c;
         }
     }
@@ -442,29 +439,23 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             let lo_parts = shards.split_mut(&mut lo);
             let up_parts = shards.split_mut(&mut up);
             let d_cc = &d_cc;
-            let per_shard: Vec<Counters> = thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(states.len());
-                for ((((state, w), a), l), u) in states
-                    .iter_mut()
-                    .zip(w_parts)
-                    .zip(a_parts)
-                    .zip(lo_parts)
-                    .zip(up_parts)
-                {
+            let tasks: Vec<_> = states
+                .iter_mut()
+                .zip(w_parts)
+                .zip(a_parts)
+                .zip(lo_parts)
+                .zip(up_parts)
+                .map(|((((state, w), a), l), u)| {
                     let norms = &norms;
                     let sq = &sq;
-                    handles.push(scope.spawn(move || {
+                    move || {
                         scan_shard(
                             data, cfg, sq, norms, state, w, a, l, u, d_cc, c_new, slot, cn_norm,
                         )
-                    }));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("scan worker panicked"))
-                    .collect()
-            });
-            for c in per_shard {
+                    }
+                })
+                .collect();
+            for c in pool.scoped(tasks) {
                 counters += c;
             }
         }

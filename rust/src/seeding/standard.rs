@@ -3,10 +3,21 @@
 //! Per added center: one full `O(n·d)` scan updating `w_i` against the new
 //! center (using the fact that the previous closest center remains closest
 //! among predecessors, §4.1), then flat D² roulette sampling.
+//!
+//! With [`SeedConfig::threads`] above 1 the scan is sharded over the
+//! persistent worker pool ([`crate::runtime::pool::WorkerPool`]):
+//! contiguous point shards get disjoint `&mut` weight/assignment slices and
+//! run the identical per-point arithmetic. The flat-sampling total is then
+//! re-folded *sequentially in index order* over the final weights — the
+//! exact f64 the single-threaded accumulation produces — so the D² draws,
+//! and with them the whole run, are bit-identical at any thread count. Like
+//! every parallel path, the sharded scan emits no per-point trace events
+//! (use `threads = 1` for cache-trace experiments).
 
 use crate::core::distance::{sed, sed_dot};
 use crate::core::matrix::Matrix;
 use crate::core::norms::sqnorms;
+use crate::core::shard::Shards;
 use crate::seeding::counters::Counters;
 use crate::seeding::picker::{CenterPicker, PickCtx};
 use crate::seeding::trace::TraceSink;
@@ -22,6 +33,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let n = data.rows();
     let d = data.cols();
     let mut counters = Counters::default();
+    let sharded = cfg.threads > 1;
+    let pool = if sharded { Some(cfg.pool_or_new()) } else { None };
+    let shards = Shards::new(n, cfg.threads.max(1));
 
     // Optional Appendix-B dot-product decomposition: precompute ‖x‖².
     let sq = if cfg.dot_trick {
@@ -41,17 +55,41 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     {
         let c0 = data.row(first);
         let c0_sq = if cfg.dot_trick { sq[first] } else { 0.0 };
-        for i in 0..n {
-            trace.read_point(i);
-            trace.access_weight(i);
-            trace.ops(3 * d as u64);
-            let w = if cfg.dot_trick {
-                sed_dot(data.row(i), c0, sq[i], c0_sq)
-            } else {
-                sed(data.row(i), c0)
-            };
-            weights[i] = w;
-            total += w as f64;
+        if let Some(pool) = &pool {
+            let w_parts = shards.split_mut(&mut weights);
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(w_parts)
+                .map(|(range, w)| {
+                    let sq = &sq;
+                    move || {
+                        for (slot, i) in range.enumerate() {
+                            w[slot] = if cfg.dot_trick {
+                                sed_dot(data.row(i), c0, sq[i], c0_sq)
+                            } else {
+                                sed(data.row(i), c0)
+                            };
+                        }
+                    }
+                })
+                .collect();
+            pool.scoped(tasks);
+            // Sequential index-order re-fold: the exact f64 the
+            // single-threaded `total += w` accumulation produces.
+            total = weights.iter().fold(0f64, |t, &w| t + w as f64);
+        } else {
+            for i in 0..n {
+                trace.read_point(i);
+                trace.access_weight(i);
+                trace.ops(3 * d as u64);
+                let w = if cfg.dot_trick {
+                    sed_dot(data.row(i), c0, sq[i], c0_sq)
+                } else {
+                    sed(data.row(i), c0)
+                };
+                weights[i] = w;
+                total += w as f64;
+            }
         }
         counters.visited_assign += n as u64;
         counters.distances += n as u64;
@@ -67,21 +105,49 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         // Full update scan against the new center only (§4.1 optimization).
         let cn = data.row(c_new);
         let cn_sq = if cfg.dot_trick { sq[c_new] } else { 0.0 };
-        total = 0f64;
-        for i in 0..n {
-            trace.read_point(i);
-            trace.access_weight(i);
-            trace.ops(3 * d as u64);
-            let dist = if cfg.dot_trick {
-                sed_dot(data.row(i), cn, sq[i], cn_sq)
-            } else {
-                sed(data.row(i), cn)
-            };
-            if dist < weights[i] {
-                weights[i] = dist;
-                assignments[i] = slot;
+        if let Some(pool) = &pool {
+            let w_parts = shards.split_mut(&mut weights);
+            let a_parts = shards.split_mut(&mut assignments);
+            let tasks: Vec<_> = shards
+                .ranges()
+                .zip(w_parts)
+                .zip(a_parts)
+                .map(|((range, w), a)| {
+                    let sq = &sq;
+                    move || {
+                        for (k, i) in range.enumerate() {
+                            let dist = if cfg.dot_trick {
+                                sed_dot(data.row(i), cn, sq[i], cn_sq)
+                            } else {
+                                sed(data.row(i), cn)
+                            };
+                            if dist < w[k] {
+                                w[k] = dist;
+                                a[k] = slot;
+                            }
+                        }
+                    }
+                })
+                .collect();
+            pool.scoped(tasks);
+            total = weights.iter().fold(0f64, |t, &w| t + w as f64);
+        } else {
+            total = 0f64;
+            for i in 0..n {
+                trace.read_point(i);
+                trace.access_weight(i);
+                trace.ops(3 * d as u64);
+                let dist = if cfg.dot_trick {
+                    sed_dot(data.row(i), cn, sq[i], cn_sq)
+                } else {
+                    sed(data.row(i), cn)
+                };
+                if dist < weights[i] {
+                    weights[i] = dist;
+                    assignments[i] = slot;
+                }
+                total += weights[i] as f64;
             }
-            total += weights[i] as f64;
         }
         counters.visited_assign += n as u64;
         counters.distances += n as u64;
@@ -153,6 +219,43 @@ mod tests {
         let mut picker = ScriptedPicker::new(vec![0, 15, 5]);
         let r = run(&data, &cfg, &mut picker, &mut NoTrace);
         assert_eq!(r.center_indices, vec![0, 15, 5]);
+    }
+
+    /// Sharded scans are bit-identical to the single-threaded path — same
+    /// weights, same assignments, same D² draws, same counters — at 1, 2, 4
+    /// and 8 threads, with and without the dot-product decomposition.
+    #[test]
+    fn sharded_scan_bit_identical_across_thread_counts() {
+        let data = grid(9); // n = 81, uneven shards at t = 2 and 4
+        for dot_trick in [false, true] {
+            let run_t = |threads: usize| {
+                let mut cfg = SeedConfig::new(8, Variant::Standard).with_threads(threads);
+                cfg.dot_trick = dot_trick;
+                let mut picker = D2Picker::new(Pcg64::seed_from(41));
+                run(&data, &cfg, &mut picker, &mut NoTrace)
+            };
+            let base = run_t(1);
+            for threads in [2usize, 4, 8] {
+                let r = run_t(threads);
+                assert_eq!(base.center_indices, r.center_indices, "t{threads} dot={dot_trick}");
+                assert_eq!(base.weights, r.weights, "t{threads} dot={dot_trick}");
+                assert_eq!(base.assignments, r.assignments, "t{threads} dot={dot_trick}");
+                assert_eq!(base.counters, r.counters, "t{threads} dot={dot_trick}");
+            }
+        }
+    }
+
+    /// More threads than points degenerates to one-point shards, exactly.
+    #[test]
+    fn sharded_more_threads_than_points() {
+        let data = grid(3); // n = 9
+        let mut p1 = ScriptedPicker::new(vec![0, 8, 4]);
+        let reference = run(&data, &SeedConfig::new(3, Variant::Standard), &mut p1, &mut NoTrace);
+        let cfg = SeedConfig::new(3, Variant::Standard).with_threads(64);
+        let mut p2 = ScriptedPicker::new(vec![0, 8, 4]);
+        let r = run(&data, &cfg, &mut p2, &mut NoTrace);
+        assert_eq!(reference.weights, r.weights);
+        assert_eq!(reference.assignments, r.assignments);
     }
 
     #[test]

@@ -11,11 +11,22 @@
 //!
 //! With `cfg.appendix_a`, center–center computations are additionally
 //! skipped via [`crate::seeding::centerdist::CenterGeom`].
+//!
+//! With [`SeedConfig::threads`] above 1 the heavy inner scans run on the
+//! persistent worker pool ([`crate::runtime::pool::WorkerPool`]): the
+//! initial full pass is sharded like the standard seeder, and each
+//! large-enough cluster scan splits into a parallel *read-only* phase
+//! (candidate distances for Filter-2 survivors) plus a sequential in-order
+//! apply phase, so weights, assignments, member lists and every counter are
+//! bit-identical at any thread count. Like every parallel path, sharded
+//! scans emit no per-point trace events (use `threads = 1` for cache-trace
+//! experiments).
 
 use crate::core::distance::{sed, sed_dot};
 use crate::core::matrix::Matrix;
 use crate::core::norms::sqnorms;
 use crate::core::sampling::CumTable;
+use crate::core::shard::Shards;
 use crate::seeding::centerdist::CenterGeom;
 use crate::seeding::clusters::ClusterSet;
 use crate::seeding::counters::Counters;
@@ -23,6 +34,11 @@ use crate::seeding::picker::{CenterPicker, PickCtx};
 use crate::seeding::trace::TraceSink;
 use crate::seeding::{SeedConfig, SeedResult};
 use std::time::Duration;
+
+/// Cluster scans shorter than this stay sequential even at `threads > 1` —
+/// a pool dispatch costs a couple of microseconds, which only pays for
+/// itself once a member list is a few cache lines deep.
+const SHARD_MIN_MEMBERS: usize = 256;
 
 pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     data: &Matrix,
@@ -33,6 +49,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let n = data.rows();
     let d = data.cols();
     let mut counters = Counters::default();
+    let pool = if cfg.threads > 1 { Some(cfg.pool_or_new()) } else { None };
 
     let sq = if cfg.dot_trick {
         counters.norms += n as u64;
@@ -60,14 +77,47 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     let mut r0 = 0f32;
     let mut s0 = 0f64;
-    for i in 0..n {
-        trace.access_weight(i);
-        let w = dist(i, first, &mut counters, trace);
-        weights[i] = w;
-        if w > r0 {
-            r0 = w;
+    if let Some(pool) = &pool {
+        let shards = Shards::new(n, cfg.threads.max(1));
+        let c0 = data.row(first);
+        let c0_sq = if cfg.dot_trick { sq[first] } else { 0.0 };
+        let w_parts = shards.split_mut(&mut weights);
+        let tasks: Vec<_> = shards
+            .ranges()
+            .zip(w_parts)
+            .map(|(range, w)| {
+                let sq = &sq;
+                move || {
+                    for (slot, i) in range.enumerate() {
+                        w[slot] = if cfg.dot_trick {
+                            sed_dot(data.row(i), c0, sq[i], c0_sq)
+                        } else {
+                            sed(data.row(i), c0)
+                        };
+                    }
+                }
+            })
+            .collect();
+        pool.scoped(tasks);
+        counters.distances += n as u64;
+        // Sequential index-order re-fold: the exact r0/s0 the
+        // single-threaded accumulation produces.
+        for &w in &weights {
+            if w > r0 {
+                r0 = w;
+            }
+            s0 += w as f64;
         }
-        s0 += w as f64;
+    } else {
+        for i in 0..n {
+            trace.access_weight(i);
+            let w = dist(i, first, &mut counters, trace);
+            weights[i] = w;
+            if w > r0 {
+                r0 = w;
+            }
+            s0 += w as f64;
+        }
     }
     counters.visited_assign += n as u64;
     let mut cs = ClusterSet::initial(n, r0, s0);
@@ -113,6 +163,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             tables.push(CumTable::default()); // new cluster: table invalid
         }
         let cn_row = data.row(c_new);
+        let cn_sq = if cfg.dot_trick { sq[c_new] } else { 0.0 };
 
         let m = new_j; // number of pre-existing clusters
         let mut moved: Vec<usize> = Vec::new();
@@ -154,6 +205,47 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             // refinement, the cumulative weight table) in the same pass —
             // no extra memory traversal.
             let members = std::mem::take(&mut cs.members[j]);
+
+            // Sharded two-phase scan for large clusters: phase A fans the
+            // *read-only* Filter-2 + distance computation over the pool —
+            // `cand[m]` stays NaN when Filter 2 rejects member `m` (SEDs of
+            // finite data are never NaN), else holds `SED(x_m, c_new)` —
+            // and phase B applies moves/retains sequentially in member
+            // order. Weights are only mutated in phase B and each member is
+            // distinct, so both the filter decisions and the merged state
+            // are bit-identical to the sequential scan at any thread count.
+            let cand = match &pool {
+                Some(pool) if members.len() >= SHARD_MIN_MEMBERS => {
+                    let mut cand = vec![f32::NAN; members.len()];
+                    let mshards = Shards::new(members.len(), cfg.threads.max(1));
+                    let c_parts = mshards.split_mut(&mut cand);
+                    let tasks: Vec<_> = mshards
+                        .ranges()
+                        .zip(c_parts)
+                        .map(|(range, c)| {
+                            let members = &members;
+                            let weights = &weights;
+                            let sq = &sq;
+                            move || {
+                                for (out, m) in range.enumerate() {
+                                    let i = members[m];
+                                    if 4.0 * weights[i] > d_cc {
+                                        c[out] = if cfg.dot_trick {
+                                            sed_dot(data.row(i), cn_row, sq[i], cn_sq)
+                                        } else {
+                                            sed(data.row(i), cn_row)
+                                        };
+                                    }
+                                }
+                            }
+                        })
+                        .collect();
+                    pool.scoped(tasks);
+                    Some(cand)
+                }
+                _ => None,
+            };
+
             let mut retained = Vec::with_capacity(members.len());
             let mut cum: Vec<f64> = if cfg.binary_search_sampling {
                 Vec::with_capacity(members.len())
@@ -162,28 +254,55 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             };
             let mut new_r = 0f32;
             let mut new_s = 0f64;
-            for &i in &members {
-                counters.visited_assign += 1;
-                trace.access_weight(i);
-                // Filter 2 (Eq. 5): distance needed only if 4·w_i > d_cc.
-                if 4.0 * weights[i] > d_cc {
-                    let dnew = dist(i, c_new, &mut counters, trace);
-                    if dnew < weights[i] {
-                        weights[i] = dnew;
-                        assignments[i] = slot as u32;
-                        moved.push(i);
-                        continue;
+            if let Some(cand) = cand {
+                // Phase B: in-order apply of the precomputed candidates.
+                for (m, &i) in members.iter().enumerate() {
+                    counters.visited_assign += 1;
+                    let dnew = cand[m];
+                    if dnew.is_nan() {
+                        counters.filter2_rejects += 1;
+                    } else {
+                        counters.distances += 1;
+                        if dnew < weights[i] {
+                            weights[i] = dnew;
+                            assignments[i] = slot as u32;
+                            moved.push(i);
+                            continue;
+                        }
                     }
-                } else {
-                    counters.filter2_rejects += 1;
+                    retained.push(i);
+                    if weights[i] > new_r {
+                        new_r = weights[i];
+                    }
+                    new_s += weights[i] as f64;
+                    if cfg.binary_search_sampling {
+                        cum.push(new_s);
+                    }
                 }
-                retained.push(i);
-                if weights[i] > new_r {
-                    new_r = weights[i];
-                }
-                new_s += weights[i] as f64;
-                if cfg.binary_search_sampling {
-                    cum.push(new_s);
+            } else {
+                for &i in &members {
+                    counters.visited_assign += 1;
+                    trace.access_weight(i);
+                    // Filter 2 (Eq. 5): distance needed only if 4·w_i > d_cc.
+                    if 4.0 * weights[i] > d_cc {
+                        let dnew = dist(i, c_new, &mut counters, trace);
+                        if dnew < weights[i] {
+                            weights[i] = dnew;
+                            assignments[i] = slot as u32;
+                            moved.push(i);
+                            continue;
+                        }
+                    } else {
+                        counters.filter2_rejects += 1;
+                    }
+                    retained.push(i);
+                    if weights[i] > new_r {
+                        new_r = weights[i];
+                    }
+                    new_s += weights[i] as f64;
+                    if cfg.binary_search_sampling {
+                        cum.push(new_s);
+                    }
                 }
             }
             cs.members[j] = retained;
@@ -385,6 +504,52 @@ mod tests {
         let mut p = D2Picker::new(&mut rng);
         let r = run(&data, &cfg, &mut p, &mut NoTrace);
         assert_eq!(r.center_indices.len(), 6);
+    }
+
+    /// Sharded scans are bit-identical to the single-threaded path — same
+    /// centers, weights, assignments, member partitions and counters — at
+    /// 1, 2, 4 and 8 threads, across the dot-trick and binary-search
+    /// sampling variants. `n` is large enough that the first cluster scans
+    /// clear [`SHARD_MIN_MEMBERS`] and actually exercise the two-phase
+    /// path.
+    #[test]
+    fn sharded_scan_bit_identical_across_thread_counts() {
+        let data = random_data(1_500, 4, 9);
+        for dot_trick in [false, true] {
+            for binsearch in [false, true] {
+                let run_t = |threads: usize| {
+                    let mut cfg = SeedConfig::new(12, Variant::Tie).with_threads(threads);
+                    cfg.dot_trick = dot_trick;
+                    cfg.binary_search_sampling = binsearch;
+                    let mut picker = D2Picker::new(Pcg64::seed_from(23));
+                    run(&data, &cfg, &mut picker, &mut NoTrace)
+                };
+                let base = run_t(1);
+                for threads in [2usize, 4, 8] {
+                    let r = run_t(threads);
+                    let tag = format!("t{threads} dot={dot_trick} bs={binsearch}");
+                    assert_eq!(base.center_indices, r.center_indices, "{tag}");
+                    assert_eq!(base.weights, r.weights, "{tag}");
+                    assert_eq!(base.assignments, r.assignments, "{tag}");
+                    assert_eq!(base.counters, r.counters, "{tag}");
+                }
+            }
+        }
+    }
+
+    /// Small inputs at high thread counts never cross the member-count
+    /// threshold, so they ride the sequential branch — and still match.
+    #[test]
+    fn sharded_small_input_matches_sequential() {
+        let data = random_data(90, 3, 5);
+        let mut p1 = ScriptedPicker::new(vec![0, 40, 7, 63, 21]);
+        let reference = run(&data, &SeedConfig::new(5, Variant::Tie), &mut p1, &mut NoTrace);
+        let cfg = SeedConfig::new(5, Variant::Tie).with_threads(64);
+        let mut p2 = ScriptedPicker::new(vec![0, 40, 7, 63, 21]);
+        let r = run(&data, &cfg, &mut p2, &mut NoTrace);
+        assert_eq!(reference.weights, r.weights);
+        assert_eq!(reference.assignments, r.assignments);
+        assert_eq!(reference.counters, r.counters);
     }
 
     /// Property: on random instances and random scripts, tie == standard.

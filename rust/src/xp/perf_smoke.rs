@@ -13,6 +13,14 @@
 //! pruning — turns the build red instead of quietly shipping a slower
 //! engine. The JSON artifact is uploaded per run, so the perf trajectory
 //! of every counter is recoverable from CI history.
+//!
+//! Every run in the sweep shares **one** persistent worker pool
+//! (`--threads`, default 2) — the same seam production code uses — and the
+//! pool's dispatch counters land in the artifact's `"pool"` object, so the
+//! runtime's spawn-avoidance trajectory is tracked alongside the pruning
+//! counters. `--baseline` (default `BENCH_main.json`, committed at the repo
+//! root) prints an informational per-row distance diff against the last
+//! refreshed baseline; it never gates.
 
 use crate::cli::Args;
 use crate::core::rng::Pcg64;
@@ -20,8 +28,10 @@ use crate::data::catalog::by_name;
 use crate::kmeans::accel::{run_warm, Strategy};
 use crate::kmeans::lloyd::{LloydConfig, LloydResult};
 use crate::metrics::table::Table;
-use crate::seeding::{seed, Variant};
+use crate::runtime::WorkerPool;
+use crate::seeding::{seed_with, D2Picker, NoTrace, SeedConfig, Variant};
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 
 /// One (instance, k, strategy) measurement row of the smoke sweep.
 struct Row {
@@ -76,6 +86,12 @@ pub fn run(args: &Args) -> Result<()> {
         bail!("--iters must be >= 1: the gate compares per-iteration counters");
     }
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    let threads = args.threads_or("threads", 2).map_err(anyhow::Error::msg)?;
+    let baseline = args.get("baseline").unwrap_or("BENCH_main.json");
+    // One persistent pool shared by every seeding and Lloyd run in the
+    // sweep — the counters below measure the seam exactly as production
+    // uses it (results are thread-count-invariant, so the gate is too).
+    let pool = Arc::new(WorkerPool::new(threads));
     // One low-dimensional instance (TI bounds dominate) and one
     // high-dimensional high-norm-variance one (norm filters dominate).
     let instances = ["S-NS", "GSAD"];
@@ -95,8 +111,17 @@ pub fn run(args: &Args) -> Result<()> {
             // depend on where Naive sits in `Strategy::ALL` (ALL is exactly
             // Naive + ACCELERATED; a unit test pins that).
             let mut rng = Pcg64::seed_from(seed_v);
-            let s = seed(&data, k, Variant::Full, &mut rng);
-            let naive_cfg = LloydConfig { max_iters, ..LloydConfig::default() };
+            let scfg = SeedConfig::new(k, Variant::Full)
+                .with_threads(threads)
+                .with_pool(Arc::clone(&pool));
+            let mut picker = D2Picker::new(&mut rng);
+            let s = seed_with(&data, &scfg, &mut picker, &mut NoTrace);
+            let naive_cfg = LloydConfig {
+                max_iters,
+                threads,
+                pool: Some(Arc::clone(&pool)),
+                ..LloydConfig::default()
+            };
             let naive = Row { instance: name, k, result: run_warm(&data, &s, &naive_cfg) };
             json_rows.push(naive.to_json(Strategy::Naive));
             t.row([
@@ -109,7 +134,13 @@ pub fn run(args: &Args) -> Result<()> {
                 "-".to_string(),
             ]);
             for strategy in Strategy::ACCELERATED {
-                let cfg = LloydConfig { max_iters, strategy, ..LloydConfig::default() };
+                let cfg = LloydConfig {
+                    max_iters,
+                    strategy,
+                    threads,
+                    pool: Some(Arc::clone(&pool)),
+                    ..LloydConfig::default()
+                };
                 let row = Row { instance: name, k, result: run_warm(&data, &s, &cfg) };
                 json_rows.push(row.to_json(strategy));
                 let (dists, prunes) = (row.result.stats.distances, row.result.stats.prunes_total());
@@ -140,14 +171,19 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
 
+    let pool_stats = pool.stats();
     let json = format!(
         "{{\n  \"schema\": \"geokmpp-perf-smoke/v1\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
-         \"max_iters\": {max_iters},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+         \"max_iters\": {max_iters},\n  \"threads\": {threads},\n  \"pool\": {},\n  \
+         \"rows\": [\n    {}\n  ]\n}}\n",
+        pool_stats.to_json(),
         json_rows.join(",\n    ")
     );
     std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
     println!("{}", t.to_aligned());
     println!("wrote {} rows to {out}", json_rows.len());
+    println!("{pool_stats}");
+    compare_with_baseline(baseline, &json_rows);
 
     if !violations.is_empty() {
         bail!(
@@ -161,6 +197,52 @@ pub fn run(args: &Args) -> Result<()> {
          cheaper than naive"
     );
     Ok(())
+}
+
+/// Informational baseline diff: extracts `"lloyd_dists"` per row out of the
+/// committed baseline artifact (string search — the schema is flat and
+/// hand-rolled, serde is not in the offline crate set) and prints the
+/// distance-count delta for matching (instance, k, strategy) rows. Never
+/// gates: a missing or stale baseline only prints a warning.
+fn compare_with_baseline(path: &str, rows: &[String]) {
+    let body = match std::fs::read_to_string(path) {
+        Ok(b) => b,
+        Err(_) => {
+            println!("baseline {path} not found; skipping comparison");
+            return;
+        }
+    };
+    let mut compared = 0usize;
+    for row in rows {
+        // The (instance, k, strategy) triple is the row's literal prefix.
+        let Some(key_end) = row.find(",\"iterations\"") else { continue };
+        let key = &row[1..key_end];
+        let Some(cur) = field_u64(row, "lloyd_dists") else { continue };
+        let Some(pos) = body.find(key) else { continue };
+        let Some(base) = field_u64(&body[pos..], "lloyd_dists") else { continue };
+        compared += 1;
+        if base != cur {
+            let delta = 100.0 * (cur as f64 - base as f64) / base as f64;
+            println!("  vs {path}: {key}: lloyd_dists {base} -> {cur} ({delta:+.1}%)");
+        }
+    }
+    if compared == 0 {
+        println!(
+            "baseline {path} has no matching rows — refresh it with \
+             `geokmpp xp perf-smoke --out {path}`"
+        );
+    } else {
+        println!("baseline {path}: compared {compared} rows (informational only)");
+    }
+}
+
+/// First unsigned integer following `"key":` in a flat JSON string.
+fn field_u64(s: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let i = s.find(&pat)? + pat.len();
+    let rest = &s[i..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }
 
 #[cfg(test)]
@@ -192,6 +274,19 @@ mod tests {
         assert!(body.contains("\"lloyd_dists\""));
         assert!(body.contains("\"group_prunes\""));
         assert!(body.contains("\"annulus_prunes\""));
+        // The shared pool's counters ride along in the envelope.
+        assert!(body.contains("\"threads\": 2"), "missing threads: {body}");
+        assert!(body.contains("\"pool\": {\"workers\":1,"), "missing pool: {body}");
+        assert!(body.contains("\"spawns_avoided\""));
         std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn field_u64_parses_flat_rows() {
+        let row = "{\"instance\":\"S-NS\",\"k\":8,\"strategy\":\"naive\",\"lloyd_dists\":1234}";
+        assert_eq!(field_u64(row, "lloyd_dists"), Some(1234));
+        assert_eq!(field_u64(row, "k"), Some(8));
+        assert_eq!(field_u64(row, "missing"), None);
+        assert_eq!(field_u64("{\"k\":}", "k"), None);
     }
 }

@@ -9,7 +9,9 @@ use geokmpp::data::catalog::by_name;
 use geokmpp::kmeans::accel::{self, Strategy};
 use geokmpp::kmeans::lloyd::{lloyd, LloydConfig};
 use geokmpp::prop::{forall, gens, Config};
+use geokmpp::runtime::WorkerPool;
 use geokmpp::seeding::{seed, seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant};
+use std::sync::Arc;
 
 /// Scripted-center exactness on real catalog geometry (not just uniform
 /// random data): a central-mass instance, a bimodal one, a polyline one.
@@ -121,7 +123,7 @@ fn lloyd_strategies_exact_on_catalog_instances() {
         let reference = lloyd(&data, &s.centers, &cfg);
         for strategy in Strategy::ACCELERATED {
             for threads in [1usize, 2, 4, 8] {
-                let c = LloydConfig { strategy, threads, ..cfg };
+                let c = LloydConfig { strategy, threads, ..cfg.clone() };
                 let r = accel::run(&data, &s.centers, &c);
                 assert_eq!(
                     reference.assignments, r.assignments,
@@ -179,7 +181,7 @@ fn lloyd_empty_cluster_exact_for_all_strategies() {
     );
     for strategy in Strategy::ACCELERATED {
         for threads in [1usize, 4] {
-            let c = LloydConfig { strategy, threads, ..cfg };
+            let c = LloydConfig { strategy, threads, ..cfg.clone() };
             let r = accel::run(&data, &init, &c);
             assert_eq!(reference.assignments, r.assignments, "{strategy:?} t{threads}");
             assert_eq!(reference.inertia_trace, r.inertia_trace, "{strategy:?} t{threads}");
@@ -210,6 +212,95 @@ fn lloyd_warm_start_exact_on_catalog_instances() {
             "{strategy:?}: warm start added distance work"
         );
     }
+}
+
+/// The whole execution seam on ONE shared pool: every seeder variant at
+/// 2/4/8 threads and every Lloyd strategy at 2/4 threads dispatches onto
+/// the same persistent `WorkerPool` and reproduces its single-threaded run
+/// bit for bit. The pool is deliberately narrower than the widest shard
+/// split (4 lanes vs 8 shards): results are governed by `threads`, never by
+/// pool width.
+#[test]
+fn one_shared_pool_serves_all_seeders_and_strategies() {
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(2_001); // odd n: uneven shard boundaries
+    let k = 16;
+    let pool = Arc::new(WorkerPool::new(4));
+    let script: Vec<usize> = {
+        let mut rng = Pcg64::seed_from(19);
+        let mut p = D2Picker::new(&mut rng);
+        seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+            .center_indices
+    };
+    for variant in [Variant::Standard, Variant::Tie, Variant::Full] {
+        let reference = {
+            let mut p = ScriptedPicker::new(script.clone());
+            seed_with(&data, &SeedConfig::new(k, variant), &mut p, &mut NoTrace)
+        };
+        for threads in [2usize, 4, 8] {
+            let cfg = SeedConfig::new(k, variant)
+                .with_threads(threads)
+                .with_pool(Arc::clone(&pool));
+            let mut p = ScriptedPicker::new(script.clone());
+            let r = seed_with(&data, &cfg, &mut p, &mut NoTrace);
+            assert_eq!(reference.weights, r.weights, "{variant:?} t{threads}");
+            assert_eq!(reference.assignments, r.assignments, "{variant:?} t{threads}");
+            assert_eq!(reference.center_indices, r.center_indices, "{variant:?} t{threads}");
+        }
+    }
+    let mut rng = Pcg64::seed_from(29);
+    let s = seed(&data, k, Variant::Full, &mut rng);
+    let cfg = LloydConfig { max_iters: 30, ..LloydConfig::default() };
+    let reference = lloyd(&data, &s.centers, &cfg);
+    for strategy in Strategy::ALL {
+        for threads in [2usize, 4] {
+            let c = LloydConfig {
+                strategy,
+                threads,
+                pool: Some(Arc::clone(&pool)),
+                ..cfg.clone()
+            };
+            let r = accel::run(&data, &s.centers, &c);
+            assert_eq!(reference.assignments, r.assignments, "{strategy:?} t{threads}");
+            assert_eq!(reference.inertia_trace, r.inertia_trace, "{strategy:?} t{threads}");
+            assert_eq!(reference.centers, r.centers, "{strategy:?} t{threads}");
+        }
+    }
+    let stats = pool.stats();
+    assert!(stats.dispatches > 0, "the shared pool was never dispatched to");
+    assert!(stats.tasks > stats.dispatches, "sharded dispatches carry multiple tasks");
+}
+
+/// The execution-seam invariant, enforced at the source level: after the
+/// pool refactor, scoped-thread fan-outs live ONLY inside
+/// `runtime/pool.rs` (whose reference-comparison test is the sanctioned
+/// oracle). Every other sharded scan must go through `WorkerPool::scoped`.
+/// The CI workflow runs the same grep as a standalone gate.
+#[test]
+fn thread_scope_only_lives_in_the_pool() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    // The needle is assembled at runtime so this file never matches itself
+    // (in source text or in this test's own grep).
+    let needle = format!("{}::{}", "thread", "scope");
+    let mut offenders = Vec::new();
+    let mut stack = vec![root.join("src"), root.join("benches"), root.join("tests")];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).expect("readable source dir") {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension() == Some(std::ffi::OsStr::new("rs"))
+                && !path.ends_with("runtime/pool.rs")
+                && std::fs::read_to_string(&path).expect("readable file").contains(&needle)
+            {
+                offenders.push(path.display().to_string());
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "{needle} fan-outs outside runtime/pool.rs (use WorkerPool::scoped): {offenders:?}"
+    );
 }
 
 /// Distributional equivalence of real (unscripted) runs: seeding cost
