@@ -76,6 +76,9 @@ impl Report {
             counters.norm_partition_rejects /= div;
             counters.norm_point_rejects /= div;
             counters.center_distances_avoided /= div;
+            counters.proposals /= div;
+            counters.rejections /= div;
+            counters.tree_node_visits /= div;
             // Clustering-phase aggregate over the repetitions that ran one
             // (within a cell either all jobs carry a phase or none do).
             let lrs: Vec<_> = rs.iter().filter_map(|r| r.lloyd.as_ref()).collect();
@@ -145,7 +148,10 @@ impl Report {
     /// Renders the full report as a table. Clustering-phase columns show
     /// `-` for seeding-only cells; `lloyd_prune_mix` breaks the prune total
     /// into its `bound/center/group/annulus/norm` buckets so strategy
-    /// comparisons show *which* geometric filter paid for the savings.
+    /// comparisons show *which* geometric filter paid for the savings, and
+    /// `sampling_mix` does the same for the rejection seeder
+    /// (`proposals/rejections/tree_node_visits`, `-` for tree-free
+    /// variants).
     pub fn to_table(&self) -> Table {
         let mut t = Table::new([
             "instance",
@@ -158,6 +164,7 @@ impl Report {
             "center_dists",
             "norms",
             "cost",
+            "sampling_mix",
             "lloyd_dists",
             "lloyd_prunes",
             "lloyd_prune_mix",
@@ -184,6 +191,7 @@ impl Report {
                 c.counters.center_distances.to_string(),
                 c.counters.norms.to_string(),
                 fnum(c.mean_cost, 2),
+                c.counters.sampling_mix(),
                 ld,
                 lp,
                 lm,
@@ -235,6 +243,28 @@ mod tests {
         let rs = vec![result(Variant::Tie, 0, 1), result(Variant::Full, 0, 2)];
         let t = Report::aggregate(&rs).to_table();
         assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn rejection_counters_aggregate_and_render() {
+        let mk = |rep: u64| {
+            let mut r = result(Variant::Rejection, rep, 6);
+            r.counters.proposals = 10 + 2 * rep; // 10, 12 → mean 11
+            r.counters.rejections = 4;
+            r.counters.tree_node_visits = 100;
+            r
+        };
+        let rep = Report::aggregate(&[mk(0), mk(1)]);
+        let cell = rep.cell("i", 4, Variant::Rejection).unwrap();
+        assert_eq!(cell.counters.proposals, 11);
+        assert_eq!(cell.counters.rejections, 4);
+        assert_eq!(cell.counters.tree_node_visits, 100);
+        let t = rep.to_table();
+        let col = t.headers().iter().position(|h| h == "sampling_mix").unwrap();
+        assert_eq!(t.rows()[0][col], "11/4/100");
+        // Tree-free variants render `-` in the sampling column.
+        let t2 = Report::aggregate(&[result(Variant::Tie, 0, 1)]).to_table();
+        assert_eq!(t2.rows()[0][col], "-");
     }
 
     #[test]

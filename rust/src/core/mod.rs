@@ -9,3 +9,4 @@ pub mod norms;
 pub mod rng;
 pub mod sampling;
 pub mod shard;
+pub mod tree;

@@ -1,0 +1,646 @@
+//! Per-segment space-partitioning trees for sublinear exact D² sampling.
+//!
+//! The dataset is split into fixed contiguous *segments* (a function of `n`
+//! only — never of the thread count, so every derived quantity is
+//! bit-identical at any `threads`), and each segment gets a balanced binary
+//! median-split tree. Every node stores
+//!
+//! * static geometry from the build: a centroid, a covering radius (every
+//!   member lies within `radius` of the centroid), and the subtree's
+//!   reference-norm range `[norm_min, norm_max]`;
+//! * mutable weight statistics maintained by the seeder: the exact maximum
+//!   member weight `maxw`, the exact f64 member-weight sum `wsum` (leaves
+//!   re-fold it in member order, so it never depends on visit interleaving),
+//!   and the proposal mass `mass` (`count · maxw` for leaves, child sum for
+//!   internal nodes).
+//!
+//! [`Forest::draw`] samples from the *exact* D² distribution by rejection
+//! (Cohen-Addad et al., *Fast and Accurate k-means++ via Rejection
+//! Sampling*): propose a leaf with probability proportional to its mass
+//! (binary search over per-segment cumulative root masses, then a
+//! mass-guided descent), a member uniformly within the leaf, and accept with
+//! probability `w(x) / maxw(leaf)`. Per proposal the chance of landing on
+//! `x` is `(count·maxw / M) · (1/count) · (w(x)/maxw) = w(x)/M`, so the
+//! accepted draw is distributed exactly as `w(x)/Σw` — the same modulo-f64-
+//! rounding guarantee the flat roulette sampler gives. Because `maxw` is the
+//! max member weight, the acceptance rate is at least `1/LEAF_CAP`, so a
+//! draw costs `O(log n)` node visits in expectation instead of the two-step
+//! sampler's linear member scan.
+//!
+//! Pruned update scans (in [`crate::seeding::rejection`]) keep every `maxw`
+//! exact without visiting pruned subtrees: a subtree is only skipped when no
+//! member's weight can shrink, so its stored statistics remain the truth.
+
+use crate::core::distance::ed;
+use crate::core::matrix::Matrix;
+use crate::core::rng::Rng;
+use crate::core::shard::Shards;
+
+/// Target points per segment tree. Segment count = `n.div_ceil(SEG_TARGET)`
+/// — governed by `n` alone, which is what makes the forest (and everything
+/// sampled from it) thread-count invariant.
+pub const SEG_TARGET: usize = 4096;
+
+/// Maximum leaf size. Also bounds the rejection sampler's expected proposal
+/// count per draw: acceptance ≥ `Σ maxw / Σ count·maxw` ≥ `1/LEAF_CAP`.
+pub const LEAF_CAP: usize = 64;
+
+/// Multiplicative slack on covering radii: the triangle-inequality
+/// compositions below are exact in real arithmetic, the slack absorbs f32
+/// rounding so the stored radius stays a true upper bound.
+const RADIUS_SLACK: f32 = 1.0 + 1e-5;
+
+/// One node of a segment tree. Fields are public for the seeder's pruned
+/// update scan ([`crate::seeding::rejection`]).
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Child node indices (`u32::MAX` ⇒ leaf).
+    pub left: u32,
+    /// See `left`.
+    pub right: u32,
+    /// Member range `perm[begin..end]` (segment-local permutation indices).
+    pub begin: u32,
+    /// See `begin`.
+    pub end: u32,
+    /// Mean of the member rows.
+    pub centroid: Vec<f32>,
+    /// Covering radius: `ED(centroid, x) ≤ radius` for every member `x`.
+    pub radius: f32,
+    /// Minimum member reference norm.
+    pub norm_min: f32,
+    /// Maximum member reference norm.
+    pub norm_max: f32,
+    /// Exact maximum member weight (0 until the first refresh).
+    pub maxw: f32,
+    /// Exact member weight sum, folded in member order.
+    pub wsum: f64,
+    /// Proposal mass: `count·maxw` (leaf) or child sum (internal).
+    pub mass: f64,
+}
+
+impl Node {
+    /// Whether this node is a leaf.
+    pub fn is_leaf(&self) -> bool {
+        self.left == u32::MAX
+    }
+
+    /// Number of member points.
+    pub fn count(&self) -> usize {
+        (self.end - self.begin) as usize
+    }
+}
+
+/// Counter deltas charged by a segment build, in the paper's buckets:
+/// one point–centroid ED per point (leaf radii), two centroid–centroid EDs
+/// per internal node (radius composition), one node visit per node created.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildStats {
+    /// Point-level distance computations (leaf covering radii).
+    pub distances: u64,
+    /// Centroid-level distance computations (internal radius composition).
+    pub center_distances: u64,
+    /// Tree nodes created (each initialized exactly once).
+    pub node_visits: u64,
+}
+
+/// Outcome of one rejection draw: the accepted index plus the work spent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DrawStats {
+    /// Accepted point index (global).
+    pub index: usize,
+    /// Proposals made (= leaf members examined: one per proposal).
+    pub proposals: u64,
+    /// Proposals rejected by the `w(x)/maxw` acceptance test.
+    pub rejections: u64,
+    /// Tree nodes touched (descent steps + cumulative-mass probes).
+    pub node_visits: u64,
+}
+
+/// A median-split tree over one contiguous point segment.
+#[derive(Clone, Debug)]
+pub struct SegTree {
+    /// First global point index of the segment.
+    pub start: usize,
+    /// Segment length.
+    pub len: usize,
+    /// Segment-local permutation of the global indices
+    /// `start..start + len`; each leaf owns a contiguous `perm` range.
+    pub perm: Vec<u32>,
+    /// Nodes in post-order; the root is the last entry.
+    pub nodes: Vec<Node>,
+}
+
+impl SegTree {
+    /// Builds the tree over points `start..start + len`. Deterministic: the
+    /// split order is a total order (coordinate, then index), so the
+    /// structure depends only on the data.
+    pub fn build(data: &Matrix, norms: &[f32], start: usize, len: usize) -> (SegTree, BuildStats) {
+        assert!(len > 0, "empty segment");
+        let mut perm: Vec<u32> = (start as u32..(start + len) as u32).collect();
+        let mut nodes = Vec::with_capacity(2 * len.div_ceil(LEAF_CAP));
+        let mut stats = BuildStats::default();
+        build_node(data, norms, &mut perm, 0, &mut nodes, &mut stats);
+        (SegTree { start, len, perm, nodes }, stats)
+    }
+
+    /// Root node index (nodes are stored in post-order).
+    pub fn root(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Recomputes every node's `maxw`/`wsum`/`mass` from the weight slice
+    /// (`w[i - base]` holds point `i`'s weight). Leaves fold in member
+    /// order; returns the number of nodes visited.
+    pub fn refresh_weights(&mut self, w: &[f32], base: usize) -> u64 {
+        refresh_node(&mut self.nodes, &self.perm, self.nodes.len() - 1, w, base)
+    }
+}
+
+fn build_node(
+    data: &Matrix,
+    norms: &[f32],
+    perm: &mut [u32],
+    begin: usize,
+    nodes: &mut Vec<Node>,
+    stats: &mut BuildStats,
+) -> u32 {
+    let d = data.cols();
+    let count = perm.len();
+    stats.node_visits += 1;
+
+    if count <= LEAF_CAP {
+        // Leaf: centroid = member mean (f64 accumulation in member order),
+        // radius = exact max member distance (one ED per point, charged).
+        let mut acc = vec![0f64; d];
+        for &p in perm.iter() {
+            for (a, &v) in acc.iter_mut().zip(data.row(p as usize)) {
+                *a += v as f64;
+            }
+        }
+        let centroid: Vec<f32> = acc.iter().map(|&a| (a / count as f64) as f32).collect();
+        let mut radius = 0f32;
+        let mut norm_min = f32::INFINITY;
+        let mut norm_max = f32::NEG_INFINITY;
+        for &p in perm.iter() {
+            radius = radius.max(ed(&centroid, data.row(p as usize)));
+            norm_min = norm_min.min(norms[p as usize]);
+            norm_max = norm_max.max(norms[p as usize]);
+        }
+        stats.distances += count as u64;
+        nodes.push(Node {
+            left: u32::MAX,
+            right: u32::MAX,
+            begin: begin as u32,
+            end: (begin + count) as u32,
+            centroid,
+            radius: radius * RADIUS_SLACK,
+            norm_min,
+            norm_max,
+            maxw: 0.0,
+            wsum: 0.0,
+            mass: 0.0,
+        });
+        return (nodes.len() - 1) as u32;
+    }
+
+    // Median split along the widest dimension, total-ordered by
+    // (coordinate, index) so the partition content is deterministic.
+    let mut split_dim = 0;
+    let mut best_spread = f32::NEG_INFINITY;
+    for dim in 0..d {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &p in perm.iter() {
+            let v = data.row(p as usize)[dim];
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi - lo > best_spread {
+            best_spread = hi - lo;
+            split_dim = dim;
+        }
+    }
+    let mid = count / 2;
+    perm.select_nth_unstable_by(mid, |&a, &b| {
+        let va = data.row(a as usize)[split_dim];
+        let vb = data.row(b as usize)[split_dim];
+        va.partial_cmp(&vb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let (lo_perm, hi_perm) = perm.split_at_mut(mid);
+    let left = build_node(data, norms, lo_perm, begin, nodes, stats);
+    let right = build_node(data, norms, hi_perm, begin + mid, nodes, stats);
+
+    // Internal node: count-weighted child centroid mean; covering radius by
+    // triangle inequality over the children (two centroid EDs, charged).
+    let (ln, rn) = (&nodes[left as usize], &nodes[right as usize]);
+    let (lc, rc) = (ln.count() as f64, rn.count() as f64);
+    let centroid: Vec<f32> = ln
+        .centroid
+        .iter()
+        .zip(&rn.centroid)
+        .map(|(&a, &b)| ((a as f64 * lc + b as f64 * rc) / (lc + rc)) as f32)
+        .collect();
+    let dl = ed(&centroid, &ln.centroid);
+    let dr = ed(&centroid, &rn.centroid);
+    stats.center_distances += 2;
+    let radius = (dl + ln.radius).max(dr + rn.radius) * RADIUS_SLACK;
+    let norm_min = ln.norm_min.min(rn.norm_min);
+    let norm_max = ln.norm_max.max(rn.norm_max);
+    nodes.push(Node {
+        left,
+        right,
+        begin: begin as u32,
+        end: (begin + count) as u32,
+        centroid,
+        radius,
+        norm_min,
+        norm_max,
+        maxw: 0.0,
+        wsum: 0.0,
+        mass: 0.0,
+    });
+    (nodes.len() - 1) as u32
+}
+
+fn refresh_node(nodes: &mut [Node], perm: &[u32], idx: usize, w: &[f32], base: usize) -> u64 {
+    if nodes[idx].is_leaf() {
+        let (begin, end) = (nodes[idx].begin as usize, nodes[idx].end as usize);
+        let mut maxw = 0f32;
+        let mut wsum = 0f64;
+        for &p in &perm[begin..end] {
+            let wi = w[p as usize - base];
+            maxw = maxw.max(wi);
+            wsum += wi as f64;
+        }
+        let nd = &mut nodes[idx];
+        nd.maxw = maxw;
+        nd.wsum = wsum;
+        nd.mass = nd.count() as f64 * maxw as f64;
+        return 1;
+    }
+    let (l, r) = (nodes[idx].left as usize, nodes[idx].right as usize);
+    let mut visits = 1;
+    visits += refresh_node(nodes, perm, l, w, base);
+    visits += refresh_node(nodes, perm, r, w, base);
+    let maxw = nodes[l].maxw.max(nodes[r].maxw);
+    let wsum = nodes[l].wsum + nodes[r].wsum;
+    let mass = nodes[l].mass + nodes[r].mass;
+    let nd = &mut nodes[idx];
+    nd.maxw = maxw;
+    nd.wsum = wsum;
+    nd.mass = mass;
+    visits
+}
+
+/// The per-dataset forest: one [`SegTree`] per fixed contiguous segment,
+/// plus the cumulative root-mass table the draw's segment selection binary-
+/// searches. Rebuild the table ([`Forest::rebuild_cum`]) after any weight
+/// refresh or update scan.
+#[derive(Clone, Debug)]
+pub struct Forest {
+    /// Segment trees, in segment (= point) order.
+    pub segs: Vec<SegTree>,
+    cum: Vec<f64>,
+}
+
+impl Forest {
+    /// The fixed segment split for `n` points — a function of `n` only.
+    pub fn segment_shards(n: usize) -> Shards {
+        Shards::new(n, n.div_ceil(SEG_TARGET).max(1))
+    }
+
+    /// Assembles a forest from per-segment trees (in segment order).
+    pub fn new(segs: Vec<SegTree>) -> Forest {
+        let mut f = Forest { segs, cum: Vec::new() };
+        f.rebuild_cum();
+        f
+    }
+
+    /// Recomputes the cumulative root-mass table, folding in segment order
+    /// (the same f64 sequence at any thread count).
+    pub fn rebuild_cum(&mut self) {
+        self.cum.clear();
+        let mut acc = 0f64;
+        for seg in &self.segs {
+            acc += seg.nodes[seg.root()].mass;
+            self.cum.push(acc);
+        }
+    }
+
+    /// Total proposal mass `M = Σ count·maxw` over all leaves.
+    pub fn total_mass(&self) -> f64 {
+        self.cum.last().copied().unwrap_or(0.0)
+    }
+
+    /// Exact total weight `Σ w_i`, folded in segment order.
+    pub fn total_weight(&self) -> f64 {
+        self.segs.iter().map(|s| s.nodes[s.root()].wsum).sum()
+    }
+
+    /// Total node count across all segments.
+    pub fn node_count(&self) -> u64 {
+        self.segs.iter().map(|s| s.nodes.len() as u64).sum()
+    }
+
+    /// One exact D² rejection draw. Consumes the RNG identically for a given
+    /// weight state — the thread-count-invariance contract. Degenerate all-
+    /// zero weights fall back to the first point of the first segment, like
+    /// the two-step picker's degenerate path.
+    pub fn draw<R: Rng>(&self, weights: &[f32], rng: &mut R) -> DrawStats {
+        if self.total_weight() <= 0.0 {
+            return DrawStats {
+                index: self.segs[0].perm[0] as usize,
+                proposals: 1,
+                rejections: 0,
+                node_visits: 1,
+            };
+        }
+        let m = self.total_mass();
+        let cum_probes = (self.cum.len().max(2) as f64).log2().ceil() as u64;
+        let mut stats = DrawStats::default();
+        loop {
+            stats.proposals += 1;
+            let u = rng.uniform_f64() * m;
+            let mut s = self.cum.partition_point(|&c| c <= u);
+            stats.node_visits += cum_probes;
+            if s >= self.cum.len() {
+                // f64 edge (u == M): clamp to the last positive-mass segment.
+                s = self
+                    .segs
+                    .iter()
+                    .rposition(|t| t.nodes[t.root()].mass > 0.0)
+                    .expect("positive total mass without a positive segment");
+            }
+            let seg = &self.segs[s];
+            if seg.nodes[seg.root()].mass <= 0.0 {
+                // Boundary rounding landed on a massless segment: reject.
+                stats.rejections += 1;
+                continue;
+            }
+            let mut u_res = u - if s == 0 { 0.0 } else { self.cum[s - 1] };
+            let mut idx = seg.root();
+            loop {
+                stats.node_visits += 1;
+                let nd = &seg.nodes[idx];
+                if nd.is_leaf() {
+                    break;
+                }
+                let lm = seg.nodes[nd.left as usize].mass;
+                if seg.nodes[nd.right as usize].mass <= 0.0 || u_res < lm {
+                    idx = nd.left as usize;
+                } else {
+                    idx = nd.right as usize;
+                    u_res -= lm;
+                }
+            }
+            let nd = &seg.nodes[idx];
+            let member = seg.perm[nd.begin as usize + rng.below(nd.count())] as usize;
+            // Acceptance w(x)/maxw(leaf): corrects the uniform member pick
+            // to the exact within-leaf weight distribution.
+            if rng.uniform_f64() * nd.maxw as f64 < weights[member] as f64 {
+                stats.index = member;
+                return stats;
+            }
+            stats.rejections += 1;
+        }
+    }
+
+    /// O(n) consistency check of the mutable weight statistics against the
+    /// weight array. Cheap enough for `debug_assertions` inside the seeder.
+    ///
+    /// # Panics
+    /// Panics on any inconsistency.
+    pub fn check_weight_stats(&self, weights: &[f32]) {
+        for seg in &self.segs {
+            check_weight_node(&seg.nodes, &seg.perm, seg.root(), weights);
+        }
+    }
+
+    /// Full structural check: each segment's `perm` is a permutation of its
+    /// range, leaves tile the segment, every node's radius and norm range
+    /// cover all subtree members. O(n · depth) — test use only.
+    ///
+    /// # Panics
+    /// Panics on any violated invariant.
+    pub fn check_geometry(&self, data: &Matrix, norms: &[f32]) {
+        for seg in &self.segs {
+            let mut seen = vec![false; seg.len];
+            for &p in &seg.perm {
+                let local = p as usize - seg.start;
+                assert!(!seen[local], "point {p} appears twice in perm");
+                seen[local] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "perm misses points");
+            // Leaves tile [0, len) in perm space: collect and sort ranges.
+            let mut leaf_ranges: Vec<(u32, u32)> = seg
+                .nodes
+                .iter()
+                .filter(|nd| nd.is_leaf())
+                .map(|nd| (nd.begin, nd.end))
+                .collect();
+            leaf_ranges.sort_unstable();
+            let mut cursor = 0u32;
+            for (b, e) in leaf_ranges {
+                assert_eq!(b, cursor, "leaf gap/overlap at {b}");
+                assert!(e > b, "empty leaf");
+                cursor = e;
+            }
+            assert_eq!(cursor as usize, seg.len, "leaves do not tile the segment");
+            for nd in &seg.nodes {
+                for &p in &seg.perm[nd.begin as usize..nd.end as usize] {
+                    let i = p as usize;
+                    assert!(
+                        ed(&nd.centroid, data.row(i)) <= nd.radius,
+                        "radius does not cover member {i}"
+                    );
+                    assert!(
+                        nd.norm_min <= norms[i] && norms[i] <= nd.norm_max,
+                        "norm range does not cover member {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn check_weight_node(nodes: &[Node], perm: &[u32], idx: usize, weights: &[f32]) {
+    let nd = &nodes[idx];
+    if nd.is_leaf() {
+        let mut maxw = 0f32;
+        let mut wsum = 0f64;
+        for &p in &perm[nd.begin as usize..nd.end as usize] {
+            maxw = maxw.max(weights[p as usize]);
+            wsum += weights[p as usize] as f64;
+        }
+        assert_eq!(nd.maxw, maxw, "stale leaf maxw");
+        assert_eq!(nd.wsum, wsum, "stale leaf wsum");
+        assert_eq!(nd.mass, nd.count() as f64 * maxw as f64, "stale leaf mass");
+        return;
+    }
+    let (l, r) = (nd.left as usize, nd.right as usize);
+    assert_eq!(nd.maxw, nodes[l].maxw.max(nodes[r].maxw), "stale maxw");
+    assert_eq!(nd.wsum, nodes[l].wsum + nodes[r].wsum, "stale wsum");
+    assert_eq!(nd.mass, nodes[l].mass + nodes[r].mass, "stale mass");
+    check_weight_node(nodes, perm, l, weights);
+    check_weight_node(nodes, perm, r, weights);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::norms::norms as compute_norms;
+    use crate::core::rng::{Pcg64, Rng};
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut v = Vec::with_capacity(n * d);
+        for _ in 0..n * d {
+            v.push(rng.uniform_f32() * 100.0);
+        }
+        Matrix::from_vec(v, n, d)
+    }
+
+    fn build_forest(data: &Matrix, norms: &[f32]) -> (Forest, BuildStats) {
+        let shards = Forest::segment_shards(data.rows());
+        let mut total = BuildStats::default();
+        let mut segs = Vec::new();
+        for range in shards.ranges() {
+            let (t, s) = SegTree::build(data, norms, range.start, range.end - range.start);
+            total.distances += s.distances;
+            total.center_distances += s.center_distances;
+            total.node_visits += s.node_visits;
+            segs.push(t);
+        }
+        (Forest::new(segs), total)
+    }
+
+    /// Tree invariants: every point in exactly one leaf, radii and norm
+    /// ranges cover all subtree members — across multiple segments.
+    #[test]
+    fn invariants_hold_on_random_data() {
+        let data = random_data(9_000, 4, 7); // 3 segments at SEG_TARGET=4096
+        let norms = compute_norms(&data);
+        let (forest, stats) = build_forest(&data, &norms);
+        assert_eq!(forest.segs.len(), 3);
+        forest.check_geometry(&data, &norms);
+        // Build charges exactly one point distance per point.
+        assert_eq!(stats.distances, 9_000);
+        assert_eq!(stats.node_visits, forest.node_count());
+    }
+
+    #[test]
+    fn refresh_weight_stats_are_exact() {
+        let data = random_data(5_000, 3, 11);
+        let norms = compute_norms(&data);
+        let (mut forest, _) = build_forest(&data, &norms);
+        let mut rng = Pcg64::seed_from(3);
+        let weights: Vec<f32> = (0..5_000).map(|_| rng.uniform_f32() * 10.0).collect();
+        for seg in forest.segs.iter_mut() {
+            seg.refresh_weights(&weights, 0);
+        }
+        forest.rebuild_cum();
+        forest.check_weight_stats(&weights);
+        let direct: f64 = weights.iter().map(|&w| w as f64).sum();
+        assert!((forest.total_weight() - direct).abs() < 1e-6 * direct);
+        assert!(forest.total_mass() >= forest.total_weight());
+    }
+
+    /// The build is a function of the data alone: identical trees no matter
+    /// how callers interleave or group the per-segment builds.
+    #[test]
+    fn build_is_deterministic() {
+        let data = random_data(6_000, 5, 23);
+        let norms = compute_norms(&data);
+        let (a, _) = build_forest(&data, &norms);
+        let (b, _) = build_forest(&data, &norms);
+        for (sa, sb) in a.segs.iter().zip(&b.segs) {
+            assert_eq!(sa.perm, sb.perm);
+            assert_eq!(sa.nodes.len(), sb.nodes.len());
+            for (na, nb) in sa.nodes.iter().zip(&sb.nodes) {
+                assert_eq!(na.centroid, nb.centroid);
+                assert_eq!(na.radius, nb.radius);
+            }
+        }
+    }
+
+    /// Rejection draws follow the exact D² distribution `w_i / Σw` —
+    /// chi-squared goodness-of-fit over per-point bins, zero-weight points
+    /// never drawn. Multi-leaf, multi-segment-capable path.
+    #[test]
+    fn draw_matches_d2_distribution_chi_squared() {
+        let n = 256; // 4+ leaves at LEAF_CAP=64
+        let data = random_data(n, 2, 41);
+        let norms = compute_norms(&data);
+        let (mut forest, _) = build_forest(&data, &norms);
+        let weights: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        for seg in forest.segs.iter_mut() {
+            seg.refresh_weights(&weights, 0);
+        }
+        forest.rebuild_cum();
+
+        let n_draws = 200_000u64;
+        let mut counts = vec![0u64; n];
+        let mut rng = Pcg64::seed_from(55);
+        let mut proposals = 0u64;
+        for _ in 0..n_draws {
+            let d = forest.draw(&weights, &mut rng);
+            counts[d.index] += 1;
+            proposals += d.proposals;
+        }
+        let mut chi2 = 0.0;
+        for i in 0..n {
+            if weights[i] == 0.0 {
+                assert_eq!(counts[i], 0, "zero-weight point {i} drawn");
+                continue;
+            }
+            let expect = n_draws as f64 * weights[i] as f64 / total;
+            let d = counts[i] as f64 - expect;
+            chi2 += d * d / expect;
+        }
+        // ~204 positive bins ⇒ df ≈ 203; 99.99th percentile ≈ 287.
+        assert!(chi2 < 290.0, "rejection draw chi2={chi2}");
+        // Acceptance is bounded below by 1/LEAF_CAP; on this near-uniform
+        // weight profile it should be far better than the worst case.
+        assert!(proposals < n_draws * 8, "acceptance collapsed: {proposals}");
+    }
+
+    #[test]
+    fn degenerate_all_zero_weights_fall_back_deterministically() {
+        let data = random_data(300, 2, 5);
+        let norms = compute_norms(&data);
+        let (mut forest, _) = build_forest(&data, &norms);
+        let weights = vec![0f32; 300];
+        for seg in forest.segs.iter_mut() {
+            seg.refresh_weights(&weights, 0);
+        }
+        forest.rebuild_cum();
+        let mut rng = Pcg64::seed_from(1);
+        let a = forest.draw(&weights, &mut rng);
+        let b = forest.draw(&weights, &mut rng);
+        assert_eq!(a.index, b.index);
+        assert_eq!(a.index, forest.segs[0].perm[0] as usize);
+    }
+
+    /// A draw's RNG consumption and outcome depend only on the weight state,
+    /// never on how the forest was built across groups — same stream, same
+    /// picks.
+    #[test]
+    fn draw_stream_is_reproducible() {
+        let data = random_data(2_000, 3, 9);
+        let norms = compute_norms(&data);
+        let weights: Vec<f32> = (0..2_000).map(|i| (i as f32).sqrt()).collect();
+        let mut draws = Vec::new();
+        for _ in 0..2 {
+            let (mut forest, _) = build_forest(&data, &norms);
+            for seg in forest.segs.iter_mut() {
+                seg.refresh_weights(&weights, 0);
+            }
+            forest.rebuild_cum();
+            let mut rng = Pcg64::seed_from(77);
+            let run: Vec<usize> = (0..50).map(|_| forest.draw(&weights, &mut rng).index).collect();
+            draws.push(run);
+        }
+        assert_eq!(draws[0], draws[1]);
+    }
+}

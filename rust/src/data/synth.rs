@@ -35,45 +35,77 @@ impl GmmSpec {
     }
 }
 
-/// Samples a Gaussian mixture.
-pub fn gmm<R: Rng>(spec: &GmmSpec, rng: &mut R) -> Matrix {
-    assert!(spec.clusters >= 1);
-    // Component centers.
-    let mut centers = Vec::with_capacity(spec.clusters * spec.dims);
-    for _ in 0..spec.clusters * spec.dims {
-        centers.push(rng.uniform_f32() * spec.box_side);
-    }
-    // Component weights (imbalance interpolates uniform → power-law).
-    let mut cweights: Vec<f64> = (0..spec.clusters)
-        .map(|i| {
-            let uniform = 1.0;
-            let decayed = 1.0 / ((i + 1) as f64 * (i + 1) as f64);
-            (1.0 - spec.imbalance as f64) * uniform + spec.imbalance as f64 * decayed
-        })
-        .collect();
-    let wsum: f64 = cweights.iter().sum();
-    for w in &mut cweights {
-        *w /= wsum;
+/// Streaming GMM generator state: the mixture (component centers and
+/// weights) is drawn once up front, then rows are produced *in order*
+/// across any number of [`GmmStream::fill_rows`] calls, writing straight
+/// into a caller-owned matrix. The RNG stream — and therefore every
+/// coordinate — is bit-identical to the one-shot [`gmm`] call no matter
+/// how the rows are chunked, and peak memory stays at the single output
+/// allocation, which is what lets the catalog register n-in-the-millions
+/// instances without a transient second copy.
+pub struct GmmStream {
+    dims: usize,
+    sigma: f32,
+    centers: Vec<f32>,
+    cweights: Vec<f64>,
+}
+
+impl GmmStream {
+    /// Draws the mixture. Consumes `clusters · dims` uniforms — the exact
+    /// prefix [`gmm`] consumed, so downstream draws line up.
+    pub fn new<R: Rng>(spec: &GmmSpec, rng: &mut R) -> Self {
+        assert!(spec.clusters >= 1);
+        // Component centers.
+        let mut centers = Vec::with_capacity(spec.clusters * spec.dims);
+        for _ in 0..spec.clusters * spec.dims {
+            centers.push(rng.uniform_f32() * spec.box_side);
+        }
+        // Component weights (imbalance interpolates uniform → power-law).
+        let mut cweights: Vec<f64> = (0..spec.clusters)
+            .map(|i| {
+                let uniform = 1.0;
+                let decayed = 1.0 / ((i + 1) as f64 * (i + 1) as f64);
+                (1.0 - spec.imbalance as f64) * uniform + spec.imbalance as f64 * decayed
+            })
+            .collect();
+        let wsum: f64 = cweights.iter().sum();
+        for w in &mut cweights {
+            *w /= wsum;
+        }
+        GmmStream { dims: spec.dims, sigma: spec.sigma, centers, cweights }
     }
 
-    let mut m = Matrix::zeros(spec.n, spec.dims);
-    for i in 0..spec.n {
-        // Pick component by cumulative weight.
-        let r = rng.uniform_f64();
-        let mut acc = 0.0;
-        let mut c = spec.clusters - 1;
-        for (j, &w) in cweights.iter().enumerate() {
-            acc += w;
-            if acc > r {
-                c = j;
-                break;
+    /// Fills rows `first .. first + count` of `m`. Calls must cover the row
+    /// range in order (each row advances the shared RNG), but chunk
+    /// boundaries are free: any chunking yields the same matrix.
+    pub fn fill_rows<R: Rng>(&self, m: &mut Matrix, first: usize, count: usize, rng: &mut R) {
+        assert_eq!(m.cols(), self.dims, "matrix dims do not match the spec");
+        let clusters = self.cweights.len();
+        for i in first..first + count {
+            // Pick component by cumulative weight.
+            let r = rng.uniform_f64();
+            let mut acc = 0.0;
+            let mut c = clusters - 1;
+            for (j, &w) in self.cweights.iter().enumerate() {
+                acc += w;
+                if acc > r {
+                    c = j;
+                    break;
+                }
+            }
+            let row = m.row_mut(i);
+            for (jj, v) in row.iter_mut().enumerate() {
+                *v = self.centers[c * self.dims + jj] + self.sigma * rng.normal() as f32;
             }
         }
-        let row = m.row_mut(i);
-        for (jj, v) in row.iter_mut().enumerate() {
-            *v = centers[c * spec.dims + jj] + spec.sigma * rng.normal() as f32;
-        }
     }
+}
+
+/// Samples a Gaussian mixture (one-shot wrapper over [`GmmStream`]).
+pub fn gmm<R: Rng>(spec: &GmmSpec, rng: &mut R) -> Matrix {
+    let stream = GmmStream::new(spec, rng);
+    let mut m = Matrix::zeros(spec.n, spec.dims);
+    stream.fill_rows(&mut m, 0, spec.n, rng);
     m
 }
 
@@ -273,6 +305,26 @@ mod tests {
         }
         var /= (m.rows() * m.cols()) as f64;
         assert!(var > 25.0, "clusters did not spread: var={var}");
+    }
+
+    /// Chunk boundaries must not exist in the output: any row chunking of
+    /// the stream reproduces the one-shot matrix bit-for-bit.
+    #[test]
+    fn gmm_streaming_chunks_match_one_shot() {
+        let spec = GmmSpec { imbalance: 0.4, ..GmmSpec::new(1_000, 5, 7) };
+        let one_shot = gmm(&spec, &mut Pcg64::seed_from(9));
+        for chunks in [vec![1_000], vec![1, 7, 100, 892], vec![333, 333, 334]] {
+            let mut rng = Pcg64::seed_from(9);
+            let stream = GmmStream::new(&spec, &mut rng);
+            let mut m = Matrix::zeros(spec.n, spec.dims);
+            let mut first = 0;
+            for count in chunks {
+                stream.fill_rows(&mut m, first, count, &mut rng);
+                first += count;
+            }
+            assert_eq!(first, spec.n);
+            assert_eq!(m, one_shot);
+        }
     }
 
     #[test]

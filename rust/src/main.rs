@@ -3,7 +3,8 @@
 //! ```text
 //! geokmpp data <INSTANCE> [--n N] [--csv out.csv | --bin out.bin]
 //! geokmpp seed   --instance NAME | --file data.csv   --k K
-//!                [--variant standard|tie|full] [--threads T|auto] [--xla]
+//!                [--variant standard|tie|full|rejection] [--threads T|auto]
+//!                [--xla]
 //!                [--appendix-a]
 //!                [--refpoint origin|mean|median|positive|mean-norm]
 //! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto]
@@ -35,7 +36,7 @@ use geokmpp::data::catalog::by_name;
 use geokmpp::data::{io, stats};
 use geokmpp::kmeans::accel::{run_warm, Strategy};
 use geokmpp::kmeans::lloyd::LloydConfig;
-use geokmpp::metrics::table::fnum;
+use geokmpp::metrics::table::{fcount, fnum};
 use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
 use geokmpp::runtime::{Executor, WorkerPool};
 use geokmpp::seeding::{seed_with, D2Picker, NoTrace, RefPoint, SeedConfig, Variant};
@@ -109,7 +110,7 @@ fn cmd_seed(args: &Args) -> Result<()> {
     let (name, data) = load_data(args)?;
     let k: usize = args.require("k").map_err(anyhow::Error::msg)?;
     let variant = Variant::parse(args.get("variant").unwrap_or("full"))
-        .context("bad --variant (standard|tie|full)")?;
+        .context("bad --variant (standard|tie|full|rejection)")?;
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
     let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
@@ -144,16 +145,30 @@ fn cmd_seed(args: &Args) -> Result<()> {
     println!("threads           {threads}");
     println!("time              {}s", fnum(result.elapsed.as_secs_f64(), 4));
     println!("seeding cost      {}", fnum(result.cost(), 2));
-    println!("visited (assign)  {}", c.visited_assign);
-    println!("visited (headers) {}", c.visited_headers);
-    println!("visited (sample)  {}", c.visited_sampling);
-    println!("distances         {}", c.distances);
-    println!("center distances  {} (avoided {})", c.center_distances, c.center_distances_avoided);
-    println!("norms             {}", c.norms);
+    println!("visited (assign)  {}", fcount(c.visited_assign));
+    println!("visited (headers) {}", fcount(c.visited_headers));
+    println!("visited (sample)  {}", fcount(c.visited_sampling));
+    println!("distances         {}", fcount(c.distances));
+    println!(
+        "center distances  {} (avoided {})",
+        fcount(c.center_distances),
+        fcount(c.center_distances_avoided)
+    );
+    println!("norms             {}", fcount(c.norms));
     println!(
         "filter rejects    f1={} f2={} norm-part={} norm-point={}",
-        c.filter1_rejects, c.filter2_rejects, c.norm_partition_rejects, c.norm_point_rejects
+        fcount(c.filter1_rejects),
+        fcount(c.filter2_rejects),
+        fcount(c.norm_partition_rejects),
+        fcount(c.norm_point_rejects)
     );
+    println!(
+        "rejection sampler proposals={} rejections={} tree-node-visits={}",
+        fcount(c.proposals),
+        fcount(c.rejections),
+        fcount(c.tree_node_visits)
+    );
+    println!("visited (total)   {}", fcount(c.visited_total()));
     println!("{}", pool.stats());
     Ok(())
 }
@@ -162,7 +177,7 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let (name, data) = load_data(args)?;
     let k: usize = args.require("k").map_err(anyhow::Error::msg)?;
     let variant = Variant::parse(args.get("variant").unwrap_or("full"))
-        .context("bad --variant (standard|tie|full)")?;
+        .context("bad --variant (standard|tie|full|rejection)")?;
     let iters: usize = args.get_or("iters", 100).map_err(anyhow::Error::msg)?;
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
     let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;

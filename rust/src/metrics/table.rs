@@ -123,6 +123,21 @@ pub fn fnum(v: f64, digits: usize) -> String {
     format!("{v:.digits$}")
 }
 
+/// Formats a counter with `_` thousands grouping (`1_234_567`) — the
+/// seeding/clustering counter columns get unreadable at million-point
+/// scale without it.
+pub fn fcount(v: u64) -> String {
+    let digits = v.to_string();
+    let mut out = String::with_capacity(digits.len() + digits.len() / 3);
+    for (i, ch) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(ch);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +155,15 @@ mod tests {
         assert!(s.contains("speedup"));
         assert!(s.contains("4096"));
         assert!(s.contains("12.0"));
+    }
+
+    #[test]
+    fn fcount_groups_thousands() {
+        assert_eq!(fcount(0), "0");
+        assert_eq!(fcount(999), "999");
+        assert_eq!(fcount(1_000), "1_000");
+        assert_eq!(fcount(1_234_567), "1_234_567");
+        assert_eq!(fcount(1_000_000_000), "1_000_000_000");
     }
 
     #[test]

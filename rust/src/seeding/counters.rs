@@ -41,13 +41,33 @@ pub struct Counters {
     pub norm_point_rejects: u64,
     /// Center–center distance computations *avoided* via Appendix A.
     pub center_distances_avoided: u64,
+    /// Rejection-sampler proposals drawn from the tree proposal
+    /// distribution (`rejection` variant only).
+    pub proposals: u64,
+    /// Proposals rejected by the exact `w(x)/maxw` acceptance test.
+    pub rejections: u64,
+    /// Metric-tree node examinations (build, weight refresh, draw descents,
+    /// pruned update scans). Node headers are counted as examined points —
+    /// the same fairness rule as [`Counters::visited_headers`] — via
+    /// [`Counters::visited_total`].
+    pub tree_node_visits: u64,
 }
 
 impl Counters {
     /// Total points examined (both phases, headers included — the paper's
     /// §5.2 accounting).
     pub fn visited_total(&self) -> u64 {
-        self.visited_assign + self.visited_headers + self.visited_sampling
+        self.visited_assign + self.visited_headers + self.visited_sampling + self.tree_node_visits
+    }
+
+    /// Formatted rejection-sampling mix `proposals/rejections/tree_visits`,
+    /// or `-` when the variant used no tree (keeps report columns compact).
+    pub fn sampling_mix(&self) -> String {
+        if self.proposals == 0 && self.rejections == 0 && self.tree_node_visits == 0 {
+            "-".to_string()
+        } else {
+            format!("{}/{}/{}", self.proposals, self.rejections, self.tree_node_visits)
+        }
     }
 
     /// Total distance-like computations: point-center + center-center +
@@ -75,6 +95,9 @@ impl std::ops::AddAssign for Counters {
         self.norm_partition_rejects += other.norm_partition_rejects;
         self.norm_point_rejects += other.norm_point_rejects;
         self.center_distances_avoided += other.center_distances_avoided;
+        self.proposals += other.proposals;
+        self.rejections += other.rejections;
+        self.tree_node_visits += other.tree_node_visits;
     }
 }
 
@@ -91,10 +114,15 @@ mod tests {
             distances: 7,
             center_distances: 2,
             norms: 1,
+            tree_node_visits: 3,
             ..Default::default()
         };
-        assert_eq!(c.visited_total(), 17);
+        // Tree-node examinations count as visited points (the same §5.2
+        // fairness rule as cluster/partition headers).
+        assert_eq!(c.visited_total(), 20);
         assert_eq!(c.computations_total(), 10);
+        assert_eq!(c.sampling_mix(), "0/0/3");
+        assert_eq!(Counters::default().sampling_mix(), "-");
     }
 
     #[test]
@@ -121,6 +149,9 @@ mod tests {
             norm_partition_rejects: 9,
             norm_point_rejects: 10,
             center_distances_avoided: 11,
+            proposals: 12,
+            rejections: 13,
+            tree_node_visits: 14,
         };
         let mut sum = Counters::default();
         sum += one;
@@ -139,6 +170,9 @@ mod tests {
                 norm_partition_rejects: 18,
                 norm_point_rejects: 20,
                 center_distances_avoided: 22,
+                proposals: 24,
+                rejections: 26,
+                tree_node_visits: 28,
             }
         );
     }

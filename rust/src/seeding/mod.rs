@@ -1,6 +1,6 @@
 //! k-means++ seeding: the paper's contribution.
 //!
-//! Three variants, all producing **identical clusterings in distribution**
+//! Four variants, all producing **identical clusterings in distribution**
 //! (the accelerations are exact):
 //!
 //! * [`Variant::Standard`] — Algorithm 1: the textbook k-means++ with flat
@@ -11,6 +11,11 @@
 //! * [`Variant::Full`] — Algorithm 2 plus the norm filters of §4.3: clusters
 //!   split into lower/upper norm partitions, with partition-level
 //!   `[l, u]`-bound rejection and per-point norm rejection (Eq. 8).
+//! * [`Variant::Rejection`] — sublinear exact D² sampling (Cohen-Addad et
+//!   al.): rejection sampling over a per-segment metric-tree forest
+//!   ([`crate::core::tree`]) with node-level norm-range and centroid-ball
+//!   pruned update scans. Same draw distribution as every other variant;
+//!   `O(log n)` sampling work per draw instead of a member scan.
 //!
 //! Options (off by default, matching the paper's baseline configuration):
 //! Appendix-A center–center distance avoidance, Appendix-B reference points
@@ -33,6 +38,7 @@ pub mod parallel;
 pub mod partitions;
 pub mod picker;
 pub mod refpoint;
+pub mod rejection;
 pub mod standard;
 pub mod tie;
 pub mod trace;
@@ -58,11 +64,16 @@ pub enum Variant {
     Tie,
     /// Algorithm 2 + norm filters (the "full accelerated" variant).
     Full,
+    /// Exact D² rejection sampling over the metric-tree forest, with
+    /// node-pruned update scans (sublinear sampling at scale).
+    Rejection,
 }
 
 impl Variant {
-    /// All variants, in the paper's presentation order.
-    pub const ALL: [Variant; 3] = [Variant::Standard, Variant::Tie, Variant::Full];
+    /// All variants: the paper's three in presentation order, then the
+    /// tree-based rejection seeder.
+    pub const ALL: [Variant; 4] =
+        [Variant::Standard, Variant::Tie, Variant::Full, Variant::Rejection];
 
     /// Short identifier used in reports and CLI flags.
     pub fn name(&self) -> &'static str {
@@ -70,6 +81,7 @@ impl Variant {
             Variant::Standard => "standard",
             Variant::Tie => "tie",
             Variant::Full => "full",
+            Variant::Rejection => "rejection",
         }
     }
 
@@ -79,6 +91,7 @@ impl Variant {
             "standard" | "std" => Some(Variant::Standard),
             "tie" => Some(Variant::Tie),
             "full" => Some(Variant::Full),
+            "rejection" | "rej" => Some(Variant::Rejection),
             _ => None,
         }
     }
@@ -210,6 +223,7 @@ pub fn seed_with<P: CenterPicker, T: TraceSink>(
         Variant::Tie => tie::run(data, cfg, picker, trace),
         Variant::Full if cfg.threads > 1 => parallel::run(data, cfg, picker, trace),
         Variant::Full => full::run(data, cfg, picker, trace),
+        Variant::Rejection => rejection::run(data, cfg, picker, trace),
     };
     result.elapsed = sw.elapsed();
     result
@@ -305,6 +319,11 @@ mod tests {
         assert!(per_variant[2].visited_assign <= per_variant[0].visited_assign);
         assert!(per_variant[1].visited_headers > 0);
         assert!(per_variant[2].visited_headers > 0);
+        // The rejection seeder also scans subsets; its tree walk is
+        // accounted in its own bucket, not as per-point visits or headers.
+        assert!(per_variant[3].visited_assign <= per_variant[0].visited_assign);
+        assert_eq!(per_variant[3].visited_headers, 0);
+        assert!(per_variant[3].tree_node_visits > 0);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use crate::core::rng::Rng;
 use crate::core::sampling::{roulette, roulette_f64, roulette_indexed, roulette_segmented, CumTable};
+use crate::core::tree::{DrawStats, Forest};
 
 /// What a picker returns: the chosen point index plus how many entries the
 /// selection procedure examined (the paper's "points examined during the D²
@@ -76,6 +77,21 @@ pub enum PickCtx<'a> {
         total: f64,
         /// Per-group cumulative tables (invalid ⇒ rebuild on use).
         tables: &'a mut [CumTable],
+    },
+    /// Sublinear exact D² sampling: rejection over the metric-tree forest
+    /// ([`crate::core::tree`]). The proposal walk and the `w(x)/maxw`
+    /// acceptance test are both driven by the picker's RNG, so the draw is
+    /// distributed exactly as `w_i / Σw` — the same distribution as
+    /// [`PickCtx::Flat`] — while touching `O(log n)` nodes per proposal.
+    Rejection {
+        /// Global per-point weights `w_i`.
+        weights: &'a [f32],
+        /// The per-segment tree forest with current weight statistics.
+        forest: &'a Forest,
+        /// Out-param: the draw's work accounting (proposals, rejections,
+        /// node visits) for the caller's counters. Untouched by scripted
+        /// replays.
+        stats: &'a mut DrawStats,
     },
 }
 
@@ -166,6 +182,13 @@ impl<R: Rng> CenterPicker for D2Picker<R> {
                 visited += (groups[g].len().max(2) as f64).log2().ceil() as u64;
                 Pick { index: groups[g][pos], visited }
             }
+            PickCtx::Rejection { weights, forest, stats } => {
+                let draw = forest.draw(weights, &mut self.rng);
+                *stats = draw;
+                // One leaf member is examined per proposal; the node walk is
+                // accounted separately by the caller via `stats`.
+                Pick { index: draw.index, visited: draw.proposals }
+            }
         }
     }
 }
@@ -209,6 +232,12 @@ impl CenterPicker for ScriptedPicker {
                 debug_assert!(
                     segments.iter().any(|segs| segs.iter().any(|s| s.contains(&index))),
                     "scripted center {index} not present in any merged group"
+                );
+            }
+            PickCtx::Rejection { weights, .. } => {
+                debug_assert!(
+                    index < weights.len(),
+                    "scripted center {index} out of range for rejection sampling"
                 );
             }
             _ => {}
@@ -348,6 +377,59 @@ mod tests {
         }
         let chi2 = chi2_of(&counts);
         assert!(chi2 < 27.86, "cached two-step chi2={chi2}, counts={counts:?}");
+    }
+
+    /// Rejection sampling through the real `D2Picker` must follow the exact
+    /// flat D² distribution `w_i / Σw` — chi-squared goodness-of-fit over
+    /// per-point bins across a multi-leaf forest, zero-weight points never
+    /// drawn (the satellite of the `rejection` seeder's exactness claim).
+    #[test]
+    fn d2_rejection_matches_flat_distribution_chi_squared() {
+        use crate::core::matrix::Matrix;
+        use crate::core::norms::norms as compute_norms;
+        use crate::core::tree::{Forest, SegTree};
+
+        let n = 256usize; // several leaves at LEAF_CAP = 64
+        let mut rng = Pcg64::seed_from(17);
+        let mut v = Vec::with_capacity(n * 2);
+        for _ in 0..n * 2 {
+            v.push(rng.uniform_f32() * 50.0);
+        }
+        let data = Matrix::from_vec(v, n, 2);
+        let norms = compute_norms(&data);
+        let (mut seg, _) = SegTree::build(&data, &norms, 0, n);
+        let weights: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        seg.refresh_weights(&weights, 0);
+        let forest = Forest::new(vec![seg]);
+
+        let n_draws = 200_000u64;
+        let mut counts = vec![0u64; n];
+        let mut p = D2Picker::new(Pcg64::seed_from(3));
+        let mut visited_sampling = 0u64;
+        for _ in 0..n_draws {
+            let mut stats = crate::core::tree::DrawStats::default();
+            let pick =
+                p.next(PickCtx::Rejection { weights: &weights, forest: &forest, stats: &mut stats });
+            assert_eq!(pick.visited, stats.proposals);
+            assert_eq!(pick.index, stats.index);
+            counts[pick.index] += 1;
+            visited_sampling += pick.visited;
+        }
+        let mut chi2 = 0.0;
+        for i in 0..n {
+            if weights[i] == 0.0 {
+                assert_eq!(counts[i], 0, "zero-weight point {i} drawn");
+                continue;
+            }
+            let expect = n_draws as f64 * weights[i] as f64 / total;
+            let d = counts[i] as f64 - expect;
+            chi2 += d * d / expect;
+        }
+        // ~204 positive bins ⇒ df ≈ 203; the 99.99th percentile ≈ 287.
+        assert!(chi2 < 290.0, "rejection-vs-flat chi2={chi2}");
+        // Member examinations stay far below a flat scan's n per draw.
+        assert!(visited_sampling < n_draws * 8, "acceptance collapsed");
     }
 
     #[test]

@@ -1,0 +1,610 @@
+//! The `rejection` variant: sublinear exact D² seeding over the metric-tree
+//! forest ([`crate::core::tree`]).
+//!
+//! Cohen-Addad et al. (*Fast and Accurate k-means++ via Rejection
+//! Sampling*): instead of scanning cluster members to draw from `w_i / Σw`,
+//! propose from a tree-guided distribution (leaf mass `count·maxw`, member
+//! uniform) and accept with probability `w(x)/maxw(leaf)` — the accepted
+//! draw follows the *exact* D² distribution, and because `maxw` is the true
+//! maximum member weight the acceptance rate never drops below
+//! `1/LEAF_CAP`. A draw therefore costs `O(log n)` node visits in
+//! expectation where the two-step sampler scans member lists.
+//!
+//! The per-center update scan is node-pruned in the spirit of Lang &
+//! Schubert's cover-tree bounds, using only filters that are exact:
+//!
+//! * **subtree norm-range prune** — if the reference-norm gap between the
+//!   new center and the node's `[norm_min, norm_max]` satisfies
+//!   `gap² ≥ maxw`, every member would be rejected by the paper's per-point
+//!   norm filter (Eq. 8), so the whole subtree is skipped (charged to
+//!   `norm_partition_rejects`); f32-monotonicity makes this bit-identical
+//!   to visiting each member;
+//! * **centroid-ball prune** — with `dc = ED(centroid, c_new)`, every
+//!   member is at least `dc − radius` from the new center, so
+//!   `(dc − radius)² ≥ maxw` proves no weight can shrink (charged to
+//!   `filter1_rejects`, the cluster-level TIE bucket it generalizes);
+//! * a subtree whose `maxw` is already 0 cannot shrink further.
+//!
+//! Skipped subtrees provably keep their weights, so the stored
+//! `maxw`/`wsum`/`mass` statistics stay exact without any refresh machinery
+//! — which is what keeps the sampler's proposal distribution valid.
+//!
+//! Determinism: the segment split is a function of `n` only and all
+//! sampling is sequential, so runs are bit-identical at any `threads`.
+//! Above one thread the build/init/update scans fan out over the persistent
+//! worker pool in `threads` contiguous segment groups, merged in segment
+//! order; like every parallel path they then emit no per-point trace events
+//! (use `threads = 1` for cache-trace experiments). The Appendix-B
+//! `dot_trick` and the §4.2.2 `binary_search_sampling` options do not apply
+//! to this variant and are ignored.
+
+use crate::core::distance::{ed, sed};
+use crate::core::matrix::Matrix;
+use crate::core::norms::{norms as compute_norms, norms_from};
+use crate::core::shard::Shards;
+use crate::core::tree::{BuildStats, DrawStats, Forest, Node, SegTree};
+use crate::seeding::counters::Counters;
+use crate::seeding::picker::{CenterPicker, PickCtx};
+use crate::seeding::refpoint::RefPoint;
+use crate::seeding::trace::{NoTrace, TraceSink};
+use crate::seeding::{SeedConfig, SeedResult};
+use std::time::Duration;
+
+/// Conservative shrink on the centroid-ball gap before squaring: absorbs
+/// f32 rounding in the SED/ED chain so a prune never claims more than the
+/// arithmetic can guarantee.
+const BALL_MARGIN: f32 = 1.0 - 1e-4;
+
+/// One pruned update scan against a new center; borrows everything the
+/// recursion needs so the per-node step stays argument-light.
+struct Scan<'a, T: TraceSink> {
+    data: &'a Matrix,
+    norms: &'a [f32],
+    cn: &'a [f32],
+    cn_norm: f32,
+    slot: u32,
+    /// Global index of the first point of the weight/assignment slices.
+    base: usize,
+    w: &'a mut [f32],
+    a: &'a mut [u32],
+    c: &'a mut Counters,
+    trace: &'a mut T,
+}
+
+impl<T: TraceSink> Scan<'_, T> {
+    fn tree(&mut self, tree: &mut SegTree) {
+        let root = tree.nodes.len() - 1;
+        let (nodes, perm) = (&mut tree.nodes, &tree.perm);
+        self.node(nodes, perm, root);
+    }
+
+    fn node(&mut self, nodes: &mut [Node], perm: &[u32], idx: usize) {
+        self.c.tree_node_visits += 1;
+        let nd = &nodes[idx];
+        if nd.maxw <= 0.0 {
+            // Every member weight is already 0; weights only shrink.
+            return;
+        }
+        // Subtree norm-range prune: gap² ≥ maxw ⇒ the per-point norm filter
+        // would reject every member (bit-identical by f32 monotonicity).
+        let gap = if self.cn_norm < nd.norm_min {
+            nd.norm_min - self.cn_norm
+        } else if self.cn_norm > nd.norm_max {
+            self.cn_norm - nd.norm_max
+        } else {
+            0.0
+        };
+        if gap > 0.0 && gap * gap >= nd.maxw {
+            self.c.norm_partition_rejects += 1;
+            return;
+        }
+        // Centroid-ball prune: every member is ≥ dc − radius from c_new.
+        let dc = ed(&nd.centroid, self.cn);
+        self.c.center_distances += 1;
+        if dc > nd.radius {
+            let g = (dc - nd.radius) * BALL_MARGIN;
+            if g * g >= nd.maxw {
+                self.c.filter1_rejects += 1;
+                return;
+            }
+        }
+        if nd.is_leaf() {
+            let (begin, end, count) = (nd.begin as usize, nd.end as usize, nd.count());
+            let d = self.data.cols();
+            let mut maxw = 0f32;
+            let mut wsum = 0f64;
+            for &p in &perm[begin..end] {
+                let i = p as usize;
+                self.trace.access_weight(i);
+                self.c.visited_assign += 1;
+                let wi = &mut self.w[i - self.base];
+                if *wi > 0.0 {
+                    self.trace.access_bound(i);
+                    let dn = self.cn_norm - self.norms[i];
+                    if dn * dn >= *wi {
+                        self.c.norm_point_rejects += 1;
+                    } else {
+                        self.trace.read_point(i);
+                        self.trace.ops(3 * d as u64);
+                        self.c.distances += 1;
+                        let dist = sed(self.data.row(i), self.cn);
+                        if dist < *wi {
+                            *wi = dist;
+                            self.a[i - self.base] = self.slot;
+                        }
+                    }
+                }
+                maxw = maxw.max(*wi);
+                wsum += *wi as f64;
+            }
+            let nd = &mut nodes[idx];
+            nd.maxw = maxw;
+            nd.wsum = wsum;
+            nd.mass = count as f64 * maxw as f64;
+        } else {
+            let (l, r) = (nd.left as usize, nd.right as usize);
+            self.node(nodes, perm, l);
+            self.node(nodes, perm, r);
+            let maxw = nodes[l].maxw.max(nodes[r].maxw);
+            let wsum = nodes[l].wsum + nodes[r].wsum;
+            let mass = nodes[l].mass + nodes[r].mass;
+            let nd = &mut nodes[idx];
+            nd.maxw = maxw;
+            nd.wsum = wsum;
+            nd.mass = mass;
+        }
+    }
+}
+
+/// Splits `items` into consecutive chunks of the given lengths.
+fn split_lens<'a, T>(
+    mut items: &'a mut [T],
+    lens: impl Iterator<Item = usize>,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::new();
+    for len in lens {
+        let (head, rest) = items.split_at_mut(len);
+        out.push(head);
+        items = rest;
+    }
+    debug_assert!(items.is_empty(), "chunk lengths do not tile the slice");
+    out
+}
+
+pub(crate) fn run<P: CenterPicker, T: TraceSink>(
+    data: &Matrix,
+    cfg: &SeedConfig,
+    picker: &mut P,
+    trace: &mut T,
+) -> SeedResult {
+    let n = data.rows();
+    let d = data.cols();
+    let mut counters = Counters::default();
+
+    // Norms once up front (§4.3; Appendix-B reference points shift the
+    // frame, distances stay in the original frame — same rules as `full`).
+    let norms: Vec<f32> = match &cfg.refpoint {
+        RefPoint::Origin => compute_norms(data),
+        rp => {
+            let reference = rp.coordinates(data);
+            norms_from(data, &reference)
+        }
+    };
+    counters.norms += n as u64;
+
+    let sharded = cfg.threads > 1;
+    let pool = if sharded { Some(cfg.pool_or_new()) } else { None };
+
+    // Fixed point segments (a function of n — the invariance anchor) and a
+    // thread-governed grouping of the segments for the pool fan-out. Group
+    // results always merge in group = segment order.
+    let seg_bounds: Vec<(usize, usize)> =
+        Forest::segment_shards(n).ranges().map(|r| (r.start, r.end - r.start)).collect();
+    let groups = Shards::new(seg_bounds.len(), cfg.threads.max(1));
+    let group_bounds: Vec<(usize, usize)> = groups
+        .ranges()
+        .map(|gr| {
+            let (s0, _) = seg_bounds[gr.start];
+            let (s1, l1) = seg_bounds[gr.end - 1];
+            (s0, s1 + l1 - s0)
+        })
+        .collect();
+
+    // Build the forest once per run (the trees depend only on the data, so
+    // any grouping of the per-segment builds yields identical trees).
+    let mut build = BuildStats::default();
+    let built: Vec<(SegTree, BuildStats)> = if let Some(pool) = &pool {
+        let tasks: Vec<_> = groups
+            .ranges()
+            .map(|gr| {
+                let seg_bounds = &seg_bounds;
+                let norms = &norms;
+                move || {
+                    gr.map(|s| SegTree::build(data, norms, seg_bounds[s].0, seg_bounds[s].1))
+                        .collect::<Vec<_>>()
+                }
+            })
+            .collect();
+        pool.scoped(tasks).into_iter().flatten().collect()
+    } else {
+        seg_bounds.iter().map(|&(start, len)| SegTree::build(data, &norms, start, len)).collect()
+    };
+    let mut segs = Vec::with_capacity(built.len());
+    for (t, s) in built {
+        build.distances += s.distances;
+        build.center_distances += s.center_distances;
+        build.node_visits += s.node_visits;
+        segs.push(t);
+    }
+    counters.distances += build.distances;
+    counters.center_distances += build.center_distances;
+    counters.tree_node_visits += build.node_visits;
+    let mut forest = Forest::new(segs);
+
+    let first = picker.first(n);
+    let mut center_indices = vec![first];
+    let mut weights = vec![0f32; n];
+    let mut assignments = vec![0u32; n];
+
+    // Initial pass: w_i = SED(x_i, c_0), then seed the tree statistics.
+    {
+        let c0 = data.row(first);
+        if let Some(pool) = &pool {
+            let w_parts = split_lens(&mut weights, group_bounds.iter().map(|&(_, l)| l));
+            let tasks: Vec<_> = group_bounds
+                .iter()
+                .zip(w_parts)
+                .map(|(&(start, len), w)| {
+                    move || {
+                        for (slot, i) in (start..start + len).enumerate() {
+                            w[slot] = sed(data.row(i), c0);
+                        }
+                    }
+                })
+                .collect();
+            pool.scoped(tasks);
+        } else {
+            for i in 0..n {
+                trace.read_point(i);
+                trace.access_weight(i);
+                trace.ops(3 * d as u64);
+                weights[i] = sed(data.row(i), c0);
+            }
+        }
+        counters.visited_assign += n as u64;
+        counters.distances += n as u64;
+    }
+    if let Some(pool) = &pool {
+        let seg_groups = split_lens(&mut forest.segs, groups.ranges().map(|r| r.end - r.start));
+        let w = &weights;
+        let tasks: Vec<_> = seg_groups
+            .into_iter()
+            .map(|trees| {
+                move || {
+                    let mut visits = 0u64;
+                    for t in trees.iter_mut() {
+                        visits += t.refresh_weights(w, 0);
+                    }
+                    visits
+                }
+            })
+            .collect();
+        for v in pool.scoped(tasks) {
+            counters.tree_node_visits += v;
+        }
+    } else {
+        for t in forest.segs.iter_mut() {
+            counters.tree_node_visits += t.refresh_weights(&weights, 0);
+        }
+    }
+    forest.rebuild_cum();
+
+    while center_indices.len() < cfg.k {
+        let mut draw = DrawStats::default();
+        let pick = picker.next(PickCtx::Rejection {
+            weights: &weights,
+            forest: &forest,
+            stats: &mut draw,
+        });
+        counters.visited_sampling += pick.visited;
+        counters.proposals += draw.proposals;
+        counters.rejections += draw.rejections;
+        counters.tree_node_visits += draw.node_visits;
+        let c_new = pick.index;
+        let slot = center_indices.len() as u32;
+        center_indices.push(c_new);
+        let cn = data.row(c_new);
+        let cn_norm = norms[c_new];
+
+        if let Some(pool) = &pool {
+            let seg_groups = split_lens(&mut forest.segs, groups.ranges().map(|r| r.end - r.start));
+            let w_parts = split_lens(&mut weights, group_bounds.iter().map(|&(_, l)| l));
+            let a_parts = split_lens(&mut assignments, group_bounds.iter().map(|&(_, l)| l));
+            let norms = &norms;
+            let tasks: Vec<_> = seg_groups
+                .into_iter()
+                .zip(w_parts)
+                .zip(a_parts)
+                .zip(&group_bounds)
+                .map(|(((trees, w), a), &(base, _))| {
+                    move || {
+                        let mut c = Counters::default();
+                        let mut scan = Scan {
+                            data,
+                            norms,
+                            cn,
+                            cn_norm,
+                            slot,
+                            base,
+                            w,
+                            a,
+                            c: &mut c,
+                            trace: &mut NoTrace,
+                        };
+                        for t in trees.iter_mut() {
+                            scan.tree(t);
+                        }
+                        c
+                    }
+                })
+                .collect();
+            // Merge in task = segment order.
+            for c in pool.scoped(tasks) {
+                counters += c;
+            }
+        } else {
+            let mut scan = Scan {
+                data,
+                norms: &norms,
+                cn,
+                cn_norm,
+                slot,
+                base: 0,
+                w: &mut weights,
+                a: &mut assignments,
+                c: &mut counters,
+                trace,
+            };
+            for t in forest.segs.iter_mut() {
+                scan.tree(t);
+            }
+        }
+        forest.rebuild_cum();
+        #[cfg(debug_assertions)]
+        forest.check_weight_stats(&weights);
+    }
+
+    SeedResult {
+        centers: data.gather_rows(&center_indices),
+        center_indices,
+        assignments,
+        weights,
+        norms: if matches!(cfg.refpoint, RefPoint::Origin) { norms } else { Vec::new() },
+        counters,
+        elapsed: Duration::ZERO, // filled by seed_with
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::data::synth::{gmm, GmmSpec};
+    use crate::seeding::picker::{D2Picker, Pick, ScriptedPicker};
+    use crate::seeding::{full, standard, Variant};
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut v = Vec::with_capacity(n * d);
+        for _ in 0..n * d {
+            v.push(rng.uniform_f32() * 100.0);
+        }
+        Matrix::from_vec(v, n, d)
+    }
+
+    /// Exactness: under the same scripted center sequence, the pruned tree
+    /// scans must reproduce the standard variant's weights and assignments
+    /// bit-for-bit.
+    #[test]
+    fn scripted_bit_identical_to_standard() {
+        let data = random_data(500, 3, 19);
+        let k = 12;
+        let script: Vec<usize> = {
+            let mut p = D2Picker::new(Pcg64::seed_from(7));
+            standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let rs = standard::run(
+            &data,
+            &SeedConfig::new(k, Variant::Standard),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        let rr = run(
+            &data,
+            &SeedConfig::new(k, Variant::Rejection),
+            &mut ScriptedPicker::new(script),
+            &mut NoTrace,
+        );
+        assert_eq!(rs.weights, rr.weights);
+        assert_eq!(rs.assignments, rr.assignments);
+        assert_eq!(rs.center_indices, rr.center_indices);
+    }
+
+    /// The determinism contract at full strength: same D² RNG stream, same
+    /// centers, same weights, same counters at 1/2/4/8 threads — across
+    /// multiple segments (n > SEG_TARGET).
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let data = random_data(5_000, 2, 3); // 2 segments
+        let run_t = |threads: usize| {
+            let cfg = SeedConfig::new(10, Variant::Rejection).with_threads(threads);
+            let mut picker = D2Picker::new(Pcg64::seed_from(42));
+            run(&data, &cfg, &mut picker, &mut NoTrace)
+        };
+        let base = run_t(1);
+        for threads in [2usize, 4, 8] {
+            let r = run_t(threads);
+            assert_eq!(base.center_indices, r.center_indices, "t{threads}");
+            assert_eq!(base.weights, r.weights, "t{threads}");
+            assert_eq!(base.assignments, r.assignments, "t{threads}");
+            assert_eq!(base.counters, r.counters, "t{threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_segments_degenerates_cleanly() {
+        let data = random_data(40, 2, 5); // one leaf, one segment
+        let mut p1 = ScriptedPicker::new(vec![0, 39, 17]);
+        let reference =
+            run(&data, &SeedConfig::new(3, Variant::Rejection), &mut p1, &mut NoTrace);
+        let mut p2 = ScriptedPicker::new(vec![0, 39, 17]);
+        let cfg = SeedConfig::new(3, Variant::Rejection).with_threads(16);
+        let r = run(&data, &cfg, &mut p2, &mut NoTrace);
+        assert_eq!(reference.weights, r.weights);
+        assert_eq!(reference.assignments, r.assignments);
+        assert_eq!(reference.counters, r.counters);
+    }
+
+    /// End-to-end draw-distribution exactness in the style of the two-step
+    /// vs flat tests: with the first center pinned, the second center's
+    /// frequencies must match the flat D² distribution.
+    #[test]
+    fn rejection_matches_flat_d2_distribution() {
+        struct FixedFirst {
+            first: usize,
+            inner: D2Picker<Pcg64>,
+        }
+        impl CenterPicker for FixedFirst {
+            fn first(&mut self, _n: usize) -> usize {
+                self.first
+            }
+            fn next(&mut self, ctx: PickCtx<'_>) -> Pick {
+                self.inner.next(ctx)
+            }
+        }
+
+        let n = 32;
+        let data = random_data(n, 2, 77);
+        let first = 5;
+        let w: Vec<f64> = (0..n).map(|i| sed(data.row(i), data.row(first)) as f64).collect();
+        let total: f64 = w.iter().sum();
+
+        let reps = 30_000u64;
+        let mut counts = vec![0u64; n];
+        for rep in 0..reps {
+            let mut p = FixedFirst { first, inner: D2Picker::new(Pcg64::seed_stream(13, rep)) };
+            let r = run(&data, &SeedConfig::new(2, Variant::Rejection), &mut p, &mut NoTrace);
+            counts[r.center_indices[1]] += 1;
+        }
+        assert_eq!(counts[first], 0, "zero-weight first center re-drawn");
+        for i in 0..n {
+            let expect = w[i] / total;
+            let got = counts[i] as f64 / reps as f64;
+            // Same ~5σ band as the two-step-vs-flat test.
+            assert!(
+                (got - expect).abs() < 0.015,
+                "point {i}: observed {got:.4} vs flat D² {expect:.4}"
+            );
+        }
+    }
+
+    /// Each draw ends in exactly one acceptance, so the bucket identity
+    /// `proposals = rejections + (k − 1)` pins the accounting; k = 1 makes
+    /// no draws at all.
+    #[test]
+    fn counter_bookkeeping_identities() {
+        let data = random_data(900, 3, 11);
+        let k = 24;
+        let mut p = D2Picker::new(Pcg64::seed_from(8));
+        let r = run(&data, &SeedConfig::new(k, Variant::Rejection), &mut p, &mut NoTrace);
+        assert_eq!(r.counters.proposals, r.counters.rejections + (k as u64 - 1));
+        assert_eq!(r.counters.visited_sampling, r.counters.proposals);
+        assert!(r.counters.tree_node_visits > 0);
+        assert_eq!(r.counters.norms, 900);
+
+        let mut p1 = D2Picker::new(Pcg64::seed_from(8));
+        let r1 = run(&data, &SeedConfig::new(1, Variant::Rejection), &mut p1, &mut NoTrace);
+        assert_eq!(r1.counters.proposals, 0);
+        assert_eq!(r1.counters.visited_sampling, 0);
+    }
+
+    /// The tentpole claim: as n grows the sampling-phase visits stay nearly
+    /// flat (proposals are n-independent, the walk is logarithmic), while
+    /// `full`'s two-step member scans grow linearly — and under a shared
+    /// script the rejection seeder's total visits undercut `full`'s.
+    #[test]
+    fn sampling_visits_sublinear_vs_full() {
+        let k = 16;
+        let cell = |n: usize| {
+            let mut rng = Pcg64::seed_from(21);
+            let data = gmm(&GmmSpec::new(n, 4, 16), &mut rng);
+            let mut pf = D2Picker::new(Pcg64::seed_from(9));
+            let rf = full::run(&data, &SeedConfig::new(k, Variant::Full), &mut pf, &mut NoTrace);
+            let mut pr = D2Picker::new(Pcg64::seed_from(9));
+            let rr = run(&data, &SeedConfig::new(k, Variant::Rejection), &mut pr, &mut NoTrace);
+            (rf.counters, rr.counters, data)
+        };
+        let (full_small, rej_small, _) = cell(2_000);
+        let (full_big, rej_big, data_big) = cell(16_000);
+
+        let full_growth = full_big.visited_sampling as f64 / full_small.visited_sampling as f64;
+        let rej_growth = rej_big.visited_sampling as f64 / rej_small.visited_sampling as f64;
+        assert!(
+            rej_growth < full_growth / 2.0,
+            "sampling visits did not stay sublinear: rejection ×{rej_growth:.2} \
+             vs full ×{full_growth:.2} on an 8× larger instance"
+        );
+
+        // Apples-to-apples total: replay one script into both variants.
+        let script: Vec<usize> = {
+            let mut p = D2Picker::new(Pcg64::seed_from(9));
+            full::run(&data_big, &SeedConfig::new(k, Variant::Full), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let sf = full::run(
+            &data_big,
+            &SeedConfig::new(k, Variant::Full),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        let sr = run(
+            &data_big,
+            &SeedConfig::new(k, Variant::Rejection),
+            &mut ScriptedPicker::new(script),
+            &mut NoTrace,
+        );
+        assert_eq!(sf.weights, sr.weights, "scripted rejection diverged from full");
+        assert!(
+            sr.counters.visited_total() < sf.counters.visited_total(),
+            "rejection visited {} ≥ full {}",
+            sr.counters.visited_total(),
+            sf.counters.visited_total()
+        );
+    }
+
+    /// Reference points change norms but never the result (Appendix B).
+    #[test]
+    fn refpoint_is_exact() {
+        let data = random_data(300, 3, 33);
+        let k = 8;
+        let script: Vec<usize> = {
+            let mut p = D2Picker::new(Pcg64::seed_from(2));
+            standard::run(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let rs = standard::run(
+            &data,
+            &SeedConfig::new(k, Variant::Standard),
+            &mut ScriptedPicker::new(script.clone()),
+            &mut NoTrace,
+        );
+        for rp in [RefPoint::Origin, RefPoint::Mean, RefPoint::Positive] {
+            let mut cfg = SeedConfig::new(k, Variant::Rejection);
+            cfg.refpoint = rp;
+            let rr = run(&data, &cfg, &mut ScriptedPicker::new(script.clone()), &mut NoTrace);
+            assert_eq!(rs.weights, rr.weights, "{rp:?}");
+            assert_eq!(rs.assignments, rr.assignments, "{rp:?}");
+        }
+    }
+}

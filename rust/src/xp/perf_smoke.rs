@@ -21,15 +21,25 @@
 //! counters. `--baseline` (default `BENCH_main.json`, committed at the repo
 //! root) prints an informational per-row distance diff against the last
 //! refreshed baseline; it never gates.
+//!
+//! The **seeding gate** runs alongside the Lloyd matrix: on one fixed large
+//! synthetic instance (`--seed-instance`, default the million-point XL-R),
+//! the `rejection` seeder must (a) replay the `full` variant's chosen
+//! centers to bit-identical weights and assignments and (b) visit strictly
+//! fewer points (`visited_total`, the §5.2 accounting) than `full` — the
+//! sublinear-sampling claim, enforced on every CI run. Its counters land in
+//! the artifact's `"seeding"` object.
 
 use crate::cli::Args;
 use crate::core::rng::Pcg64;
 use crate::data::catalog::by_name;
 use crate::kmeans::accel::{run_warm, Strategy};
 use crate::kmeans::lloyd::{LloydConfig, LloydResult};
-use crate::metrics::table::Table;
+use crate::metrics::table::{fcount, fnum, Table};
 use crate::runtime::WorkerPool;
-use crate::seeding::{seed_with, D2Picker, NoTrace, SeedConfig, Variant};
+use crate::seeding::{
+    seed_with, Counters, D2Picker, NoTrace, ScriptedPicker, SeedConfig, SeedResult, Variant,
+};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
@@ -171,16 +181,97 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
 
+    // --- Seeding gate: sublinear rejection sampling vs the full variant ---
+    let seed_inst_name = args.get("seed-instance").unwrap_or("XL-R").to_string();
+    let seed_n: usize = args.get_or("seed-n", 1_000_000).map_err(anyhow::Error::msg)?;
+    let seed_k: usize = args.get_or("seed-k", 32).map_err(anyhow::Error::msg)?;
+    let sinst = by_name(&seed_inst_name)
+        .with_context(|| format!("unknown --seed-instance {seed_inst_name:?}"))?;
+    let sdata = sinst.generate_n(seed_n);
+    let seed_cfg = |variant| {
+        SeedConfig::new(seed_k, variant).with_threads(threads).with_pool(Arc::clone(&pool))
+    };
+    let full: SeedResult = {
+        let mut rng = Pcg64::seed_from(seed_v);
+        let mut picker = D2Picker::new(&mut rng);
+        seed_with(&sdata, &seed_cfg(Variant::Full), &mut picker, &mut NoTrace)
+    };
+    let rej: SeedResult = {
+        let mut rng = Pcg64::seed_from(seed_v);
+        let mut picker = D2Picker::new(&mut rng);
+        seed_with(&sdata, &seed_cfg(Variant::Rejection), &mut picker, &mut NoTrace)
+    };
+    // Replay full's exact center sequence through the rejection seeder: the
+    // tree-pruned scans must reproduce full's state bit-for-bit.
+    let rej_replay: SeedResult = {
+        let mut picker = ScriptedPicker::new(full.center_indices.clone());
+        seed_with(&sdata, &seed_cfg(Variant::Rejection), &mut picker, &mut NoTrace)
+    };
+    if rej_replay.center_indices != full.center_indices
+        || rej_replay.weights != full.weights
+        || rej_replay.assignments != full.assignments
+    {
+        violations.push(format!(
+            "seeding {seed_inst_name}/n{seed_n}/k{seed_k}: rejection replay diverged from full"
+        ));
+    }
+    if rej.counters.visited_total() >= full.counters.visited_total() {
+        violations.push(format!(
+            "seeding {seed_inst_name}/n{seed_n}/k{seed_k}: rejection visited {} >= full's {}",
+            rej.counters.visited_total(),
+            full.counters.visited_total()
+        ));
+    }
+    let mut st = Table::new([
+        "seed_variant",
+        "picker",
+        "visited_total",
+        "visited_sampling",
+        "proposals",
+        "rejections",
+        "tree_nodes",
+        "time_s",
+    ]);
+    let seed_rows = [
+        ("full", "d2", &full),
+        ("rejection", "d2", &rej),
+        ("rejection", "scripted", &rej_replay),
+    ];
+    for (variant, picker, r) in &seed_rows {
+        st.row([
+            variant.to_string(),
+            picker.to_string(),
+            fcount(r.counters.visited_total()),
+            fcount(r.counters.visited_sampling),
+            fcount(r.counters.proposals),
+            fcount(r.counters.rejections),
+            fcount(r.counters.tree_node_visits),
+            fnum(r.elapsed.as_secs_f64(), 3),
+        ]);
+    }
+    let seeding_json = format!(
+        "{{\"instance\":\"{seed_inst_name}\",\"n\":{seed_n},\"k\":{seed_k},\"rows\":[{}]}}",
+        seed_rows
+            .iter()
+            .map(|&(variant, picker, r)| seed_json(variant, picker, &r.counters))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+
     let pool_stats = pool.stats();
     let json = format!(
-        "{{\n  \"schema\": \"geokmpp-perf-smoke/v1\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
+        "{{\n  \"schema\": \"geokmpp-perf-smoke/v2\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
          \"max_iters\": {max_iters},\n  \"threads\": {threads},\n  \"pool\": {},\n  \
-         \"rows\": [\n    {}\n  ]\n}}\n",
+         \"seeding\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
         pool_stats.to_json(),
+        seeding_json,
         json_rows.join(",\n    ")
     );
     std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
     println!("{}", t.to_aligned());
+    println!();
+    println!("seeding gate ({seed_inst_name}, n={}, k={seed_k}):", fcount(seed_n as u64));
+    println!("{}", st.to_aligned());
     println!("wrote {} rows to {out}", json_rows.len());
     println!("{pool_stats}");
     compare_with_baseline(baseline, &json_rows);
@@ -188,15 +279,37 @@ pub fn run(args: &Args) -> Result<()> {
     if !violations.is_empty() {
         bail!(
             "perf-smoke gate failed — accelerated strategies must be exact and strictly \
-             cheaper than naive:\n  {}",
+             cheaper than naive, and rejection seeding exact and strictly below full's \
+             visits:\n  {}",
             violations.join("\n  ")
         );
     }
     println!(
         "perf-smoke gate passed: every accelerated strategy is exact and strictly \
-         cheaper than naive"
+         cheaper than naive; rejection seeding replays full bit-exactly with fewer visits"
     );
     Ok(())
+}
+
+/// One seeding-gate counter row as flat JSON (same hand-rolled style as the
+/// Lloyd rows).
+fn seed_json(variant: &str, picker: &str, c: &Counters) -> String {
+    format!(
+        "{{\"variant\":\"{variant}\",\"picker\":\"{picker}\",\"visited_total\":{},\
+         \"visited_assign\":{},\"visited_headers\":{},\"visited_sampling\":{},\
+         \"distances\":{},\"center_distances\":{},\"norms\":{},\
+         \"proposals\":{},\"rejections\":{},\"tree_node_visits\":{}}}",
+        c.visited_total(),
+        c.visited_assign,
+        c.visited_headers,
+        c.visited_sampling,
+        c.distances,
+        c.center_distances,
+        c.norms,
+        c.proposals,
+        c.rejections,
+        c.tree_node_visits
+    )
 }
 
 /// Informational baseline diff: extracts `"lloyd_dists"` per row out of the
@@ -254,16 +367,19 @@ mod tests {
     }
 
     /// The real gate on a shrunken sweep: runs green, writes parseable
-    /// rows for every strategy in the matrix.
+    /// rows for every strategy in the matrix plus the seeding-gate object.
     #[test]
     fn smoke_gate_passes_and_emits_all_strategies() {
         let dir = std::env::temp_dir().join("geokmpp_perf_smoke_test");
         std::fs::create_dir_all(&dir).unwrap();
         let out = dir.join("BENCH_ci.json");
         let out_s = out.to_str().unwrap().to_string();
-        run(&args(&["--out", &out_s, "--n", "400", "--ks", "8", "--iters", "8"])).unwrap();
+        run(&args(&[
+            "--out", &out_s, "--n", "400", "--ks", "8", "--iters", "8", "--seed-n", "20000",
+        ]))
+        .unwrap();
         let body = std::fs::read_to_string(&out).unwrap();
-        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v1\""));
+        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v2\""));
         for s in Strategy::ALL {
             assert!(
                 body.contains(&format!("\"strategy\":\"{}\"", s.name())),
@@ -274,6 +390,14 @@ mod tests {
         assert!(body.contains("\"lloyd_dists\""));
         assert!(body.contains("\"group_prunes\""));
         assert!(body.contains("\"annulus_prunes\""));
+        // The seeding gate's counters ride along in the envelope: the full
+        // reference, the live rejection run, and the bit-exact replay.
+        assert!(body.contains("\"seeding\": {\"instance\":\"XL-R\""), "missing seeding: {body}");
+        assert!(body.contains("\"variant\":\"full\",\"picker\":\"d2\""));
+        assert!(body.contains("\"variant\":\"rejection\",\"picker\":\"d2\""));
+        assert!(body.contains("\"variant\":\"rejection\",\"picker\":\"scripted\""));
+        assert!(body.contains("\"proposals\""));
+        assert!(body.contains("\"tree_node_visits\""));
         // The shared pool's counters ride along in the envelope.
         assert!(body.contains("\"threads\": 2"), "missing threads: {body}");
         assert!(body.contains("\"pool\": {\"workers\":1,"), "missing pool: {body}");

@@ -1,7 +1,8 @@
 //! Cross-module exactness suite — the paper's central claim, checked at
-//! integration level: on catalog instances, all three variants produce
-//! identical weights/assignments when fed the same center sequence, and the
-//! filters are *sound* (no pruned point could have moved).
+//! integration level: on catalog instances, all variants (including the
+//! tree-based rejection seeder) produce identical weights/assignments when
+//! fed the same center sequence, and the filters are *sound* (no pruned
+//! point could have moved).
 
 use geokmpp::core::distance::sed;
 use geokmpp::core::rng::{Pcg64, Rng};
@@ -34,12 +35,76 @@ fn exactness_on_catalog_instances() {
         let std_r = run(Variant::Standard);
         let tie_r = run(Variant::Tie);
         let full_r = run(Variant::Full);
+        let rej_r = run(Variant::Rejection);
         assert_eq!(std_r.weights, tie_r.weights, "{name}: tie weights");
         assert_eq!(std_r.weights, full_r.weights, "{name}: full weights");
+        assert_eq!(std_r.weights, rej_r.weights, "{name}: rejection weights");
         assert_eq!(std_r.assignments, tie_r.assignments, "{name}: tie assignments");
         assert_eq!(std_r.assignments, full_r.assignments, "{name}: full assignments");
+        assert_eq!(std_r.assignments, rej_r.assignments, "{name}: rejection assignments");
         // And the accelerated variants actually saved work.
         assert!(tie_r.counters.distances < std_r.counters.distances, "{name}");
+    }
+}
+
+/// The rejection seeder's determinism contract on real catalog geometry:
+/// a fixed script replays to bit-identical state (weights, assignments,
+/// counters) at 1, 2, 4 and 8 threads, matching the single-threaded
+/// standard reference.
+#[test]
+fn rejection_seeding_exact_on_catalog_instances() {
+    for name in ["MGT", "CIF-C", "GSAD"] {
+        let inst = by_name(name).unwrap();
+        let data = inst.generate_n(2_001); // odd n: uneven segment tails
+        let k = 16;
+        let script: Vec<usize> = {
+            let mut rng = Pcg64::seed_from(47);
+            let mut p = D2Picker::new(&mut rng);
+            seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+                .center_indices
+        };
+        let standard = {
+            let mut p = ScriptedPicker::new(script.clone());
+            seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+        };
+        let reference = {
+            let mut p = ScriptedPicker::new(script.clone());
+            seed_with(&data, &SeedConfig::new(k, Variant::Rejection), &mut p, &mut NoTrace)
+        };
+        assert_eq!(standard.weights, reference.weights, "{name}: vs standard");
+        assert_eq!(standard.assignments, reference.assignments, "{name}: vs standard");
+        for threads in [2usize, 4, 8] {
+            let cfg = SeedConfig::new(k, Variant::Rejection).with_threads(threads);
+            let mut p = ScriptedPicker::new(script.clone());
+            let r = seed_with(&data, &cfg, &mut p, &mut NoTrace);
+            assert_eq!(reference.weights, r.weights, "{name} t{threads}");
+            assert_eq!(reference.assignments, r.assignments, "{name} t{threads}");
+            assert_eq!(reference.counters, r.counters, "{name} t{threads}");
+        }
+    }
+}
+
+/// Rejection seeding feeding the full Lloyd strategy matrix: the seeded
+/// state warm-starts every strategy at 1/2/4/8 threads to the naive
+/// reference's exact clustering.
+#[test]
+fn rejection_seeded_lloyd_strategies_exact() {
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(2_001);
+    let k = 16;
+    let mut rng = Pcg64::seed_from(53);
+    let mut picker = D2Picker::new(&mut rng);
+    let s = seed_with(&data, &SeedConfig::new(k, Variant::Rejection), &mut picker, &mut NoTrace);
+    let cfg = LloydConfig { max_iters: 30, ..LloydConfig::default() };
+    let reference = lloyd(&data, &s.centers, &cfg);
+    for strategy in Strategy::ALL {
+        for threads in [1usize, 2, 4, 8] {
+            let c = LloydConfig { strategy, threads, ..cfg.clone() };
+            let r = accel::run_warm(&data, &s, &c);
+            assert_eq!(reference.assignments, r.assignments, "{strategy:?} t{threads}");
+            assert_eq!(reference.inertia_trace, r.inertia_trace, "{strategy:?} t{threads}");
+            assert_eq!(reference.centers, r.centers, "{strategy:?} t{threads}");
+        }
     }
 }
 
@@ -232,7 +297,7 @@ fn one_shared_pool_serves_all_seeders_and_strategies() {
         seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
             .center_indices
     };
-    for variant in [Variant::Standard, Variant::Tie, Variant::Full] {
+    for variant in [Variant::Standard, Variant::Tie, Variant::Full, Variant::Rejection] {
         let reference = {
             let mut p = ScriptedPicker::new(script.clone());
             seed_with(&data, &SeedConfig::new(k, variant), &mut p, &mut NoTrace)

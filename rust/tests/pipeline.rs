@@ -78,7 +78,7 @@ fn coordinator_sweep_to_report() {
         }
     }
     let results = Scheduler::new(2, 4).run(specs);
-    assert_eq!(results.len(), 6);
+    assert_eq!(results.len(), 8); // 2 reps × 4 variants
     let report = Report::aggregate(&results);
     let speedup_visits = report
         .ratio("S-NS", 16, Variant::Tie, Variant::Standard, |c| {
