@@ -1,0 +1,196 @@
+//! Gather layer: packs scattered post-filter survivors into contiguous
+//! row-major micro-batches for [`Kernel::sed_block`].
+//!
+//! Every filter in the repo (TIE, norm bounds, tree pruning, Lloyd bounds)
+//! leaves a *scattered* set of survivor rows; computing their distances
+//! one-at-a-time through `data.row(i)` defeats vectorization on the rows'
+//! strided origins. A [`Gather`] copies survivors into one reused
+//! contiguous buffer (the copy is `d` floats — amortized noise next to the
+//! `d`-wide multiply-add stream it enables) and hands full micro-batches to
+//! the kernel, threading each row's incumbent distance in as its early-exit
+//! cutoff.
+//!
+//! Determinism: rows come back to the caller's sink in push order, with
+//! either the exact kernel value or an `INFINITY` marker (cutoff exceeded —
+//! loses every strict comparison the real value would have lost). Batch
+//! *boundaries* (where flushes fall) affect neither values nor order, so
+//! scan results stay bit-identical no matter how the survivor stream is
+//! chunked — which is why batch/occupancy tallies are execution details,
+//! not semantic counters (see `Counters`' equality contract).
+
+use crate::core::simd::Kernel;
+
+/// Rows per micro-batch. 16 rows × d floats keeps the gather buffer inside
+/// L1 for every catalog dimensionality while giving the kernel enough
+/// contiguous work to stream.
+pub const BATCH_CAP: usize = 16;
+
+/// A reusable micro-batch gatherer for one fixed row width `d`.
+#[derive(Debug)]
+pub struct Gather {
+    d: usize,
+    rows: Vec<f32>,
+    slots: Vec<u32>,
+    cutoffs: Vec<f32>,
+    out: Vec<f32>,
+    /// Micro-batches flushed (execution detail — see module docs).
+    pub batches: u64,
+    /// Rows carried by those batches (occupancy numerator).
+    pub gathered_rows: u64,
+}
+
+impl Gather {
+    /// A gatherer for `d`-wide rows, pre-sized to [`BATCH_CAP`].
+    pub fn new(d: usize) -> Gather {
+        Gather {
+            d,
+            rows: Vec::with_capacity(BATCH_CAP * d),
+            slots: Vec::with_capacity(BATCH_CAP),
+            cutoffs: Vec::with_capacity(BATCH_CAP),
+            out: vec![0f32; BATCH_CAP],
+            batches: 0,
+            gathered_rows: 0,
+        }
+    }
+
+    /// Rows currently gathered and not yet flushed.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether the pending batch is empty.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Gathers one survivor row under a caller-defined tag, with its
+    /// incumbent distance as the cutoff. Returns `true` when the batch is
+    /// full and must be flushed before the next push.
+    #[inline]
+    pub fn push(&mut self, slot: u32, row: &[f32], cutoff: f32) -> bool {
+        debug_assert_eq!(row.len(), self.d);
+        debug_assert!(self.slots.len() < BATCH_CAP);
+        self.rows.extend_from_slice(row);
+        self.slots.push(slot);
+        self.cutoffs.push(cutoff);
+        self.slots.len() == BATCH_CAP
+    }
+
+    /// Runs the gathered batch against probe `x` through the kernel and
+    /// drains it: `sink(slot, dist)` fires once per row **in push order**,
+    /// where `dist` is the exact SED or `f32::INFINITY` when the row's
+    /// cutoff proved it out early. Returns the number of early exits (the
+    /// caller owns all counter bookkeeping so merge orders stay explicit).
+    pub fn flush<F: FnMut(u32, f32)>(&mut self, kernel: Kernel, x: &[f32], mut sink: F) -> u64 {
+        if self.slots.is_empty() {
+            return 0;
+        }
+        debug_assert_eq!(x.len(), self.d);
+        let m = self.slots.len();
+        let exits = kernel.sed_block(x, &self.rows, &self.cutoffs, &mut self.out[..m]);
+        self.batches += 1;
+        self.gathered_rows += m as u64;
+        for i in 0..m {
+            sink(self.slots[i], self.out[i]);
+        }
+        self.rows.clear();
+        self.slots.clear();
+        self.cutoffs.clear();
+        exits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::distance::sed;
+    use crate::core::rng::{Pcg64, Rng};
+    use crate::core::simd::KernelConfig;
+
+    fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_f32() * 10.0 - 5.0).collect()
+    }
+
+    /// Push-order delivery, exact values under infinite cutoffs, and
+    /// batch/occupancy tallies — for both the legacy-scalar and lane
+    /// kernels.
+    #[test]
+    fn flush_delivers_exact_values_in_push_order() {
+        let mut rng = Pcg64::seed_from(4);
+        let d = 40;
+        let x = rand_vec(&mut rng, d);
+        let rows: Vec<Vec<f32>> = (0..BATCH_CAP + 5).map(|_| rand_vec(&mut rng, d)).collect();
+        for cfg in [KernelConfig::Scalar, KernelConfig::Lanes] {
+            let kernel = cfg.resolve();
+            let mut g = Gather::new(d);
+            let mut seen: Vec<(u32, f32)> = Vec::new();
+            let mut exits = 0u64;
+            for (i, r) in rows.iter().enumerate() {
+                if g.push(i as u32, r, f32::INFINITY) {
+                    exits += g.flush(kernel, &x, |slot, dv| seen.push((slot, dv)));
+                }
+            }
+            exits += g.flush(kernel, &x, |slot, dv| seen.push((slot, dv)));
+            assert_eq!(exits, 0);
+            assert_eq!(seen.len(), rows.len());
+            for (i, (slot, dv)) in seen.iter().enumerate() {
+                assert_eq!(*slot, i as u32, "push order broken");
+                let want = kernel.sed(&x, &rows[i]);
+                assert_eq!(dv.to_bits(), want.to_bits(), "{cfg:?} row {i}");
+            }
+            assert_eq!(g.batches, 2);
+            assert_eq!(g.gathered_rows, rows.len() as u64);
+            assert!(g.is_empty());
+        }
+    }
+
+    /// The batched scan must be semantically identical to the per-row scan:
+    /// with per-row incumbent cutoffs, a min-update folded from flush
+    /// results equals the unbatched fold bit-for-bit.
+    #[test]
+    fn batched_min_update_matches_unbatched() {
+        let mut rng = Pcg64::seed_from(21);
+        let d = 128; // past the checkpoint cadence: exits will fire
+        let c = rand_vec(&mut rng, d);
+        let points: Vec<Vec<f32>> = (0..57).map(|_| rand_vec(&mut rng, d)).collect();
+        // Incumbents: half tight (likely exits), half loose.
+        let w0: Vec<f32> = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| if i % 2 == 0 { 1.0 } else { sed(p, &c) * 2.0 })
+            .collect();
+        let kernel = KernelConfig::Scalar.resolve();
+        // Unbatched reference: plain strict min-update.
+        let want: Vec<f32> =
+            points.iter().zip(&w0).map(|(p, &w)| w.min(sed(p, &c))).collect();
+        // Batched: cutoff = incumbent; INFINITY markers never win the min.
+        let mut got = w0.clone();
+        let mut g = Gather::new(d);
+        let mut exits = 0u64;
+        for (i, p) in points.iter().enumerate() {
+            if g.push(i as u32, p, w0[i]) {
+                exits += g.flush(kernel, &c, |slot, dv| {
+                    let s = slot as usize;
+                    got[s] = got[s].min(dv);
+                });
+            }
+        }
+        exits += g.flush(kernel, &c, |slot, dv| {
+            let s = slot as usize;
+            got[s] = got[s].min(dv);
+        });
+        assert_eq!(got, want);
+        assert!(exits > 0, "tight incumbents at d=128 must early-exit");
+    }
+
+    /// Flushing an empty gatherer is a no-op (no batch counted).
+    #[test]
+    fn empty_flush_is_free() {
+        let kernel = KernelConfig::Scalar.resolve();
+        let mut g = Gather::new(8);
+        let x = [0f32; 8];
+        let exits = g.flush(kernel, &x, |_, _| panic!("sink fired on empty batch"));
+        assert_eq!(exits, 0);
+        assert_eq!(g.batches, 0);
+    }
+}

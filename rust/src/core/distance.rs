@@ -11,17 +11,71 @@
 //!   `SED(x, y) = ‖x‖² + ‖y‖² − 2·x·y`, which reuses precomputed squared
 //!   norms and turns the per-point work into a dot product. The same
 //!   decomposition is what makes the L1 Pallas kernel MXU-friendly.
+//!
+//! These are the **legacy-scalar** kernels: their exact summation orders
+//! are pinned by every historical replay test, so they must never change
+//! bits. The vectorized lane-family backends live in
+//! [`crate::core::simd`] behind the same seam ([`crate::core::simd::Kernel`]
+//! dispatches here for `kernel=scalar`, the default).
+
+/// Length threshold of the dispatch seam shared by [`sed`], [`sed_dot`]
+/// and the scalar-kind cutoff kernel ([`crate::core::simd::sed_scalar_cutoff`]):
+/// at or below it the plain iterator form autovectorizes best (measured
+/// ~1.2–1.6× faster than the unrolled form at d ∈ [3, 128]); above it the
+/// 4-way unrolled version with independent accumulator chains wins (~1.2×
+/// at d = 784).
+pub const UNROLL_THRESHOLD: usize = 256;
+
+/// The shared skeleton of the 4-way unrolled kernels: four independent
+/// accumulator chains (chain `j` takes elements `4·i + j`), the fixed
+/// `(a0+a1) + (a2+a3)` reduction, then the `len % 4` tail folded
+/// sequentially. `sed_unrolled` and `dot` are both instances; the per-pair
+/// term is the only thing that differs, so it is the only thing the macro
+/// takes. Changing this skeleton changes historical bits — don't.
+macro_rules! chain4 {
+    ($x:ident, $y:ident, |$a:ident, $b:ident| $term:expr) => {{
+        debug_assert_eq!($x.len(), $y.len());
+        let n = $x.len();
+        let chunks = n / 4;
+        let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+        // Plain indexed chunked iteration; LLVM hoists the `b + 3 < n`
+        // bound check out of the loop body.
+        for i in 0..chunks {
+            let base = i * 4;
+            a0 += {
+                let ($a, $b) = ($x[base], $y[base]);
+                $term
+            };
+            a1 += {
+                let ($a, $b) = ($x[base + 1], $y[base + 1]);
+                $term
+            };
+            a2 += {
+                let ($a, $b) = ($x[base + 2], $y[base + 2]);
+                $term
+            };
+            a3 += {
+                let ($a, $b) = ($x[base + 3], $y[base + 3]);
+                $term
+            };
+        }
+        let mut acc = (a0 + a1) + (a2 + a3);
+        for i in chunks * 4..n {
+            let ($a, $b) = ($x[i], $y[i]);
+            acc += $term;
+        }
+        acc
+    }};
+}
 
 /// Squared Euclidean distance between two equal-length vectors.
 ///
-/// Length-dispatched (§Perf iteration 2): for `d ≤ 256` the plain
-/// iterator form autovectorizes best (measured ~1.2–1.6× faster than the
-/// unrolled form at d ∈ [3, 128]); for larger `d` the 4-way unrolled
-/// version with independent accumulator chains wins (~1.2× at d = 784).
+/// Length-dispatched (§Perf iteration 2) on [`UNROLL_THRESHOLD`]:
+/// [`sed_naive`] at or below it, [`sed_unrolled`] above.
 #[inline]
 pub fn sed(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
-    if x.len() <= 256 {
+    if x.len() <= UNROLL_THRESHOLD {
         return sed_naive(x, y);
     }
     sed_unrolled(x, y)
@@ -30,29 +84,10 @@ pub fn sed(x: &[f32], y: &[f32]) -> f32 {
 /// The 4-way unrolled SED used for large dimensionalities.
 #[inline]
 pub fn sed_unrolled(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-    // Plain indexed chunked iteration, four independent accumulator chains;
-    // LLVM hoists the `b + 3 < n` bound check out of the loop body.
-    for i in 0..chunks {
-        let b = i * 4;
-        let d0 = x[b] - y[b];
-        let d1 = x[b + 1] - y[b + 1];
-        let d2 = x[b + 2] - y[b + 2];
-        let d3 = x[b + 3] - y[b + 3];
-        a0 += d0 * d0;
-        a1 += d1 * d1;
-        a2 += d2 * d2;
-        a3 += d3 * d3;
-    }
-    let mut acc = (a0 + a1) + (a2 + a3);
-    for i in chunks * 4..n {
-        let d = x[i] - y[i];
-        acc += d * d;
-    }
-    acc
+    chain4!(x, y, |a, b| {
+        let d = a - b;
+        d * d
+    })
 }
 
 /// Euclidean distance (`sqrt` of [`sed`]). Only used where the paper needs a
@@ -63,29 +98,30 @@ pub fn ed(x: &[f32], y: &[f32]) -> f32 {
 }
 
 /// Dot product, 4-way unrolled (shared by [`sed_dot`] and PCA).
+///
+/// Deliberately **not** length-dispatched to an iterator arm the way
+/// [`sed`] is: [`sqnorm`] (and through it every stored norm, the metric
+/// tree's norm ranges, and the norm-filter decisions) is built on this
+/// accumulation order, so swapping the small-`d` arm would shift historical
+/// bits across the whole pipeline. The seam exists ([`dot_naive`] is the
+/// reference the tests diff against); the dispatch stays pinned to the
+/// 4-chain at every length.
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
-    for i in 0..chunks {
-        let b = i * 4;
-        a0 += x[b] * y[b];
-        a1 += x[b + 1] * y[b + 1];
-        a2 += x[b + 2] * y[b + 2];
-        a3 += x[b + 3] * y[b + 3];
-    }
-    let mut acc = (a0 + a1) + (a2 + a3);
-    for i in chunks * 4..n {
-        acc += x[i] * y[i];
-    }
-    acc
+    chain4!(x, y, |a, b| a * b)
+}
+
+/// Iterator-form dot product: the order-independent-tolerance reference
+/// for [`dot`], mirroring the [`sed_naive`]/[`sed_unrolled`] pairing.
+#[inline]
+pub fn dot_naive(x: &[f32], y: &[f32]) -> f32 {
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
 }
 
 /// Appendix-B SED: `‖x‖² + ‖y‖² − 2·x·y` with both squared norms
 /// precomputed. Clamped at zero (the decomposition can go slightly negative
-/// in f32 for near-identical points).
+/// in f32 for near-identical points). Rides the same dispatch seam as
+/// [`sed`] through [`dot`] (see there for why the dot arm is pinned).
 #[inline]
 pub fn sed_dot(x: &[f32], y: &[f32], x_sqnorm: f32, y_sqnorm: f32) -> f32 {
     (x_sqnorm + y_sqnorm - 2.0 * dot(x, y)).max(0.0)
@@ -121,6 +157,36 @@ mod tests {
             let y = rand_vec(&mut rng, n);
             let got = sed(&x, &y);
             let want = sed_naive(&x, &y);
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    /// The macro-deduped skeleton must keep the historical accumulation
+    /// order: on exactly-representable inputs (integers, sums < 2^24) every
+    /// summation order gives the same bits, so these pins hold for any
+    /// faithful skeleton — while the random-input checks above and below
+    /// catch a reordered one through tolerance drift.
+    #[test]
+    fn unrolled_kernels_keep_exact_pins() {
+        let x: Vec<f32> = (0..11).map(|v| v as f32).collect();
+        let z = vec![0.0f32; 11];
+        // Σ i² for i in 0..11 = 385.
+        assert_eq!(sed_unrolled(&x, &z).to_bits(), 385.0f32.to_bits());
+        assert_eq!(dot(&x, &x).to_bits(), 385.0f32.to_bits());
+        assert_eq!(sqnorm(&x).to_bits(), 385.0f32.to_bits());
+    }
+
+    #[test]
+    fn dot_matches_naive_reference() {
+        let mut rng = Pcg64::seed_from(14);
+        for n in [0, 1, 3, 4, 7, 8, 64, 300] {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let got = dot(&x, &y);
+            let want = dot_naive(&x, &y);
             assert!(
                 (got - want).abs() <= 1e-4 * want.abs().max(1.0),
                 "n={n}: {got} vs {want}"

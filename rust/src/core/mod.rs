@@ -3,10 +3,12 @@
 //! Everything in this module is dependency-free (the offline crate set has no
 //! `rand`/`ndarray`); the implementations are small, documented, and tested.
 
+pub mod batch;
 pub mod distance;
 pub mod matrix;
 pub mod norms;
 pub mod rng;
 pub mod sampling;
 pub mod shard;
+pub mod simd;
 pub mod tree;

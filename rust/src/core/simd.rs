@@ -1,0 +1,846 @@
+//! Runtime-dispatched vectorized distance kernels with a bit-exact scalar
+//! lane mirror.
+//!
+//! The determinism contract of this crate (scripted replays bit-identical
+//! everywhere) extends across machines only if a SIMD kernel and its
+//! non-SIMD fallback produce the **same f32 bits**. This module guarantees
+//! that by fixing the accumulation *semantics* first and deriving every
+//! backend from it:
+//!
+//! * 8 independent lane accumulators — lane `j` receives elements
+//!   `8·i + j`;
+//! * a fixed reduction tree
+//!   `((l0+l1) + (l2+l3)) + ((l4+l5) + (l6+l7))`;
+//! * the `len % 8` tail added sequentially *after* the lane reduction;
+//! * **no FMA** in the accumulation — `avx2` kernels use only
+//!   sub/mul/add intrinsics, which are IEEE-exact per lane, so AVX2, the
+//!   SSE2 two-half variant and the plain-Rust mirror ([`sed_lanes`]) are
+//!   bit-for-bit interchangeable. (Fusing the multiply-add would change
+//!   the rounding and break the mirror; Rust/LLVM never auto-contracts,
+//!   so compiling with `+fma` enabled stays safe.)
+//!
+//! Dispatch is runtime feature detection (`std::arch`), selected through
+//! [`KernelConfig`]: `scalar` is the legacy arithmetic of
+//! [`crate::core::distance`] (the historical pins), `lanes` is the mirror,
+//! `avx2` forces the vector path, `auto` picks the best detected backend.
+//! All lane-family backends are mutually bit-identical; `scalar` differs
+//! from them only in summation order (both are correctly-rounded sums of
+//! the same terms).
+//!
+//! Early exit ([`Kernel::sed_cutoff`], [`Kernel::sed_block`]) is sound for
+//! *strict* comparisons: an f32 sum of non-negative terms is monotone
+//! non-decreasing under rounding (`fl(s + t) ≥ s` for `t ≥ 0`, because
+//! rounding is monotone), so `partial > cutoff` proves `final > cutoff` —
+//! a skipped candidate can never have won a strict `<` comparison nor tied
+//! a lexicographic `(distance, index)` tie-break. Checkpoints fire every
+//! [`CHECK_BLOCKS`] lane blocks (32 elements) in every backend, so the
+//! early-exit *decisions* (not just the values) are backend-invariant.
+
+use crate::core::distance;
+
+/// Lane count of the accumulation semantics (one AVX2 register of f32s).
+pub const LANES: usize = 8;
+
+/// Cutoff checkpoint cadence, in lane blocks: every 4 blocks = every 32
+/// elements. (GSAD's d = 128 gets checkpoints at 32/64/96.)
+pub const CHECK_BLOCKS: usize = 4;
+
+/// User-facing kernel selection, carried by `SeedConfig`/`LloydConfig`/
+/// `Executor` and the CLI `--kernel` flag.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum KernelConfig {
+    /// Legacy scalar arithmetic of [`crate::core::distance`] — the default,
+    /// keeping every historical pin (weights, inertia traces, gated
+    /// counters) bit-identical to pre-kernel-seam builds.
+    #[default]
+    Scalar,
+    /// Best detected lane backend: AVX2 → SSE2 → [`sed_lanes`]. All three
+    /// produce bit-identical values, so `auto` is deterministic across
+    /// machines.
+    Auto,
+    /// The scalar lane mirror — the lane-family semantics in plain Rust,
+    /// forced (what non-x86 machines run under `auto`).
+    Lanes,
+    /// Force the AVX2 kernels. On hardware without AVX2 this falls back to
+    /// SSE2/lanes — same bits, only slower.
+    Avx2,
+}
+
+impl KernelConfig {
+    /// Every selectable configuration (CLI help, conformance sweeps).
+    pub const ALL: [KernelConfig; 4] =
+        [KernelConfig::Scalar, KernelConfig::Auto, KernelConfig::Lanes, KernelConfig::Avx2];
+
+    /// Short identifier used in reports and CLI flags.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelConfig::Scalar => "scalar",
+            KernelConfig::Auto => "auto",
+            KernelConfig::Lanes => "lanes",
+            KernelConfig::Avx2 => "avx2",
+        }
+    }
+
+    /// Parses a CLI name.
+    pub fn parse(s: &str) -> Option<KernelConfig> {
+        match s {
+            "scalar" => Some(KernelConfig::Scalar),
+            "auto" | "simd" => Some(KernelConfig::Auto),
+            "lanes" => Some(KernelConfig::Lanes),
+            "avx2" => Some(KernelConfig::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Resolves the configuration against the running machine.
+    pub fn resolve(&self) -> Kernel {
+        let backend = match self {
+            KernelConfig::Scalar => Backend::Scalar,
+            KernelConfig::Lanes => Backend::Lanes,
+            KernelConfig::Auto | KernelConfig::Avx2 => detect_lane_backend(),
+        };
+        Kernel { backend }
+    }
+}
+
+impl std::str::FromStr for KernelConfig {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        KernelConfig::parse(s)
+            .ok_or_else(|| format!("unknown kernel {s:?} (scalar|auto|lanes|avx2)"))
+    }
+}
+
+/// The concrete backend a [`KernelConfig`] resolved to on this machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Legacy [`crate::core::distance`] arithmetic.
+    Scalar,
+    /// Plain-Rust lane mirror.
+    Lanes,
+    /// SSE2 two-half lane kernels (baseline on every x86_64).
+    Sse2,
+    /// AVX2 full-width lane kernels.
+    Avx2,
+}
+
+impl Backend {
+    /// Short identifier for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Lanes => "lanes",
+            Backend::Sse2 => "sse2",
+            Backend::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_lane_backend() -> Backend {
+    if std::is_x86_feature_detected!("avx2") {
+        Backend::Avx2
+    } else {
+        // SSE2 is part of the x86_64 baseline: always available.
+        Backend::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_lane_backend() -> Backend {
+    Backend::Lanes
+}
+
+/// A resolved distance kernel. `Copy` so scan loops can carry it by value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernel {
+    /// The backend serving this kernel's calls.
+    pub backend: Backend,
+}
+
+impl Default for Kernel {
+    fn default() -> Self {
+        KernelConfig::default().resolve()
+    }
+}
+
+impl Kernel {
+    /// Squared Euclidean distance under this kernel's arithmetic.
+    #[inline]
+    pub fn sed(&self, x: &[f32], y: &[f32]) -> f32 {
+        match self.backend {
+            Backend::Scalar => distance::sed(x, y),
+            Backend::Lanes => sed_lanes(x, y),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 => unsafe { x86::sed_sse2(x, y) },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { x86::sed_avx2(x, y) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Backend::Sse2 | Backend::Avx2 => sed_lanes(x, y),
+        }
+    }
+
+    /// Dot product under this kernel's arithmetic (serves the Appendix-B
+    /// `sed_dot` decomposition).
+    #[inline]
+    pub fn dot(&self, x: &[f32], y: &[f32]) -> f32 {
+        match self.backend {
+            Backend::Scalar => distance::dot(x, y),
+            Backend::Lanes => dot_lanes(x, y),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 => unsafe { x86::dot_sse2(x, y) },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { x86::dot_avx2(x, y) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Backend::Sse2 | Backend::Avx2 => dot_lanes(x, y),
+        }
+    }
+
+    /// Appendix-B SED through this kernel's dot product.
+    #[inline]
+    pub fn sed_dot(&self, x: &[f32], y: &[f32], x_sqnorm: f32, y_sqnorm: f32) -> f32 {
+        (x_sqnorm + y_sqnorm - 2.0 * self.dot(x, y)).max(0.0)
+    }
+
+    /// SED with a best-so-far cutoff: `Some(d)` is the exact full value
+    /// (identical bits to [`Kernel::sed`]); `None` proves `d > cutoff`
+    /// without finishing the sum. Callers must treat `None` exactly as "lost
+    /// every strict `<`/`==` comparison against `cutoff`" — which is all the
+    /// min-update and argmin scans ever ask.
+    #[inline]
+    pub fn sed_cutoff(&self, x: &[f32], y: &[f32], cutoff: f32) -> Option<f32> {
+        match self.backend {
+            Backend::Scalar => sed_scalar_cutoff(x, y, cutoff),
+            Backend::Lanes => sed_lanes_cutoff(x, y, cutoff),
+            #[cfg(target_arch = "x86_64")]
+            Backend::Sse2 => unsafe { x86::sed_sse2_cutoff(x, y, cutoff) },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => unsafe { x86::sed_avx2_cutoff(x, y, cutoff) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Backend::Sse2 | Backend::Avx2 => sed_lanes_cutoff(x, y, cutoff),
+        }
+    }
+
+    /// One probe vector `x` against a contiguous row-major block of
+    /// `out.len()` candidate rows (each `x.len()` wide), with a per-row
+    /// incumbent cutoff. `out[i]` receives the exact SED or
+    /// `f32::INFINITY` when the checkpointed partial proved it exceeds
+    /// `cutoffs[i]` (`INFINITY` loses every strict comparison a real value
+    /// would have lost). Returns the number of early exits.
+    pub fn sed_block(&self, x: &[f32], rows: &[f32], cutoffs: &[f32], out: &mut [f32]) -> u64 {
+        let d = x.len();
+        debug_assert_eq!(rows.len(), out.len() * d);
+        debug_assert_eq!(cutoffs.len(), out.len());
+        let mut exits = 0u64;
+        for (i, o) in out.iter_mut().enumerate() {
+            match self.sed_cutoff(x, &rows[i * d..(i + 1) * d], cutoffs[i]) {
+                Some(v) => *o = v,
+                None => {
+                    *o = f32::INFINITY;
+                    exits += 1;
+                }
+            }
+        }
+        exits
+    }
+}
+
+/// Fixed reduction tree shared by every lane-family backend.
+#[inline]
+fn reduce8(a: &[f32; LANES]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// Scalar mirror of the 8-lane SED accumulation: identical lane
+/// assignment, identical reduction tree, identical sequential tail — the
+/// reference semantics every SIMD backend must reproduce bit-for-bit.
+#[inline]
+pub fn sed_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let blocks = n / LANES;
+    let mut acc = [0f32; LANES];
+    for b in 0..blocks {
+        let o = b * LANES;
+        for j in 0..LANES {
+            let d = x[o + j] - y[o + j];
+            acc[j] += d * d;
+        }
+    }
+    let mut s = reduce8(&acc);
+    for i in blocks * LANES..n {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Scalar mirror of the 8-lane dot-product accumulation.
+#[inline]
+pub fn dot_lanes(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let blocks = n / LANES;
+    let mut acc = [0f32; LANES];
+    for b in 0..blocks {
+        let o = b * LANES;
+        for j in 0..LANES {
+            acc[j] += x[o + j] * y[o + j];
+        }
+    }
+    let mut s = reduce8(&acc);
+    for i in blocks * LANES..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Whether a checkpoint fires after lane block `b` (1-indexed) of `blocks`.
+/// The rule is shared verbatim by every backend so early-exit *decisions*
+/// are backend-invariant; the final block never checkpoints (the full value
+/// is about to be produced anyway).
+#[inline]
+fn checkpoint_after(b: usize, blocks: usize) -> bool {
+    b % CHECK_BLOCKS == 0 && b != blocks
+}
+
+/// Lane-mirror SED with checkpointed early exit.
+#[inline]
+pub fn sed_lanes_cutoff(x: &[f32], y: &[f32], cutoff: f32) -> Option<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let blocks = n / LANES;
+    let mut acc = [0f32; LANES];
+    for b in 0..blocks {
+        let o = b * LANES;
+        for j in 0..LANES {
+            let d = x[o + j] - y[o + j];
+            acc[j] += d * d;
+        }
+        if checkpoint_after(b + 1, blocks) && reduce8(&acc) > cutoff {
+            return None;
+        }
+    }
+    let mut s = reduce8(&acc);
+    for i in blocks * LANES..n {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    Some(s)
+}
+
+/// Legacy-scalar SED with checkpointed early exit: exactly
+/// [`crate::core::distance::sed`]'s arithmetic (length-dispatched naive /
+/// 4-chain-unrolled), pausing every 32 elements to test the partial sum.
+/// The partials are prefixes (naive) or monotone under-reductions
+/// (unrolled) of the final value, so `partial > cutoff` is conclusive.
+#[inline]
+pub fn sed_scalar_cutoff(x: &[f32], y: &[f32], cutoff: f32) -> Option<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    if n <= distance::UNROLL_THRESHOLD {
+        // Mirror of the sequential iterator sum, checkpointed at the same
+        // 32-element cadence as the lane backends.
+        let mut s = 0f32;
+        let mut i = 0;
+        while i < n {
+            let stop = (i + CHECK_BLOCKS * LANES).min(n);
+            while i < stop {
+                let d = x[i] - y[i];
+                s += d * d;
+                i += 1;
+            }
+            if i < n && s > cutoff {
+                return None;
+            }
+        }
+        return Some(s);
+    }
+    // Mirror of `sed_unrolled`: four independent accumulator chains (chain
+    // j takes elements 4·i + j), `(a0+a1)+(a2+a3)` reduction, sequential
+    // tail. Checkpoint every 8 chunks = 32 elements.
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let b = i * 4;
+        let d0 = x[b] - y[b];
+        let d1 = x[b + 1] - y[b + 1];
+        let d2 = x[b + 2] - y[b + 2];
+        let d3 = x[b + 3] - y[b + 3];
+        a0 += d0 * d0;
+        a1 += d1 * d1;
+        a2 += d2 * d2;
+        a3 += d3 * d3;
+        if (i + 1) % (CHECK_BLOCKS * 2) == 0
+            && i + 1 != chunks
+            && (a0 + a1) + (a2 + a3) > cutoff
+        {
+            return None;
+        }
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in chunks * 4..n {
+        let d = x[i] - y[i];
+        acc += d * d;
+    }
+    Some(acc)
+}
+
+/// x86_64 `std::arch` kernels. Every function reproduces the lane-mirror
+/// semantics exactly: same lane assignment, same reduction tree, same tail
+/// order, sub/mul/add only (no FMA — see the module docs). This module is
+/// the only place in the crate allowed to contain `unsafe` besides the
+/// pool's lifetime erasure (`runtime/pool.rs`); CI greps for violations.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{checkpoint_after, LANES};
+    use std::arch::x86_64::*;
+
+    /// `((v0+v1) + (v2+v3))` with the exact tree of `reduce8`'s low half.
+    /// (`_mm_shuffle_ps`/`_mm_movehl_ps` are SSE — no SSE3 `movehdup`, so
+    /// the SSE2 floor holds.)
+    #[inline]
+    unsafe fn hsum4(v: __m128) -> f32 {
+        unsafe {
+            // (v1, v0, v3, v2)
+            let shuf = _mm_shuffle_ps(v, v, 0b10_11_00_01);
+            // (v0+v1, v0+v1, v2+v3, v2+v3)
+            let sums = _mm_add_ps(v, shuf);
+            // lane 0 = v2+v3
+            let hi = _mm_movehl_ps(sums, sums);
+            _mm_cvtss_f32(_mm_add_ss(sums, hi))
+        }
+    }
+
+    /// `reduce8` over two 4-lane halves: `hsum4(lo) + hsum4(hi)`.
+    #[inline]
+    unsafe fn reduce_halves(lo: __m128, hi: __m128) -> f32 {
+        unsafe { hsum4(lo) + hsum4(hi) }
+    }
+
+    /// SSE2 8-lane SED: two 4-lane accumulators covering lanes 0–3 / 4–7.
+    /// SSE2 is baseline on x86_64, so no feature detection is needed.
+    ///
+    /// # Safety
+    /// `x.len() == y.len()`; unaligned loads are used throughout.
+    pub unsafe fn sed_sse2(x: &[f32], y: &[f32]) -> f32 {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let blocks = n / LANES;
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut lo = _mm_setzero_ps();
+            let mut hi = _mm_setzero_ps();
+            for b in 0..blocks {
+                let o = b * LANES;
+                let d0 = _mm_sub_ps(_mm_loadu_ps(xp.add(o)), _mm_loadu_ps(yp.add(o)));
+                let d1 = _mm_sub_ps(_mm_loadu_ps(xp.add(o + 4)), _mm_loadu_ps(yp.add(o + 4)));
+                lo = _mm_add_ps(lo, _mm_mul_ps(d0, d0));
+                hi = _mm_add_ps(hi, _mm_mul_ps(d1, d1));
+            }
+            let mut s = reduce_halves(lo, hi);
+            for i in blocks * LANES..n {
+                let d = *xp.add(i) - *yp.add(i);
+                s += d * d;
+            }
+            s
+        }
+    }
+
+    /// SSE2 8-lane SED with checkpointed early exit (same decision rule as
+    /// the lane mirror).
+    ///
+    /// # Safety
+    /// `x.len() == y.len()`.
+    pub unsafe fn sed_sse2_cutoff(x: &[f32], y: &[f32], cutoff: f32) -> Option<f32> {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let blocks = n / LANES;
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut lo = _mm_setzero_ps();
+            let mut hi = _mm_setzero_ps();
+            for b in 0..blocks {
+                let o = b * LANES;
+                let d0 = _mm_sub_ps(_mm_loadu_ps(xp.add(o)), _mm_loadu_ps(yp.add(o)));
+                let d1 = _mm_sub_ps(_mm_loadu_ps(xp.add(o + 4)), _mm_loadu_ps(yp.add(o + 4)));
+                lo = _mm_add_ps(lo, _mm_mul_ps(d0, d0));
+                hi = _mm_add_ps(hi, _mm_mul_ps(d1, d1));
+                if checkpoint_after(b + 1, blocks) && reduce_halves(lo, hi) > cutoff {
+                    return None;
+                }
+            }
+            let mut s = reduce_halves(lo, hi);
+            for i in blocks * LANES..n {
+                let d = *xp.add(i) - *yp.add(i);
+                s += d * d;
+            }
+            Some(s)
+        }
+    }
+
+    /// SSE2 8-lane dot product.
+    ///
+    /// # Safety
+    /// `x.len() == y.len()`.
+    pub unsafe fn dot_sse2(x: &[f32], y: &[f32]) -> f32 {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let blocks = n / LANES;
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut lo = _mm_setzero_ps();
+            let mut hi = _mm_setzero_ps();
+            for b in 0..blocks {
+                let o = b * LANES;
+                lo = _mm_add_ps(lo, _mm_mul_ps(_mm_loadu_ps(xp.add(o)), _mm_loadu_ps(yp.add(o))));
+                hi = _mm_add_ps(
+                    hi,
+                    _mm_mul_ps(_mm_loadu_ps(xp.add(o + 4)), _mm_loadu_ps(yp.add(o + 4))),
+                );
+            }
+            let mut s = reduce_halves(lo, hi);
+            for i in blocks * LANES..n {
+                s += *xp.add(i) * *yp.add(i);
+            }
+            s
+        }
+    }
+
+    /// `reduce8` of one 256-bit register: hsum of each 128-bit half, then
+    /// one add — exactly `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce256(v: __m256) -> f32 {
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps(v, 1);
+            hsum4(lo) + hsum4(hi)
+        }
+    }
+
+    /// AVX2 8-lane SED. Sub/mul/add only — no FMA (see the module docs).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sed_avx2(x: &[f32], y: &[f32]) -> f32 {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let blocks = n / LANES;
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            for b in 0..blocks {
+                let o = b * LANES;
+                let d = _mm256_sub_ps(_mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(yp.add(o)));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            }
+            let mut s = reduce256(acc);
+            for i in blocks * LANES..n {
+                let d = *xp.add(i) - *yp.add(i);
+                s += d * d;
+            }
+            s
+        }
+    }
+
+    /// AVX2 8-lane SED with checkpointed early exit.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sed_avx2_cutoff(x: &[f32], y: &[f32], cutoff: f32) -> Option<f32> {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let blocks = n / LANES;
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            for b in 0..blocks {
+                let o = b * LANES;
+                let d = _mm256_sub_ps(_mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(yp.add(o)));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+                if checkpoint_after(b + 1, blocks) && reduce256(acc) > cutoff {
+                    return None;
+                }
+            }
+            let mut s = reduce256(acc);
+            for i in blocks * LANES..n {
+                let d = *xp.add(i) - *yp.add(i);
+                s += d * d;
+            }
+            Some(s)
+        }
+    }
+
+    /// AVX2 8-lane dot product.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+        unsafe {
+            debug_assert_eq!(x.len(), y.len());
+            let n = x.len();
+            let blocks = n / LANES;
+            let (xp, yp) = (x.as_ptr(), y.as_ptr());
+            let mut acc = _mm256_setzero_ps();
+            for b in 0..blocks {
+                let o = b * LANES;
+                acc = _mm256_add_ps(
+                    acc,
+                    _mm256_mul_ps(_mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(yp.add(o))),
+                );
+            }
+            let mut s = reduce256(acc);
+            for i in blocks * LANES..n {
+                s += *xp.add(i) * *yp.add(i);
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::{Pcg64, Rng};
+
+    /// The conformance length matrix: empty, sub-lane, exact-lane,
+    /// lane+1, around the legacy naive/unrolled dispatch threshold, MNIST
+    /// width, and a full power of two.
+    const LENGTHS: [usize; 10] = [0, 1, 7, 8, 9, 255, 256, 257, 784, 1024];
+
+    fn rand_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_f32() * 10.0 - 5.0).collect()
+    }
+
+    /// Every lane-family backend this machine can run, resolved.
+    fn lane_backends() -> Vec<Kernel> {
+        let mut ks = vec![Kernel { backend: Backend::Lanes }];
+        #[cfg(target_arch = "x86_64")]
+        {
+            ks.push(Kernel { backend: Backend::Sse2 });
+            if std::is_x86_feature_detected!("avx2") {
+                ks.push(Kernel { backend: Backend::Avx2 });
+            }
+        }
+        ks
+    }
+
+    /// Captured differential fixtures in the franken_numpy style, chosen so
+    /// every term and partial sum is exactly representable: the expected
+    /// bits hold in ANY summation order, so all four backends (legacy
+    /// scalar included) must reproduce them exactly.
+    #[test]
+    fn exact_fixtures_hold_on_every_backend() {
+        // (x, y, expected SED, expected dot)
+        let fixtures: Vec<(Vec<f32>, Vec<f32>, f32, f32)> = vec![
+            (vec![0.0, 3.0], vec![4.0, 0.0], 25.0, 0.0),
+            (vec![1.0; 9], vec![0.0; 9], 9.0, 0.0),
+            ((1..=16).map(|v| v as f32).collect(), vec![0.0; 16], 1496.0, 0.0),
+            (vec![2.5; 32], vec![0.5; 32], 128.0, 40.0),
+            (vec![-0.0, 0.0, -0.0], vec![0.0, -0.0, -0.0], 0.0, 0.0),
+        ];
+        let mut kernels = lane_backends();
+        kernels.push(Kernel { backend: Backend::Scalar });
+        for (x, y, want_sed, want_dot) in &fixtures {
+            for k in &kernels {
+                assert_eq!(k.sed(x, y).to_bits(), want_sed.to_bits(), "{:?}", k.backend);
+                assert_eq!(k.dot(x, y).to_bits(), want_dot.to_bits(), "{:?}", k.backend);
+            }
+        }
+    }
+
+    /// The tentpole invariant: every SIMD backend is bit-identical to the
+    /// scalar lane mirror on random data across the length matrix,
+    /// including misaligned sub-slices.
+    #[test]
+    fn lane_backends_bit_identical_across_lengths() {
+        let mut rng = Pcg64::seed_from(91);
+        for &n in &LENGTHS {
+            // +3 so the misaligned sub-slices below stay in bounds.
+            let xs = rand_vec(&mut rng, n + 3);
+            let ys = rand_vec(&mut rng, n + 3);
+            for off in 0..3 {
+                let x = &xs[off..off + n];
+                let y = &ys[off..off + n];
+                let want_sed = sed_lanes(x, y);
+                let want_dot = dot_lanes(x, y);
+                for k in lane_backends() {
+                    assert_eq!(
+                        k.sed(x, y).to_bits(),
+                        want_sed.to_bits(),
+                        "sed {:?} n={n} off={off}",
+                        k.backend
+                    );
+                    assert_eq!(
+                        k.dot(x, y).to_bits(),
+                        want_dot.to_bits(),
+                        "dot {:?} n={n} off={off}",
+                        k.backend
+                    );
+                }
+            }
+        }
+    }
+
+    /// Adversarial values: signed zeros, subnormals, and large-magnitude
+    /// cancellation must not break cross-backend bit-identity.
+    #[test]
+    fn adversarial_values_stay_bit_identical() {
+        let tiny = f32::MIN_POSITIVE; // smallest normal
+        let sub = f32::from_bits(1); // smallest subnormal
+        let mut x = vec![0.0f32, -0.0, sub, -sub, tiny, -tiny, 1.0e19, -1.0e19];
+        let mut y = vec![-0.0f32, 0.0, -sub, sub, -tiny, tiny, -1.0e19, 1.0e19];
+        // Pad past several checkpoint boundaries with cancellation-heavy
+        // pairs (1e8 differs from 1e8+4 by an ulp-scale amount).
+        for i in 0..60 {
+            x.push(1.0e8 + i as f32);
+            y.push(1.0e8);
+        }
+        for off in 0..2 {
+            let xs = &x[off..];
+            let ys = &y[off..];
+            let want = sed_lanes(xs, ys);
+            for k in lane_backends() {
+                assert_eq!(k.sed(xs, ys).to_bits(), want.to_bits(), "{:?} off={off}", k.backend);
+            }
+            // The overflow-to-infinity path must also agree.
+            assert!(want.is_infinite() || want >= 0.0);
+        }
+    }
+
+    /// `sed_cutoff` contract, on every backend including legacy scalar:
+    /// `Some(v)` is bit-identical to the full kernel; `None` implies the
+    /// true value exceeds the cutoff.
+    #[test]
+    fn cutoff_is_exact_or_conclusive() {
+        let mut rng = Pcg64::seed_from(17);
+        let mut kernels = lane_backends();
+        kernels.push(Kernel { backend: Backend::Scalar });
+        let mut exited = 0u32;
+        for &n in &LENGTHS {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            for k in &kernels {
+                let full = k.sed(&x, &y);
+                for cutoff in [0.0f32, full * 0.25, full * 0.999, full, f32::INFINITY] {
+                    match k.sed_cutoff(&x, &y, cutoff) {
+                        Some(v) => assert_eq!(v.to_bits(), full.to_bits(), "{:?}", k.backend),
+                        None => {
+                            exited += 1;
+                            assert!(full > cutoff, "{:?}: early exit lied", k.backend);
+                        }
+                    }
+                }
+            }
+        }
+        assert!(exited > 0, "the cutoff never fired across the whole matrix");
+    }
+
+    /// Early-exit *decisions* (not just values) are identical across the
+    /// lane family — the property that keeps `kernel_early_exits` counters
+    /// machine-independent.
+    #[test]
+    fn exit_decisions_are_backend_invariant() {
+        let mut rng = Pcg64::seed_from(33);
+        for &n in &[64usize, 128, 784] {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let full = sed_lanes(&x, &y);
+            for cutoff in [full * 0.1, full * 0.5, full * 0.9, full * 1.1] {
+                let want = sed_lanes_cutoff(&x, &y, cutoff).is_none();
+                for k in lane_backends() {
+                    assert_eq!(
+                        k.sed_cutoff(&x, &y, cutoff).is_none(),
+                        want,
+                        "{:?} n={n} cutoff={cutoff}",
+                        k.backend
+                    );
+                }
+            }
+        }
+    }
+
+    /// The scalar-kind cutoff mirrors `distance::sed` exactly on both sides
+    /// of the naive/unrolled dispatch threshold.
+    #[test]
+    fn scalar_cutoff_matches_legacy_sed() {
+        let mut rng = Pcg64::seed_from(55);
+        for &n in &LENGTHS {
+            let x = rand_vec(&mut rng, n);
+            let y = rand_vec(&mut rng, n);
+            let want = distance::sed(&x, &y);
+            match sed_scalar_cutoff(&x, &y, f32::INFINITY) {
+                Some(v) => assert_eq!(v.to_bits(), want.to_bits(), "n={n}"),
+                None => panic!("n={n}: exited under an infinite cutoff"),
+            }
+            if let Some(v) = sed_scalar_cutoff(&x, &y, want) {
+                assert_eq!(v.to_bits(), want.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    /// `sed_block` gathers per-row cutoffs: exact values where computed,
+    /// `INFINITY` markers (counted) where the cutoff proved them out.
+    #[test]
+    fn sed_block_marks_and_counts_exits() {
+        let mut rng = Pcg64::seed_from(70);
+        let d = 128;
+        let x = rand_vec(&mut rng, d);
+        let m = 9;
+        let mut rows = Vec::with_capacity(m * d);
+        for _ in 0..m {
+            rows.extend(rand_vec(&mut rng, d));
+        }
+        let mut kernels = lane_backends();
+        kernels.push(Kernel { backend: Backend::Scalar });
+        for k in &kernels {
+            let fulls: Vec<f32> =
+                (0..m).map(|i| k.sed(&x, &rows[i * d..(i + 1) * d])).collect();
+            // Tight cutoffs for even rows, loose for odd ones.
+            let cutoffs: Vec<f32> = fulls
+                .iter()
+                .enumerate()
+                .map(|(i, &f)| if i % 2 == 0 { f * 1e-3 } else { f32::INFINITY })
+                .collect();
+            let mut out = vec![0f32; m];
+            let exits = k.sed_block(&x, &rows, &cutoffs, &mut out);
+            let mut want_exits = 0u64;
+            for i in 0..m {
+                if out[i].is_infinite() {
+                    want_exits += 1;
+                    assert!(fulls[i] > cutoffs[i], "{:?} row {i}", k.backend);
+                } else {
+                    assert_eq!(out[i].to_bits(), fulls[i].to_bits(), "{:?} row {i}", k.backend);
+                }
+            }
+            assert_eq!(exits, want_exits, "{:?}", k.backend);
+            assert!(exits > 0, "{:?}: tight cutoffs never fired at d=128", k.backend);
+        }
+    }
+
+    /// Config plumbing: names round-trip, `auto`/`avx2` resolve to a lane
+    /// backend, `scalar` stays the default.
+    #[test]
+    fn config_roundtrip_and_resolution() {
+        for c in KernelConfig::ALL {
+            assert_eq!(KernelConfig::parse(c.name()), Some(c));
+        }
+        assert_eq!(KernelConfig::parse("nope"), None);
+        assert_eq!(KernelConfig::default(), KernelConfig::Scalar);
+        assert_eq!(KernelConfig::Scalar.resolve().backend, Backend::Scalar);
+        assert_eq!(KernelConfig::Lanes.resolve().backend, Backend::Lanes);
+        for c in [KernelConfig::Auto, KernelConfig::Avx2] {
+            let b = c.resolve().backend;
+            assert!(b != Backend::Scalar, "{c:?} resolved to the legacy scalar kernel");
+        }
+        // Whatever auto resolves to must agree bitwise with the mirror.
+        let k = KernelConfig::Auto.resolve();
+        let x: Vec<f32> = (0..100).map(|i| i as f32 * 0.37 - 18.0).collect();
+        let y: Vec<f32> = (0..100).map(|i| (i as f32).sin()).collect();
+        assert_eq!(k.sed(&x, &y).to_bits(), sed_lanes(&x, &y).to_bits());
+    }
+}

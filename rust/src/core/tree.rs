@@ -293,14 +293,18 @@ fn refresh_node(nodes: &mut [Node], perm: &[u32], idx: usize, w: &[f32], base: u
 }
 
 /// The per-dataset forest: one [`SegTree`] per fixed contiguous segment,
-/// plus the cumulative root-mass table the draw's segment selection binary-
-/// searches. Rebuild the table ([`Forest::rebuild_cum`]) after any weight
-/// refresh or update scan.
+/// plus cumulative root-mass and root-weight tables — the draw's segment
+/// selection binary-searches the former, [`Forest::total_weight`] reads the
+/// latter's last entry in O(1). Rebuild the tables ([`Forest::rebuild_cum`])
+/// after any weight refresh, or re-fold only the dirty suffix
+/// ([`Forest::refresh_cum_from`]) after an update scan that left a clean
+/// segment prefix.
 #[derive(Clone, Debug)]
 pub struct Forest {
     /// Segment trees, in segment (= point) order.
     pub segs: Vec<SegTree>,
     cum: Vec<f64>,
+    wsum_cum: Vec<f64>,
 }
 
 impl Forest {
@@ -311,19 +315,35 @@ impl Forest {
 
     /// Assembles a forest from per-segment trees (in segment order).
     pub fn new(segs: Vec<SegTree>) -> Forest {
-        let mut f = Forest { segs, cum: Vec::new() };
+        let mut f = Forest { segs, cum: Vec::new(), wsum_cum: Vec::new() };
         f.rebuild_cum();
         f
     }
 
-    /// Recomputes the cumulative root-mass table, folding in segment order
-    /// (the same f64 sequence at any thread count).
+    /// Recomputes the cumulative root-mass and root-weight tables, folding
+    /// in segment order (the same f64 sequence at any thread count).
     pub fn rebuild_cum(&mut self) {
-        self.cum.clear();
-        let mut acc = 0f64;
-        for seg in &self.segs {
-            acc += seg.nodes[seg.root()].mass;
+        self.refresh_cum_from(0);
+    }
+
+    /// Re-folds the cumulative tables from segment `first` onward, keeping
+    /// the untouched prefix. The suffix fold visits the same values in the
+    /// same order as a full rebuild, so the resulting tables are
+    /// bit-identical — an update scan whose dirty set starts at segment
+    /// `first` pays `O(segs − first)` instead of `O(segs)`. Any `first`
+    /// past the end (no segment dirty) is a no-op.
+    pub fn refresh_cum_from(&mut self, first: usize) {
+        let first = first.min(self.cum.len()).min(self.wsum_cum.len());
+        self.cum.truncate(first);
+        self.wsum_cum.truncate(first);
+        let mut acc = self.cum.last().copied().unwrap_or(0.0);
+        let mut wacc = self.wsum_cum.last().copied().unwrap_or(0.0);
+        for seg in &self.segs[first..] {
+            let root = &seg.nodes[seg.root()];
+            acc += root.mass;
+            wacc += root.wsum;
             self.cum.push(acc);
+            self.wsum_cum.push(wacc);
         }
     }
 
@@ -332,9 +352,11 @@ impl Forest {
         self.cum.last().copied().unwrap_or(0.0)
     }
 
-    /// Exact total weight `Σ w_i`, folded in segment order.
+    /// Exact total weight `Σ w_i`, folded in segment order — O(1): the last
+    /// entry of the cumulative root-weight table (the same left-to-right
+    /// f64 fold the per-root sum would produce).
     pub fn total_weight(&self) -> f64 {
-        self.segs.iter().map(|s| s.nodes[s.root()].wsum).sum()
+        self.wsum_cum.last().copied().unwrap_or(0.0)
     }
 
     /// Total node count across all segments.
@@ -543,6 +565,43 @@ mod tests {
         let direct: f64 = weights.iter().map(|&w| w as f64).sum();
         assert!((forest.total_weight() - direct).abs() < 1e-6 * direct);
         assert!(forest.total_mass() >= forest.total_weight());
+    }
+
+    /// The incremental suffix re-fold is bit-identical to a full rebuild:
+    /// dirty one middle segment's weights, re-fold from that segment only,
+    /// and compare every cumulative table entry (and the O(1) totals)
+    /// against a from-scratch rebuild.
+    #[test]
+    fn partial_cum_refresh_matches_full_rebuild() {
+        let data = random_data(13_000, 3, 31); // 4 segments
+        let norms = compute_norms(&data);
+        let (mut forest, _) = build_forest(&data, &norms);
+        assert_eq!(forest.segs.len(), 4);
+        let mut rng = Pcg64::seed_from(6);
+        let mut weights: Vec<f32> = (0..13_000).map(|_| rng.uniform_f32() * 9.0).collect();
+        for seg in forest.segs.iter_mut() {
+            seg.refresh_weights(&weights, 0);
+        }
+        forest.rebuild_cum();
+        // Shrink weights inside segment 2 only, refresh that tree, and
+        // re-fold the tables from the dirty segment onward.
+        let dirty = 2;
+        let start = forest.segs[dirty].start;
+        for w in weights.iter_mut().skip(start).take(100) {
+            *w *= 0.25;
+        }
+        forest.segs[dirty].refresh_weights(&weights, 0);
+        forest.refresh_cum_from(dirty);
+        let mut full = forest.clone();
+        full.rebuild_cum();
+        assert_eq!(forest.cum, full.cum);
+        assert_eq!(forest.wsum_cum, full.wsum_cum);
+        assert_eq!(forest.total_weight().to_bits(), full.total_weight().to_bits());
+        assert_eq!(forest.total_mass().to_bits(), full.total_mass().to_bits());
+        forest.check_weight_stats(&weights);
+        // Past-the-end first (clean scan) is a no-op.
+        forest.refresh_cum_from(forest.segs.len());
+        assert_eq!(forest.cum, full.cum);
     }
 
     /// The build is a function of the data alone: identical trees no matter

@@ -24,7 +24,6 @@
 //! skipped center, both ≥ u by construction).
 
 use super::{IterCtx, ShardView};
-use crate::core::distance::sed;
 use crate::metrics::lloyd::LloydStats;
 
 /// Owner id for lower-bound contributions that no center owns (the
@@ -71,8 +70,9 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
         if !v.tight[s] && v.ub[s].is_finite() {
             // Tighten: one exact distance to the incumbent (required for the
             // inertia trace regardless), then re-test the bound.
-            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            let dv = ctx.kernel.sed(ctx.data.row(i), ctx.centers.row(a));
             st.distances += 1;
+            st.kernel_calls += 1;
             v.dist[s] = dv;
             v.ub[s] = (dv as f64).sqrt();
             v.tight[s] = true;
@@ -127,8 +127,9 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
                 push(dn.abs() as f64, j, &mut e1, &mut e1_j, &mut e2);
                 continue;
             }
-            let dv = sed(row, ctx.centers.row(j));
+            let dv = ctx.kernel.sed(row, ctx.centers.row(j));
             st.distances += 1;
+            st.kernel_calls += 1;
             push((dv as f64).sqrt(), j, &mut e1, &mut e1_j, &mut e2);
             // Norm order, not index order: lexicographic (distance, index)
             // reproduces the naive reference's lowest-index-wins argmin.

@@ -19,7 +19,6 @@
 //! incumbent is the reference argmin.
 
 use super::{IterCtx, ShardView};
-use crate::core::distance::sed;
 use crate::metrics::lloyd::LloydStats;
 
 pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
@@ -46,8 +45,9 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
         // Tighten the incumbent distance (needed for the inertia trace even
         // when every candidate is pruned).
         if !v.tight[s] {
-            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            let dv = ctx.kernel.sed(ctx.data.row(i), ctx.centers.row(a));
             st.distances += 1;
+            st.kernel_calls += 1;
             v.dist[s] = dv;
             v.ub[s] = (dv as f64).sqrt();
             v.tight[s] = true;
@@ -77,8 +77,9 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
                 }
                 continue;
             }
-            let dv = sed(row, ctx.centers.row(j));
+            let dv = ctx.kernel.sed(row, ctx.centers.row(j));
             st.distances += 1;
+            st.kernel_calls += 1;
             let e = (dv as f64).sqrt();
             lrow[j] = e;
             if dv < v.dist[s] {

@@ -23,7 +23,6 @@
 //! valid over every non-assigned center.
 
 use super::{IterCtx, ShardView};
-use crate::core::distance::sed;
 use crate::metrics::lloyd::LloydStats;
 
 pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
@@ -53,8 +52,9 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
         if !v.tight[s] && v.ub[s].is_finite() {
             // Tighten: one exact distance to the incumbent (required for the
             // inertia trace regardless), then re-test the bound.
-            let dv = sed(ctx.data.row(i), ctx.centers.row(a));
+            let dv = ctx.kernel.sed(ctx.data.row(i), ctx.centers.row(a));
             st.distances += 1;
+            st.kernel_calls += 1;
             v.dist[s] = dv;
             v.ub[s] = (dv as f64).sqrt();
             v.tight[s] = true;
@@ -92,8 +92,9 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
                     st.norm_prunes += 1;
                     dn.abs() as f64
                 } else {
-                    let dv = sed(row, ctx.centers.row(j));
+                    let dv = ctx.kernel.sed(row, ctx.centers.row(j));
                     st.distances += 1;
+                    st.kernel_calls += 1;
                     if dv < best {
                         best = dv;
                         best_j = j as u32;

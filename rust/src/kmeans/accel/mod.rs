@@ -82,6 +82,7 @@ use crate::core::distance::{sed, sqnorm};
 use crate::core::matrix::Matrix;
 use crate::core::norms::norms as compute_norms;
 use crate::core::shard::Shards;
+use crate::core::simd::Kernel;
 use crate::kmeans::lloyd::{LloydConfig, LloydResult};
 use crate::runtime::pool::WorkerPool;
 use crate::seeding::SeedResult;
@@ -152,6 +153,14 @@ struct IterCtx<'a> {
     data: &'a Matrix,
     centers: &'a Matrix,
     k: usize,
+    /// Resolved distance kernel for the assignment scans. The naive scan
+    /// threads its shrinking incumbent in as an early-exit cutoff
+    /// ([`Kernel::sed_cutoff`]); the bounded strategies call [`Kernel::sed`]
+    /// plain — every distance they compute feeds bound state, so an
+    /// `INFINITY` marker would poison `lb`/`lbs` (documented deviation from
+    /// the cutoff seam). Center geometry (the k² matrix, norms) stays on
+    /// the legacy kernels: it is sequential, `O(k²)` cold work.
+    kernel: Kernel,
     /// Per-point norms (reference point = origin); empty for `Naive`.
     norms: &'a [f32],
     /// Current center norms; empty for `Naive`.
@@ -227,6 +236,7 @@ fn engine(
     let strategy = cfg.strategy;
     let bounded = strategy != Strategy::Naive;
     let shards = Shards::new(n, cfg.threads.max(1));
+    let kernel = cfg.kernel.resolve();
     let mut stats = LloydStats::default();
 
     // The execution seam: one pool for the whole run (a shared one when the
@@ -352,6 +362,7 @@ fn engine(
                 data,
                 centers: &centers,
                 k,
+                kernel,
                 norms: &norms,
                 cnorms: &cnorms,
                 s_half: &s_half,

@@ -3,9 +3,18 @@
 //! This is `kmeans::lloyd`'s inner loop per shard — the baseline every
 //! bounded strategy is pinned against, and the `Naive` strategy's way of
 //! getting thread-level parallelism without any bookkeeping.
+//!
+//! The candidate loop runs through the distance-kernel seam with the
+//! shrinking incumbent as the early-exit cutoff: a candidate whose partial
+//! sum already exceeds the best-so-far provably loses the strict argmin
+//! (f32 sums of non-negative terms are monotone non-decreasing under
+//! rounding), so skipping its tail changes neither the winner nor the
+//! winner's bits — the inertia trace stays the reference's, while
+//! `kernel_early_exits` records the saved tails. `distances` still charges
+//! one per candidate (the accounting the perf gates pin), matching the
+//! pre-seam scan exactly.
 
 use super::{IterCtx, ShardView};
-use crate::core::distance::sed;
 use crate::metrics::lloyd::LloydStats;
 
 pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
@@ -17,11 +26,18 @@ pub(super) fn scan(ctx: &IterCtx<'_>, v: &mut ShardView<'_>) -> LloydStats {
         let mut best = f32::INFINITY;
         let mut best_j = 0u32;
         for j in 0..ctx.k {
-            let dv = sed(row, ctx.centers.row(j));
             st.distances += 1;
-            if dv < best {
-                best = dv;
-                best_j = j as u32;
+            st.kernel_calls += 1;
+            match ctx.kernel.sed_cutoff(row, ctx.centers.row(j), best) {
+                Some(dv) => {
+                    if dv < best {
+                        best = dv;
+                        best_j = j as u32;
+                    }
+                }
+                // Partial sum passed `best`: the full distance is strictly
+                // larger, the strict `<` could never have fired.
+                None => st.kernel_early_exits += 1,
             }
         }
         v.assign[s] = best_j;

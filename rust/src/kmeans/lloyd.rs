@@ -10,6 +10,7 @@
 
 use crate::core::distance::sed;
 use crate::core::matrix::Matrix;
+use crate::core::simd::KernelConfig;
 use crate::kmeans::accel::Strategy;
 use crate::metrics::lloyd::LloydStats;
 use crate::runtime::pool::WorkerPool;
@@ -35,11 +36,25 @@ pub struct LloydConfig {
     /// same parked workers. The shard split is governed by `threads`, so
     /// results never depend on the pool.
     pub pool: Option<Arc<WorkerPool>>,
+    /// Distance-kernel backend for the assignment scans
+    /// ([`crate::core::simd::KernelConfig`]). `Scalar` (default) replays
+    /// the legacy accumulation orders bit-for-bit; the lane family is
+    /// bit-identical across machines but not to `Scalar`. Kernel choice
+    /// never changes scan decisions, so stats stay backend-invariant
+    /// (up to f32 distance bits feeding the inertia trace).
+    pub kernel: KernelConfig,
 }
 
 impl Default for LloydConfig {
     fn default() -> Self {
-        Self { max_iters: 100, tol: 1e-6, strategy: Strategy::Naive, threads: 1, pool: None }
+        Self {
+            max_iters: 100,
+            tol: 1e-6,
+            strategy: Strategy::Naive,
+            threads: 1,
+            pool: None,
+            kernel: KernelConfig::Scalar,
+        }
     }
 }
 

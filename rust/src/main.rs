@@ -4,11 +4,13 @@
 //! geokmpp data <INSTANCE> [--n N] [--csv out.csv | --bin out.bin]
 //! geokmpp seed   --instance NAME | --file data.csv   --k K
 //!                [--variant standard|tie|full|rejection] [--threads T|auto]
+//!                [--kernel scalar|auto|lanes|avx2]
 //!                [--xla]
 //!                [--appendix-a]
 //!                [--refpoint origin|mean|median|positive|mean-norm]
 //! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto]
 //!                [--lloyd-strategy naive|hamerly|annulus|yinyang|elkan]
+//!                [--kernel scalar|auto|lanes|avx2]
 //!                [--xla]
 //! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
 //! geokmpp info
@@ -19,6 +21,11 @@
 //! persistent worker pool (`runtime::pool`), whose dispatch counters are
 //! printed after each run. `--xla` without built artifacts falls back to
 //! the sharded scalar executor on the same pool.
+//!
+//! `--kernel` selects the distance-kernel backend (`core::simd`): `scalar`
+//! is the legacy arithmetic, `lanes` its bit-exact 8-lane mirror, `avx2`
+//! the vectorized path (same bits by the shared accumulation contract),
+//! and `auto` picks the widest backend the CPU supports at runtime.
 //!
 //! `--lloyd-strategy` selects the pruning strategy of the bounds-accelerated
 //! Lloyd engine (`kmeans::accel`), warm-started from the seeding result so
@@ -32,6 +39,7 @@ use anyhow::{bail, Context, Result};
 use geokmpp::cli::Args;
 use geokmpp::core::matrix::Matrix;
 use geokmpp::core::rng::Pcg64;
+use geokmpp::core::simd::KernelConfig;
 use geokmpp::data::catalog::by_name;
 use geokmpp::data::{io, stats};
 use geokmpp::kmeans::accel::{run_warm, Strategy};
@@ -113,21 +121,25 @@ fn cmd_seed(args: &Args) -> Result<()> {
         .context("bad --variant (standard|tie|full|rejection)")?;
     let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
     let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
+    let kernel: KernelConfig = args.get_or("kernel", KernelConfig::Scalar).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
     // One persistent pool for every sharded scan in this run.
     let pool = Arc::new(WorkerPool::new(threads));
 
     let result = if args.has("xla") {
         // open_or_scalar logs the real cause if it has to fall back.
-        let mut ex = Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool));
+        let mut ex =
+            Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool)).with_kernel(kernel);
         if variant != Variant::Tie {
             eprintln!("note: --xla uses the hybrid TIE path");
         }
         let threshold = args.get_or("dense-threshold", 2048).map_err(anyhow::Error::msg)?;
         hybrid_tie_seed(&data, k, BatchPolicy { dense_threshold: threshold }, &mut ex, &mut rng)?
     } else {
-        let mut cfg =
-            SeedConfig::new(k, variant).with_threads(threads).with_pool(Arc::clone(&pool));
+        let mut cfg = SeedConfig::new(k, variant)
+            .with_threads(threads)
+            .with_pool(Arc::clone(&pool))
+            .with_kernel(kernel);
         cfg.appendix_a = args.has("appendix-a");
         cfg.dot_trick = args.has("dot-trick");
         cfg.binary_search_sampling = args.has("binsearch-sampling");
@@ -143,6 +155,7 @@ fn cmd_seed(args: &Args) -> Result<()> {
     println!("variant           {}", variant.name());
     println!("k                 {k}");
     println!("threads           {threads}");
+    println!("kernel            {}", kernel.resolve().backend.name());
     println!("time              {}s", fnum(result.elapsed.as_secs_f64(), 4));
     println!("seeding cost      {}", fnum(result.cost(), 2));
     println!("visited (assign)  {}", fcount(c.visited_assign));
@@ -169,6 +182,13 @@ fn cmd_seed(args: &Args) -> Result<()> {
         fcount(c.tree_node_visits)
     );
     println!("visited (total)   {}", fcount(c.visited_total()));
+    println!(
+        "kernel calls      {} (early exits {}, batches {}, batched rows {})",
+        fcount(c.kernel_calls),
+        fcount(c.kernel_early_exits),
+        fcount(c.kernel_batches),
+        fcount(c.kernel_batch_rows)
+    );
     println!("{}", pool.stats());
     Ok(())
 }
@@ -183,6 +203,7 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
     let strategy: Strategy =
         args.get_or("lloyd-strategy", Strategy::Naive).map_err(anyhow::Error::msg)?;
+    let kernel: KernelConfig = args.get_or("kernel", KernelConfig::Scalar).map_err(anyhow::Error::msg)?;
     let mut rng = Pcg64::seed_from(seed_v);
     // One persistent pool shared by seeding and every Lloyd iteration.
     let pool = Arc::new(WorkerPool::new(threads));
@@ -191,11 +212,14 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         strategy,
         threads,
         pool: Some(Arc::clone(&pool)),
+        kernel,
         ..LloydConfig::default()
     };
 
-    let seed_cfg =
-        SeedConfig::new(k, variant).with_threads(threads).with_pool(Arc::clone(&pool));
+    let seed_cfg = SeedConfig::new(k, variant)
+        .with_threads(threads)
+        .with_pool(Arc::clone(&pool))
+        .with_kernel(kernel);
     let mut picker = D2Picker::new(&mut rng);
     let s = seed_with(&data, &seed_cfg, &mut picker, &mut NoTrace);
     println!(
@@ -208,7 +232,8 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         if strategy != Strategy::Naive {
             eprintln!("note: --xla dispatches dense assignments; --lloyd-strategy ignored");
         }
-        let mut ex = Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool));
+        let mut ex =
+            Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool)).with_kernel(kernel);
         lloyd_xla(&data, &s.centers, &cfg, &mut ex)?
     } else {
         // Warm start: the seeder's exact D² weights seed the upper bounds.
@@ -243,6 +268,12 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         st.annulus_prunes,
         st.norm_prunes,
         st.full_scans
+    );
+    println!(
+        "lloyd kernel      calls={} early-exits={} [{}]",
+        st.kernel_calls,
+        st.kernel_early_exits,
+        kernel.resolve().backend.name()
     );
     println!("{}", pool.stats());
     Ok(())

@@ -9,7 +9,13 @@
 //! not just "fewer distances" but which geometric filter paid for it.
 
 /// Counter set collected by every accelerated-Lloyd run.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+///
+/// Equality contract: semantic counters only. The micro-batch shape
+/// tallies ([`LloydStats::kernel_batches`], [`LloydStats::kernel_batch_rows`])
+/// vary with the shard split (flush boundaries follow it) while results
+/// stay bit-identical, so they are excluded from `==` — the same rule as
+/// [`crate::seeding::Counters`].
+#[derive(Clone, Copy, Debug, Default)]
 pub struct LloydStats {
     /// Points examined across all assignment steps (one per point per
     /// iteration — every strategy touches every point at least for the
@@ -40,7 +46,42 @@ pub struct LloydStats {
     pub norm_prunes: u64,
     /// Points that fell through every bound and paid a full k-candidate scan.
     pub full_scans: u64,
+    /// Distance-kernel invocations through the vectorized seam
+    /// ([`crate::core::simd::Kernel`]). Thread-count-invariant.
+    pub kernel_calls: u64,
+    /// Kernel calls resolved early by the checkpointed cutoff (naive's
+    /// shrinking-argmin block scan; the bounded strategies need every
+    /// computed value exactly, so they call without a cutoff).
+    /// Thread-count-invariant.
+    pub kernel_early_exits: u64,
+    /// Micro-batches flushed through the gather layer. Execution detail:
+    /// **excluded from equality** (see the struct docs).
+    pub kernel_batches: u64,
+    /// Rows carried by those micro-batches. Execution detail: **excluded
+    /// from equality** (see the struct docs).
+    pub kernel_batch_rows: u64,
 }
+
+impl PartialEq for LloydStats {
+    fn eq(&self, other: &LloydStats) -> bool {
+        // Every semantic counter, in declaration order; the batch-shape
+        // tallies are deliberately absent (see the struct docs).
+        self.visited_points == other.visited_points
+            && self.distances == other.distances
+            && self.center_distances == other.center_distances
+            && self.norms == other.norms
+            && self.bound_prunes == other.bound_prunes
+            && self.center_prunes == other.center_prunes
+            && self.group_prunes == other.group_prunes
+            && self.annulus_prunes == other.annulus_prunes
+            && self.norm_prunes == other.norm_prunes
+            && self.full_scans == other.full_scans
+            && self.kernel_calls == other.kernel_calls
+            && self.kernel_early_exits == other.kernel_early_exits
+    }
+}
+
+impl Eq for LloydStats {}
 
 impl LloydStats {
     /// Total distance-like computations (point–center + center–center +
@@ -83,6 +124,10 @@ impl LloydStats {
         self.annulus_prunes /= d;
         self.norm_prunes /= d;
         self.full_scans /= d;
+        self.kernel_calls /= d;
+        self.kernel_early_exits /= d;
+        self.kernel_batches /= d;
+        self.kernel_batch_rows /= d;
     }
 }
 
@@ -98,6 +143,10 @@ impl std::ops::AddAssign for LloydStats {
         self.annulus_prunes += other.annulus_prunes;
         self.norm_prunes += other.norm_prunes;
         self.full_scans += other.full_scans;
+        self.kernel_calls += other.kernel_calls;
+        self.kernel_early_exits += other.kernel_early_exits;
+        self.kernel_batches += other.kernel_batches;
+        self.kernel_batch_rows += other.kernel_batch_rows;
     }
 }
 
@@ -117,6 +166,10 @@ mod tests {
             annulus_prunes: 10,
             norm_prunes: 7,
             full_scans: 8,
+            kernel_calls: 11,
+            kernel_early_exits: 12,
+            kernel_batches: 13,
+            kernel_batch_rows: 14,
         }
     }
 
@@ -143,6 +196,21 @@ mod tests {
         assert_eq!(sum.annulus_prunes, 20);
         assert_eq!(sum.norm_prunes, 14);
         assert_eq!(sum.full_scans, 16);
+        assert_eq!(sum.kernel_calls, 22);
+        assert_eq!(sum.kernel_early_exits, 24);
+        assert_eq!(sum.kernel_batches, 26);
+        assert_eq!(sum.kernel_batch_rows, 28);
+    }
+
+    /// Semantic kernel counters participate in `==`; batch-shape tallies
+    /// (shard-split execution details) do not.
+    #[test]
+    fn equality_ignores_batch_shape_only() {
+        let base = filled();
+        let reshaped = LloydStats { kernel_batches: 99, kernel_batch_rows: 999, ..base };
+        assert_eq!(base, reshaped, "batch shape must not break equality");
+        assert_ne!(base, LloydStats { kernel_calls: 0, ..base });
+        assert_ne!(base, LloydStats { kernel_early_exits: 0, ..base });
     }
 
     #[test]

@@ -11,15 +11,19 @@
 //! * [`Executor::open`] — the PJRT/XLA runtime over the AOT artifacts
 //!   (requires `make artifacts` and the `xla-rt` feature);
 //! * [`Executor::scalar`] — no runtime at all: the same dense ops computed
-//!   by scalar SED kernels sharded across real OS threads
+//!   by CPU distance kernels sharded across real OS threads
 //!   ([`crate::core::shard::Shards`] splits dispatched through the
 //!   persistent [`WorkerPool`]). This is what lets coordinator jobs and the
 //!   CLI run the dense phases with true thread-level parallelism on
-//!   machines without artifacts.
+//!   machines without artifacts. The kernel is selectable
+//!   ([`Executor::with_kernel`], legacy scalar by default) and every
+//!   min-update/argmin scan threads the incumbent through
+//!   [`Kernel::sed_cutoff`] — best-so-far early exit with unchanged
+//!   results.
 
-use crate::core::distance::sed;
 use crate::core::matrix::Matrix;
 use crate::core::shard::Shards;
+use crate::core::simd::{Kernel, KernelConfig};
 use crate::runtime::client::Runtime;
 use crate::runtime::pool::{PoolStats, WorkerPool};
 use anyhow::{bail, Context, Result};
@@ -56,6 +60,13 @@ pub struct Executor {
     pub dispatches: u64,
     /// Number of scalar-backend sharded scans issued (perf accounting).
     pub scalar_scans: u64,
+    /// Distance kernel backing the scalar scans (legacy scalar by default).
+    kernel: Kernel,
+    /// Kernel invocations issued by the scalar backend (perf accounting).
+    pub kernel_calls: u64,
+    /// Scalar-backend kernel calls that exited early under a best-so-far
+    /// cutoff — work provably unable to change the result (perf accounting).
+    pub kernel_early_exits: u64,
 }
 
 impl Executor {
@@ -88,6 +99,15 @@ impl Executor {
         self
     }
 
+    /// Selects the distance kernel serving the scalar backend's scans
+    /// ([`KernelConfig::Scalar`] — the legacy arithmetic — by default;
+    /// `Lanes`/`Avx2`/`Auto` produce the identical bits via the shared
+    /// 8-lane accumulation contract in [`crate::core::simd`]).
+    pub fn with_kernel(mut self, kernel: KernelConfig) -> Executor {
+        self.kernel = kernel.resolve();
+        self
+    }
+
     /// Opens the XLA runtime if available, otherwise falls back to the
     /// scalar backend with the given thread count, logging the actual
     /// reason the runtime was unavailable (missing artifacts, disabled
@@ -115,6 +135,9 @@ impl Executor {
             cbuf: Vec::new(),
             dispatches: 0,
             scalar_scans: 0,
+            kernel: KernelConfig::Scalar.resolve(),
+            kernel_calls: 0,
+            kernel_early_exits: 0,
         }
     }
 
@@ -165,10 +188,12 @@ impl Executor {
         weights: Option<&[f32]>,
     ) -> (Vec<f32>, Vec<i32>) {
         self.scalar_scans += 1;
+        self.kernel_calls += rows.len() as u64;
+        let kernel = self.kernel;
         let shards = Shards::new(rows.len(), self.threads);
         let mut w_out = vec![0f32; rows.len()];
         let mut chg_out = vec![0i32; rows.len()];
-        {
+        let exits: u64 = {
             let w_parts = shards.split_mut(&mut w_out);
             let c_parts = shards.split_mut(&mut chg_out);
             let tasks: Vec<_> = shards
@@ -178,17 +203,31 @@ impl Executor {
                 .map(|((range, w), chg)| {
                     let rows = &rows[range];
                     move || {
+                        let mut exits = 0u64;
                         for (slot, &r) in rows.iter().enumerate() {
-                            let dist = sed(data.row(r), c_new);
                             let cur = weights.map(|ws| ws[r]).unwrap_or(f32::INFINITY);
-                            w[slot] = cur.min(dist);
-                            chg[slot] = i32::from(dist < cur);
+                            // Incumbent-cutoff kernel: `None` proves
+                            // `dist > cur`, so min(cur, dist) = cur and the
+                            // strict `dist < cur` could not have fired.
+                            match kernel.sed_cutoff(data.row(r), c_new, cur) {
+                                Some(dist) => {
+                                    w[slot] = cur.min(dist);
+                                    chg[slot] = i32::from(dist < cur);
+                                }
+                                None => {
+                                    exits += 1;
+                                    w[slot] = cur;
+                                    chg[slot] = 0;
+                                }
+                            }
                         }
+                        exits
                     }
                 })
                 .collect();
-            self.pool.scoped(tasks);
-        }
+            self.pool.scoped(tasks).iter().sum()
+        };
+        self.kernel_early_exits += exits;
         (w_out, chg_out)
     }
 
@@ -218,24 +257,36 @@ impl Executor {
             let mut w_out = Vec::with_capacity(rows.len());
             let mut chg_out = Vec::with_capacity(rows.len());
             let mut computed = 0u64;
+            let mut exits = 0u64;
             for &r in rows {
                 let cur = weights[r];
                 if 4.0 * cur > d_cc {
                     computed += 1;
-                    let dist = sed(data.row(r), c_new);
-                    w_out.push(cur.min(dist));
-                    chg_out.push(i32::from(dist < cur));
+                    match self.kernel.sed_cutoff(data.row(r), c_new, cur) {
+                        Some(dist) => {
+                            w_out.push(cur.min(dist));
+                            chg_out.push(i32::from(dist < cur));
+                        }
+                        None => {
+                            exits += 1;
+                            w_out.push(cur);
+                            chg_out.push(0);
+                        }
+                    }
                 } else {
                     w_out.push(cur);
                     chg_out.push(0);
                 }
             }
+            self.kernel_calls += computed;
+            self.kernel_early_exits += exits;
             return (w_out, chg_out, computed);
         }
+        let kernel = self.kernel;
         let shards = Shards::new(rows.len(), self.threads);
         let mut w_out = vec![0f32; rows.len()];
         let mut chg_out = vec![0i32; rows.len()];
-        let computed: u64 = {
+        let (computed, exits) = {
             let w_parts = shards.split_mut(&mut w_out);
             let c_parts = shards.split_mut(&mut chg_out);
             let tasks: Vec<_> = shards
@@ -246,24 +297,38 @@ impl Executor {
                     let rows = &rows[range];
                     move || {
                         let mut local = 0u64;
+                        let mut exits = 0u64;
                         for (slot, &r) in rows.iter().enumerate() {
                             let cur = weights[r];
                             if 4.0 * cur > d_cc {
                                 local += 1;
-                                let dist = sed(data.row(r), c_new);
-                                w[slot] = cur.min(dist);
-                                chg[slot] = i32::from(dist < cur);
+                                match kernel.sed_cutoff(data.row(r), c_new, cur) {
+                                    Some(dist) => {
+                                        w[slot] = cur.min(dist);
+                                        chg[slot] = i32::from(dist < cur);
+                                    }
+                                    None => {
+                                        exits += 1;
+                                        w[slot] = cur;
+                                        chg[slot] = 0;
+                                    }
+                                }
                             } else {
                                 w[slot] = cur;
                                 chg[slot] = 0;
                             }
                         }
-                        local
+                        (local, exits)
                     }
                 })
                 .collect();
-            self.pool.scoped(tasks).iter().sum()
+            self.pool
+                .scoped(tasks)
+                .iter()
+                .fold((0u64, 0u64), |(c, e), &(lc, le)| (c + lc, e + le))
         };
+        self.kernel_calls += computed;
+        self.kernel_early_exits += exits;
         (w_out, chg_out, computed)
     }
 
@@ -378,11 +443,13 @@ impl Executor {
     /// Sharded scalar Lloyd assignment (the fallback dense op).
     fn scalar_lloyd_assign(&mut self, data: &Matrix, centers: &Matrix) -> (Vec<u32>, Vec<f32>) {
         self.scalar_scans += 1;
+        self.kernel_calls += (data.rows() * centers.rows()) as u64;
+        let kernel = self.kernel;
         let n = data.rows();
         let shards = Shards::new(n, self.threads);
         let mut assign = vec![0u32; n];
         let mut mind = vec![0f32; n];
-        {
+        let exits: u64 = {
             let a_parts = shards.split_mut(&mut assign);
             let m_parts = shards.split_mut(&mut mind);
             let tasks: Vec<_> = shards
@@ -391,25 +458,35 @@ impl Executor {
                 .zip(m_parts)
                 .map(|((range, a), m)| {
                     move || {
+                        let mut exits = 0u64;
                         for (slot, i) in range.enumerate() {
                             let row = data.row(i);
                             let mut best = f32::INFINITY;
                             let mut best_j = 0u32;
+                            // Shrinking-incumbent argmin: a candidate whose
+                            // partial sum exceeds the best so far can never
+                            // win the strict `<`, so its tail is skipped.
                             for j in 0..centers.rows() {
-                                let dist = sed(row, centers.row(j));
-                                if dist < best {
-                                    best = dist;
-                                    best_j = j as u32;
+                                match kernel.sed_cutoff(row, centers.row(j), best) {
+                                    Some(dist) => {
+                                        if dist < best {
+                                            best = dist;
+                                            best_j = j as u32;
+                                        }
+                                    }
+                                    None => exits += 1,
                                 }
                             }
                             a[slot] = best_j;
                             m[slot] = best;
                         }
+                        exits
                     }
                 })
                 .collect();
-            self.pool.scoped(tasks);
-        }
+            self.pool.scoped(tasks).iter().sum()
+        };
+        self.kernel_early_exits += exits;
         (assign, mind)
     }
 
@@ -478,6 +555,8 @@ impl Executor {
         let d = data.cols();
         if self.rt.is_none() {
             self.scalar_scans += 1;
+            self.kernel_calls += data.rows() as u64;
+            let kernel = self.kernel;
             let n = data.rows();
             let shards = Shards::new(n, self.threads);
             let mut out = vec![0f32; n];
@@ -488,7 +567,10 @@ impl Executor {
                 .map(|(range, o)| {
                     move || {
                         for (slot, i) in range.enumerate() {
-                            o[slot] = crate::core::distance::sqnorm(data.row(i)).sqrt();
+                            // ‖x‖² = dot(x, x): under the default scalar
+                            // backend this is bit-for-bit `sqnorm`.
+                            let row = data.row(i);
+                            o[slot] = kernel.dot(row, row).sqrt();
                         }
                     }
                 })

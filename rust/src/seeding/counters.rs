@@ -12,7 +12,16 @@
 //!   norm-filtered variant.
 
 /// Counter set collected by every seeder run.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+///
+/// Equality contract: two counter sets compare equal when every *semantic*
+/// counter matches. The micro-batch shape tallies
+/// ([`Counters::kernel_batches`], [`Counters::kernel_batch_rows`]) are
+/// execution details — flush boundaries follow the shard split, so they
+/// legitimately vary with the thread count while results stay bit-identical
+/// — and are excluded from `==` (like elapsed time, which lives outside
+/// this struct for the same reason). They still aggregate through
+/// `AddAssign` and surface in perf-smoke's `"kernels"` object.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct Counters {
     /// Points examined while updating closest-center assignments — strictly
     /// per-point visits (one per weight examined in an update scan).
@@ -51,7 +60,48 @@ pub struct Counters {
     /// the same fairness rule as [`Counters::visited_headers`] — via
     /// [`Counters::visited_total`].
     pub tree_node_visits: u64,
+    /// Distance-kernel invocations through the vectorized seam
+    /// ([`crate::core::simd::Kernel`]): one per surviving candidate row
+    /// handed to `sed_cutoff`/`sed_block`. Thread-count-invariant (the
+    /// per-row decision set never depends on batch boundaries).
+    pub kernel_calls: u64,
+    /// Kernel calls resolved by the checkpointed cutoff before finishing
+    /// the sum (the row provably lost). Also thread-count-invariant: the
+    /// exit decision is a function of the row and its own incumbent.
+    pub kernel_early_exits: u64,
+    /// Micro-batches flushed through the gather layer
+    /// ([`crate::core::batch::Gather`]). Execution detail: **excluded from
+    /// equality** (see the struct docs).
+    pub kernel_batches: u64,
+    /// Rows carried by those micro-batches (occupancy numerator). Execution
+    /// detail: **excluded from equality** (see the struct docs).
+    pub kernel_batch_rows: u64,
 }
+
+impl PartialEq for Counters {
+    fn eq(&self, other: &Counters) -> bool {
+        // Every semantic counter, in declaration order; the batch-shape
+        // tallies are deliberately absent (see the struct docs).
+        self.visited_assign == other.visited_assign
+            && self.visited_headers == other.visited_headers
+            && self.visited_sampling == other.visited_sampling
+            && self.distances == other.distances
+            && self.center_distances == other.center_distances
+            && self.norms == other.norms
+            && self.filter1_rejects == other.filter1_rejects
+            && self.filter2_rejects == other.filter2_rejects
+            && self.norm_partition_rejects == other.norm_partition_rejects
+            && self.norm_point_rejects == other.norm_point_rejects
+            && self.center_distances_avoided == other.center_distances_avoided
+            && self.proposals == other.proposals
+            && self.rejections == other.rejections
+            && self.tree_node_visits == other.tree_node_visits
+            && self.kernel_calls == other.kernel_calls
+            && self.kernel_early_exits == other.kernel_early_exits
+    }
+}
+
+impl Eq for Counters {}
 
 impl Counters {
     /// Total points examined (both phases, headers included — the paper's
@@ -98,6 +148,10 @@ impl std::ops::AddAssign for Counters {
         self.proposals += other.proposals;
         self.rejections += other.rejections;
         self.tree_node_visits += other.tree_node_visits;
+        self.kernel_calls += other.kernel_calls;
+        self.kernel_early_exits += other.kernel_early_exits;
+        self.kernel_batches += other.kernel_batches;
+        self.kernel_batch_rows += other.kernel_batch_rows;
     }
 }
 
@@ -152,6 +206,10 @@ mod tests {
             proposals: 12,
             rejections: 13,
             tree_node_visits: 14,
+            kernel_calls: 15,
+            kernel_early_exits: 16,
+            kernel_batches: 17,
+            kernel_batch_rows: 18,
         };
         let mut sum = Counters::default();
         sum += one;
@@ -173,7 +231,28 @@ mod tests {
                 proposals: 24,
                 rejections: 26,
                 tree_node_visits: 28,
+                kernel_calls: 30,
+                kernel_early_exits: 32,
+                kernel_batches: 34,
+                kernel_batch_rows: 36,
             }
         );
+        // AddAssign really did merge the batch-shape tallies, even though
+        // `==` ignores them (checked directly, not through PartialEq).
+        assert_eq!(sum.kernel_batches, 34);
+        assert_eq!(sum.kernel_batch_rows, 36);
+    }
+
+    /// The equality contract: semantic kernel counters participate in `==`;
+    /// batch-shape tallies (thread-variant execution details) do not.
+    #[test]
+    fn equality_ignores_batch_shape_only() {
+        let base = Counters { kernel_calls: 5, kernel_early_exits: 2, ..Default::default() };
+        let reshaped = Counters { kernel_batches: 9, kernel_batch_rows: 99, ..base };
+        assert_eq!(base, reshaped, "batch shape must not break equality");
+        let more_calls = Counters { kernel_calls: 6, ..base };
+        let more_exits = Counters { kernel_early_exits: 3, ..base };
+        assert_ne!(base, more_calls, "kernel_calls is semantic");
+        assert_ne!(base, more_exits, "kernel_early_exits is semantic");
     }
 }

@@ -12,7 +12,7 @@
 //! Norms are computed once up front relative to `cfg.refpoint` (Appendix B);
 //! center norms are lookups because centers are dataset points.
 
-use crate::core::distance::{sed, sed_dot};
+use crate::core::batch::Gather;
 use crate::core::matrix::Matrix;
 use crate::core::norms::{norms as compute_norms, norms_from, sqnorms};
 use crate::seeding::centerdist::CenterGeom;
@@ -51,16 +51,23 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     } else {
         Vec::new()
     };
+    let kernel = cfg.kernel.resolve();
     let dist = |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
         c.distances += 1;
+        c.kernel_calls += 1;
         t.read_point(a);
         t.ops(3 * d as u64);
         if cfg.dot_trick {
-            sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+            kernel.sed_dot(data.row(a), data.row(b), sq[a], sq[b])
         } else {
-            sed(data.row(a), data.row(b))
+            kernel.sed(data.row(a), data.row(b))
         }
     };
+    // Micro-batch gatherer for the update scans (reused across every
+    // partition). The dot-trick path cannot ride it: the decomposition's
+    // terms are signed, so a partial dot sum proves nothing — only the
+    // direct non-negative SED supports the cutoff early exit.
+    let mut gather = Gather::new(d);
 
     // --- Initialization: one cluster holding everything.
     let first = picker.first(n);
@@ -115,6 +122,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         let src = assignments[c_new] as usize;
         let d_src_ed = weights[c_new].sqrt();
         let slot = center_indices.len();
+        let slot_u32 = slot as u32;
         center_indices.push(c_new);
         let cn_row = data.row(c_new);
         let cn_norm = norms[c_new];
@@ -215,32 +223,108 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                         }
                     }};
                 }
-                for &i in &members {
-                    counters.visited_assign += 1;
-                    trace.access_weight(i);
-                    // Filter 2 (TIE, Eq. 5).
-                    if 4.0 * weights[i] <= d_cc {
-                        counters.filter2_rejects += 1;
-                        keep!(i);
-                        continue;
+                if cfg.dot_trick {
+                    // Legacy fused pass (no batching — see `gather` above).
+                    for &i in &members {
+                        counters.visited_assign += 1;
+                        trace.access_weight(i);
+                        // Filter 2 (TIE, Eq. 5).
+                        if 4.0 * weights[i] <= d_cc {
+                            counters.filter2_rejects += 1;
+                            keep!(i);
+                            continue;
+                        }
+                        // Point norm filter (Eq. 8).
+                        trace.access_bound(i);
+                        let dn = cn_norm - norms[i];
+                        if dn * dn >= weights[i] {
+                            counters.norm_point_rejects += 1;
+                            keep!(i);
+                            continue;
+                        }
+                        let dnew = dist(i, c_new, &mut counters, trace);
+                        if dnew < weights[i] {
+                            weights[i] = dnew;
+                            assignments[i] = slot as u32;
+                            let e = dnew.sqrt();
+                            lo[i] = norms[i] - e;
+                            up[i] = norms[i] + e;
+                            moved.push(i);
+                        } else {
+                            keep!(i);
+                        }
                     }
-                    // Point norm filter (Eq. 8).
-                    trace.access_bound(i);
-                    let dn = cn_norm - norms[i];
-                    if dn * dn >= weights[i] {
-                        counters.norm_point_rejects += 1;
-                        keep!(i);
-                        continue;
+                } else {
+                    // Batched pass 1: the same filter cascade, with every
+                    // surviving distance gathered into micro-batches and its
+                    // incumbent weight as the cutoff. An early-exited row
+                    // comes back `INFINITY`, which loses `dnew < weights[i]`
+                    // exactly as its (provably larger) true distance would —
+                    // decisions, counters and trace events are those of the
+                    // fused pass, bit for bit.
+                    let sink = |slot: u32,
+                                dnew: f32,
+                                weights: &mut [f32],
+                                assignments: &mut [u32],
+                                lo: &mut [f32],
+                                up: &mut [f32],
+                                moved: &mut Vec<usize>| {
+                        let i = slot as usize;
+                        if dnew < weights[i] {
+                            weights[i] = dnew;
+                            assignments[i] = slot_u32;
+                            let e = dnew.sqrt();
+                            lo[i] = norms[i] - e;
+                            up[i] = norms[i] + e;
+                            moved.push(i);
+                        }
+                    };
+                    for &i in &members {
+                        counters.visited_assign += 1;
+                        trace.access_weight(i);
+                        if 4.0 * weights[i] <= d_cc {
+                            counters.filter2_rejects += 1;
+                            continue;
+                        }
+                        trace.access_bound(i);
+                        let dn = cn_norm - norms[i];
+                        if dn * dn >= weights[i] {
+                            counters.norm_point_rejects += 1;
+                            continue;
+                        }
+                        // Charged at gather time, exactly where the fused
+                        // pass charged it — trace order is preserved.
+                        counters.distances += 1;
+                        counters.kernel_calls += 1;
+                        trace.read_point(i);
+                        trace.ops(3 * d as u64);
+                        if gather.push(i as u32, data.row(i), weights[i]) {
+                            counters.kernel_early_exits +=
+                                gather.flush(kernel, cn_row, |sl, dv| {
+                                    sink(
+                                        sl,
+                                        dv,
+                                        &mut weights,
+                                        &mut assignments,
+                                        &mut lo,
+                                        &mut up,
+                                        &mut moved,
+                                    )
+                                });
+                        }
                     }
-                    let dnew = dist(i, c_new, &mut counters, trace);
-                    if dnew < weights[i] {
-                        weights[i] = dnew;
-                        assignments[i] = slot as u32;
-                        let e = dnew.sqrt();
-                        lo[i] = norms[i] - e;
-                        up[i] = norms[i] + e;
-                        moved.push(i);
-                    } else {
+                    counters.kernel_early_exits += gather.flush(kernel, cn_row, |sl, dv| {
+                        sink(sl, dv, &mut weights, &mut assignments, &mut lo, &mut up, &mut moved)
+                    });
+                    // Pass 2: fold the retained stats in original member
+                    // order (the f64 `sum` pins that order). A member was
+                    // captured by `c_new` iff its assignment is the new slot
+                    // — each point lives in exactly one partition, so no
+                    // earlier scan can have set it.
+                    for &i in &members {
+                        if assignments[i] == slot_u32 {
+                            continue;
+                        }
                         keep!(i);
                     }
                 }
@@ -265,6 +349,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         #[cfg(debug_assertions)]
         check_invariants(&clusters, n, &weights, &norms);
     }
+    counters.kernel_batches += gather.batches;
+    counters.kernel_batch_rows += gather.gathered_rows;
 
     SeedResult {
         centers: data.gather_rows(&center_indices),
@@ -307,6 +393,7 @@ fn check_invariants(clusters: &[NormCluster], n: usize, weights: &[f32], norms: 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::distance::sed;
     use crate::core::rng::{Pcg64, Rng};
     use crate::seeding::picker::{D2Picker, ScriptedPicker};
     use crate::seeding::trace::NoTrace;

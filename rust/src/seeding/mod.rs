@@ -50,6 +50,7 @@ pub use trace::{NoTrace, TraceSink};
 
 use crate::core::matrix::Matrix;
 use crate::core::rng::Rng;
+use crate::core::simd::KernelConfig;
 use crate::metrics::timer::Stopwatch;
 use crate::runtime::pool::WorkerPool;
 use std::sync::Arc;
@@ -128,6 +129,13 @@ pub struct SeedConfig {
     /// workers. The shard split is governed by `threads`, so results never
     /// depend on the pool.
     pub pool: Option<Arc<WorkerPool>>,
+    /// Distance-kernel backend for the update scans
+    /// ([`crate::core::simd::KernelConfig`]). The default `Scalar` replays
+    /// the legacy accumulation orders bit-for-bit; `Lanes`/`Avx2`/`Auto`
+    /// select the 8-lane family (bit-identical to each other across
+    /// machines, not to `Scalar`). Kernel choice never changes which
+    /// candidates are scanned, so all gated counters are backend-invariant.
+    pub kernel: KernelConfig,
 }
 
 impl SeedConfig {
@@ -143,7 +151,14 @@ impl SeedConfig {
             binary_search_sampling: false,
             threads: 1,
             pool: None,
+            kernel: KernelConfig::Scalar,
         }
+    }
+
+    /// Sets the distance-kernel backend (builder style).
+    pub fn with_kernel(mut self, kernel: KernelConfig) -> Self {
+        self.kernel = kernel;
+        self
     }
 
     /// Sets the worker-thread count (builder style).

@@ -53,10 +53,11 @@
 //! only the sequential-phase events (cluster headers, center rows). Use
 //! `threads = 1` for cache-trace experiments ([`crate::simcache`]).
 
-use crate::core::distance::{sed, sed_dot};
+use crate::core::batch::Gather;
 use crate::core::matrix::Matrix;
 use crate::core::norms::{norms as compute_norms, norms_from, sqnorms};
 use crate::core::shard::Shards;
+use crate::core::simd::Kernel;
 use crate::seeding::centerdist::CenterGeom;
 use crate::seeding::counters::Counters;
 use crate::seeding::partitions::{NormCluster, Part};
@@ -76,21 +77,53 @@ struct ShardState {
     clusters: Vec<NormCluster>,
 }
 
-/// Point–center SED with the optional Appendix-B dot decomposition.
+/// Point–center SED with the optional Appendix-B dot decomposition, through
+/// the distance-kernel seam.
 #[inline]
 fn point_dist(
     data: &Matrix,
     cfg: &SeedConfig,
+    kernel: Kernel,
     sq: &[f32],
     a: usize,
     b: usize,
     c: &mut Counters,
 ) -> f32 {
     c.distances += 1;
+    c.kernel_calls += 1;
     if cfg.dot_trick {
-        sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+        kernel.sed_dot(data.row(a), data.row(b), sq[a], sq[b])
     } else {
-        sed(data.row(a), data.row(b))
+        kernel.sed(data.row(a), data.row(b))
+    }
+}
+
+/// Strict min-update of one flushed survivor row (shard-local indexing):
+/// the batched counterpart of the fused pass's update arm. `INFINITY`
+/// markers (early-exited rows) lose the strict comparison exactly as their
+/// true distance would.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn apply_update(
+    i: usize,
+    dnew: f32,
+    start: usize,
+    slot: u32,
+    norms: &[f32],
+    w: &mut [f32],
+    assign: &mut [u32],
+    lo: &mut [f32],
+    up: &mut [f32],
+    moved: &mut Vec<usize>,
+) {
+    let k = i - start;
+    if dnew < w[k] {
+        w[k] = dnew;
+        assign[k] = slot;
+        let e = dnew.sqrt();
+        lo[k] = norms[i] - e;
+        up[k] = norms[i] + e;
+        moved.push(i);
     }
 }
 
@@ -124,6 +157,7 @@ fn refresh_part(part: &mut Part, start: usize, w: &[f32], lo: &[f32], up: &[f32]
 fn init_shard(
     data: &Matrix,
     cfg: &SeedConfig,
+    kernel: Kernel,
     sq: &[f32],
     norms: &[f32],
     first: usize,
@@ -136,7 +170,7 @@ fn init_shard(
     let start = state.start;
     for k in 0..w.len() {
         let i = start + k;
-        let dv = point_dist(data, cfg, sq, i, first, &mut c);
+        let dv = point_dist(data, cfg, kernel, sq, i, first, &mut c);
         w[k] = dv;
         let e = dv.sqrt();
         lo[k] = norms[i] - e;
@@ -155,6 +189,7 @@ fn init_shard(
 fn scan_shard(
     data: &Matrix,
     cfg: &SeedConfig,
+    kernel: Kernel,
     sq: &[f32],
     norms: &[f32],
     state: &mut ShardState,
@@ -169,6 +204,11 @@ fn scan_shard(
 ) -> Counters {
     let mut c = Counters::default();
     let start = state.start;
+    // Shard-local micro-batch gatherer, reused across every partition this
+    // scan touches (the dot-trick path stays fused: signed dot terms admit
+    // no partial-sum cutoff — see `full`).
+    let mut gather = Gather::new(data.cols());
+    let cn_row = data.row(c_new);
     let mut new_cluster = NormCluster::new(cn_norm);
     // Captured points, routed into the new cluster's partitions in ascending
     // index order after the scan (mirroring full.rs): every partition member
@@ -203,35 +243,10 @@ fn scan_shard(
             let mut retained = Vec::with_capacity(members.len());
             let (mut r, mut s) = (0f32, 0f64);
             let (mut lb, mut ub) = (f32::INFINITY, f32::NEG_INFINITY);
-            for &i in &members {
-                c.visited_assign += 1;
-                let k = i - start;
-                // Filter 2 (TIE, Eq. 5), then the point norm filter (Eq. 8),
-                // then the strict min-update.
-                let keep = if 4.0 * w[k] <= dcc {
-                    c.filter2_rejects += 1;
-                    true
-                } else {
-                    let dn = cn_norm - norms[i];
-                    if dn * dn >= w[k] {
-                        c.norm_point_rejects += 1;
-                        true
-                    } else {
-                        let dnew = point_dist(data, cfg, sq, i, c_new, &mut c);
-                        if dnew < w[k] {
-                            w[k] = dnew;
-                            assign[k] = slot as u32;
-                            let e = dnew.sqrt();
-                            lo[k] = norms[i] - e;
-                            up[k] = norms[i] + e;
-                            moved.push(i);
-                            false
-                        } else {
-                            true
-                        }
-                    }
-                };
-                if keep {
+            macro_rules! keep {
+                ($i:expr) => {{
+                    let i = $i;
+                    let k = i - start;
                     retained.push(i);
                     if w[k] > r {
                         r = w[k];
@@ -243,6 +258,98 @@ fn scan_shard(
                     if up[k] > ub {
                         ub = up[k];
                     }
+                }};
+            }
+            if cfg.dot_trick {
+                for &i in &members {
+                    c.visited_assign += 1;
+                    let k = i - start;
+                    // Filter 2 (TIE, Eq. 5), then the point norm filter
+                    // (Eq. 8), then the strict min-update.
+                    if 4.0 * w[k] <= dcc {
+                        c.filter2_rejects += 1;
+                        keep!(i);
+                        continue;
+                    }
+                    let dn = cn_norm - norms[i];
+                    if dn * dn >= w[k] {
+                        c.norm_point_rejects += 1;
+                        keep!(i);
+                        continue;
+                    }
+                    let dnew = point_dist(data, cfg, kernel, sq, i, c_new, &mut c);
+                    if dnew < w[k] {
+                        w[k] = dnew;
+                        assign[k] = slot as u32;
+                        let e = dnew.sqrt();
+                        lo[k] = norms[i] - e;
+                        up[k] = norms[i] + e;
+                        moved.push(i);
+                    } else {
+                        keep!(i);
+                    }
+                }
+            } else {
+                // Batched pass 1: the same filter cascade; every surviving
+                // distance rides a micro-batch with its incumbent weight as
+                // the cutoff. Identical per-point arithmetic and decisions
+                // to full.rs's batched pass (the per-row exit decision is a
+                // function of the row and its incumbent only — batch and
+                // shard boundaries never enter it).
+                for &i in &members {
+                    c.visited_assign += 1;
+                    let k = i - start;
+                    if 4.0 * w[k] <= dcc {
+                        c.filter2_rejects += 1;
+                        continue;
+                    }
+                    let dn = cn_norm - norms[i];
+                    if dn * dn >= w[k] {
+                        c.norm_point_rejects += 1;
+                        continue;
+                    }
+                    c.distances += 1;
+                    c.kernel_calls += 1;
+                    if gather.push(i as u32, data.row(i), w[k]) {
+                        c.kernel_early_exits += gather.flush(kernel, cn_row, |sl, dv| {
+                            apply_update(
+                                sl as usize,
+                                dv,
+                                start,
+                                slot as u32,
+                                norms,
+                                w,
+                                assign,
+                                lo,
+                                up,
+                                &mut moved,
+                            )
+                        });
+                    }
+                }
+                c.kernel_early_exits += gather.flush(kernel, cn_row, |sl, dv| {
+                    apply_update(
+                        sl as usize,
+                        dv,
+                        start,
+                        slot as u32,
+                        norms,
+                        w,
+                        assign,
+                        lo,
+                        up,
+                        &mut moved,
+                    )
+                });
+                // Pass 2: fold retained stats in original member order (the
+                // f64 `sum` pins that order). A member was captured iff its
+                // assignment is the new slot — each point lives in exactly
+                // one shard partition, so no other scan can have set it.
+                for &i in &members {
+                    if assign[i - start] == slot as u32 {
+                        continue;
+                    }
+                    keep!(i);
                 }
             }
             part.members = retained;
@@ -259,6 +366,8 @@ fn scan_shard(
     refresh_part(&mut new_cluster.lower, start, w, lo, up);
     refresh_part(&mut new_cluster.upper, start, w, lo, up);
     state.clusters.push(new_cluster);
+    c.kernel_batches += gather.batches;
+    c.kernel_batch_rows += gather.gathered_rows;
     c
 }
 
@@ -273,6 +382,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let shards = Shards::new(n, cfg.threads.max(1));
     // One pool (shared or private) for the init pass and all k scans.
     let pool = cfg.pool_or_new();
+    let kernel = cfg.kernel.resolve();
     let mut counters = Counters::default();
 
     // Norm precomputation (§4.3), identical to the single-threaded path.
@@ -317,7 +427,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             .map(|(((state, w), l), u)| {
                 let norms = &norms;
                 let sq = &sq;
-                move || init_shard(data, cfg, sq, norms, first, state, w, l, u)
+                move || init_shard(data, cfg, kernel, sq, norms, first, state, w, l, u)
             })
             .collect();
         for c in pool.scoped(tasks) {
@@ -450,7 +560,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                     let sq = &sq;
                     move || {
                         scan_shard(
-                            data, cfg, sq, norms, state, w, a, l, u, d_cc, c_new, slot, cn_norm,
+                            data, cfg, kernel, sq, norms, state, w, a, l, u, d_cc, c_new, slot,
+                            cn_norm,
                         )
                     }
                 })

@@ -27,7 +27,18 @@
 //!
 //! Skipped subtrees provably keep their weights, so the stored
 //! `maxw`/`wsum`/`mass` statistics stay exact without any refresh machinery
-//! — which is what keeps the sampler's proposal distribution valid.
+//! — which is what keeps the sampler's proposal distribution valid. The
+//! forest's cumulative root tables ride the same observation: each scan
+//! reports the first segment whose root statistics changed bits, and only
+//! the suffix from there is re-folded ([`Forest::refresh_cum_from`] —
+//! bit-identical to a full rebuild).
+//!
+//! Leaf scans flow through the [`crate::core::simd`] kernel seam: post-
+//! norm-filter survivors are packed into [`Gather`] micro-batches with the
+//! incumbent weight as each row's early-exit cutoff. Exit decisions are a
+//! per-point function of (row, incumbent), and leaves are scanned whole by
+//! one task, so every kernel counter except the batch-shape tallies stays
+//! bit-identical at any thread count.
 //!
 //! Determinism: the segment split is a function of `n` only and all
 //! sampling is sequential, so runs are bit-identical at any `threads`.
@@ -38,10 +49,12 @@
 //! `dot_trick` and the §4.2.2 `binary_search_sampling` options do not apply
 //! to this variant and are ignored.
 
-use crate::core::distance::{ed, sed};
+use crate::core::batch::Gather;
+use crate::core::distance::ed;
 use crate::core::matrix::Matrix;
 use crate::core::norms::{norms as compute_norms, norms_from};
 use crate::core::shard::Shards;
+use crate::core::simd::Kernel;
 use crate::core::tree::{BuildStats, DrawStats, Forest, Node, SegTree};
 use crate::seeding::counters::Counters;
 use crate::seeding::picker::{CenterPicker, PickCtx};
@@ -69,13 +82,33 @@ struct Scan<'a, T: TraceSink> {
     a: &'a mut [u32],
     c: &'a mut Counters,
     trace: &'a mut T,
+    /// Distance kernel serving the leaf scans.
+    kernel: Kernel,
+    /// Micro-batch gatherer for post-filter leaf survivors (always drained
+    /// before a leaf's statistics re-fold).
+    gather: Gather,
 }
 
 impl<T: TraceSink> Scan<'_, T> {
-    fn tree(&mut self, tree: &mut SegTree) {
+    /// Scans one segment tree; returns whether the root's `mass`/`wsum`
+    /// changed bits — the forest's cumulative tables need re-folding from
+    /// the first segment that reports `true`.
+    fn tree(&mut self, tree: &mut SegTree) -> bool {
         let root = tree.nodes.len() - 1;
-        let (nodes, perm) = (&mut tree.nodes, &tree.perm);
-        self.node(nodes, perm, root);
+        let before = (tree.nodes[root].mass, tree.nodes[root].wsum);
+        {
+            let (nodes, perm) = (&mut tree.nodes, &tree.perm);
+            self.node(nodes, perm, root);
+        }
+        let after = &tree.nodes[root];
+        (after.mass, after.wsum) != before
+    }
+
+    /// Folds the gatherer's execution tallies into the counters; call once
+    /// after the scan's last tree.
+    fn finish(self) {
+        self.c.kernel_batches += self.gather.batches;
+        self.c.kernel_batch_rows += self.gather.gathered_rows;
     }
 
     fn node(&mut self, nodes: &mut [Node], perm: &[u32], idx: usize) {
@@ -111,31 +144,65 @@ impl<T: TraceSink> Scan<'_, T> {
         if nd.is_leaf() {
             let (begin, end, count) = (nd.begin as usize, nd.end as usize, nd.count());
             let d = self.data.cols();
-            let mut maxw = 0f32;
-            let mut wsum = 0f64;
+            // Pass 1: the paper's per-point norm filter (Eq. 8), with
+            // survivors gathered into kernel micro-batches under their
+            // incumbent weight as the early-exit cutoff. Counters and trace
+            // events are charged at gather time, so the accounting and
+            // event stream match the fused scan exactly; the flush sink
+            // applies min-updates in push (= member) order, and an
+            // `INFINITY` marker loses the strict `<` exactly as the full
+            // value would have.
+            debug_assert!(self.gather.is_empty());
+            let mut exits = 0u64;
             for &p in &perm[begin..end] {
                 let i = p as usize;
                 self.trace.access_weight(i);
                 self.c.visited_assign += 1;
-                let wi = &mut self.w[i - self.base];
-                if *wi > 0.0 {
+                let wi = self.w[i - self.base];
+                if wi > 0.0 {
                     self.trace.access_bound(i);
                     let dn = self.cn_norm - self.norms[i];
-                    if dn * dn >= *wi {
+                    if dn * dn >= wi {
                         self.c.norm_point_rejects += 1;
                     } else {
                         self.trace.read_point(i);
                         self.trace.ops(3 * d as u64);
                         self.c.distances += 1;
-                        let dist = sed(self.data.row(i), self.cn);
-                        if dist < *wi {
-                            *wi = dist;
-                            self.a[i - self.base] = self.slot;
+                        self.c.kernel_calls += 1;
+                        if self.gather.push(p, self.data.row(i), wi) {
+                            let (w, a) = (&mut *self.w, &mut *self.a);
+                            let (base, slot) = (self.base, self.slot);
+                            exits += self.gather.flush(self.kernel, self.cn, |s, dist| {
+                                let k = s as usize - base;
+                                if dist < w[k] {
+                                    w[k] = dist;
+                                    a[k] = slot;
+                                }
+                            });
                         }
                     }
                 }
-                maxw = maxw.max(*wi);
-                wsum += *wi as f64;
+            }
+            {
+                let (w, a) = (&mut *self.w, &mut *self.a);
+                let (base, slot) = (self.base, self.slot);
+                exits += self.gather.flush(self.kernel, self.cn, |s, dist| {
+                    let k = s as usize - base;
+                    if dist < w[k] {
+                        w[k] = dist;
+                        a[k] = slot;
+                    }
+                });
+            }
+            self.c.kernel_early_exits += exits;
+            // Pass 2: re-fold the leaf statistics in member order over the
+            // updated weights — the exact fold the fused scan produced.
+            let mut maxw = 0f32;
+            let mut wsum = 0f64;
+            for &p in &perm[begin..end] {
+                let wi = self.w[p as usize - self.base];
+                maxw = maxw.max(wi);
+                wsum += wi as f64;
             }
             let nd = &mut nodes[idx];
             nd.maxw = maxw;
@@ -180,6 +247,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let n = data.rows();
     let d = data.cols();
     let mut counters = Counters::default();
+    let kernel = cfg.kernel.resolve();
 
     // Norms once up front (§4.3; Appendix-B reference points shift the
     // frame, distances stay in the original frame — same rules as `full`).
@@ -257,7 +325,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 .map(|(&(start, len), w)| {
                     move || {
                         for (slot, i) in (start..start + len).enumerate() {
-                            w[slot] = sed(data.row(i), c0);
+                            w[slot] = kernel.sed(data.row(i), c0);
                         }
                     }
                 })
@@ -268,11 +336,12 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 trace.read_point(i);
                 trace.access_weight(i);
                 trace.ops(3 * d as u64);
-                weights[i] = sed(data.row(i), c0);
+                weights[i] = kernel.sed(data.row(i), c0);
             }
         }
         counters.visited_assign += n as u64;
         counters.distances += n as u64;
+        counters.kernel_calls += n as u64;
     }
     if let Some(pool) = &pool {
         let seg_groups = split_lens(&mut forest.segs, groups.ranges().map(|r| r.end - r.start));
@@ -316,6 +385,10 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         let cn = data.row(c_new);
         let cn_norm = norms[c_new];
 
+        // First segment whose root statistics changed bits: the cumulative
+        // tables only need re-folding from there (a per-segment property of
+        // the weight state, so it is thread-count invariant).
+        let mut first_dirty = usize::MAX;
         if let Some(pool) = &pool {
             let seg_groups = split_lens(&mut forest.segs, groups.ranges().map(|r| r.end - r.start));
             let w_parts = split_lens(&mut weights, group_bounds.iter().map(|&(_, l)| l));
@@ -326,7 +399,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 .zip(w_parts)
                 .zip(a_parts)
                 .zip(&group_bounds)
-                .map(|(((trees, w), a), &(base, _))| {
+                .zip(groups.ranges())
+                .map(|((((trees, w), a), &(base, _)), gr)| {
+                    let g0 = gr.start;
                     move || {
                         let mut c = Counters::default();
                         let mut scan = Scan {
@@ -340,17 +415,24 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                             a,
                             c: &mut c,
                             trace: &mut NoTrace,
+                            kernel,
+                            gather: Gather::new(data.cols()),
                         };
-                        for t in trees.iter_mut() {
-                            scan.tree(t);
+                        let mut dirty = usize::MAX;
+                        for (off, t) in trees.iter_mut().enumerate() {
+                            if scan.tree(t) && dirty == usize::MAX {
+                                dirty = g0 + off;
+                            }
                         }
-                        c
+                        scan.finish();
+                        (c, dirty)
                     }
                 })
                 .collect();
             // Merge in task = segment order.
-            for c in pool.scoped(tasks) {
+            for (c, dirty) in pool.scoped(tasks) {
                 counters += c;
+                first_dirty = first_dirty.min(dirty);
             }
         } else {
             let mut scan = Scan {
@@ -364,12 +446,17 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 a: &mut assignments,
                 c: &mut counters,
                 trace,
+                kernel,
+                gather: Gather::new(d),
             };
-            for t in forest.segs.iter_mut() {
-                scan.tree(t);
+            for (s, t) in forest.segs.iter_mut().enumerate() {
+                if scan.tree(t) && s < first_dirty {
+                    first_dirty = s;
+                }
             }
+            scan.finish();
         }
-        forest.rebuild_cum();
+        forest.refresh_cum_from(first_dirty);
         #[cfg(debug_assertions)]
         forest.check_weight_stats(&weights);
     }
@@ -388,6 +475,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::distance::sed;
     use crate::core::rng::{Pcg64, Rng};
     use crate::data::synth::{gmm, GmmSpec};
     use crate::seeding::picker::{D2Picker, Pick, ScriptedPicker};

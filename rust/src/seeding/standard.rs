@@ -14,7 +14,6 @@
 //! every parallel path, the sharded scan emits no per-point trace events
 //! (use `threads = 1` for cache-trace experiments).
 
-use crate::core::distance::{sed, sed_dot};
 use crate::core::matrix::Matrix;
 use crate::core::norms::sqnorms;
 use crate::core::shard::Shards;
@@ -33,6 +32,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let n = data.rows();
     let d = data.cols();
     let mut counters = Counters::default();
+    let kernel = cfg.kernel.resolve();
     let sharded = cfg.threads > 1;
     let pool = if sharded { Some(cfg.pool_or_new()) } else { None };
     let shards = Shards::new(n, cfg.threads.max(1));
@@ -65,9 +65,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                     move || {
                         for (slot, i) in range.enumerate() {
                             w[slot] = if cfg.dot_trick {
-                                sed_dot(data.row(i), c0, sq[i], c0_sq)
+                                kernel.sed_dot(data.row(i), c0, sq[i], c0_sq)
                             } else {
-                                sed(data.row(i), c0)
+                                kernel.sed(data.row(i), c0)
                             };
                         }
                     }
@@ -83,9 +83,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 trace.access_weight(i);
                 trace.ops(3 * d as u64);
                 let w = if cfg.dot_trick {
-                    sed_dot(data.row(i), c0, sq[i], c0_sq)
+                    kernel.sed_dot(data.row(i), c0, sq[i], c0_sq)
                 } else {
-                    sed(data.row(i), c0)
+                    kernel.sed(data.row(i), c0)
                 };
                 weights[i] = w;
                 total += w as f64;
@@ -93,6 +93,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         }
         counters.visited_assign += n as u64;
         counters.distances += n as u64;
+        counters.kernel_calls += n as u64;
     }
 
     while center_indices.len() < cfg.k {
@@ -105,6 +106,14 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         // Full update scan against the new center only (§4.1 optimization).
         let cn = data.row(c_new);
         let cn_sq = if cfg.dot_trick { sq[c_new] } else { 0.0 };
+        // Min-update through the kernel seam: the incumbent weight is the
+        // cutoff, so a candidate whose partial sum already exceeds it skips
+        // its tail — the strict `dist < w` could never have fired (f32 sums
+        // of squares are monotone non-decreasing). The exit decision is a
+        // per-point function of (row, incumbent): counters stay identical
+        // at every thread count. The dot decomposition's terms are signed,
+        // so that path admits no cutoff and stays a plain kernel call.
+        let mut exits = 0u64;
         if let Some(pool) = &pool {
             let w_parts = shards.split_mut(&mut weights);
             let a_parts = shards.split_mut(&mut assignments);
@@ -115,21 +124,33 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 .map(|((range, w), a)| {
                     let sq = &sq;
                     move || {
+                        let mut exits = 0u64;
                         for (k, i) in range.enumerate() {
-                            let dist = if cfg.dot_trick {
-                                sed_dot(data.row(i), cn, sq[i], cn_sq)
+                            if cfg.dot_trick {
+                                let dist = kernel.sed_dot(data.row(i), cn, sq[i], cn_sq);
+                                if dist < w[k] {
+                                    w[k] = dist;
+                                    a[k] = slot;
+                                }
                             } else {
-                                sed(data.row(i), cn)
-                            };
-                            if dist < w[k] {
-                                w[k] = dist;
-                                a[k] = slot;
+                                match kernel.sed_cutoff(data.row(i), cn, w[k]) {
+                                    Some(dist) => {
+                                        if dist < w[k] {
+                                            w[k] = dist;
+                                            a[k] = slot;
+                                        }
+                                    }
+                                    None => exits += 1,
+                                }
                             }
                         }
+                        exits
                     }
                 })
                 .collect();
-            pool.scoped(tasks);
+            for e in pool.scoped(tasks) {
+                exits += e;
+            }
             total = weights.iter().fold(0f64, |t, &w| t + w as f64);
         } else {
             total = 0f64;
@@ -137,20 +158,30 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 trace.read_point(i);
                 trace.access_weight(i);
                 trace.ops(3 * d as u64);
-                let dist = if cfg.dot_trick {
-                    sed_dot(data.row(i), cn, sq[i], cn_sq)
+                if cfg.dot_trick {
+                    let dist = kernel.sed_dot(data.row(i), cn, sq[i], cn_sq);
+                    if dist < weights[i] {
+                        weights[i] = dist;
+                        assignments[i] = slot;
+                    }
                 } else {
-                    sed(data.row(i), cn)
-                };
-                if dist < weights[i] {
-                    weights[i] = dist;
-                    assignments[i] = slot;
+                    match kernel.sed_cutoff(data.row(i), cn, weights[i]) {
+                        Some(dist) => {
+                            if dist < weights[i] {
+                                weights[i] = dist;
+                                assignments[i] = slot;
+                            }
+                        }
+                        None => exits += 1,
+                    }
                 }
                 total += weights[i] as f64;
             }
         }
         counters.visited_assign += n as u64;
         counters.distances += n as u64;
+        counters.kernel_calls += n as u64;
+        counters.kernel_early_exits += exits;
     }
 
     SeedResult {
@@ -167,6 +198,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::distance::sed;
     use crate::core::rng::Pcg64;
     use crate::seeding::picker::{D2Picker, ScriptedPicker};
     use crate::seeding::trace::NoTrace;

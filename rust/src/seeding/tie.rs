@@ -21,8 +21,18 @@
 //! bit-identical at any thread count. Like every parallel path, sharded
 //! scans emit no per-point trace events (use `threads = 1` for cache-trace
 //! experiments).
+//!
+//! Distance arithmetic flows through the [`crate::core::simd`] kernel seam.
+//! Filter-2 survivors of a sequential cluster scan are packed into
+//! [`Gather`] micro-batches with the incumbent weight as each row's
+//! early-exit cutoff; the sharded read-only phase makes the *same* per-point
+//! cutoff decision through [`crate::core::simd::Kernel::sed_cutoff`] (an
+//! `INFINITY` marker in `cand` — distinguishable from the NaN Filter-2
+//! marker), so `kernel_early_exits` stays bit-identical at any thread
+//! count. The Appendix-B dot decomposition has signed terms, so its path
+//! admits no cutoff and stays a fused per-point kernel call.
 
-use crate::core::distance::{sed, sed_dot};
+use crate::core::batch::Gather;
 use crate::core::matrix::Matrix;
 use crate::core::norms::sqnorms;
 use crate::core::sampling::CumTable;
@@ -49,7 +59,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     let n = data.rows();
     let d = data.cols();
     let mut counters = Counters::default();
+    let kernel = cfg.kernel.resolve();
     let pool = if cfg.threads > 1 { Some(cfg.pool_or_new()) } else { None };
+    // One gatherer for the whole run: sequential cluster scans feed their
+    // Filter-2 survivors through it in micro-batches.
+    let mut gather = Gather::new(d);
 
     let sq = if cfg.dot_trick {
         counters.norms += n as u64;
@@ -59,12 +73,13 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     };
     let dist = |a: usize, b: usize, c: &mut Counters, t: &mut T| -> f32 {
         c.distances += 1;
+        c.kernel_calls += 1;
         t.read_point(a);
         t.ops(3 * d as u64);
         if cfg.dot_trick {
-            sed_dot(data.row(a), data.row(b), sq[a], sq[b])
+            kernel.sed_dot(data.row(a), data.row(b), sq[a], sq[b])
         } else {
-            sed(data.row(a), data.row(b))
+            kernel.sed(data.row(a), data.row(b))
         }
     };
 
@@ -90,9 +105,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                 move || {
                     for (slot, i) in range.enumerate() {
                         w[slot] = if cfg.dot_trick {
-                            sed_dot(data.row(i), c0, sq[i], c0_sq)
+                            kernel.sed_dot(data.row(i), c0, sq[i], c0_sq)
                         } else {
-                            sed(data.row(i), c0)
+                            kernel.sed(data.row(i), c0)
                         };
                     }
                 }
@@ -100,6 +115,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             .collect();
         pool.scoped(tasks);
         counters.distances += n as u64;
+        counters.kernel_calls += n as u64;
         // Sequential index-order re-fold: the exact r0/s0 the
         // single-threaded accumulation produces.
         for &w in &weights {
@@ -209,11 +225,14 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
             // Sharded two-phase scan for large clusters: phase A fans the
             // *read-only* Filter-2 + distance computation over the pool —
             // `cand[m]` stays NaN when Filter 2 rejects member `m` (SEDs of
-            // finite data are never NaN), else holds `SED(x_m, c_new)` —
-            // and phase B applies moves/retains sequentially in member
-            // order. Weights are only mutated in phase B and each member is
-            // distinct, so both the filter decisions and the merged state
-            // are bit-identical to the sequential scan at any thread count.
+            // finite data are never NaN), holds `INFINITY` when the
+            // incumbent-weight cutoff proved the candidate out early (the
+            // same per-point decision the sequential Gather path makes),
+            // else holds `SED(x_m, c_new)` — and phase B applies
+            // moves/retains sequentially in member order. Weights are only
+            // mutated in phase B and each member is distinct, so both the
+            // filter decisions and the merged state are bit-identical to
+            // the sequential scan at any thread count.
             let cand = match &pool {
                 Some(pool) if members.len() >= SHARD_MIN_MEMBERS => {
                     let mut cand = vec![f32::NAN; members.len()];
@@ -231,9 +250,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                                     let i = members[m];
                                     if 4.0 * weights[i] > d_cc {
                                         c[out] = if cfg.dot_trick {
-                                            sed_dot(data.row(i), cn_row, sq[i], cn_sq)
+                                            kernel.sed_dot(data.row(i), cn_row, sq[i], cn_sq)
                                         } else {
-                                            sed(data.row(i), cn_row)
+                                            kernel
+                                                .sed_cutoff(data.row(i), cn_row, weights[i])
+                                                .unwrap_or(f32::INFINITY)
                                         };
                                     }
                                 }
@@ -263,7 +284,13 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                         counters.filter2_rejects += 1;
                     } else {
                         counters.distances += 1;
-                        if dnew < weights[i] {
+                        counters.kernel_calls += 1;
+                        if !cfg.dot_trick && dnew.is_infinite() {
+                            // Cutoff marker from phase A: the candidate
+                            // provably lost the strict `<` below without
+                            // finishing its sum.
+                            counters.kernel_early_exits += 1;
+                        } else if dnew < weights[i] {
                             weights[i] = dnew;
                             assignments[i] = slot as u32;
                             moved.push(i);
@@ -279,7 +306,9 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                         cum.push(new_s);
                     }
                 }
-            } else {
+            } else if cfg.dot_trick {
+                // Fused per-point scan: the dot decomposition's signed
+                // terms admit no cutoff, so survivors skip the gatherer.
                 for &i in &members {
                     counters.visited_assign += 1;
                     trace.access_weight(i);
@@ -294,6 +323,65 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
                         }
                     } else {
                         counters.filter2_rejects += 1;
+                    }
+                    retained.push(i);
+                    if weights[i] > new_r {
+                        new_r = weights[i];
+                    }
+                    new_s += weights[i] as f64;
+                    if cfg.binary_search_sampling {
+                        cum.push(new_s);
+                    }
+                }
+            } else {
+                // Batched sequential scan. Pass 1 runs the Filter-2
+                // cascade, charging counters and trace events at gather
+                // time (the event stream matches the fused scan exactly),
+                // and feeds survivors to the kernel in micro-batches with
+                // the incumbent weight as each row's cutoff; the flush sink
+                // applies min-updates in push (= member) order, so `moved`
+                // comes out identical to the fused scan's. Pass 2 folds
+                // retained stats in member order, skipping points the new
+                // center captured — each point lives in exactly one
+                // cluster, so `assignments[i] == slot` is conclusive.
+                let sink = |s: u32,
+                            dnew: f32,
+                            weights: &mut [f32],
+                            assignments: &mut [u32],
+                            moved: &mut Vec<usize>| {
+                    let i = s as usize;
+                    if dnew < weights[i] {
+                        weights[i] = dnew;
+                        assignments[i] = slot as u32;
+                        moved.push(i);
+                    }
+                };
+                let mut exits = 0u64;
+                for &i in &members {
+                    counters.visited_assign += 1;
+                    trace.access_weight(i);
+                    // Filter 2 (Eq. 5): distance needed only if 4·w_i > d_cc.
+                    if 4.0 * weights[i] > d_cc {
+                        counters.distances += 1;
+                        counters.kernel_calls += 1;
+                        trace.read_point(i);
+                        trace.ops(3 * d as u64);
+                        if gather.push(i as u32, data.row(i), weights[i]) {
+                            exits += gather.flush(kernel, cn_row, |s, dv| {
+                                sink(s, dv, &mut weights, &mut assignments, &mut moved)
+                            });
+                        }
+                    } else {
+                        counters.filter2_rejects += 1;
+                    }
+                }
+                exits += gather.flush(kernel, cn_row, |s, dv| {
+                    sink(s, dv, &mut weights, &mut assignments, &mut moved)
+                });
+                counters.kernel_early_exits += exits;
+                for &i in &members {
+                    if assignments[i] == slot as u32 {
+                        continue; // captured by the new center this scan
                     }
                     retained.push(i);
                     if weights[i] > new_r {
@@ -326,6 +414,8 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
         #[cfg(debug_assertions)]
         cs.check_invariants(n, &weights);
     }
+    counters.kernel_batches += gather.batches;
+    counters.kernel_batch_rows += gather.gathered_rows;
 
     SeedResult {
         centers: data.gather_rows(&center_indices),
@@ -341,6 +431,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::distance::sed;
     use crate::core::rng::{Pcg64, Rng};
     use crate::seeding::picker::{D2Picker, ScriptedPicker};
     use crate::seeding::trace::NoTrace;

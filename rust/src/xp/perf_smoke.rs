@@ -29,6 +29,14 @@
 //! fewer points (`visited_total`, the §5.2 accounting) than `full` — the
 //! sublinear-sampling claim, enforced on every CI run. Its counters land in
 //! the artifact's `"seeding"` object.
+//!
+//! The **kernel seam** (`core::simd` + `core::batch`) is tracked by a
+//! top-level `"kernels"` object aggregating every run in the sweep: kernel
+//! calls, best-so-far cutoff early exits, micro-batches flushed and rows
+//! batched (occupancy = rows / (batches × capacity)). Because the cutoff
+//! skips only provably-losing work, the gate additionally requires the
+//! GSAD k=32 cell to show `early_exits > 0` while every exactness check
+//! above still holds — the early exit must be observable *and* free.
 
 use crate::cli::Args;
 use crate::core::rng::Pcg64;
@@ -108,6 +116,8 @@ pub fn run(args: &Args) -> Result<()> {
 
     let mut json_rows: Vec<String> = Vec::new();
     let mut violations: Vec<String> = Vec::new();
+    // Kernel-seam aggregate over every seeding + Lloyd run in the sweep.
+    let (mut k_calls, mut k_exits, mut k_batches, mut k_rows) = (0u64, 0u64, 0u64, 0u64);
     let mut t =
         Table::new(["instance", "k", "strategy", "iters", "distances", "prunes", "vs_naive"]);
 
@@ -126,6 +136,10 @@ pub fn run(args: &Args) -> Result<()> {
                 .with_pool(Arc::clone(&pool));
             let mut picker = D2Picker::new(&mut rng);
             let s = seed_with(&data, &scfg, &mut picker, &mut NoTrace);
+            k_calls += s.counters.kernel_calls;
+            k_batches += s.counters.kernel_batches;
+            k_rows += s.counters.kernel_batch_rows;
+            let mut cell_exits = s.counters.kernel_early_exits;
             let naive_cfg = LloydConfig {
                 max_iters,
                 threads,
@@ -133,6 +147,8 @@ pub fn run(args: &Args) -> Result<()> {
                 ..LloydConfig::default()
             };
             let naive = Row { instance: name, k, result: run_warm(&data, &s, &naive_cfg) };
+            k_calls += naive.result.stats.kernel_calls;
+            cell_exits += naive.result.stats.kernel_early_exits;
             json_rows.push(naive.to_json(Strategy::Naive));
             t.row([
                 name.to_string(),
@@ -152,6 +168,8 @@ pub fn run(args: &Args) -> Result<()> {
                     ..LloydConfig::default()
                 };
                 let row = Row { instance: name, k, result: run_warm(&data, &s, &cfg) };
+                k_calls += row.result.stats.kernel_calls;
+                cell_exits += row.result.stats.kernel_early_exits;
                 json_rows.push(row.to_json(strategy));
                 let (dists, prunes) = (row.result.stats.distances, row.result.stats.prunes_total());
                 let cell = format!("{name}/k{k}/{}", strategy.name());
@@ -177,6 +195,16 @@ pub fn run(args: &Args) -> Result<()> {
                     prunes.to_string(),
                     vs,
                 ]);
+            }
+            k_exits += cell_exits;
+            // Kernel-seam gate: the high-dimensional k=32 cell must show
+            // the best-so-far cutoff actually firing. Exactness is already
+            // enforced above, so a positive count here proves the skipped
+            // tails were provably-losing work, not dropped computations.
+            if name == "GSAD" && k == 32 && cell_exits == 0 {
+                violations.push(format!(
+                    "{name}/k{k}: kernel early-exit counter is 0 — the cutoff seam stopped firing"
+                ));
             }
         }
     }
@@ -238,6 +266,10 @@ pub fn run(args: &Args) -> Result<()> {
         ("rejection", "scripted", &rej_replay),
     ];
     for (variant, picker, r) in &seed_rows {
+        k_calls += r.counters.kernel_calls;
+        k_exits += r.counters.kernel_early_exits;
+        k_batches += r.counters.kernel_batches;
+        k_rows += r.counters.kernel_batch_rows;
         st.row([
             variant.to_string(),
             picker.to_string(),
@@ -259,11 +291,26 @@ pub fn run(args: &Args) -> Result<()> {
     );
 
     let pool_stats = pool.stats();
+    // Micro-batch occupancy: mean fill of the flushed Gather batches
+    // (capacity is `core::batch::BATCH_CAP`); null when nothing batched.
+    let occupancy = if k_batches == 0 {
+        "null".to_string()
+    } else {
+        format!(
+            "{:.4}",
+            k_rows as f64 / (k_batches as f64 * crate::core::batch::BATCH_CAP as f64)
+        )
+    };
+    let kernels_json = format!(
+        "{{\"calls\":{k_calls},\"early_exits\":{k_exits},\"batches\":{k_batches},\
+         \"batch_rows\":{k_rows},\"batch_occupancy\":{occupancy}}}"
+    );
     let json = format!(
-        "{{\n  \"schema\": \"geokmpp-perf-smoke/v2\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
+        "{{\n  \"schema\": \"geokmpp-perf-smoke/v3\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
          \"max_iters\": {max_iters},\n  \"threads\": {threads},\n  \"pool\": {},\n  \
-         \"seeding\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+         \"kernels\": {},\n  \"seeding\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
         pool_stats.to_json(),
+        kernels_json,
         seeding_json,
         json_rows.join(",\n    ")
     );
@@ -273,6 +320,13 @@ pub fn run(args: &Args) -> Result<()> {
     println!("seeding gate ({seed_inst_name}, n={}, k={seed_k}):", fcount(seed_n as u64));
     println!("{}", st.to_aligned());
     println!("wrote {} rows to {out}", json_rows.len());
+    println!(
+        "kernel seam: {} calls, {} early exits, {} batches ({} rows, occupancy {occupancy})",
+        fcount(k_calls),
+        fcount(k_exits),
+        fcount(k_batches),
+        fcount(k_rows)
+    );
     println!("{pool_stats}");
     compare_with_baseline(baseline, &json_rows);
 
@@ -298,7 +352,8 @@ fn seed_json(variant: &str, picker: &str, c: &Counters) -> String {
         "{{\"variant\":\"{variant}\",\"picker\":\"{picker}\",\"visited_total\":{},\
          \"visited_assign\":{},\"visited_headers\":{},\"visited_sampling\":{},\
          \"distances\":{},\"center_distances\":{},\"norms\":{},\
-         \"proposals\":{},\"rejections\":{},\"tree_node_visits\":{}}}",
+         \"proposals\":{},\"rejections\":{},\"tree_node_visits\":{},\
+         \"kernel_calls\":{},\"kernel_early_exits\":{}}}",
         c.visited_total(),
         c.visited_assign,
         c.visited_headers,
@@ -308,7 +363,9 @@ fn seed_json(variant: &str, picker: &str, c: &Counters) -> String {
         c.norms,
         c.proposals,
         c.rejections,
-        c.tree_node_visits
+        c.tree_node_visits,
+        c.kernel_calls,
+        c.kernel_early_exits
     )
 }
 
@@ -379,7 +436,7 @@ mod tests {
         ]))
         .unwrap();
         let body = std::fs::read_to_string(&out).unwrap();
-        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v2\""));
+        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v3\""));
         for s in Strategy::ALL {
             assert!(
                 body.contains(&format!("\"strategy\":\"{}\"", s.name())),
@@ -398,6 +455,12 @@ mod tests {
         assert!(body.contains("\"variant\":\"rejection\",\"picker\":\"scripted\""));
         assert!(body.contains("\"proposals\""));
         assert!(body.contains("\"tree_node_visits\""));
+        // The kernel-seam aggregate rides along in the envelope, and the
+        // sweep's cutoff scans must actually fire somewhere.
+        assert!(body.contains("\"kernels\": {\"calls\":"), "missing kernels: {body}");
+        assert!(body.contains("\"early_exits\""));
+        assert!(body.contains("\"batch_occupancy\""));
+        assert!(body.contains("\"kernel_calls\""));
         // The shared pool's counters ride along in the envelope.
         assert!(body.contains("\"threads\": 2"), "missing threads: {body}");
         assert!(body.contains("\"pool\": {\"workers\":1,"), "missing pool: {body}");

@@ -1,0 +1,150 @@
+//! Distance-kernel conformance at integration level: the lane-mirror
+//! backend must replay the legacy scalar arithmetic bit for bit through the
+//! *whole* pipeline — every seeder variant and every Lloyd strategy, at
+//! multiple thread counts — not just at the per-call unit level (that
+//! matrix lives in `core::simd`'s own tests). Plus the source-level gate
+//! that `unsafe` survives only where the review contract allows it.
+
+use geokmpp::core::rng::Pcg64;
+use geokmpp::core::simd::KernelConfig;
+use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::accel::{self, Strategy};
+use geokmpp::kmeans::lloyd::LloydConfig;
+use geokmpp::seeding::{seed_with, D2Picker, NoTrace, ScriptedPicker, SeedConfig, Variant};
+
+/// Every seeder variant replayed under `kernel=lanes` must reproduce the
+/// `kernel=scalar` run bit for bit — center indices, weights, assignments
+/// and the full counter block (the cutoff's exit decisions are a pure
+/// function of bit-identical partial sums, so even the early-exit counter
+/// must match) — at 1 and 4 threads.
+#[test]
+fn lanes_kernel_replays_scalar_seeding_bit_exactly() {
+    let inst = by_name("GSAD").unwrap(); // d = 128: plenty of lane tails
+    let data = inst.generate_n(2_001); // odd n: uneven shard boundaries
+    let k = 16;
+    let script: Vec<usize> = {
+        let mut rng = Pcg64::seed_from(61);
+        let mut p = D2Picker::new(&mut rng);
+        seed_with(&data, &SeedConfig::new(k, Variant::Standard), &mut p, &mut NoTrace)
+            .center_indices
+    };
+    for variant in [Variant::Standard, Variant::Tie, Variant::Full, Variant::Rejection] {
+        for threads in [1usize, 4] {
+            let run = |kernel: KernelConfig| {
+                let cfg = SeedConfig::new(k, variant).with_threads(threads).with_kernel(kernel);
+                let mut p = ScriptedPicker::new(script.clone());
+                seed_with(&data, &cfg, &mut p, &mut NoTrace)
+            };
+            let scalar = run(KernelConfig::Scalar);
+            let lanes = run(KernelConfig::Lanes);
+            assert_eq!(
+                scalar.center_indices, lanes.center_indices,
+                "{variant:?} t{threads}: centers"
+            );
+            assert_eq!(scalar.weights, lanes.weights, "{variant:?} t{threads}: weights");
+            assert_eq!(
+                scalar.assignments, lanes.assignments,
+                "{variant:?} t{threads}: assignments"
+            );
+            assert_eq!(scalar.counters, lanes.counters, "{variant:?} t{threads}: counters");
+        }
+    }
+}
+
+/// Every Lloyd strategy under `kernel=lanes` must reproduce the
+/// `kernel=scalar` clustering bit for bit: assignments, centers, the full
+/// inertia trace, and the per-strategy stats block — at 1 and 4 threads.
+#[test]
+fn lanes_kernel_replays_scalar_lloyd_bit_exactly() {
+    let inst = by_name("S-NS").unwrap();
+    let data = inst.generate_n(2_001);
+    let k = 16;
+    let mut rng = Pcg64::seed_from(67);
+    let mut picker = D2Picker::new(&mut rng);
+    let s = seed_with(&data, &SeedConfig::new(k, Variant::Full), &mut picker, &mut NoTrace);
+    for strategy in Strategy::ALL {
+        for threads in [1usize, 4] {
+            let run = |kernel: KernelConfig| {
+                let cfg = LloydConfig {
+                    max_iters: 30,
+                    strategy,
+                    threads,
+                    kernel,
+                    ..LloydConfig::default()
+                };
+                accel::run_warm(&data, &s, &cfg)
+            };
+            let scalar = run(KernelConfig::Scalar);
+            let lanes = run(KernelConfig::Lanes);
+            assert_eq!(
+                scalar.assignments, lanes.assignments,
+                "{strategy:?} t{threads}: assignments"
+            );
+            assert_eq!(scalar.centers, lanes.centers, "{strategy:?} t{threads}: centers");
+            assert_eq!(
+                scalar.inertia_trace, lanes.inertia_trace,
+                "{strategy:?} t{threads}: inertia trace"
+            );
+            assert_eq!(scalar.iterations, lanes.iterations, "{strategy:?} t{threads}");
+            assert_eq!(scalar.stats, lanes.stats, "{strategy:?} t{threads}: stats");
+        }
+    }
+}
+
+/// The `auto` backend — whatever the host CPU resolves it to (AVX2, SSE2
+/// or the lane mirror) — must also land on the scalar bits: this is the
+/// cross-machine determinism claim, checked on the machine at hand.
+#[test]
+fn auto_kernel_matches_scalar_end_to_end() {
+    let inst = by_name("GSAD").unwrap();
+    let data = inst.generate_n(1_200);
+    let k = 12;
+    let run = |kernel: KernelConfig| {
+        let cfg = SeedConfig::new(k, Variant::Full).with_kernel(kernel);
+        let mut rng = Pcg64::seed_from(71);
+        let mut p = D2Picker::new(&mut rng);
+        seed_with(&data, &cfg, &mut p, &mut NoTrace)
+    };
+    let scalar = run(KernelConfig::Scalar);
+    let auto = run(KernelConfig::Auto);
+    assert_eq!(scalar.center_indices, auto.center_indices);
+    assert_eq!(scalar.weights, auto.weights);
+    assert_eq!(scalar.assignments, auto.assignments);
+    assert_eq!(scalar.counters, auto.counters);
+}
+
+/// The unsafe-containment invariant, enforced at the source level: after
+/// the SIMD seam landed, `unsafe` code lives ONLY in `core/simd.rs` (the
+/// vector intrinsics, conformance-tested against the scalar mirror) and
+/// `runtime/pool.rs` (the lifetime-erasure transmute, reference-tested).
+/// The CI workflow runs the same grep as a standalone gate.
+#[test]
+fn unsafe_only_lives_in_simd_and_pool() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    // Needles are assembled at runtime so this file never matches itself;
+    // they target code tokens, not the word in prose comments.
+    let needles: Vec<String> =
+        ["fn", "{", "impl", "trait"].iter().map(|t| format!("{} {}", "unsafe", t)).collect();
+    let allowed = ["core/simd.rs", "runtime/pool.rs"];
+    let mut offenders = Vec::new();
+    let mut stack = vec![root.join("src"), root.join("benches"), root.join("tests")];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir).expect("readable source dir") {
+            let path = entry.expect("dir entry").path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension() == Some(std::ffi::OsStr::new("rs"))
+                && !allowed.iter().any(|a| path.ends_with(a))
+            {
+                let body = std::fs::read_to_string(&path).expect("readable file");
+                if needles.iter().any(|n| body.contains(n.as_str())) {
+                    offenders.push(path.display().to_string());
+                }
+            }
+        }
+    }
+    assert!(
+        offenders.is_empty(),
+        "unsafe code outside core/simd.rs and runtime/pool.rs: {offenders:?}"
+    );
+}
