@@ -1,0 +1,129 @@
+"""Unit tests for the trace validator (stdlib only — no jax needed).
+
+The validator guards the `--trace-out` artifact in CI, so its own failure
+modes (unbalanced stacks, time travel, missing fields) are pinned here
+against hand-built event lists.
+"""
+
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+TOOL = pathlib.Path(__file__).resolve().parents[1] / "tools" / "check_trace.py"
+
+spec = importlib.util.spec_from_file_location("check_trace", TOOL)
+check_trace = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(check_trace)
+
+
+def ev(ph, name, ts, tid):
+    return {"name": name, "ph": ph, "ts": ts, "pid": 1, "tid": tid}
+
+
+def meta(tid):
+    return {"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+            "args": {"name": f"lane{tid}"}}
+
+
+def test_well_formed_trace_passes():
+    doc = {"traceEvents": [
+        meta(0), meta(1),
+        ev("B", "seed", 0.0, 0),
+        ev("B", "seed.round", 1.0, 0),
+        ev("E", "seed.round", 2.0, 0),
+        ev("E", "seed", 3.0, 0),
+        ev("B", "pool.batch", 0.5, 1),
+        ev("E", "pool.batch", 2.5, 1),
+    ]}
+    assert check_trace.check(doc) == []
+
+
+def test_interleaved_lanes_balance_independently():
+    # Lane 1's span opens inside lane 0's — fine, stacks are per tid.
+    doc = {"traceEvents": [
+        ev("B", "lloyd.iter", 0.0, 0),
+        ev("B", "lloyd.assign.shard", 1.0, 1),
+        ev("E", "lloyd.assign.shard", 2.0, 1),
+        ev("E", "lloyd.iter", 3.0, 0),
+    ]}
+    assert check_trace.check(doc) == []
+
+
+def test_unbalanced_begin_is_reported():
+    doc = {"traceEvents": [ev("B", "seed", 0.0, 0)]}
+    problems = check_trace.check(doc)
+    assert any("left open" in p for p in problems)
+
+
+def test_mismatched_end_name_is_reported():
+    doc = {"traceEvents": [
+        ev("B", "outer", 0.0, 0),
+        ev("B", "inner", 1.0, 0),
+        ev("E", "outer", 2.0, 0),  # closes "inner"
+        ev("E", "inner", 3.0, 0),
+    ]}
+    problems = check_trace.check(doc)
+    assert any("closes open span" in p for p in problems)
+
+
+def test_end_without_begin_is_reported():
+    doc = {"traceEvents": [ev("E", "seed", 0.0, 0)]}
+    problems = check_trace.check(doc)
+    assert any("no open span" in p for p in problems)
+
+
+def test_time_travel_within_a_lane_is_reported():
+    doc = {"traceEvents": [
+        ev("B", "a", 5.0, 0),
+        ev("E", "a", 4.0, 0),  # ts goes backwards on tid 0
+    ]}
+    problems = check_trace.check(doc)
+    assert any("ts 4.0 <" in p for p in problems)
+
+
+def test_monotonicity_is_per_lane_not_global():
+    # Lane 1 starting before lane 0's latest ts is fine.
+    doc = {"traceEvents": [
+        ev("B", "a", 10.0, 0),
+        ev("B", "b", 1.0, 1),
+        ev("E", "b", 2.0, 1),
+        ev("E", "a", 11.0, 0),
+    ]}
+    assert check_trace.check(doc) == []
+
+
+def test_empty_trace_is_reported():
+    assert check_trace.check({"traceEvents": [meta(0)]})
+    assert check_trace.check({"traceEvents": "nope"})
+    assert check_trace.check({})
+
+
+def test_missing_fields_are_reported():
+    doc = {"traceEvents": [{"ph": "B", "ts": 0.0, "tid": 0}]}
+    assert any("missing span name" in p for p in check_trace.check(doc))
+    doc = {"traceEvents": [{"name": "a", "ph": "B", "tid": 0}]}
+    assert any("bad ts" in p for p in check_trace.check(doc))
+    doc = {"traceEvents": [{"name": "a", "ph": "B", "ts": 0.0}]}
+    assert any("bad tid" in p for p in check_trace.check(doc))
+
+
+def test_cli_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"traceEvents": [
+        ev("B", "seed", 0.0, 0), ev("E", "seed", 1.0, 0)]}))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [ev("B", "seed", 0.0, 0)]}))
+    garbled = tmp_path / "garbled.json"
+    garbled.write_text("{not json")
+    run = lambda p: subprocess.run(
+        [sys.executable, str(TOOL), str(p)], capture_output=True, text=True
+    )
+    assert run(good).returncode == 0
+    assert "ok" in run(good).stdout
+    assert run(bad).returncode == 1
+    assert run(garbled).returncode == 1
+    assert subprocess.run(
+        [sys.executable, str(TOOL)], capture_output=True
+    ).returncode == 2

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Structural validator for geokmpp Chrome trace-event JSON (stdlib only).
+
+Checks the `--trace-out` artifact emitted by `geokmpp::obs::Recorder`:
+
+* the file is valid JSON with a ``traceEvents`` array;
+* every event carries the fields its phase requires (``B``/``E`` need
+  ``name``/``ts``/``tid``; metadata ``M`` events are skipped);
+* per ``tid``, ``B``/``E`` events form a stack-balanced sequence whose end
+  names match the innermost open begin (proper nesting, nothing left open);
+* per ``tid``, timestamps are non-decreasing (the recorder stamps under the
+  lane lock, so a violation means a real recorder bug, not scheduling).
+
+Exit status 0 on a well-formed trace, 1 with a diagnostic otherwise —
+CI runs this against the perf-smoke trace on every push.
+"""
+
+import json
+import sys
+
+
+def check(doc):
+    """Returns a list of problems (empty = well-formed)."""
+    problems = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["traceEvents missing or not a list"]
+    stacks = {}  # tid -> open span names
+    last_ts = {}  # tid -> last seen ts
+    counts = {}  # tid -> number of B/E events
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            problems.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph == "M":
+            continue  # metadata (thread names): no ts, nothing to balance
+        if ph not in ("B", "E"):
+            problems.append(f"event {i}: unexpected phase {ph!r}")
+            continue
+        name, ts, tid = ev.get("name"), ev.get("ts"), ev.get("tid")
+        if not isinstance(name, str) or not name:
+            problems.append(f"event {i}: missing span name")
+            continue
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({name}): bad ts {ts!r}")
+            continue
+        if not isinstance(tid, int):
+            problems.append(f"event {i} ({name}): bad tid {tid!r}")
+            continue
+        if ts < last_ts.get(tid, 0.0):
+            problems.append(
+                f"event {i} ({name}): ts {ts} < {last_ts[tid]} on tid {tid}"
+            )
+        last_ts[tid] = ts
+        counts[tid] = counts.get(tid, 0) + 1
+        stack = stacks.setdefault(tid, [])
+        if ph == "B":
+            stack.append(name)
+        elif not stack:
+            problems.append(f"event {i}: E {name!r} on tid {tid} with no open span")
+        elif stack[-1] != name:
+            problems.append(
+                f"event {i}: E {name!r} on tid {tid} closes open span {stack[-1]!r}"
+            )
+        else:
+            stack.pop()
+    for tid, stack in sorted(stacks.items()):
+        if stack:
+            problems.append(f"tid {tid}: {len(stack)} spans left open ({stack[-1]!r} innermost)")
+    if not counts:
+        problems.append("no B/E events at all — the recorder saw no spans")
+    return problems
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(f"usage: {argv[0]} trace.json", file=sys.stderr)
+        return 2
+    path = argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: not readable as JSON: {e}", file=sys.stderr)
+        return 1
+    problems = check(doc)
+    if problems:
+        print(f"{path}: malformed trace:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    events = doc["traceEvents"]
+    lanes = {e.get("tid") for e in events if e.get("ph") in ("B", "E")}
+    spans = sum(1 for e in events if e.get("ph") == "B")
+    print(f"{path}: ok — {spans} spans across {len(lanes)} lanes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

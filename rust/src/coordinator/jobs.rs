@@ -71,7 +71,7 @@ impl JobSpec {
     /// should prefer [`JobSpec::run_with_pool`] so seeding and every Lloyd
     /// iteration share one set of parked workers.
     pub fn run(&self) -> JobResult {
-        self.run_inner(None)
+        self.run_inner(None, &crate::obs::Obs::NoObs)
     }
 
     /// Runs the job on a shared persistent [`WorkerPool`]: both the seeding
@@ -79,12 +79,27 @@ impl JobSpec {
     /// workers. The shard split is still governed by [`JobSpec::threads`],
     /// so results are bit-identical to [`JobSpec::run`].
     pub fn run_with_pool(&self, pool: &Arc<WorkerPool>) -> JobResult {
-        self.run_inner(Some(pool))
+        self.run_inner(Some(pool), &crate::obs::Obs::NoObs)
     }
 
-    fn run_inner(&self, pool: Option<&Arc<WorkerPool>>) -> JobResult {
+    /// Like [`JobSpec::run_with_pool`] with an observation handle threaded
+    /// into both phases: `seed`/`seed.round` and `lloyd.*` spans plus the
+    /// per-iteration samples land on the recorder. Observation never changes
+    /// results (see [`crate::obs`]).
+    ///
+    /// Phase spans record on lane 0, so share one recorder across
+    /// *concurrent* jobs only if an interleaved lane-0 timeline is
+    /// acceptable ([`crate::coordinator::scheduler::Scheduler`] therefore
+    /// keeps job phases unobserved and records job-level spans instead).
+    pub fn run_with_pool_obs(&self, pool: &Arc<WorkerPool>, obs: &crate::obs::Obs) -> JobResult {
+        self.run_inner(Some(pool), obs)
+    }
+
+    fn run_inner(&self, pool: Option<&Arc<WorkerPool>>, obs: &crate::obs::Obs) -> JobResult {
         let mut rng = self.rng();
-        let mut cfg = SeedConfig::new(self.k, self.variant).with_threads(self.threads.max(1));
+        let mut cfg = SeedConfig::new(self.k, self.variant)
+            .with_threads(self.threads.max(1))
+            .with_obs(obs.clone());
         if let Some(pool) = pool {
             cfg = cfg.with_pool(Arc::clone(pool));
         }
@@ -96,6 +111,7 @@ impl JobSpec {
                 strategy: phase.strategy,
                 threads: self.threads.max(1),
                 pool: pool.map(Arc::clone),
+                obs: obs.clone(),
                 ..LloydConfig::default()
             };
             let started = std::time::Instant::now();

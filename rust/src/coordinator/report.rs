@@ -4,8 +4,17 @@ use crate::coordinator::jobs::JobResult;
 use crate::metrics::lloyd::LloydStats;
 use crate::metrics::table::{fnum, Table};
 use crate::metrics::timer::Stats;
+use crate::obs::Histogram;
 use crate::seeding::{Counters, Variant};
 use std::collections::BTreeMap;
+
+/// Renders a latency-histogram quantile (ns) as seconds, `-` when empty.
+fn quantile_s(h: &Histogram, p: f64) -> String {
+    match h.quantile(p) {
+        Some(ns) => fnum(ns as f64 / 1e9, 5),
+        None => "-".into(),
+    }
+}
 
 /// Aggregated clustering-phase metrics for one cell (jobs that ran a
 /// [`crate::coordinator::jobs::LloydPhase`]).
@@ -19,6 +28,10 @@ pub struct LloydCell {
     pub mean_inertia: f64,
     /// Mean Lloyd iterations.
     pub mean_iterations: f64,
+    /// Per-repetition clustering latency histogram (ns) — the quantile
+    /// source for the `lloyd_p50`/`lloyd_p99` columns (means stay in
+    /// [`LloydCell::time`]).
+    pub latency: Histogram,
 }
 
 /// Aggregated metrics for one (instance, k, variant) cell.
@@ -32,6 +45,9 @@ pub struct Cell {
     pub mean_cost: f64,
     /// Number of repetitions aggregated.
     pub reps: usize,
+    /// Per-repetition seeding latency histogram (ns) — the quantile source
+    /// for the `seed_p50`/`seed_p99` columns (means stay in [`Cell::time`]).
+    pub seed_latency: Histogram,
     /// Clustering-phase aggregate, when the cell's jobs ran one.
     pub lloyd: Option<LloydCell>,
 }
@@ -58,10 +74,12 @@ impl Report {
             let mut counters = Counters::default();
             let mut cost = 0f64;
             let mut times = Vec::with_capacity(reps);
+            let mut seed_latency = Histogram::new();
             for r in &rs {
                 counters.add(&r.counters);
                 cost += r.cost;
                 times.push(r.elapsed.as_secs_f64());
+                seed_latency.record(r.elapsed.as_nanos() as u64);
             }
             // Mean counters.
             let div = reps as u64;
@@ -87,11 +105,13 @@ impl Report {
                 let mut inertia = 0f64;
                 let mut iters = 0f64;
                 let mut ltimes = Vec::with_capacity(lrs.len());
+                let mut latency = Histogram::new();
                 for l in &lrs {
                     stats += l.stats;
                     inertia += l.inertia;
                     iters += l.iterations as f64;
                     ltimes.push(l.elapsed.as_secs_f64());
+                    latency.record(l.elapsed.as_nanos() as u64);
                 }
                 stats.div(lrs.len() as u64);
                 LloydCell {
@@ -99,6 +119,7 @@ impl Report {
                     time: Stats::of(&ltimes),
                     mean_inertia: inertia / lrs.len() as f64,
                     mean_iterations: iters / lrs.len() as f64,
+                    latency,
                 }
             });
             cells.insert(
@@ -108,6 +129,7 @@ impl Report {
                     time: Stats::of(&times),
                     mean_cost: cost / reps as f64,
                     reps,
+                    seed_latency,
                     lloyd,
                 },
             );
@@ -151,7 +173,11 @@ impl Report {
     /// comparisons show *which* geometric filter paid for the savings, and
     /// `sampling_mix` does the same for the rejection seeder
     /// (`proposals/rejections/tree_node_visits`, `-` for tree-free
-    /// variants).
+    /// variants). The `seed_p50`/`seed_p99` and `lloyd_p50`/`lloyd_p99`
+    /// columns are per-repetition latency quantiles in seconds from the
+    /// cell's log-bucketed histograms ([`crate::obs::Histogram`] — upper
+    /// bucket edges, ≤ ~6% above the true order statistic); the `time_s`
+    /// mean columns stay exact.
     pub fn to_table(&self) -> Table {
         let mut t = Table::new([
             "instance",
@@ -159,6 +185,8 @@ impl Report {
             "variant",
             "reps",
             "time_s",
+            "seed_p50",
+            "seed_p99",
             "visited",
             "distances",
             "center_dists",
@@ -169,16 +197,22 @@ impl Report {
             "lloyd_prunes",
             "lloyd_prune_mix",
             "inertia",
+            "lloyd_p50",
+            "lloyd_p99",
         ]);
         for ((inst, k, variant), c) in &self.cells {
-            let (ld, lp, lm, li) = match &c.lloyd {
+            let (ld, lp, lm, li, lp50, lp99) = match &c.lloyd {
                 Some(l) => (
                     l.stats.distances.to_string(),
                     l.stats.prunes_total().to_string(),
                     l.stats.prune_mix(),
                     fnum(l.mean_inertia, 2),
+                    quantile_s(&l.latency, 0.50),
+                    quantile_s(&l.latency, 0.99),
                 ),
-                None => ("-".into(), "-".into(), "-".into(), "-".into()),
+                None => {
+                    ("-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into())
+                }
             };
             t.row([
                 inst.clone(),
@@ -186,6 +220,8 @@ impl Report {
                 variant.to_string(),
                 c.reps.to_string(),
                 fnum(c.time.mean, 5),
+                quantile_s(&c.seed_latency, 0.50),
+                quantile_s(&c.seed_latency, 0.99),
                 c.counters.visited_total().to_string(),
                 c.counters.distances.to_string(),
                 c.counters.center_distances.to_string(),
@@ -196,6 +232,8 @@ impl Report {
                 lp,
                 lm,
                 li,
+                lp50,
+                lp99,
             ]);
         }
         t
@@ -265,6 +303,26 @@ mod tests {
         // Tree-free variants render `-` in the sampling column.
         let t2 = Report::aggregate(&[result(Variant::Tie, 0, 1)]).to_table();
         assert_eq!(t2.rows()[0][col], "-");
+    }
+
+    /// The latency-quantile columns come from the cells' log-bucketed
+    /// histograms: within ~6% of the true order statistic, in seconds, and
+    /// `-` for phases that did not run.
+    #[test]
+    fn latency_quantile_columns_render() {
+        let rs = vec![result(Variant::Tie, 0, 1), result(Variant::Tie, 1, 1)];
+        let rep = Report::aggregate(&rs);
+        let cell = rep.cell("i", 4, Variant::Tie).unwrap();
+        assert_eq!(cell.seed_latency.count(), 2);
+        let t = rep.to_table();
+        let p50 = t.headers().iter().position(|h| h == "seed_p50").unwrap();
+        // elapsed are 10 ms and 11 ms → p50 is the 10 ms bucket's upper edge.
+        let v: f64 = t.rows()[0][p50].parse().unwrap();
+        assert!((0.010..=0.0107).contains(&v), "seed_p50 = {v}");
+        // Seeding-only rows render `-` in both lloyd quantile columns.
+        assert_eq!(t.rows()[0].last().unwrap(), "-");
+        let p99l = t.headers().iter().position(|h| h == "lloyd_p50").unwrap();
+        assert_eq!(t.rows()[0][p99l], "-");
     }
 
     #[test]

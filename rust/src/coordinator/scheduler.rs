@@ -4,24 +4,48 @@
 //! widest job in the batch and reuses it for *every* job it consumes — a
 //! coordinator sweep parks its shard workers once instead of respawning
 //! them per job (and per Lloyd iteration).
+//!
+//! # Observation
+//!
+//! With a recorder attached ([`Scheduler::with_obs`]) the scheduler records
+//! the admission/queue/run lifecycle of every job: a `job.admit` span on
+//! lane 0 (the producer) around each bounded-queue push, the
+//! `job.queue_wait_ns` histogram (enqueue → pop), a `job.run` span on lane
+//! `1 + w` per scheduler worker `w`, and `job.seed_ns` / `job.lloyd_ns`
+//! latency histograms from each result. Job *phases* stay unobserved here:
+//! phase spans record on lane 0, and concurrent jobs sharing one recorder
+//! would interleave there — observe a single job's internals via
+//! [`JobSpec::run_with_pool_obs`] instead. Observation never changes
+//! results or stats (see [`crate::obs`]).
 
 use crate::coordinator::jobs::{JobResult, JobSpec};
 use crate::coordinator::queue::BoundedQueue;
+use crate::obs::Obs;
 use crate::runtime::pool::{PoolStats, WorkerPool};
 use std::sync::{Arc, Mutex};
 use std::thread;
+use std::time::Instant;
 
 /// A fixed-size worker pool consuming [`JobSpec`]s.
 pub struct Scheduler {
     workers: usize,
     queue_capacity: usize,
+    obs: Obs,
 }
 
 impl Scheduler {
     /// Creates a scheduler with `workers` threads (≥ 1) and a bounded input
     /// queue of `queue_capacity`.
     pub fn new(workers: usize, queue_capacity: usize) -> Self {
-        Self { workers: workers.max(1), queue_capacity: queue_capacity.max(1) }
+        Self { workers: workers.max(1), queue_capacity: queue_capacity.max(1), obs: Obs::NoObs }
+    }
+
+    /// Attaches an observation handle recording the job lifecycle (see the
+    /// module docs for the span/histogram taxonomy). Size the recorder with
+    /// at least `1 + workers` lanes so every worker gets its own timeline.
+    pub fn with_obs(mut self, obs: Obs) -> Self {
+        self.obs = obs;
+        self
     }
 
     /// Runs all jobs to completion, returning results in completion order.
@@ -37,17 +61,28 @@ impl Scheduler {
         // the batch; jobs narrower than the pool still split by their own
         // `threads` (the split, not the pool, governs results).
         let lanes = specs.iter().map(|s| s.threads.max(1)).max().unwrap_or(1);
-        let queue: BoundedQueue<JobSpec> = BoundedQueue::new(self.queue_capacity);
+        // Queue items carry their enqueue instant so the consumer side can
+        // histogram the admission-to-pop wait without a side channel.
+        let queue: BoundedQueue<(JobSpec, Instant)> = BoundedQueue::new(self.queue_capacity);
         let results = Arc::new(Mutex::new(Vec::with_capacity(specs.len())));
 
         let mut handles = Vec::with_capacity(self.workers);
-        for _ in 0..self.workers {
+        for w in 0..self.workers {
             let q = queue.clone();
             let out = Arc::clone(&results);
+            let obs = self.obs.clone();
             handles.push(thread::spawn(move || {
                 let pool = Arc::new(WorkerPool::new(lanes));
-                while let Some(spec) = q.pop() {
-                    let result = spec.run_with_pool(&pool);
+                while let Some((spec, enqueued)) = q.pop() {
+                    obs.record_ns("job.queue_wait_ns", enqueued.elapsed().as_nanos() as u64);
+                    let result = {
+                        let _run_span = obs.span(1 + w, "job.run");
+                        spec.run_with_pool(&pool)
+                    };
+                    obs.record_ns("job.seed_ns", result.elapsed.as_nanos() as u64);
+                    if let Some(l) = &result.lloyd {
+                        obs.record_ns("job.lloyd_ns", l.elapsed.as_nanos() as u64);
+                    }
                     out.lock().unwrap().push(result);
                 }
                 pool.stats()
@@ -55,7 +90,9 @@ impl Scheduler {
         }
         // Producer side: backpressure via the bounded queue.
         for spec in specs {
-            queue.push(spec).ok();
+            let admit_span = self.obs.span(0, "job.admit");
+            queue.push((spec, Instant::now())).ok();
+            drop(admit_span);
         }
         queue.close();
         let mut stats = PoolStats::default();
@@ -157,6 +194,28 @@ mod tests {
         assert_eq!(stats.workers, 3);
         assert!(stats.dispatches >= 12, "dispatches={}", stats.dispatches);
         assert!(stats.tasks >= 24, "tasks={}", stats.tasks);
+    }
+
+    /// An attached recorder sees the whole job lifecycle (admit spans,
+    /// queue-wait and latency histograms, per-worker run spans) while the
+    /// results stay bit-identical to the unobserved runs.
+    #[test]
+    fn observed_run_matches_serial_and_records_lifecycle() {
+        let serial: Vec<f64> = specs(6).into_iter().map(|s| s.run().cost).collect();
+        let obs = Obs::recording(3); // lane 0 (producer) + 2 worker lanes
+        let (results, _) = Scheduler::new(2, 2).with_obs(obs.clone()).run_with_stats(specs(6));
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert_eq!(r.cost, serial[r.rep as usize], "observation changed a result");
+        }
+        let rec = obs.recorder().unwrap();
+        assert!(rec.balanced(), "unbalanced job spans");
+        assert_eq!(rec.histogram("job.queue_wait_ns").unwrap().count(), 6);
+        assert_eq!(rec.histogram("job.seed_ns").unwrap().count(), 6);
+        assert!(rec.histogram("job.lloyd_ns").is_none(), "seeding-only jobs");
+        let json = rec.to_chrome_json();
+        assert!(json.contains("\"job.admit\""));
+        assert!(json.contains("\"job.run\""));
     }
 
     #[test]

@@ -245,7 +245,16 @@ fn engine(
     // scope fan-out respawned ~iters×shards OS threads per run.
     let pool = match &cfg.pool {
         Some(p) => Arc::clone(p),
-        None => Arc::new(WorkerPool::new(cfg.threads.max(1))),
+        None => {
+            let pool = Arc::new(WorkerPool::new(cfg.threads.max(1)));
+            if cfg.obs.enabled() {
+                // A privately created pool inherits the config's recorder so
+                // dispatch/batch spans land in the same timeline; shared
+                // pools are the caller's to wire via `WorkerPool::set_obs`.
+                pool.set_obs(cfg.obs.clone());
+            }
+            pool
+        }
     };
 
     // Per-point norms for the norm filter — reused from the seeder when it
@@ -314,8 +323,19 @@ fn engine(
     let mut csorted: Vec<(f64, u32)> =
         if strategy == Strategy::Annulus { Vec::with_capacity(k) } else { Vec::new() };
 
+    // Observation is passive and phase-granular: spans per iteration and
+    // per assignment shard, one `IterSample` (counter deltas + wall ns) per
+    // iteration. Under `NoObs` every hook is a no-op; either way no counter,
+    // assignment or centroid bit changes (pinned by `tests/obs.rs`).
+    let obs = &cfg.obs;
+    let lanes = pool.lanes();
+    let _lloyd_span = obs.span(0, "lloyd");
+    let mut prev_stats = stats;
+
     for _ in 0..cfg.max_iters {
         iterations += 1;
+        let iter_sw = obs.enabled().then(std::time::Instant::now);
+        let _iter_span = obs.span(0, "lloyd.iter");
 
         // --- Center geometry (sequential): norms, separations, cc matrix.
         if bounded {
@@ -358,6 +378,7 @@ fn engine(
 
         // --- Assignment step: one worker per shard, disjoint &mut state.
         {
+            let _assign_span = obs.span(0, "lloyd.assign");
             let ctx = IterCtx {
                 data,
                 centers: &centers,
@@ -394,9 +415,15 @@ fn engine(
                 .zip(t_parts)
                 .zip(u_parts)
                 .zip(l_parts.into_iter().zip(m_parts))
-                .map(|(((((range, a), di), ti), u), (l, m))| {
+                .enumerate()
+                .map(|(si, (((((range, a), di), ti), u), (l, m)))| {
                     let ctx = &ctx;
+                    // Task si runs on pool lane si % lanes (the pool's fixed
+                    // shard→worker assignment), so the shard span lands on
+                    // the lane that actually executed it.
+                    let lane = si % lanes;
                     move || {
+                        let _shard_span = obs.span(lane, "lloyd.assign.shard");
                         let mut view = ShardView {
                             start: range.start,
                             assign: a,
@@ -433,6 +460,13 @@ fn engine(
             let prev = inertia_trace[inertia_trace.len() - 2];
             if prev - cost <= cfg.tol * prev.abs().max(1e-12) {
                 converged = true;
+                if let Some(sw) = iter_sw {
+                    obs.iter_sample(crate::obs::IterSample {
+                        iteration: iterations as u64,
+                        stats: stats.delta_since(&prev_stats),
+                        wall_ns: sw.elapsed().as_nanos() as u64,
+                    });
+                }
                 break;
             }
         }
@@ -440,6 +474,7 @@ fn engine(
         // --- Update step: the naive reference's sequential f64 centroid
         // accumulation (empty clusters keep their stale center), plus the
         // per-center movement the bound maintenance needs.
+        let update_span = obs.span(0, "lloyd.update");
         let mut sums = vec![0f64; k * d];
         let mut counts = vec![0usize; k];
         for i in 0..n {
@@ -480,6 +515,15 @@ fn engine(
                     dmax.1 = dj;
                 }
             }
+        }
+        drop(update_span);
+        if let Some(sw) = iter_sw {
+            obs.iter_sample(crate::obs::IterSample {
+                iteration: iterations as u64,
+                stats: stats.delta_since(&prev_stats),
+                wall_ns: sw.elapsed().as_nanos() as u64,
+            });
+            prev_stats = stats;
         }
     }
 

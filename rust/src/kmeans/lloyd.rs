@@ -43,6 +43,13 @@ pub struct LloydConfig {
     /// never changes scan decisions, so stats stay backend-invariant
     /// (up to f32 distance bits feeding the inertia trace).
     pub kernel: KernelConfig,
+    /// Observation handle ([`crate::obs::Obs`]). The default
+    /// [`crate::obs::Obs::NoObs`] records nothing; a recording handle adds
+    /// `lloyd` / `lloyd.iter` / `lloyd.assign` / `lloyd.update` spans plus
+    /// one per-iteration [`crate::obs::IterSample`] — all passive, with no
+    /// effect on assignments, centers, inertia or [`LloydStats`]
+    /// (pinned by `tests/obs.rs`).
+    pub obs: crate::obs::Obs,
 }
 
 impl Default for LloydConfig {
@@ -54,6 +61,7 @@ impl Default for LloydConfig {
             threads: 1,
             pool: None,
             kernel: KernelConfig::Scalar,
+            obs: crate::obs::Obs::NoObs,
         }
     }
 }
@@ -103,9 +111,15 @@ fn reference(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
     let mut iterations = 0;
     let mut stats = LloydStats::default();
 
+    let obs = &cfg.obs;
+    let _lloyd_span = obs.span(0, "lloyd");
+    let mut prev_stats = stats;
     for _ in 0..cfg.max_iters {
         iterations += 1;
+        let iter_sw = obs.enabled().then(std::time::Instant::now);
+        let _iter_span = obs.span(0, "lloyd.iter");
         // Assignment step.
+        let assign_span = obs.span(0, "lloyd.assign");
         let mut cost = 0f64;
         for i in 0..n {
             let row = data.row(i);
@@ -124,18 +138,27 @@ fn reference(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
         stats.visited_points += n as u64;
         stats.distances += (n * k) as u64;
         inertia_trace.push(cost);
+        drop(assign_span);
 
         // Convergence check against the previous iteration.
         if inertia_trace.len() >= 2 {
             let prev = inertia_trace[inertia_trace.len() - 2];
             if prev - cost <= cfg.tol * prev.abs().max(1e-12) {
                 converged = true;
+                if let Some(sw) = iter_sw {
+                    obs.iter_sample(crate::obs::IterSample {
+                        iteration: iterations as u64,
+                        stats: stats.delta_since(&prev_stats),
+                        wall_ns: sw.elapsed().as_nanos() as u64,
+                    });
+                }
                 break;
             }
         }
 
         // Update step: centroids; empty clusters keep their old center
         // (the standard safeguard).
+        let update_span = obs.span(0, "lloyd.update");
         let mut sums = vec![0f64; k * d];
         let mut counts = vec![0usize; k];
         for i in 0..n {
@@ -153,6 +176,15 @@ fn reference(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
             for (c, s) in row.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
                 *c = (*s / counts[j] as f64) as f32;
             }
+        }
+        drop(update_span);
+        if let Some(sw) = iter_sw {
+            obs.iter_sample(crate::obs::IterSample {
+                iteration: iterations as u64,
+                stats: stats.delta_since(&prev_stats),
+                wall_ns: sw.elapsed().as_nanos() as u64,
+            });
+            prev_stats = stats;
         }
     }
 

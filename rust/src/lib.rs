@@ -38,6 +38,7 @@ pub mod core;
 pub mod data;
 pub mod kmeans;
 pub mod metrics;
+pub mod obs;
 pub mod prop;
 pub mod runtime;
 pub mod seeding;

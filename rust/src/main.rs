@@ -8,10 +8,12 @@
 //!                [--xla]
 //!                [--appendix-a]
 //!                [--refpoint origin|mean|median|positive|mean-norm]
+//!                [--trace-out trace.json]
 //! geokmpp kmeans --instance NAME --k K [--iters N] [--threads T|auto]
 //!                [--lloyd-strategy naive|hamerly|annulus|yinyang|elkan]
 //!                [--kernel scalar|auto|lanes|avx2]
 //!                [--xla]
+//!                [--trace-out trace.json]
 //! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
 //! geokmpp info
 //! ```
@@ -34,6 +36,13 @@
 //! (`hamerly`, `annulus`, `yinyang`, `elkan`) skip most distance
 //! computations (the printed clustering counters show how many, and which
 //! filter — bound, per-center, group, annulus window or norm — paid for it).
+//!
+//! `--trace-out FILE` writes a Chrome trace-event JSON timeline of the run
+//! (`geokmpp::obs` spans: seeding rounds, Lloyd iterations with their
+//! assign/update phases and per-shard scans, pool dispatches) viewable in
+//! `chrome://tracing` or <https://ui.perfetto.dev>. Observation never
+//! changes results. `kmeans` additionally prints a per-iteration telemetry
+//! table (prune/distance deltas and wall time per Lloyd iteration).
 
 use anyhow::{bail, Context, Result};
 use geokmpp::cli::Args;
@@ -45,10 +54,21 @@ use geokmpp::data::{io, stats};
 use geokmpp::kmeans::accel::{run_warm, Strategy};
 use geokmpp::kmeans::lloyd::LloydConfig;
 use geokmpp::metrics::table::{fcount, fnum};
+use geokmpp::obs::{Obs, Recorder};
 use geokmpp::runtime::batcher::{hybrid_tie_seed, lloyd_xla, BatchPolicy};
 use geokmpp::runtime::{Executor, WorkerPool};
 use geokmpp::seeding::{seed_with, D2Picker, NoTrace, RefPoint, SeedConfig, Variant};
 use std::sync::Arc;
+
+/// Writes the recorder's timeline as Chrome trace-event JSON, attaching the
+/// pool counters (per-lane busy/queue-wait arrays included) as a top-level
+/// `pool` object next to `traceEvents`.
+fn write_trace(rec: &Recorder, pool: &WorkerPool, path: &str) -> Result<()> {
+    rec.set_extra_json("pool", pool.stats().to_json());
+    std::fs::write(path, rec.to_chrome_json()).with_context(|| format!("writing {path}"))?;
+    println!("trace             {path}");
+    Ok(())
+}
 
 fn main() {
     let args = match Args::from_env() {
@@ -125,11 +145,20 @@ fn cmd_seed(args: &Args) -> Result<()> {
     let mut rng = Pcg64::seed_from(seed_v);
     // One persistent pool for every sharded scan in this run.
     let pool = Arc::new(WorkerPool::new(threads));
+    // A recorder only when a trace was requested — `seed` stays hook-free
+    // otherwise (lane 0 = caller, one lane per pool worker).
+    let trace_out = args.get("trace-out");
+    let obs = if trace_out.is_some() { Obs::recording(threads + 1) } else { Obs::NoObs };
+    if obs.enabled() {
+        pool.set_obs(obs.clone());
+    }
 
     let result = if args.has("xla") {
         // open_or_scalar logs the real cause if it has to fall back.
-        let mut ex =
-            Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool)).with_kernel(kernel);
+        let mut ex = Executor::open_or_scalar(threads)
+            .with_pool(Arc::clone(&pool))
+            .with_kernel(kernel)
+            .with_obs(obs.clone());
         if variant != Variant::Tie {
             eprintln!("note: --xla uses the hybrid TIE path");
         }
@@ -139,7 +168,8 @@ fn cmd_seed(args: &Args) -> Result<()> {
         let mut cfg = SeedConfig::new(k, variant)
             .with_threads(threads)
             .with_pool(Arc::clone(&pool))
-            .with_kernel(kernel);
+            .with_kernel(kernel)
+            .with_obs(obs.clone());
         cfg.appendix_a = args.has("appendix-a");
         cfg.dot_trick = args.has("dot-trick");
         cfg.binary_search_sampling = args.has("binsearch-sampling");
@@ -190,6 +220,9 @@ fn cmd_seed(args: &Args) -> Result<()> {
         fcount(c.kernel_batch_rows)
     );
     println!("{}", pool.stats());
+    if let (Some(path), Some(rec)) = (trace_out, obs.recorder()) {
+        write_trace(rec, &pool, path)?;
+    }
     Ok(())
 }
 
@@ -207,19 +240,27 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
     let mut rng = Pcg64::seed_from(seed_v);
     // One persistent pool shared by seeding and every Lloyd iteration.
     let pool = Arc::new(WorkerPool::new(threads));
+    // `kmeans` always records: the per-iteration telemetry table below
+    // comes from the recorder's iteration ring whether or not a trace file
+    // was requested. Observation never changes results (see `geokmpp::obs`).
+    let trace_out = args.get("trace-out");
+    let obs = Obs::recording(threads + 1);
+    pool.set_obs(obs.clone());
     let cfg = LloydConfig {
         max_iters: iters,
         strategy,
         threads,
         pool: Some(Arc::clone(&pool)),
         kernel,
+        obs: obs.clone(),
         ..LloydConfig::default()
     };
 
     let seed_cfg = SeedConfig::new(k, variant)
         .with_threads(threads)
         .with_pool(Arc::clone(&pool))
-        .with_kernel(kernel);
+        .with_kernel(kernel)
+        .with_obs(obs.clone());
     let mut picker = D2Picker::new(&mut rng);
     let s = seed_with(&data, &seed_cfg, &mut picker, &mut NoTrace);
     println!(
@@ -232,8 +273,10 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         if strategy != Strategy::Naive {
             eprintln!("note: --xla dispatches dense assignments; --lloyd-strategy ignored");
         }
-        let mut ex =
-            Executor::open_or_scalar(threads).with_pool(Arc::clone(&pool)).with_kernel(kernel);
+        let mut ex = Executor::open_or_scalar(threads)
+            .with_pool(Arc::clone(&pool))
+            .with_kernel(kernel)
+            .with_obs(obs.clone());
         lloyd_xla(&data, &s.centers, &cfg, &mut ex)?
     } else {
         // Warm start: the seeder's exact D² weights seed the upper bounds.
@@ -276,6 +319,35 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         kernel.resolve().backend.name()
     );
     println!("{}", pool.stats());
+    if let Some(rec) = obs.recorder() {
+        let samples = rec.iter_samples();
+        if !samples.is_empty() {
+            const SHOW: usize = 12;
+            let skipped = samples.len().saturating_sub(SHOW);
+            println!(
+                "per-iteration telemetry ({} of {} iterations):",
+                samples.len().min(SHOW),
+                rec.iter_total()
+            );
+            println!("  iter    wall_ms     distances        prunes   early-exits");
+            if skipped > 0 {
+                println!("  … {skipped} earlier iterations elided …");
+            }
+            for s in &samples[skipped..] {
+                println!(
+                    "  {:>4} {:>10} {:>13} {:>13} {:>13}",
+                    s.iteration,
+                    fnum(s.wall_ns as f64 / 1e6, 3),
+                    fcount(s.stats.distances),
+                    fcount(s.stats.prunes_total()),
+                    fcount(s.stats.kernel_early_exits)
+                );
+            }
+        }
+        if let Some(path) = trace_out {
+            write_trace(rec, &pool, path)?;
+        }
+    }
     Ok(())
 }
 

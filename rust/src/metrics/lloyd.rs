@@ -112,6 +112,29 @@ impl LloydStats {
         )
     }
 
+    /// Element-wise saturating difference `self − earlier`: the counters
+    /// accrued *since* the `earlier` snapshot. All counters are monotone
+    /// non-decreasing over a run, so this is the per-iteration delta the
+    /// observability layer's [`crate::obs::IterSample`] carries.
+    pub fn delta_since(&self, earlier: &LloydStats) -> LloydStats {
+        LloydStats {
+            visited_points: self.visited_points.saturating_sub(earlier.visited_points),
+            distances: self.distances.saturating_sub(earlier.distances),
+            center_distances: self.center_distances.saturating_sub(earlier.center_distances),
+            norms: self.norms.saturating_sub(earlier.norms),
+            bound_prunes: self.bound_prunes.saturating_sub(earlier.bound_prunes),
+            center_prunes: self.center_prunes.saturating_sub(earlier.center_prunes),
+            group_prunes: self.group_prunes.saturating_sub(earlier.group_prunes),
+            annulus_prunes: self.annulus_prunes.saturating_sub(earlier.annulus_prunes),
+            norm_prunes: self.norm_prunes.saturating_sub(earlier.norm_prunes),
+            full_scans: self.full_scans.saturating_sub(earlier.full_scans),
+            kernel_calls: self.kernel_calls.saturating_sub(earlier.kernel_calls),
+            kernel_early_exits: self.kernel_early_exits.saturating_sub(earlier.kernel_early_exits),
+            kernel_batches: self.kernel_batches.saturating_sub(earlier.kernel_batches),
+            kernel_batch_rows: self.kernel_batch_rows.saturating_sub(earlier.kernel_batch_rows),
+        }
+    }
+
     /// Element-wise division (for aggregating repetitions into means).
     pub fn div(&mut self, d: u64) {
         self.visited_points /= d;
@@ -211,6 +234,21 @@ mod tests {
         assert_eq!(base, reshaped, "batch shape must not break equality");
         assert_ne!(base, LloydStats { kernel_calls: 0, ..base });
         assert_ne!(base, LloydStats { kernel_early_exits: 0, ..base });
+    }
+
+    #[test]
+    fn delta_since_inverts_add_assign() {
+        let mut running = filled();
+        running += filled();
+        // The delta between the 2× aggregate and the 1× snapshot is the
+        // second increment itself — every field, including batch shape.
+        let delta = running.delta_since(&filled());
+        assert_eq!(delta, filled());
+        assert_eq!(delta.kernel_batches, filled().kernel_batches);
+        assert_eq!(delta.kernel_batch_rows, filled().kernel_batch_rows);
+        // Saturating: a stale "later" snapshot clamps at zero.
+        let clamped = filled().delta_since(&running);
+        assert_eq!(clamped, LloydStats::default());
     }
 
     #[test]

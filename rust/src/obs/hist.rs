@@ -1,0 +1,275 @@
+//! Log-bucketed (HDR-style) latency histograms.
+//!
+//! A [`Histogram`] records non-negative `u64` samples (the engine feeds it
+//! nanoseconds) into a fixed bucket layout: values below 16 land in unit
+//! buckets, and every power-of-2 range above that is split into 16
+//! sub-buckets, so relative quantile error is bounded by ~1/16 (6.25%)
+//! at any magnitude while the whole table stays a flat 976-slot array.
+//! Recording is O(1) (a `leading_zeros` and two shifts), [`Histogram::merge`]
+//! is element-wise addition (associative and commutative, so shard-local
+//! histograms can be folded in any order), and [`Histogram::quantile`] walks
+//! the table once.
+//!
+//! The layout mirrors HdrHistogram with 4 significant bits: bucket index
+//! `(msb - 3) * 16 + ((v >> (msb - 4)) & 15)` where `msb` is the position
+//! of the highest set bit. `msb = 4` (values 16..32) starts exactly at
+//! index 16, so the unit range below joins the log range with no gap.
+
+/// Number of unit buckets covering values `0..16`.
+const LINEAR: usize = 16;
+/// Sub-buckets per power-of-2 range (4 significant bits).
+const SUBS: usize = 16;
+/// Total bucket count: 16 unit + 60 power-of-2 ranges × 16 sub-buckets.
+/// `msb` runs 4..=63, so the top index is `(63 - 3) * 16 + 15 = 975`.
+const BUCKETS: usize = (64 - 4) * SUBS + LINEAR;
+
+/// Bucket index for a value. Total order preserving: `a <= b` implies
+/// `index(a) <= index(b)`.
+#[inline]
+fn index_of(v: u64) -> usize {
+    if v < LINEAR as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros() as u64; // >= 4
+        let sub = (v >> (msb - 4)) & 15;
+        ((msb - 3) * SUBS as u64 + sub) as usize
+    }
+}
+
+/// Smallest value that lands in bucket `idx` (inverse of [`index_of`]).
+#[inline]
+fn bucket_min(idx: usize) -> u64 {
+    if idx < LINEAR {
+        idx as u64
+    } else {
+        let msb = (idx / SUBS + 3) as u64;
+        let sub = (idx % SUBS) as u64;
+        (1u64 << msb) + (sub << (msb - 4))
+    }
+}
+
+/// Largest value that lands in bucket `idx`.
+#[inline]
+fn bucket_max(idx: usize) -> u64 {
+    if idx < LINEAR {
+        idx as u64
+    } else {
+        let msb = (idx / SUBS + 3) as u64;
+        let width = 1u64 << (msb - 4);
+        bucket_min(idx) + (width - 1)
+    }
+}
+
+/// A fixed-layout log-bucketed histogram of `u64` samples.
+///
+/// See the module docs for the bucket layout. The struct is plain data:
+/// cloning, comparing and merging are all element-wise, and an empty
+/// histogram is the identity element of [`Histogram::merge`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Creates an empty histogram.
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    /// Records one sample.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[index_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Smallest recorded sample, or `None` when empty.
+    pub fn min(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    /// Largest recorded sample, or `None` when empty.
+    pub fn max(&self) -> Option<u64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    /// Arithmetic mean of the recorded samples (exact sum, saturating),
+    /// or `None` when empty.
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum as f64 / self.count as f64)
+    }
+
+    /// Folds `other` into `self` (element-wise addition). Associative and
+    /// commutative; merging an empty histogram is a no-op.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        // An empty operand keeps min=MAX/max=0 sentinels; the merged
+        // count decides whether they are ever observable.
+    }
+
+    /// The value at quantile `p` in `[0, 1]`: the upper edge of the bucket
+    /// holding the sample of rank `ceil(p · count)` (clamped to `1..=count`),
+    /// itself clamped into `[min, max]` so single-sample and extreme
+    /// quantiles are exact. Returns `None` when empty.
+    pub fn quantile(&self, p: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_max(idx).clamp(self.min, self.max));
+            }
+        }
+        Some(self.max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_roundtrip() {
+        // Every bucket's min and max map back to that bucket, and
+        // consecutive buckets tile the u64 range with no gap or overlap.
+        for idx in 0..BUCKETS {
+            assert_eq!(index_of(bucket_min(idx)), idx, "min of bucket {idx}");
+            assert_eq!(index_of(bucket_max(idx)), idx, "max of bucket {idx}");
+            if idx + 1 < BUCKETS {
+                assert_eq!(bucket_max(idx) + 1, bucket_min(idx + 1), "gap after {idx}");
+            }
+        }
+        assert_eq!(bucket_max(BUCKETS - 1), u64::MAX);
+    }
+
+    #[test]
+    fn boundary_values_land_where_expected() {
+        // Unit range, first log bucket, and a few power-of-2 edges.
+        assert_eq!(index_of(0), 0);
+        assert_eq!(index_of(15), 15);
+        assert_eq!(index_of(16), 16); // first sub-bucket of msb=4
+        assert_eq!(index_of(17), 17); // width 1 at msb=4
+        assert_eq!(index_of(31), 31);
+        assert_eq!(index_of(32), 32); // first sub-bucket of msb=5
+        assert_eq!(index_of(33), 32); // width 2 at msb=5
+        assert_eq!(index_of(u64::MAX), BUCKETS - 1);
+        // Monotone over a dense small range and sparse large probes.
+        let mut prev = 0;
+        for v in 0..4096u64 {
+            let i = index_of(v);
+            assert!(i >= prev);
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn quantile_empty_single_saturated() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.mean(), None);
+
+        let mut one = Histogram::new();
+        one.record(12_345);
+        // Single sample: every quantile is exactly it (bucket-max clamped).
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.quantile(p), Some(12_345));
+        }
+        assert_eq!(one.min(), Some(12_345));
+        assert_eq!(one.max(), Some(12_345));
+
+        let mut sat = Histogram::new();
+        sat.record(u64::MAX);
+        sat.record(u64::MAX);
+        assert_eq!(sat.quantile(1.0), Some(u64::MAX));
+        // Sum saturates instead of overflowing.
+        assert_eq!(sat.mean(), Some(u64::MAX as f64));
+    }
+
+    #[test]
+    fn quantile_ranks_are_ceil_of_p_count() {
+        let mut h = Histogram::new();
+        for v in 1..=10u64 {
+            h.record(v);
+        }
+        // Values 1..=10 land in unit buckets, so quantiles are exact.
+        assert_eq!(h.quantile(0.0), Some(1)); // rank clamps to 1
+        assert_eq!(h.quantile(0.1), Some(1));
+        assert_eq!(h.quantile(0.5), Some(5));
+        assert_eq!(h.quantile(0.51), Some(6));
+        assert_eq!(h.quantile(1.0), Some(10));
+    }
+
+    #[test]
+    fn merge_is_associative_and_identity() {
+        let mk = |vals: &[u64]| {
+            let mut h = Histogram::new();
+            for &v in vals {
+                h.record(v);
+            }
+            h
+        };
+        let a = mk(&[1, 17, 900, 1 << 40]);
+        let b = mk(&[0, 3, 3, 1 << 20]);
+        let c = mk(&[u64::MAX, 64]);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+
+        assert_eq!(ab_c, a_bc);
+        assert_eq!(ab_c.count(), 10);
+
+        // Empty is the identity on both sides.
+        let mut with_empty = a.clone();
+        with_empty.merge(&Histogram::new());
+        assert_eq!(with_empty, a);
+        let mut empty = Histogram::new();
+        empty.merge(&a);
+        assert_eq!(empty, a);
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        let mut h = Histogram::new();
+        let v = 1_234_567_890u64;
+        h.record(v);
+        h.record(v * 2);
+        // p50 falls in v's bucket; the reported upper edge overshoots by
+        // at most one sub-bucket width (1/16 relative).
+        let q = h.quantile(0.5).unwrap();
+        assert!(q >= v);
+        assert!((q - v) as f64 <= v as f64 / 16.0 + 1.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Per-iteration Lloyd telemetry: the prune-mix time series.
+//!
+//! The accel engine emits one [`IterSample`] per Lloyd iteration — the
+//! *delta* of [`LloydStats`] over that iteration plus its wall time — into
+//! a bounded [`IterRing`]. This is the signal the ROADMAP's adaptive
+//! strategy selector consumes: a filter whose per-iteration prune count
+//! collapses shows up here iterations before the aggregate counters notice.
+//! The `kmeans` CLI prints the ring as a per-iteration table, and
+//! perf-smoke counts it in the `"timing"` object.
+
+use crate::metrics::lloyd::LloydStats;
+
+/// Default number of iteration samples the ring retains.
+pub const ITER_RING_CAP: usize = 512;
+
+/// One Lloyd iteration's telemetry: the per-iteration [`LloydStats`] delta
+/// (not the running aggregate) and the iteration's wall time.
+#[derive(Clone, Copy, Debug)]
+pub struct IterSample {
+    /// 1-based iteration number within the run.
+    pub iteration: u64,
+    /// Counter deltas accrued by this iteration alone.
+    pub stats: LloydStats,
+    /// Wall time of the iteration in nanoseconds.
+    pub wall_ns: u64,
+}
+
+/// A fixed-capacity ring of the most recent [`IterSample`]s.
+#[derive(Debug)]
+pub struct IterRing {
+    buf: Vec<IterSample>,
+    cap: usize,
+    /// Index of the oldest retained sample within `buf`.
+    head: usize,
+    total: u64,
+}
+
+impl Default for IterRing {
+    fn default() -> Self {
+        Self::with_capacity(ITER_RING_CAP)
+    }
+}
+
+impl IterRing {
+    /// Creates a ring retaining at most `cap` samples (at least one).
+    pub fn with_capacity(cap: usize) -> IterRing {
+        let cap = cap.max(1);
+        IterRing { buf: Vec::new(), cap, head: 0, total: 0 }
+    }
+
+    /// Appends a sample, evicting the oldest once at capacity.
+    pub fn push(&mut self, s: IterSample) {
+        if self.buf.len() < self.cap {
+            self.buf.push(s);
+        } else {
+            self.buf[self.head] = s;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Retained samples in chronological order.
+    pub fn samples(&self) -> Vec<IterSample> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// Total samples ever pushed (retained or evicted).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(i: u64) -> IterSample {
+        let stats = LloydStats { distances: i, ..LloydStats::default() };
+        IterSample { iteration: i, stats, wall_ns: i * 10 }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_in_order() {
+        let mut ring = IterRing::with_capacity(3);
+        for i in 1..=5 {
+            ring.push(sample(i));
+        }
+        let got: Vec<u64> = ring.samples().iter().map(|s| s.iteration).collect();
+        assert_eq!(got, vec![3, 4, 5]);
+        assert_eq!(ring.total(), 5);
+    }
+
+    #[test]
+    fn ring_below_capacity_is_chronological() {
+        let mut ring = IterRing::with_capacity(8);
+        for i in 1..=3 {
+            ring.push(sample(i));
+        }
+        let got: Vec<u64> = ring.samples().iter().map(|s| s.iteration).collect();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(ring.samples()[0].stats.distances, 1);
+    }
+}

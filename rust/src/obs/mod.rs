@@ -1,0 +1,174 @@
+//! Zero-dependency observability: span timelines, per-iteration prune
+//! telemetry, and log-bucketed latency histograms.
+//!
+//! Three pillars, all hand-rolled on `std` and all **passive** — observing
+//! a run never changes a pinned bit (centers, `Counters`, `LloydStats`,
+//! RNG streams, shard splits):
+//!
+//! * **Spans** ([`span::Recorder`]) — nested begin/end intervals per pool
+//!   lane, exported as Chrome trace-event JSON (`--trace-out`, loads in
+//!   `chrome://tracing` / Perfetto).
+//! * **Time series** ([`iter::IterSample`]) — per-Lloyd-iteration counter
+//!   deltas + wall time in a bounded ring; the adaptive-selector signal.
+//! * **Histograms** ([`hist::Histogram`]) — HDR-style log-bucketed latency
+//!   distributions with `merge` and `quantile(p)`, feeding the coordinator
+//!   report's p50/p99 columns and the pool's queue-wait metric.
+//!
+//! ## The `Obs` handle
+//!
+//! [`Obs`] is the crate-wide switch, carried by `SeedConfig`, `LloydConfig`,
+//! the `Executor`, the `WorkerPool` and the coordinator `Scheduler`. Its
+//! default, [`Obs::NoObs`], is the handle-level analogue of
+//! `seeding::trace::NoTrace`: where `NoTrace` erases *semantic memory
+//! tracing* (point/weight/bound accesses on the hot path) at compile time
+//! via monomorphization, `NoObs` erases *span/metric observation* (phase
+//! granularity, amortized over thousands of points) behind one predictable
+//! enum-discriminant branch per phase boundary. The two hook families are
+//! deliberately separate — see `seeding/trace.rs` and the README's
+//! Observability section.
+//!
+//! Spans use RAII: [`Obs::span`] returns a [`SpanGuard`] that ends the span
+//! on drop, so early exits (`break` on convergence, `?`, panics) can never
+//! unbalance a lane's buffer.
+
+pub mod hist;
+pub mod iter;
+pub mod span;
+
+pub use hist::Histogram;
+pub use iter::{IterRing, IterSample, ITER_RING_CAP};
+pub use span::Recorder;
+
+use std::sync::Arc;
+
+/// The observation handle threaded through every engine config.
+///
+/// Cloning is cheap (`Arc` bump at most); the [`Obs::NoObs`] default makes
+/// every hook a no-op behind a single discriminant test. All hooks are
+/// phase-granular (per seeding round, per Lloyd iteration, per pool
+/// dispatch), never per point, so the recording arm is cheap too.
+#[derive(Clone, Debug, Default)]
+pub enum Obs {
+    /// Observation disabled — every hook is a no-op. The default.
+    #[default]
+    NoObs,
+    /// Observation enabled — hooks record into the shared [`Recorder`].
+    Record(Arc<Recorder>),
+}
+
+impl Obs {
+    /// Creates a recording handle over a fresh recorder with `lanes` lanes.
+    pub fn recording(lanes: usize) -> Obs {
+        Obs::Record(Arc::new(Recorder::new(lanes)))
+    }
+
+    /// Whether observation is live (lets callers skip sample preparation).
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        matches!(self, Obs::Record(_))
+    }
+
+    /// The underlying recorder, when recording.
+    pub fn recorder(&self) -> Option<&Arc<Recorder>> {
+        match self {
+            Obs::NoObs => None,
+            Obs::Record(rec) => Some(rec),
+        }
+    }
+
+    /// Opens a span on `lane`; the returned guard ends it on drop. With
+    /// `NoObs` (or a full lane buffer) the guard is inert.
+    #[inline]
+    pub fn span(&self, lane: usize, name: &'static str) -> SpanGuard {
+        match self {
+            Obs::NoObs => SpanGuard { rec: None, lane: 0, name },
+            Obs::Record(rec) => {
+                let armed = rec.begin(lane, name);
+                SpanGuard { rec: armed.then(|| Arc::clone(rec)), lane, name }
+            }
+        }
+    }
+
+    /// Records one histogram sample (no-op under `NoObs`).
+    #[inline]
+    pub fn record_ns(&self, metric: &'static str, ns: u64) {
+        if let Obs::Record(rec) = self {
+            rec.record_ns(metric, ns);
+        }
+    }
+
+    /// Pushes one per-iteration telemetry sample (no-op under `NoObs`).
+    #[inline]
+    pub fn iter_sample(&self, sample: IterSample) {
+        if let Obs::Record(rec) = self {
+            rec.push_iter(sample);
+        }
+    }
+}
+
+/// RAII span handle returned by [`Obs::span`]; ends the span when dropped.
+#[must_use = "dropping the guard immediately ends the span"]
+#[derive(Debug)]
+pub struct SpanGuard {
+    /// `None` when inert (NoObs, or the lane buffer was full at begin).
+    rec: Option<Arc<Recorder>>,
+    lane: usize,
+    name: &'static str,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(rec) = &self.rec {
+            rec.end(self.lane, self.name);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noobs_hooks_are_inert() {
+        let obs = Obs::NoObs;
+        assert!(!obs.enabled());
+        assert!(obs.recorder().is_none());
+        {
+            let _g = obs.span(0, "anything");
+        }
+        obs.record_ns("metric", 42);
+        obs.iter_sample(IterSample {
+            iteration: 1,
+            stats: crate::metrics::lloyd::LloydStats::default(),
+            wall_ns: 1,
+        });
+    }
+
+    #[test]
+    fn guard_ends_span_on_drop_and_early_exit() {
+        let obs = Obs::recording(1);
+        let rec = Arc::clone(obs.recorder().unwrap());
+        for i in 0..10 {
+            let _g = obs.span(0, "loop");
+            if i % 2 == 0 {
+                continue; // guard still ends the span
+            }
+        }
+        assert!(rec.balanced());
+        let json = rec.to_chrome_json();
+        assert_eq!(json.matches("\"ph\":\"B\"").count(), 10);
+        assert_eq!(json.matches("\"ph\":\"E\"").count(), 10);
+    }
+
+    #[test]
+    fn record_ns_lands_in_named_histogram() {
+        let obs = Obs::recording(1);
+        obs.record_ns("queue_wait", 100);
+        obs.record_ns("queue_wait", 200);
+        let rec = obs.recorder().unwrap();
+        let h = rec.histogram("queue_wait").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!(rec.histogram("missing").is_none());
+        assert_eq!(rec.histogram_names(), vec!["queue_wait"]);
+    }
+}

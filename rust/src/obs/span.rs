@@ -1,0 +1,296 @@
+//! Span recording and Chrome trace-event export.
+//!
+//! A [`Recorder`] collects nested begin/end spans into **per-lane buffers**
+//! (lane = pool lane: 0 is the caller, `1..` are pool workers), each guarded
+//! by its own mutex. Timestamps are taken from one shared epoch `Instant`
+//! *while holding the lane lock*, so events within a lane are strictly
+//! ordered — which is exactly the per-`tid` monotonicity the Chrome
+//! trace-event format wants. Export merges lanes in deterministic lane
+//! order via [`Recorder::to_chrome_json`]; the result loads directly into
+//! `chrome://tracing` or [Perfetto](https://ui.perfetto.dev).
+//!
+//! Recording is bounded: each lane accepts at most [`SPAN_CAP`] span
+//! *begins* (ends are always honored for begun spans, so buffers stay
+//! balanced); overflow increments a per-lane drop counter instead of
+//! growing without bound. Span producers never hold a lane lock across
+//! user work — a begin/end is one short `lock / push / unlock`.
+//!
+//! Besides spans, the recorder owns the other two observation sinks so one
+//! `Arc<Recorder>` handle carries the whole layer: named latency
+//! [`Histogram`]s (see [`crate::obs::hist`]) and the per-iteration
+//! [`IterSample`] ring (see [`crate::obs::iter`]).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::hist::Histogram;
+use super::iter::{IterRing, IterSample};
+
+/// Maximum span begins retained per lane. Ends of begun spans are always
+/// recorded, so a full buffer holds at most `2 * SPAN_CAP` events and
+/// stays B/E-balanced.
+pub const SPAN_CAP: usize = 16_384;
+
+/// One begin or end event on a lane.
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    name: &'static str,
+    begin: bool,
+    ts_ns: u64,
+}
+
+/// Per-lane event buffer.
+#[derive(Debug, Default)]
+struct LaneBuf {
+    events: Vec<Event>,
+    /// Number of begins recorded (capped at [`SPAN_CAP`]).
+    begins: usize,
+    /// Begins rejected because the lane was full.
+    dropped: u64,
+}
+
+/// A passive, thread-safe span/metric recorder.
+///
+/// Cheap to share (`Arc`); all methods take `&self`. Lanes out of range
+/// wrap modulo the lane count so callers can pass raw shard indices.
+#[derive(Debug)]
+pub struct Recorder {
+    epoch: Instant,
+    lanes: Vec<Mutex<LaneBuf>>,
+    hists: Mutex<BTreeMap<&'static str, Histogram>>,
+    iters: Mutex<IterRing>,
+    /// Pre-rendered JSON object attached to the trace export (used for the
+    /// pool's per-lane busy/queue-wait stats), set by the CLI after a run.
+    extra_json: Mutex<Option<(String, String)>>,
+}
+
+impl Recorder {
+    /// Creates a recorder with `lanes` per-lane buffers (at least one).
+    pub fn new(lanes: usize) -> Recorder {
+        let lanes = lanes.max(1);
+        Recorder {
+            epoch: Instant::now(),
+            lanes: (0..lanes).map(|_| Mutex::new(LaneBuf::default())).collect(),
+            hists: Mutex::new(BTreeMap::new()),
+            iters: Mutex::new(IterRing::default()),
+            extra_json: Mutex::new(None),
+        }
+    }
+
+    /// Number of lanes.
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Records a span begin on `lane`. Returns `false` (and counts a drop)
+    /// when the lane is at capacity — the caller must then skip the
+    /// matching [`Recorder::end`] to keep the buffer balanced.
+    pub fn begin(&self, lane: usize, name: &'static str) -> bool {
+        let mut buf = self.lanes[lane % self.lanes.len()].lock().unwrap();
+        if buf.begins >= SPAN_CAP {
+            buf.dropped += 1;
+            return false;
+        }
+        buf.begins += 1;
+        let ts_ns = self.epoch.elapsed().as_nanos() as u64;
+        buf.events.push(Event { name, begin: true, ts_ns });
+        true
+    }
+
+    /// Records a span end on `lane`. Only call for a begin that returned
+    /// `true` (the [`crate::obs::SpanGuard`] handles this pairing).
+    pub fn end(&self, lane: usize, name: &'static str) {
+        let mut buf = self.lanes[lane % self.lanes.len()].lock().unwrap();
+        let ts_ns = self.epoch.elapsed().as_nanos() as u64;
+        buf.events.push(Event { name, begin: false, ts_ns });
+    }
+
+    /// Adds one sample to the named histogram (created on first use).
+    pub fn record_ns(&self, metric: &'static str, ns: u64) {
+        self.hists.lock().unwrap().entry(metric).or_default().record(ns);
+    }
+
+    /// Snapshot of a named histogram, or `None` if never recorded.
+    pub fn histogram(&self, metric: &'static str) -> Option<Histogram> {
+        self.hists.lock().unwrap().get(metric).cloned()
+    }
+
+    /// Names of all histograms recorded so far, in sorted order.
+    pub fn histogram_names(&self) -> Vec<&'static str> {
+        self.hists.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Pushes one per-iteration telemetry sample into the ring.
+    pub fn push_iter(&self, sample: IterSample) {
+        self.iters.lock().unwrap().push(sample);
+    }
+
+    /// Chronological snapshot of the retained iteration samples.
+    pub fn iter_samples(&self) -> Vec<IterSample> {
+        self.iters.lock().unwrap().samples()
+    }
+
+    /// Total iteration samples ever pushed (including ones the ring evicted).
+    pub fn iter_total(&self) -> u64 {
+        self.iters.lock().unwrap().total()
+    }
+
+    /// Attaches a pre-rendered JSON object under `key` at the top level of
+    /// the trace export (alongside `"traceEvents"`). The CLI uses this to
+    /// embed `PoolStats::to_json()` so per-lane busy/queue-wait numbers
+    /// travel with the trace. Last call wins.
+    pub fn set_extra_json(&self, key: &str, json: String) {
+        *self.extra_json.lock().unwrap() = Some((key.to_string(), json));
+    }
+
+    /// Total span begins dropped across all lanes (buffer overflow).
+    pub fn dropped(&self) -> u64 {
+        self.lanes.iter().map(|l| l.lock().unwrap().dropped).sum()
+    }
+
+    /// Checks that every lane's buffer is a balanced, properly nested
+    /// sequence of begin/end events (each end matches the innermost open
+    /// begin's name, and no span stays open).
+    pub fn balanced(&self) -> bool {
+        self.lanes.iter().all(|lane| {
+            let buf = lane.lock().unwrap();
+            let mut stack: Vec<&'static str> = Vec::new();
+            for ev in &buf.events {
+                if ev.begin {
+                    stack.push(ev.name);
+                } else if stack.pop() != Some(ev.name) {
+                    return false;
+                }
+            }
+            stack.is_empty()
+        })
+    }
+
+    /// Renders the Chrome trace-event JSON (`{"traceEvents": [...]}`):
+    /// one `M` thread-name metadata event per lane, then each lane's
+    /// events in recording order (`ph: "B"/"E"`, `ts` in microseconds,
+    /// `pid` 1, `tid` = lane), lanes concatenated in lane order. Loads in
+    /// `chrome://tracing` and Perfetto.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\"traceEvents\":[");
+        for tid in 0..self.lanes.len() {
+            if tid > 0 {
+                out.push(',');
+            }
+            let label = if tid == 0 { format!("lane{tid} (caller)") } else { format!("lane{tid}") };
+            out.push_str(&format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{label}\"}}}}"
+            ));
+        }
+        for (tid, lane) in self.lanes.iter().enumerate() {
+            let buf = lane.lock().unwrap();
+            for ev in &buf.events {
+                let ph = if ev.begin { 'B' } else { 'E' };
+                let ts = ev.ts_ns as f64 / 1000.0;
+                out.push_str(&format!(
+                    ",{{\"name\":\"{}\",\"ph\":\"{ph}\",\"ts\":{ts:.3},\"pid\":1,\"tid\":{tid}}}",
+                    ev.name
+                ));
+            }
+        }
+        out.push(']');
+        if let Some((key, json)) = self.extra_json.lock().unwrap().as_ref() {
+            out.push_str(&format!(",\"{key}\":{json}"));
+        }
+        if self.dropped() > 0 {
+            out.push_str(&format!(",\"droppedSpans\":{}", self.dropped()));
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_balance_and_nest() {
+        let rec = Recorder::new(2);
+        assert!(rec.begin(0, "outer"));
+        assert!(rec.begin(0, "inner"));
+        rec.end(0, "inner");
+        assert!(rec.begin(1, "worker"));
+        rec.end(1, "worker");
+        rec.end(0, "outer");
+        assert!(rec.balanced());
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn mismatched_end_is_detected() {
+        let rec = Recorder::new(1);
+        assert!(rec.begin(0, "a"));
+        rec.end(0, "b");
+        assert!(!rec.balanced());
+    }
+
+    #[test]
+    fn unclosed_span_is_detected() {
+        let rec = Recorder::new(1);
+        assert!(rec.begin(0, "a"));
+        assert!(!rec.balanced());
+    }
+
+    #[test]
+    fn lane_indices_wrap() {
+        let rec = Recorder::new(2);
+        assert!(rec.begin(7, "x")); // lands on lane 7 % 2 == 1
+        rec.end(7, "x");
+        assert!(rec.balanced());
+    }
+
+    #[test]
+    fn timestamps_are_monotone_per_lane() {
+        let rec = Recorder::new(1);
+        for _ in 0..100 {
+            assert!(rec.begin(0, "s"));
+            rec.end(0, "s");
+        }
+        let buf = rec.lanes[0].lock().unwrap();
+        for w in buf.events.windows(2) {
+            assert!(w[0].ts_ns <= w[1].ts_ns);
+        }
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let rec = Recorder::new(2);
+        assert!(rec.begin(0, "seed"));
+        assert!(rec.begin(1, "pool.batch"));
+        rec.end(1, "pool.batch");
+        rec.end(0, "seed");
+        rec.set_extra_json("pool", "{\"workers\":1}".to_string());
+        let json = rec.to_chrome_json();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with('}'));
+        assert_eq!(json.matches("\"ph\":\"B\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"E\"").count(), 2);
+        assert_eq!(json.matches("\"ph\":\"M\"").count(), 2);
+        assert!(json.contains("\"pool\":{\"workers\":1}"));
+        assert!(json.contains("\"tid\":1"));
+    }
+
+    #[test]
+    fn begin_cap_drops_and_stays_balanced() {
+        let rec = Recorder::new(1);
+        let mut armed = Vec::new();
+        for _ in 0..(SPAN_CAP + 10) {
+            armed.push(rec.begin(0, "s"));
+        }
+        // Ends only for begins that were accepted — the guard's contract.
+        for _ in armed.iter().filter(|&&ok| ok) {
+            rec.end(0, "s");
+        }
+        assert_eq!(rec.dropped(), 10);
+        assert!(rec.balanced());
+    }
+}

@@ -67,6 +67,10 @@ pub struct Executor {
     /// Scalar-backend kernel calls that exited early under a best-so-far
     /// cutoff — work provably unable to change the result (perf accounting).
     pub kernel_early_exits: u64,
+    /// Observation handle: `executor.scan` spans around the sharded scalar
+    /// scans (lane 0 — the caller's lane). [`crate::obs::Obs::NoObs`] by
+    /// default, so the hooks cost one discriminant branch.
+    obs: crate::obs::Obs,
 }
 
 impl Executor {
@@ -97,6 +101,16 @@ impl Executor {
     pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> Executor {
         self.pool = pool;
         self
+    }
+
+    /// Attaches an observation handle: `executor.scan` spans around every
+    /// sharded scalar scan, plus dispatch/batch spans from the backing pool
+    /// (this builder forwards the handle via [`WorkerPool::set_obs`], so
+    /// call it *after* [`Executor::with_pool`] when combining the two).
+    /// Observation never changes results — see [`crate::obs`].
+    pub fn with_obs(self, obs: crate::obs::Obs) -> Executor {
+        self.pool.set_obs(obs.clone());
+        Executor { obs, ..self }
     }
 
     /// Selects the distance kernel serving the scalar backend's scans
@@ -138,6 +152,7 @@ impl Executor {
             kernel: KernelConfig::Scalar.resolve(),
             kernel_calls: 0,
             kernel_early_exits: 0,
+            obs: crate::obs::Obs::NoObs,
         }
     }
 
@@ -187,6 +202,7 @@ impl Executor {
         c_new: &[f32],
         weights: Option<&[f32]>,
     ) -> (Vec<f32>, Vec<i32>) {
+        let _scan_span = self.obs.span(0, "executor.scan");
         self.scalar_scans += 1;
         self.kernel_calls += rows.len() as u64;
         let kernel = self.kernel;
@@ -282,6 +298,9 @@ impl Executor {
             self.kernel_early_exits += exits;
             return (w_out, chg_out, computed);
         }
+        // Only the sharded path is spanned: the inline shortcut exists
+        // precisely because tens-of-member scans are latency-noise.
+        let _scan_span = self.obs.span(0, "executor.scan");
         let kernel = self.kernel;
         let shards = Shards::new(rows.len(), self.threads);
         let mut w_out = vec![0f32; rows.len()];
@@ -442,6 +461,7 @@ impl Executor {
 
     /// Sharded scalar Lloyd assignment (the fallback dense op).
     fn scalar_lloyd_assign(&mut self, data: &Matrix, centers: &Matrix) -> (Vec<u32>, Vec<f32>) {
+        let _scan_span = self.obs.span(0, "executor.scan");
         self.scalar_scans += 1;
         self.kernel_calls += (data.rows() * centers.rows()) as u64;
         let kernel = self.kernel;
@@ -554,6 +574,7 @@ impl Executor {
     pub fn norms(&mut self, data: &Matrix) -> Result<Vec<f32>> {
         let d = data.cols();
         if self.rt.is_none() {
+            let _scan_span = self.obs.span(0, "executor.scan");
             self.scalar_scans += 1;
             self.kernel_calls += data.rows() as u64;
             let kernel = self.kernel;

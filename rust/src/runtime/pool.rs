@@ -34,7 +34,19 @@
 //! first payload is stashed, the remaining tasks of the dispatch still run,
 //! and the payload is re-raised on the *calling* thread once the dispatch
 //! drains — the pool stays fully usable afterwards.
+//!
+//! # Observation
+//!
+//! The pool participates in the [`crate::obs`] layer passively: it always
+//! tallies per-lane busy and dispatch queue-wait nanoseconds (two atomics a
+//! batch), and when an [`Obs`] handle is attached via
+//! [`WorkerPool::set_obs`] it additionally emits `pool.dispatch` spans on
+//! the caller lane, `pool.batch` spans on each worker lane, and
+//! `pool.queue_wait_ns` histogram samples. Inline (single-task or
+//! threads=1) dispatches are deliberately not spanned — the caller's phase
+//! spans already cover them, and they can be per-center frequent.
 
+use crate::obs::Obs;
 use std::fmt;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -49,19 +61,24 @@ type Task = Box<dyn FnOnce() + Send + 'static>;
 enum SlotState {
     /// Nothing to do — park.
     Idle,
-    /// A batch of tasks to run in order.
-    Batch(Vec<Task>),
+    /// A batch of tasks to run in order, stamped with its enqueue instant
+    /// (for the queue-wait tally) and the dispatch's observation handle.
+    Batch(Vec<Task>, Instant, Obs),
     /// The pool is dropping — exit the worker loop.
     Shutdown,
 }
 
 /// State shared between one worker thread and the pool handle.
 struct WorkerShared {
+    /// This worker's dispatch lane (worker `w` serves lane `w + 1`;
+    /// lane 0 is the calling thread).
+    lane: usize,
     slot: Mutex<SlotState>,
     cv: Condvar,
     parks: AtomicU64,
     wakes: AtomicU64,
     busy_ns: AtomicU64,
+    queue_wait_ns: AtomicU64,
 }
 
 /// Completion latch for one dispatch: counts outstanding tasks.
@@ -95,11 +112,11 @@ impl Latch {
 
 fn worker_loop(shared: &WorkerShared) {
     loop {
-        let batch = {
+        let (batch, enqueued, obs) = {
             let mut slot = shared.slot.lock().unwrap();
             loop {
                 match std::mem::replace(&mut *slot, SlotState::Idle) {
-                    SlotState::Batch(batch) => break batch,
+                    SlotState::Batch(batch, enqueued, obs) => break (batch, enqueued, obs),
                     SlotState::Shutdown => return,
                     SlotState::Idle => {
                         shared.parks.fetch_add(1, Ordering::Relaxed);
@@ -109,9 +126,15 @@ fn worker_loop(shared: &WorkerShared) {
                 }
             }
         };
+        let wait_ns = enqueued.elapsed().as_nanos() as u64;
+        shared.queue_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+        obs.record_ns("pool.queue_wait_ns", wait_ns);
         let start = Instant::now();
-        for task in batch {
-            task();
+        {
+            let _batch_span = obs.span(shared.lane, "pool.batch");
+            for task in batch {
+                task();
+            }
         }
         shared.busy_ns.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
@@ -133,6 +156,9 @@ pub struct WorkerPool {
     dispatches: AtomicU64,
     inline_dispatches: AtomicU64,
     tasks: AtomicU64,
+    /// Observation handle cloned into each dispatch ([`Obs::NoObs`] by
+    /// default — spans and histogram samples are then skipped entirely).
+    obs: Mutex<Obs>,
 }
 
 impl fmt::Debug for WorkerPool {
@@ -153,11 +179,13 @@ impl WorkerPool {
         let mut handles = Vec::with_capacity(spawn);
         for w in 0..spawn {
             let shared = std::sync::Arc::new(WorkerShared {
+                lane: w + 1,
                 slot: Mutex::new(SlotState::Idle),
                 cv: Condvar::new(),
                 parks: AtomicU64::new(0),
                 wakes: AtomicU64::new(0),
                 busy_ns: AtomicU64::new(0),
+                queue_wait_ns: AtomicU64::new(0),
             });
             let for_thread = std::sync::Arc::clone(&shared);
             let handle = std::thread::Builder::new()
@@ -174,7 +202,15 @@ impl WorkerPool {
             dispatches: AtomicU64::new(0),
             inline_dispatches: AtomicU64::new(0),
             tasks: AtomicU64::new(0),
+            obs: Mutex::new(Obs::NoObs),
         }
+    }
+
+    /// Attaches (or detaches, with [`Obs::NoObs`]) the observation handle
+    /// cloned into every subsequent dispatch. Purely passive: results,
+    /// shard splits and all deterministic counters are unaffected.
+    pub fn set_obs(&self, obs: Obs) {
+        *self.obs.lock().unwrap() = obs;
     }
 
     /// Number of spawned workers (excludes the calling thread's lane).
@@ -260,16 +296,21 @@ impl WorkerPool {
         }
 
         {
+            let obs = self.obs.lock().unwrap().clone();
+            // Spans the whole dispatch on the caller lane: gate wait, slot
+            // refills, the inline lane-0 batch, and the drain.
+            let _dispatch_span = obs.span(0, "pool.dispatch");
             // One dispatch in flight at a time: a worker's slot is Idle by
             // the time the previous dispatch's `wait` returned, so refills
             // never clobber a pending batch.
             let _gate = self.gate.lock().unwrap();
+            let enqueued = Instant::now();
             for (worker, batch) in self.workers.iter().zip(batches) {
                 if batch.is_empty() {
                     continue;
                 }
                 let mut slot = worker.slot.lock().unwrap();
-                *slot = SlotState::Batch(batch);
+                *slot = SlotState::Batch(batch, enqueued, obs.clone());
                 worker.cv.notify_one();
             }
             for task in inline_batch {
@@ -300,6 +341,11 @@ impl WorkerPool {
             parks: self.workers.iter().map(|w| w.parks.load(Ordering::Relaxed)).sum(),
             wakes: self.workers.iter().map(|w| w.wakes.load(Ordering::Relaxed)).sum(),
             busy_ns: self.workers.iter().map(|w| w.busy_ns.load(Ordering::Relaxed)).collect(),
+            queue_wait_ns: self
+                .workers
+                .iter()
+                .map(|w| w.queue_wait_ns.load(Ordering::Relaxed))
+                .collect(),
         }
     }
 }
@@ -338,6 +384,11 @@ pub struct PoolStats {
     pub wakes: u64,
     /// Per-worker busy time in nanoseconds (timing-dependent).
     pub busy_ns: Vec<u64>,
+    /// Per-worker cumulative dispatch queue-wait in nanoseconds — the gap
+    /// between a batch landing in the worker's slot and the worker picking
+    /// it up (timing-dependent). Large values mean parked workers are slow
+    /// to wake (oversubscription, NUMA-remote placement).
+    pub queue_wait_ns: Vec<u64>,
 }
 
 impl PoolStats {
@@ -352,6 +403,7 @@ impl PoolStats {
         self.parks += other.parks;
         self.wakes += other.wakes;
         self.busy_ns.extend_from_slice(&other.busy_ns);
+        self.queue_wait_ns.extend_from_slice(&other.queue_wait_ns);
     }
 
     /// Total worker busy time in milliseconds.
@@ -359,12 +411,38 @@ impl PoolStats {
         self.busy_ns.iter().map(|&ns| ns as f64 / 1e6).sum()
     }
 
+    /// Total dispatch queue-wait across workers in milliseconds.
+    pub fn queue_wait_ms_total(&self) -> f64 {
+        self.queue_wait_ns.iter().map(|&ns| ns as f64 / 1e6).sum()
+    }
+
+    /// Lane-utilization skew: the busiest worker's busy time over the mean
+    /// (`1.0` = perfectly balanced lanes). `None` when no worker has done
+    /// any work — the signal the NUMA-placement roadmap item watches.
+    pub fn busy_skew(&self) -> Option<f64> {
+        let total: u64 = self.busy_ns.iter().sum();
+        if self.busy_ns.is_empty() || total == 0 {
+            return None;
+        }
+        let mean = total as f64 / self.busy_ns.len() as f64;
+        let max = *self.busy_ns.iter().max().expect("non-empty") as f64;
+        Some(max / mean)
+    }
+
     /// The stats as a flat JSON object (hand-rolled: serde is not in the
-    /// offline crate set).
+    /// offline crate set). Includes the per-lane busy/queue-wait arrays so
+    /// trace exports carry lane-level utilization.
     pub fn to_json(&self) -> String {
+        let join = |v: &[u64]| v.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(",");
+        let skew = match self.busy_skew() {
+            Some(s) => format!("{s:.3}"),
+            None => "null".to_string(),
+        };
         format!(
             "{{\"workers\":{},\"dispatches\":{},\"inline_dispatches\":{},\"tasks\":{},\
-             \"spawns_avoided\":{},\"parks\":{},\"wakes\":{},\"busy_ms_total\":{:.3}}}",
+             \"spawns_avoided\":{},\"parks\":{},\"wakes\":{},\"busy_ms_total\":{:.3},\
+             \"queue_wait_ms_total\":{:.3},\"busy_skew\":{},\
+             \"busy_ns_per_lane\":[{}],\"queue_wait_ns_per_lane\":[{}]}}",
             self.workers,
             self.dispatches,
             self.inline_dispatches,
@@ -373,16 +451,24 @@ impl PoolStats {
             self.parks,
             self.wakes,
             self.busy_ms_total(),
+            self.queue_wait_ms_total(),
+            skew,
+            join(&self.busy_ns),
+            join(&self.queue_wait_ns),
         )
     }
 }
 
 impl fmt::Display for PoolStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let skew = match self.busy_skew() {
+            Some(s) => format!("{s:.2}"),
+            None => "-".to_string(),
+        };
         write!(
             f,
             "pool: workers={} dispatches={} ({} inline) tasks={} spawns_avoided={} \
-             parks={} wakes={} busy_ms={:.1}",
+             parks={} wakes={} busy_ms={:.1} queue_wait_ms={:.1} busy_skew={}",
             self.workers,
             self.dispatches,
             self.inline_dispatches,
@@ -391,6 +477,8 @@ impl fmt::Display for PoolStats {
             self.parks,
             self.wakes,
             self.busy_ms_total(),
+            self.queue_wait_ms_total(),
+            skew,
         )
     }
 }
@@ -431,6 +519,8 @@ mod tests {
         assert_eq!(stats.inline_dispatches, 1);
         assert_eq!((stats.parks, stats.wakes), (0, 0));
         assert!(stats.busy_ns.is_empty());
+        assert!(stats.queue_wait_ns.is_empty());
+        assert_eq!(stats.busy_skew(), None);
         // new(0) behaves like new(1).
         assert_eq!(WorkerPool::new(0).lanes(), 1);
     }
@@ -566,7 +656,38 @@ mod tests {
         let json = agg.to_json();
         assert!(json.contains("\"spawns_avoided\""));
         assert!(json.contains("\"workers\":4"));
+        assert!(json.contains("\"queue_wait_ms_total\""));
+        assert!(json.contains("\"busy_ns_per_lane\""));
         let line = format!("{agg}");
         assert!(line.starts_with("pool: workers=4"));
+        assert!(line.contains("busy_skew="));
+    }
+
+    /// An attached `Obs` handle yields balanced dispatch/batch spans on the
+    /// right lanes plus queue-wait samples — and detaching silences it
+    /// without touching results or the always-on per-lane tallies.
+    #[test]
+    fn observation_spans_and_queue_wait() {
+        let pool = WorkerPool::new(3);
+        let obs = Obs::recording(pool.lanes());
+        pool.set_obs(obs.clone());
+        let got = pool.scoped((0..6).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(got, vec![0, 1, 2, 3, 4, 5]);
+        let rec = std::sync::Arc::clone(obs.recorder().unwrap());
+        assert!(rec.balanced());
+        let json = rec.to_chrome_json();
+        assert!(json.contains("\"name\":\"pool.dispatch\""));
+        assert!(json.contains("\"name\":\"pool.batch\""));
+        assert!(json.contains("\"tid\":1") && json.contains("\"tid\":2"));
+        // Both workers got a batch, so both recorded one queue-wait sample.
+        assert_eq!(rec.histogram("pool.queue_wait_ns").expect("recorded").count(), 2);
+        let stats = pool.stats();
+        assert_eq!(stats.queue_wait_ns.len(), 2);
+
+        pool.set_obs(Obs::NoObs);
+        let again = pool.scoped((0..6).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(again, got);
+        assert_eq!(rec.histogram("pool.queue_wait_ns").expect("recorded").count(), 2);
+        assert!(rec.balanced());
     }
 }

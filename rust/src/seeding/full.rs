@@ -98,6 +98,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     // --- Main loop.
     while center_indices.len() < cfg.k {
+        let _round = cfg.obs.span(0, "seed.round");
         // Two-step sampling over partitions (distribution-equivalent to
         // cluster-level two-step since partitions tile clusters).
         let mut groups: Vec<&[usize]> = Vec::with_capacity(clusters.len() * 2);

@@ -136,6 +136,12 @@ pub struct SeedConfig {
     /// machines, not to `Scalar`). Kernel choice never changes which
     /// candidates are scanned, so all gated counters are backend-invariant.
     pub kernel: KernelConfig,
+    /// Observation handle ([`crate::obs::Obs`]). The default
+    /// [`crate::obs::Obs::NoObs`] records nothing; a recording handle adds
+    /// a `seed` span around the run and one `seed.round` span per selected
+    /// center, all passive — no pinned counter, RNG draw or centroid bit
+    /// changes (pinned by `tests/obs.rs`).
+    pub obs: crate::obs::Obs,
 }
 
 impl SeedConfig {
@@ -152,6 +158,7 @@ impl SeedConfig {
             threads: 1,
             pool: None,
             kernel: KernelConfig::Scalar,
+            obs: crate::obs::Obs::NoObs,
         }
     }
 
@@ -173,12 +180,27 @@ impl SeedConfig {
         self
     }
 
+    /// Attaches an observation handle (builder style). Callers that also
+    /// pass a shared pool and want its dispatch/batch spans should attach
+    /// the same handle there via `WorkerPool::set_obs`.
+    pub fn with_obs(mut self, obs: crate::obs::Obs) -> Self {
+        self.obs = obs;
+        self
+    }
+
     /// The pool the scans should dispatch through: the attached shared one,
-    /// or a fresh private pool sized to `threads`.
+    /// or a fresh private pool sized to `threads` (which inherits this
+    /// config's observation handle so its spans land in the same trace).
     pub(crate) fn pool_or_new(&self) -> Arc<WorkerPool> {
         match &self.pool {
             Some(p) => Arc::clone(p),
-            None => Arc::new(WorkerPool::new(self.threads.max(1))),
+            None => {
+                let pool = Arc::new(WorkerPool::new(self.threads.max(1)));
+                if self.obs.enabled() {
+                    pool.set_obs(self.obs.clone());
+                }
+                pool
+            }
         }
     }
 }
@@ -233,6 +255,7 @@ pub fn seed_with<P: CenterPicker, T: TraceSink>(
     assert!(cfg.k >= 1, "k must be at least 1");
     assert!(cfg.k <= data.rows(), "k={} exceeds n={}", cfg.k, data.rows());
     let sw = Stopwatch::start();
+    let seed_span = cfg.obs.span(0, "seed");
     let mut result = match cfg.variant {
         Variant::Standard => standard::run(data, cfg, picker, trace),
         Variant::Tie => tie::run(data, cfg, picker, trace),
@@ -240,7 +263,9 @@ pub fn seed_with<P: CenterPicker, T: TraceSink>(
         Variant::Full => full::run(data, cfg, picker, trace),
         Variant::Rejection => rejection::run(data, cfg, picker, trace),
     };
+    drop(seed_span);
     result.elapsed = sw.elapsed();
+    cfg.obs.record_ns("seed.run_ns", result.elapsed.as_nanos() as u64);
     result
 }
 

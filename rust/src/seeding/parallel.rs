@@ -437,6 +437,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     // --- Main loop.
     while center_indices.len() < cfg.k {
+        let _round = cfg.obs.span(0, "seed.round");
         // Two-step sampling over *merged* per-(cluster, side) groups: the
         // per-shard partition sums are folded (shard order) into one sum per
         // global partition, and the member draw walks the shard member lists

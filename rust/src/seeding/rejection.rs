@@ -369,6 +369,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     forest.rebuild_cum();
 
     while center_indices.len() < cfg.k {
+        let _round = cfg.obs.span(0, "seed.round");
         let mut draw = DrawStats::default();
         let pick = picker.next(PickCtx::Rejection {
             weights: &weights,

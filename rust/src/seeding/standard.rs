@@ -97,6 +97,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     }
 
     while center_indices.len() < cfg.k {
+        let _round = cfg.obs.span(0, "seed.round");
         let pick = picker.next(PickCtx::Flat { weights: &weights, total });
         counters.visited_sampling += pick.visited;
         let c_new = pick.index;

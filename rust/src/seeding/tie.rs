@@ -148,6 +148,7 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     // --- Main loop (lines 8–32).
     while center_indices.len() < cfg.k {
+        let _round = cfg.obs.span(0, "seed.round");
         // Two-step sampling over (cluster, member).
         let total = cs.total();
         let groups: Vec<&[usize]> = cs.members.iter().map(|m| m.as_slice()).collect();

@@ -6,6 +6,16 @@
 //! receives semantic access events; the [`crate::simcache`] module lowers
 //! them to cache-line addresses. [`NoTrace`] is a zero-cost no-op — the
 //! production monomorphization compiles the hooks away entirely.
+//!
+//! This is one of the engine's **two hook families**, and they answer
+//! different questions. `TraceSink` is a *semantic memory model*: generic
+//! (monomorphized away when unused), per-point granularity, consumed by the
+//! cache simulator — what would this access pattern do to a cache?
+//! [`crate::obs`] is a *runtime observer*: a cloneable handle
+//! ([`crate::obs::Obs`], the handle-level analogue of [`NoTrace`]'s
+//! zero-cost default), phase granularity (spans, histograms, per-iteration
+//! counter deltas), consumed by humans and CI — what did this run actually
+//! spend its time on? Neither changes results; both default to no-ops.
 
 /// Receives semantic memory-access events from a seeder run.
 pub trait TraceSink {

@@ -37,6 +37,15 @@
 //! skips only provably-losing work, the gate additionally requires the
 //! GSAD k=32 cell to show `early_exits > 0` while every exactness check
 //! above still holds — the early exit must be observable *and* free.
+//!
+//! Schema v4 adds an informational `"timing"` object: phase wall times plus
+//! log-bucketed latency quantiles ([`crate::obs::Histogram`]) over the
+//! individual seeding and Lloyd runs of the sweep. Wall-clock stays
+//! non-gating (shared runners are noisy) — the object exists so the CI
+//! history records a latency trajectory alongside the exact counters.
+//! `--trace-out FILE` additionally writes the sweep's span timeline as
+//! Chrome trace-event JSON (`crate::obs` recorder threaded through the
+//! pool and both engines); observation never changes results.
 
 use crate::cli::Args;
 use crate::core::rng::Pcg64;
@@ -44,6 +53,7 @@ use crate::data::catalog::by_name;
 use crate::kmeans::accel::{run_warm, Strategy};
 use crate::kmeans::lloyd::{LloydConfig, LloydResult};
 use crate::metrics::table::{fcount, fnum, Table};
+use crate::obs::{Histogram, Obs};
 use crate::runtime::WorkerPool;
 use crate::seeding::{
     seed_with, Counters, D2Picker, NoTrace, ScriptedPicker, SeedConfig, SeedResult, Variant,
@@ -110,10 +120,20 @@ pub fn run(args: &Args) -> Result<()> {
     // sweep — the counters below measure the seam exactly as production
     // uses it (results are thread-count-invariant, so the gate is too).
     let pool = Arc::new(WorkerPool::new(threads));
+    // A recorder only when a trace was requested; the timing histograms
+    // below are direct measurements, independent of the recorder.
+    let trace_out = args.get("trace-out");
+    let obs = if trace_out.is_some() { Obs::recording(threads + 1) } else { Obs::NoObs };
+    if obs.enabled() {
+        pool.set_obs(obs.clone());
+    }
     // One low-dimensional instance (TI bounds dominate) and one
     // high-dimensional high-norm-variance one (norm filters dominate).
     let instances = ["S-NS", "GSAD"];
 
+    let total_t0 = std::time::Instant::now();
+    let mut h_seed = Histogram::new();
+    let mut h_lloyd = Histogram::new();
     let mut json_rows: Vec<String> = Vec::new();
     let mut violations: Vec<String> = Vec::new();
     // Kernel-seam aggregate over every seeding + Lloyd run in the sweep.
@@ -133,9 +153,11 @@ pub fn run(args: &Args) -> Result<()> {
             let mut rng = Pcg64::seed_from(seed_v);
             let scfg = SeedConfig::new(k, Variant::Full)
                 .with_threads(threads)
-                .with_pool(Arc::clone(&pool));
+                .with_pool(Arc::clone(&pool))
+                .with_obs(obs.clone());
             let mut picker = D2Picker::new(&mut rng);
             let s = seed_with(&data, &scfg, &mut picker, &mut NoTrace);
+            h_seed.record(s.elapsed.as_nanos() as u64);
             k_calls += s.counters.kernel_calls;
             k_batches += s.counters.kernel_batches;
             k_rows += s.counters.kernel_batch_rows;
@@ -144,9 +166,15 @@ pub fn run(args: &Args) -> Result<()> {
                 max_iters,
                 threads,
                 pool: Some(Arc::clone(&pool)),
+                obs: obs.clone(),
                 ..LloydConfig::default()
             };
-            let naive = Row { instance: name, k, result: run_warm(&data, &s, &naive_cfg) };
+            let naive = {
+                let t0 = std::time::Instant::now();
+                let result = run_warm(&data, &s, &naive_cfg);
+                h_lloyd.record(t0.elapsed().as_nanos() as u64);
+                Row { instance: name, k, result }
+            };
             k_calls += naive.result.stats.kernel_calls;
             cell_exits += naive.result.stats.kernel_early_exits;
             json_rows.push(naive.to_json(Strategy::Naive));
@@ -165,9 +193,15 @@ pub fn run(args: &Args) -> Result<()> {
                     strategy,
                     threads,
                     pool: Some(Arc::clone(&pool)),
+                    obs: obs.clone(),
                     ..LloydConfig::default()
                 };
-                let row = Row { instance: name, k, result: run_warm(&data, &s, &cfg) };
+                let row = {
+                    let t0 = std::time::Instant::now();
+                    let result = run_warm(&data, &s, &cfg);
+                    h_lloyd.record(t0.elapsed().as_nanos() as u64);
+                    Row { instance: name, k, result }
+                };
                 k_calls += row.result.stats.kernel_calls;
                 cell_exits += row.result.stats.kernel_early_exits;
                 json_rows.push(row.to_json(strategy));
@@ -209,7 +243,10 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
 
+    let sweep_ns = total_t0.elapsed().as_nanos() as u64;
+
     // --- Seeding gate: sublinear rejection sampling vs the full variant ---
+    let gate_t0 = std::time::Instant::now();
     let seed_inst_name = args.get("seed-instance").unwrap_or("XL-R").to_string();
     let seed_n: usize = args.get_or("seed-n", 1_000_000).map_err(anyhow::Error::msg)?;
     let seed_k: usize = args.get_or("seed-k", 32).map_err(anyhow::Error::msg)?;
@@ -217,7 +254,10 @@ pub fn run(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown --seed-instance {seed_inst_name:?}"))?;
     let sdata = sinst.generate_n(seed_n);
     let seed_cfg = |variant| {
-        SeedConfig::new(seed_k, variant).with_threads(threads).with_pool(Arc::clone(&pool))
+        SeedConfig::new(seed_k, variant)
+            .with_threads(threads)
+            .with_pool(Arc::clone(&pool))
+            .with_obs(obs.clone())
     };
     let full: SeedResult = {
         let mut rng = Pcg64::seed_from(seed_v);
@@ -266,6 +306,7 @@ pub fn run(args: &Args) -> Result<()> {
         ("rejection", "scripted", &rej_replay),
     ];
     for (variant, picker, r) in &seed_rows {
+        h_seed.record(r.elapsed.as_nanos() as u64);
         k_calls += r.counters.kernel_calls;
         k_exits += r.counters.kernel_early_exits;
         k_batches += r.counters.kernel_batches;
@@ -305,12 +346,35 @@ pub fn run(args: &Args) -> Result<()> {
         "{{\"calls\":{k_calls},\"early_exits\":{k_exits},\"batches\":{k_batches},\
          \"batch_rows\":{k_rows},\"batch_occupancy\":{occupancy}}}"
     );
+    // Informational timing (never gates): phase wall times plus run-latency
+    // quantiles from the log-bucketed histograms (ns, upper bucket edges).
+    let seed_gate_ns = gate_t0.elapsed().as_nanos() as u64;
+    let total_ns = total_t0.elapsed().as_nanos() as u64;
+    let q = |h: &Histogram, p: f64| match h.quantile(p) {
+        Some(v) => v.to_string(),
+        None => "null".to_string(),
+    };
+    let timing_json = format!(
+        "{{\"sweep_ns\":{sweep_ns},\"seed_gate_ns\":{seed_gate_ns},\"total_ns\":{total_ns},\
+         \"lloyd_runs\":{},\"lloyd_run_p50_ns\":{},\"lloyd_run_p95_ns\":{},\
+         \"lloyd_run_p99_ns\":{},\"seed_runs\":{},\"seed_run_p50_ns\":{},\
+         \"seed_run_p95_ns\":{},\"seed_run_p99_ns\":{}}}",
+        h_lloyd.count(),
+        q(&h_lloyd, 0.50),
+        q(&h_lloyd, 0.95),
+        q(&h_lloyd, 0.99),
+        h_seed.count(),
+        q(&h_seed, 0.50),
+        q(&h_seed, 0.95),
+        q(&h_seed, 0.99),
+    );
     let json = format!(
-        "{{\n  \"schema\": \"geokmpp-perf-smoke/v3\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
+        "{{\n  \"schema\": \"geokmpp-perf-smoke/v4\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
          \"max_iters\": {max_iters},\n  \"threads\": {threads},\n  \"pool\": {},\n  \
-         \"kernels\": {},\n  \"seeding\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+         \"kernels\": {},\n  \"timing\": {},\n  \"seeding\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
         pool_stats.to_json(),
         kernels_json,
+        timing_json,
         seeding_json,
         json_rows.join(",\n    ")
     );
@@ -328,6 +392,19 @@ pub fn run(args: &Args) -> Result<()> {
         fcount(k_rows)
     );
     println!("{pool_stats}");
+    println!(
+        "timing (informational): sweep {}s, seeding gate {}s; lloyd run p50/p99 {}/{} ms",
+        fnum(sweep_ns as f64 / 1e9, 3),
+        fnum(seed_gate_ns as f64 / 1e9, 3),
+        fnum(h_lloyd.quantile(0.50).unwrap_or(0) as f64 / 1e6, 2),
+        fnum(h_lloyd.quantile(0.99).unwrap_or(0) as f64 / 1e6, 2)
+    );
+    if let (Some(path), Some(rec)) = (trace_out, obs.recorder()) {
+        rec.set_extra_json("pool", pool_stats.to_json());
+        std::fs::write(path, rec.to_chrome_json())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote span timeline to {path}");
+    }
     compare_with_baseline(baseline, &json_rows);
 
     if !violations.is_empty() {
@@ -436,7 +513,14 @@ mod tests {
         ]))
         .unwrap();
         let body = std::fs::read_to_string(&out).unwrap();
-        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v3\""));
+        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v4\""));
+        // The informational timing object: phase wall times + latency
+        // quantiles from every individual run of the sweep (5 strategies ×
+        // 1 k × 2 instances = 10 Lloyd runs; 2 cell seeds + 3 gate seeds).
+        assert!(body.contains("\"timing\": {\"sweep_ns\":"), "missing timing: {body}");
+        assert!(body.contains("\"lloyd_runs\":10"), "wrong lloyd_runs: {body}");
+        assert!(body.contains("\"seed_runs\":5"), "wrong seed_runs: {body}");
+        assert!(body.contains("\"lloyd_run_p99_ns\":"));
         for s in Strategy::ALL {
             assert!(
                 body.contains(&format!("\"strategy\":\"{}\"", s.name())),

@@ -1,0 +1,133 @@
+//! Observation is passive — the central contract of `geokmpp::obs`,
+//! checked at integration level: attaching a recorder to a full
+//! seed → Lloyd run changes no pinned bit (centers, weights, assignments,
+//! counters, stats, inertia traces), and the span timeline it emits is
+//! balanced, nested, and populated from multiple pool lanes.
+
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::catalog::by_name;
+use geokmpp::kmeans::accel::{run_warm, Strategy};
+use geokmpp::kmeans::lloyd::{LloydConfig, LloydResult};
+use geokmpp::obs::Obs;
+use geokmpp::runtime::WorkerPool;
+use geokmpp::seeding::{seed_with, D2Picker, NoTrace, SeedConfig, SeedResult, Variant};
+use std::sync::Arc;
+
+/// One full seed → Lloyd run (shared pool, warm start) under the given
+/// observation handle. Everything the engine pins rides in the results.
+fn run_observed(
+    variant: Variant,
+    strategy: Strategy,
+    threads: usize,
+    obs: &Obs,
+) -> (SeedResult, LloydResult) {
+    let data = by_name("S-NS").unwrap().generate_n(1_200);
+    let pool = Arc::new(WorkerPool::new(threads));
+    if obs.enabled() {
+        pool.set_obs(obs.clone());
+    }
+    let mut rng = Pcg64::seed_from(11);
+    let cfg = SeedConfig::new(12, variant)
+        .with_threads(threads)
+        .with_pool(Arc::clone(&pool))
+        .with_obs(obs.clone());
+    let mut picker = D2Picker::new(&mut rng);
+    let s = seed_with(&data, &cfg, &mut picker, &mut NoTrace);
+    let lcfg = LloydConfig {
+        max_iters: 15,
+        strategy,
+        threads,
+        pool: Some(Arc::clone(&pool)),
+        obs: obs.clone(),
+        ..LloydConfig::default()
+    };
+    let l = run_warm(&data, &s, &lcfg);
+    (s, l)
+}
+
+/// The NoObs-vs-recording equality matrix: two seeders × two accelerated
+/// strategies × {1, 4} threads. Every pinned outcome must be bit-identical
+/// with and without a live recorder, and the recorder must come back
+/// balanced with one iteration sample per Lloyd iteration.
+#[test]
+fn recording_changes_no_pinned_bit() {
+    for variant in [Variant::Full, Variant::Rejection] {
+        for strategy in [Strategy::Hamerly, Strategy::Yinyang] {
+            for threads in [1usize, 4] {
+                let tag = format!("{variant:?}/{strategy:?}/t{threads}");
+                let (s0, l0) = run_observed(variant, strategy, threads, &Obs::NoObs);
+                let obs = Obs::recording(threads + 1);
+                let (s1, l1) = run_observed(variant, strategy, threads, &obs);
+                assert_eq!(s0.center_indices, s1.center_indices, "{tag}: centers chosen");
+                assert_eq!(s0.weights, s1.weights, "{tag}: seed weights");
+                assert_eq!(s0.assignments, s1.assignments, "{tag}: seed assignments");
+                assert_eq!(s0.counters, s1.counters, "{tag}: seed counters");
+                assert_eq!(l0.assignments, l1.assignments, "{tag}: lloyd assignments");
+                assert_eq!(l0.inertia_trace, l1.inertia_trace, "{tag}: inertia trace");
+                assert_eq!(l0.stats, l1.stats, "{tag}: lloyd stats");
+                assert_eq!(l0.iterations, l1.iterations, "{tag}: iterations");
+                assert_eq!(l0.converged, l1.converged, "{tag}: convergence");
+                for j in 0..l0.centers.rows() {
+                    assert_eq!(l0.centers.row(j), l1.centers.row(j), "{tag}: center {j}");
+                }
+                let rec = obs.recorder().unwrap();
+                assert!(rec.balanced(), "{tag}: unbalanced spans");
+                assert_eq!(
+                    rec.iter_total() as usize,
+                    l1.iterations,
+                    "{tag}: one IterSample per iteration"
+                );
+            }
+        }
+    }
+}
+
+/// The exported timeline is structurally sound: every span family the run
+/// exercises appears, events come from at least two pool-worker lanes, and
+/// the latency histograms are populated.
+#[test]
+fn trace_has_nested_spans_from_multiple_lanes() {
+    let obs = Obs::recording(4); // lane 0 (caller) + 3 pool workers
+    let (_, l) = run_observed(Variant::Full, Strategy::Hamerly, 3, &obs);
+    assert!(l.iterations > 1, "need a multi-iteration run to trace");
+    let rec = obs.recorder().unwrap();
+    assert!(rec.balanced());
+    let json = rec.to_chrome_json();
+    for name in [
+        "\"seed\"",
+        "\"seed.round\"",
+        "\"lloyd\"",
+        "\"lloyd.iter\"",
+        "\"lloyd.assign\"",
+        "\"lloyd.assign.shard\"",
+        "\"lloyd.update\"",
+        "\"pool.dispatch\"",
+        "\"pool.batch\"",
+    ] {
+        assert!(json.contains(name), "missing span {name} in {json}");
+    }
+    // Spans from at least two distinct pool-worker lanes (tid 1 and 2).
+    assert!(json.contains("\"tid\":1"), "no lane-1 events");
+    assert!(json.contains("\"tid\":2"), "no lane-2 events");
+    assert_eq!(rec.histogram("seed.run_ns").unwrap().count(), 1);
+    let qw = rec.histogram("pool.queue_wait_ns").unwrap();
+    assert!(qw.count() > 0, "no queue-wait samples");
+    assert!(rec.dropped() == 0, "spans dropped on a small run");
+}
+
+/// `IterSample` deltas are per-iteration, not cumulative: summing the
+/// sampled distance counts reproduces the run's total.
+#[test]
+fn iteration_samples_are_deltas() {
+    let obs = Obs::recording(3);
+    let (_, l) = run_observed(Variant::Full, Strategy::Yinyang, 2, &obs);
+    let rec = obs.recorder().unwrap();
+    let samples = rec.iter_samples();
+    assert_eq!(samples.len(), l.iterations);
+    let summed: u64 = samples.iter().map(|s| s.stats.distances).sum();
+    assert_eq!(summed, l.stats.distances, "iteration deltas must sum to the total");
+    for (i, s) in samples.iter().enumerate() {
+        assert_eq!(s.iteration as usize, i + 1, "samples in iteration order");
+        assert!(s.wall_ns > 0, "iteration {i} has zero wall time");
+    }
+}
