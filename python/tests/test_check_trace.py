@@ -109,6 +109,39 @@ def test_missing_fields_are_reported():
     assert any("bad tid" in p for p in check_trace.check(doc))
 
 
+def test_known_job_spans_pass():
+    # The full service admission taxonomy, properly nested, is accepted.
+    events, ts = [], 0.0
+    for name in ["job.admit", "job.reject", "job.cache_hit"]:
+        events.append(ev("B", name, ts, 0))
+        ts += 1.0
+    for name in ["job.cache_hit", "job.reject", "job.admit"]:
+        events.append(ev("E", name, ts, 0))
+        ts += 1.0
+    events += [
+        ev("B", "job.run", 0.5, 1),
+        ev("B", "job.cancel", 1.5, 1),
+        ev("E", "job.cancel", 2.5, 1),
+        ev("E", "job.run", 3.5, 1),
+    ]
+    assert check_trace.check({"traceEvents": events}) == []
+
+
+def test_unknown_job_span_is_reported():
+    doc = {"traceEvents": [
+        ev("B", "job.evict", 0.0, 0),  # not in the taxonomy
+        ev("E", "job.evict", 1.0, 0),
+    ]}
+    problems = check_trace.check(doc)
+    assert any("unknown job span 'job.evict'" in p for p in problems)
+    # Non-job namespaces are engine-defined and never flagged.
+    doc = {"traceEvents": [
+        ev("B", "pool.batch", 0.0, 0),
+        ev("E", "pool.batch", 1.0, 0),
+    ]}
+    assert check_trace.check(doc) == []
+
+
 def test_cli_exit_codes(tmp_path):
     good = tmp_path / "good.json"
     good.write_text(json.dumps({"traceEvents": [

@@ -9,7 +9,11 @@ Checks the `--trace-out` artifact emitted by `geokmpp::obs::Recorder`:
 * per ``tid``, ``B``/``E`` events form a stack-balanced sequence whose end
   names match the innermost open begin (proper nesting, nothing left open);
 * per ``tid``, timestamps are non-decreasing (the recorder stamps under the
-  lane lock, so a violation means a real recorder bug, not scheduling).
+  lane lock, so a violation means a real recorder bug, not scheduling);
+* every span in the coordinator's ``job.*`` namespace uses a name from the
+  service admission taxonomy (``job.admit`` / ``job.run`` / ``job.reject``
+  / ``job.cache_hit`` / ``job.cancel``) — a typo'd or stale job span name
+  would silently break dashboards keyed on the taxonomy.
 
 Exit status 0 on a well-formed trace, 1 with a diagnostic otherwise —
 CI runs this against the perf-smoke trace on every push.
@@ -17,6 +21,13 @@ CI runs this against the perf-smoke trace on every push.
 
 import json
 import sys
+
+# The coordinator's admission span taxonomy (`geokmpp::obs` module docs +
+# `coordinator::service`). Names outside the `job.` namespace (seeding
+# rounds, Lloyd phases, pool spans) are engine-defined and not enumerated.
+JOB_SPANS = frozenset(
+    ["job.admit", "job.run", "job.reject", "job.cache_hit", "job.cancel"]
+)
 
 
 def check(doc):
@@ -48,6 +59,11 @@ def check(doc):
         if not isinstance(tid, int):
             problems.append(f"event {i} ({name}): bad tid {tid!r}")
             continue
+        if ph == "B" and name.startswith("job.") and name not in JOB_SPANS:
+            problems.append(
+                f"event {i}: unknown job span {name!r} (taxonomy: "
+                f"{', '.join(sorted(JOB_SPANS))})"
+            )
         if ts < last_ts.get(tid, 0.0):
             problems.append(
                 f"event {i} ({name}): ts {ts} < {last_ts[tid]} on tid {tid}"

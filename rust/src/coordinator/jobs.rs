@@ -1,11 +1,20 @@
 //! Job specifications and results for the experiment coordinator.
+//!
+//! A [`JobSpec`] runs through one entry point — [`JobSpec::run`] over a
+//! shared [`ExecCtx`] — which replaced the old `run()` /
+//! `run_with_pool()` / `run_with_pool_obs()` method sprawl (the latter two
+//! survive as deprecated delegating shims). The context carries the pool,
+//! observation handle, kernel selection and cancellation token; a default
+//! context reproduces the old no-argument `run()` bit-for-bit.
 
 use crate::core::matrix::Matrix;
 use crate::core::rng::{stream_id, Pcg64};
 use crate::kmeans::accel::{run_warm, Strategy};
 use crate::kmeans::lloyd::LloydConfig;
 use crate::metrics::lloyd::LloydStats;
+use crate::runtime::ctx::Terminated;
 use crate::runtime::pool::WorkerPool;
+use crate::runtime::ExecCtx;
 use crate::seeding::{seed_with, Counters, D2Picker, NoTrace, SeedConfig, SeedResult, Variant};
 use std::sync::Arc;
 use std::time::Duration;
@@ -54,6 +63,14 @@ pub struct JobSpec {
     pub lloyd: Option<LloydPhase>,
 }
 
+/// Folds `bytes` into an FNV-1a 64-bit state.
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
 impl JobSpec {
     /// The job's dedicated RNG (stream derived from all coordinates).
     pub fn rng(&self) -> Pcg64 {
@@ -66,65 +83,107 @@ impl JobSpec {
         Pcg64::seed_stream(self.seed, stream)
     }
 
-    /// Runs the job, returning a compact result. Each sharded phase builds
-    /// (and reuses) a private worker pool; schedulers that run many jobs
-    /// should prefer [`JobSpec::run_with_pool`] so seeding and every Lloyd
-    /// iteration share one set of parked workers.
-    pub fn run(&self) -> JobResult {
-        self.run_inner(None, &crate::obs::Obs::NoObs)
-    }
-
-    /// Runs the job on a shared persistent [`WorkerPool`]: both the seeding
-    /// scans and the Lloyd assignment steps dispatch onto `pool`'s parked
-    /// workers. The shard split is still governed by [`JobSpec::threads`],
-    /// so results are bit-identical to [`JobSpec::run`].
-    pub fn run_with_pool(&self, pool: &Arc<WorkerPool>) -> JobResult {
-        self.run_inner(Some(pool), &crate::obs::Obs::NoObs)
-    }
-
-    /// Like [`JobSpec::run_with_pool`] with an observation handle threaded
-    /// into both phases: `seed`/`seed.round` and `lloyd.*` spans plus the
-    /// per-iteration samples land on the recorder. Observation never changes
-    /// results (see [`crate::obs`]).
+    /// Canonical content fingerprint — the service's result-cache key.
     ///
-    /// Phase spans record on lane 0, so share one recorder across
-    /// *concurrent* jobs only if an interleaved lane-0 timeline is
-    /// acceptable ([`crate::coordinator::scheduler::Scheduler`] therefore
-    /// keeps job phases unobserved and records job-level spans instead).
-    pub fn run_with_pool_obs(&self, pool: &Arc<WorkerPool>, obs: &crate::obs::Obs) -> JobResult {
-        self.run_inner(Some(pool), obs)
+    /// Hashes (FNV-1a 64) every field that determines the job's result:
+    /// instance name, dataset shape and the exact bits of every data value,
+    /// `k`, variant, repetition, base seed, and the Lloyd phase (strategy +
+    /// iteration cap). [`JobSpec::threads`] is deliberately **excluded**:
+    /// results are bit-identical at any thread count (the pool determinism
+    /// contract), so jobs differing only in `threads` share one cache line.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        fnv(&mut h, self.instance.as_bytes());
+        fnv(&mut h, &[0xff]); // name/shape separator (names are 0xff-free UTF-8)
+        fnv(&mut h, &(self.data.rows() as u64).to_le_bytes());
+        fnv(&mut h, &(self.data.cols() as u64).to_le_bytes());
+        for i in 0..self.data.rows() {
+            for &v in self.data.row(i) {
+                fnv(&mut h, &v.to_bits().to_le_bytes());
+            }
+        }
+        fnv(&mut h, &(self.k as u64).to_le_bytes());
+        fnv(&mut h, &(self.variant as u64).to_le_bytes());
+        fnv(&mut h, &self.rep.to_le_bytes());
+        fnv(&mut h, &self.seed.to_le_bytes());
+        match self.lloyd {
+            None => fnv(&mut h, &[0]),
+            Some(phase) => {
+                fnv(&mut h, &[1]);
+                fnv(&mut h, &(phase.strategy as u64).to_le_bytes());
+                fnv(&mut h, &(phase.max_iters as u64).to_le_bytes());
+            }
+        }
+        h
     }
 
-    fn run_inner(&self, pool: Option<&Arc<WorkerPool>>, obs: &crate::obs::Obs) -> JobResult {
-        let mut rng = self.rng();
-        let mut cfg = SeedConfig::new(self.k, self.variant)
-            .with_threads(self.threads.max(1))
-            .with_obs(obs.clone());
-        if let Some(pool) = pool {
-            cfg = cfg.with_pool(Arc::clone(pool));
+    /// Runs the job under an execution context — the single entry point.
+    ///
+    /// `ExecCtx::default()` reproduces the old no-argument path exactly:
+    /// each sharded phase builds (and reuses) a private worker pool.
+    /// Schedulers running many jobs pass a context with a shared pool so
+    /// seeding and every Lloyd iteration reuse one set of parked workers;
+    /// the shard split stays governed by [`JobSpec::threads`], so results
+    /// are bit-identical either way.
+    ///
+    /// The context's [`crate::runtime::CancelToken`] is observed before the
+    /// run starts and at every seeding-round / Lloyd-iteration boundary:
+    /// once it fires, the job stops at the next boundary and returns a
+    /// well-formed partial [`JobResult`] carrying
+    /// [`JobStatus::Terminated`] — never a wedged lane. A pre-fired token
+    /// short-circuits into an empty terminated result without touching the
+    /// data.
+    pub fn run(&self, ctx: &ExecCtx) -> JobResult {
+        if let Some(cause) = ctx.cancel.checkpoint() {
+            // Cancelled while queued: report termination without scanning.
+            return JobResult {
+                instance: self.instance.clone(),
+                k: self.k,
+                variant: self.variant,
+                rep: self.rep,
+                counters: Counters::default(),
+                elapsed: Duration::ZERO,
+                cost: f64::NAN,
+                lloyd: None,
+                status: JobStatus::Terminated(cause),
+            };
         }
+        let mut rng = self.rng();
+        let cfg =
+            SeedConfig::new(self.k, self.variant).with_threads(self.threads.max(1)).with_ctx(ctx);
         let mut picker = D2Picker::new(&mut rng);
         let r: SeedResult = seed_with(&self.data, &cfg, &mut picker, &mut NoTrace);
-        let lloyd = self.lloyd.map(|phase| {
-            let lcfg = LloydConfig {
-                max_iters: phase.max_iters,
-                strategy: phase.strategy,
-                threads: self.threads.max(1),
-                pool: pool.map(Arc::clone),
-                obs: obs.clone(),
-                ..LloydConfig::default()
-            };
-            let started = std::time::Instant::now();
-            let lr = run_warm(&self.data, &r, &lcfg);
-            LloydSummary {
-                strategy: phase.strategy,
-                stats: lr.stats,
-                iterations: lr.iterations,
-                converged: lr.converged,
-                inertia: lr.inertia_trace.last().copied().unwrap_or(f64::NAN),
-                elapsed: started.elapsed(),
+        let mut status = match ctx.cancel.terminated() {
+            Some(cause) => JobStatus::Terminated(cause),
+            None => JobStatus::Completed,
+        };
+        // A job terminated during seeding skips its clustering phase: the
+        // partial seeding result (fewer centers) is reported as-is.
+        let lloyd = match (status, self.lloyd) {
+            (JobStatus::Completed, Some(phase)) => {
+                let lcfg = LloydConfig {
+                    max_iters: phase.max_iters,
+                    strategy: phase.strategy,
+                    threads: self.threads.max(1),
+                    ..LloydConfig::default()
+                }
+                .with_ctx(ctx);
+                let started = std::time::Instant::now();
+                let lr = run_warm(&self.data, &r, &lcfg);
+                if let Some(cause) = ctx.cancel.terminated() {
+                    status = JobStatus::Terminated(cause);
+                }
+                Some(LloydSummary {
+                    strategy: phase.strategy,
+                    stats: lr.stats,
+                    iterations: lr.iterations,
+                    converged: lr.converged,
+                    inertia: lr.inertia_trace.last().copied().unwrap_or(f64::NAN),
+                    elapsed: started.elapsed(),
+                })
             }
-        });
+            _ => None,
+        };
         JobResult {
             instance: self.instance.clone(),
             k: self.k,
@@ -134,6 +193,41 @@ impl JobSpec {
             elapsed: r.elapsed,
             cost: r.cost(),
             lloyd,
+            status,
+        }
+    }
+
+    /// Runs the job on a shared persistent [`WorkerPool`].
+    #[deprecated(note = "use run(&ExecCtx::default().with_pool(pool)) — the one entry point")]
+    pub fn run_with_pool(&self, pool: &Arc<WorkerPool>) -> JobResult {
+        self.run(&ExecCtx::default().with_pool(Arc::clone(pool)))
+    }
+
+    /// Runs the job on a shared pool with an observation handle.
+    #[deprecated(note = "use run(&ExecCtx::default().with_pool(pool).with_obs(obs))")]
+    pub fn run_with_pool_obs(&self, pool: &Arc<WorkerPool>, obs: &crate::obs::Obs) -> JobResult {
+        self.run(&ExecCtx::default().with_pool(Arc::clone(pool)).with_obs(obs.clone()))
+    }
+}
+
+/// How a job ended (see [`JobSpec::run`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// The job ran to completion; the result is bit-identical to any other
+    /// complete run of the same spec.
+    Completed,
+    /// The job stopped early (deadline or cancellation) at a cooperative
+    /// checkpoint; the result is a well-formed partial (fewer centers
+    /// and/or fewer Lloyd iterations than requested).
+    Terminated(Terminated),
+}
+
+impl JobStatus {
+    /// Stable lowercase name (JSON/report surfaces).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Completed => "completed",
+            JobStatus::Terminated(cause) => cause.name(),
         }
     }
 }
@@ -173,16 +267,22 @@ pub struct JobResult {
     pub counters: Counters,
     /// Wall-clock time of the seeding run.
     pub elapsed: Duration,
-    /// Final seeding cost Σ w_i.
+    /// Final seeding cost Σ w_i (NaN when the job terminated before the
+    /// initial scan).
     pub cost: f64,
-    /// Clustering-phase summary, when the spec requested a [`LloydPhase`].
+    /// Clustering-phase summary, when the spec requested a [`LloydPhase`]
+    /// and seeding completed.
     pub lloyd: Option<LloydSummary>,
+    /// How the job ended; partial results carry
+    /// [`JobStatus::Terminated`].
+    pub status: JobStatus,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::{gmm, GmmSpec};
+    use crate::runtime::CancelToken;
 
     #[test]
     fn job_runs_and_is_deterministic() {
@@ -198,12 +298,14 @@ mod tests {
             threads: 1,
             lloyd: None,
         };
-        let a = spec.run();
-        let b = spec.run();
+        let a = spec.run(&ExecCtx::default());
+        let b = spec.run(&ExecCtx::default());
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.cost, b.cost);
         assert_eq!(a.k, 8);
         assert!(a.lloyd.is_none());
+        assert_eq!(a.status, JobStatus::Completed);
+        assert_eq!(a.status.name(), "completed");
     }
 
     #[test]
@@ -220,8 +322,8 @@ mod tests {
             threads: 4,
             lloyd: None,
         };
-        let a = spec.run();
-        let b = spec.run();
+        let a = spec.run(&ExecCtx::default());
+        let b = spec.run(&ExecCtx::default());
         assert_eq!(a.counters, b.counters);
         assert_eq!(a.cost, b.cost);
         assert!(a.cost > 0.0);
@@ -244,10 +346,11 @@ mod tests {
             threads: 2,
             lloyd: Some(LloydPhase { strategy, max_iters: 50 }),
         };
-        let naive = mk(Strategy::Naive).run().lloyd.unwrap();
+        let ctx = ExecCtx::default();
+        let naive = mk(Strategy::Naive).run(&ctx).lloyd.unwrap();
         for strategy in Strategy::ACCELERATED {
-            let a = mk(strategy).run().lloyd.unwrap();
-            let b = mk(strategy).run().lloyd.unwrap();
+            let a = mk(strategy).run(&ctx).lloyd.unwrap();
+            let b = mk(strategy).run(&ctx).lloyd.unwrap();
             assert_eq!(a.stats, b.stats, "{strategy:?} not deterministic");
             assert_eq!(a.inertia, b.inertia, "{strategy:?} not deterministic");
             assert_eq!(a.inertia, naive.inertia, "{strategy:?} diverged from naive");
@@ -279,8 +382,8 @@ mod tests {
                 lloyd: Some(LloydPhase { strategy: Strategy::Yinyang, max_iters: 30 }),
             };
             let pool = Arc::new(crate::runtime::pool::WorkerPool::new(4));
-            let a = spec.run();
-            let b = spec.run_with_pool(&pool);
+            let a = spec.run(&ExecCtx::default());
+            let b = spec.run(&ExecCtx::default().with_pool(Arc::clone(&pool)));
             assert_eq!(a.counters, b.counters, "{variant:?}");
             assert_eq!(a.cost, b.cost, "{variant:?}");
             let (al, bl) = (a.lloyd.unwrap(), b.lloyd.unwrap());
@@ -304,8 +407,87 @@ mod tests {
             threads: 1,
             lloyd: None,
         };
-        let a = mk(0).run();
-        let b = mk(1).run();
+        let a = mk(0).run(&ExecCtx::default());
+        let b = mk(1).run(&ExecCtx::default());
         assert_ne!(a.cost, b.cost, "reps should differ");
+    }
+
+    /// Fingerprints separate every identity coordinate but ignore the
+    /// thread count (results are thread-invariant, so the cache shares).
+    #[test]
+    fn fingerprint_keys_identity_not_threads() {
+        let mut rng = Pcg64::seed_from(9);
+        let data = Arc::new(gmm(&GmmSpec::new(120, 3, 4), &mut rng));
+        let base = JobSpec {
+            instance: "fp".into(),
+            data: Arc::clone(&data),
+            k: 6,
+            variant: Variant::Tie,
+            rep: 0,
+            seed: 7,
+            threads: 1,
+            lloyd: None,
+        };
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.fingerprint(), "stable across calls");
+        assert_eq!(fp, JobSpec { threads: 8, ..base.clone() }.fingerprint(), "threads ignored");
+        assert_ne!(fp, JobSpec { k: 7, ..base.clone() }.fingerprint());
+        assert_ne!(fp, JobSpec { rep: 1, ..base.clone() }.fingerprint());
+        assert_ne!(fp, JobSpec { seed: 8, ..base.clone() }.fingerprint());
+        assert_ne!(fp, JobSpec { variant: Variant::Full, ..base.clone() }.fingerprint());
+        assert_ne!(
+            fp,
+            JobSpec { instance: "fq".into(), ..base.clone() }.fingerprint(),
+            "instance name keyed"
+        );
+        assert_ne!(
+            fp,
+            JobSpec { lloyd: Some(LloydPhase::default()), ..base.clone() }.fingerprint()
+        );
+        // Same shape, different data bits → different key.
+        let mut rng2 = Pcg64::seed_from(10);
+        let other = Arc::new(gmm(&GmmSpec::new(120, 3, 4), &mut rng2));
+        assert_ne!(fp, JobSpec { data: other, ..base.clone() }.fingerprint());
+    }
+
+    /// A pre-fired token short-circuits; a scripted token stops seeding at
+    /// the round boundary, leaving a well-formed partial result.
+    #[test]
+    fn cancellation_yields_well_formed_partials() {
+        let mut rng = Pcg64::seed_from(3);
+        let data = Arc::new(gmm(&GmmSpec::new(300, 3, 4), &mut rng));
+        let spec = JobSpec {
+            instance: "c".into(),
+            data,
+            k: 8,
+            variant: Variant::Standard,
+            rep: 0,
+            seed: 11,
+            threads: 1,
+            lloyd: Some(LloydPhase::default()),
+        };
+        // Pre-fired: no scan at all.
+        let pre = spec.run(
+            &ExecCtx::default().with_cancel(CancelToken::after_checks(0, Terminated::Cancelled)),
+        );
+        assert_eq!(pre.status, JobStatus::Terminated(Terminated::Cancelled));
+        assert!(pre.cost.is_nan());
+        assert_eq!(pre.counters, Counters::default());
+        assert!(pre.lloyd.is_none());
+        // Budget for the up-front check + 3 seeding rounds: terminated
+        // mid-seeding with 4 of 8 centers and no Lloyd phase.
+        let mid = spec.run(
+            &ExecCtx::default().with_cancel(CancelToken::after_checks(4, Terminated::Deadline)),
+        );
+        assert_eq!(mid.status, JobStatus::Terminated(Terminated::Deadline));
+        assert!(mid.cost > 0.0, "partial seeding still has a real cost");
+        assert!(mid.lloyd.is_none(), "terminated seeding skips the Lloyd phase");
+        // The partial equals a fresh k=4 run of the same stream... up to the
+        // RNG stream id, which hashes k — so just pin determinism instead.
+        let mid2 = spec.run(
+            &ExecCtx::default().with_cancel(CancelToken::after_checks(4, Terminated::Deadline)),
+        );
+        assert_eq!(mid.cost, mid2.cost);
+        assert_eq!(mid.counters, mid2.counters);
     }
 }

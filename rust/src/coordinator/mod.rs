@@ -5,13 +5,23 @@
 //! tokio is not in the offline crate set; this is a `std::thread` pool with
 //! a bounded MPMC channel providing backpressure (a submitting producer
 //! blocks when the queue is full).
+//!
+//! Two front-ends share the machinery: the batch [`Scheduler`] (hand over
+//! a sweep, block until done) and the long-running [`Service`]
+//! (admission-controlled `submit` with explicit accept/reject outcomes,
+//! per-job deadlines and cancellation, an admission-time result cache, and
+//! graceful shutdown — see [`service`]). Both run every job through the
+//! single [`JobSpec::run`] entry point over a shared
+//! [`crate::runtime::ExecCtx`].
 
 pub mod jobs;
 pub mod queue;
 pub mod report;
 pub mod scheduler;
+pub mod service;
 
-pub use jobs::{JobResult, JobSpec, LloydPhase, LloydSummary};
-pub use queue::BoundedQueue;
+pub use jobs::{JobResult, JobSpec, JobStatus, LloydPhase, LloydSummary};
+pub use queue::{BoundedQueue, PushError};
 pub use report::Report;
 pub use scheduler::{run_concurrent, Scheduler};
+pub use service::{Admission, JobTicket, RejectReason, Service, ServiceStats};

@@ -15,10 +15,20 @@ struct State<T> {
     closed: bool,
 }
 
+/// Why a [`BoundedQueue::try_push`] was refused (the item comes back).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity — backpressure; retry or reject.
+    Full(T),
+    /// The queue has been closed — no further admissions.
+    Closed(T),
+}
+
 /// A bounded multi-producer multi-consumer queue.
 ///
-/// `push` blocks while full (backpressure); `pop` blocks while empty and
-/// returns `None` once the queue is closed and drained.
+/// `push` blocks while full (backpressure); `try_push` refuses instead of
+/// blocking (admission control); `pop` blocks while empty and returns
+/// `None` once the queue is closed and drained.
 pub struct BoundedQueue<T> {
     inner: Arc<Inner<T>>,
 }
@@ -56,6 +66,24 @@ impl<T> BoundedQueue<T> {
             }
             state = self.inner.not_full.wait(state).unwrap();
         }
+    }
+
+    /// Non-blocking push — the admission-control primitive: a full queue
+    /// yields an immediate [`PushError::Full`] (with the item handed back)
+    /// instead of parking the producer, so a service front-end can resolve
+    /// every submission to an explicit admitted/rejected outcome without
+    /// ever wedging the submitting thread.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut state = self.inner.queue.lock().unwrap();
+        if state.closed {
+            return Err(PushError::Closed(item));
+        }
+        if state.items.len() >= state.capacity {
+            return Err(PushError::Full(item));
+        }
+        state.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
     }
 
     /// Blocking pop. Returns `None` when closed and empty.
@@ -128,6 +156,28 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         h.join().unwrap();
         assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_full_and_closed_hand_the_item_back() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        match q.try_push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok(), "capacity freed by the pop");
+        q.close();
+        match q.try_push(4) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // The admitted items still drain after close.
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -255,6 +255,7 @@ mod tests {
             elapsed: Duration::from_millis(10 + rep),
             cost: 100.0 + rep as f64,
             lloyd: None,
+            status: crate::coordinator::jobs::JobStatus::Completed,
         }
     }
 

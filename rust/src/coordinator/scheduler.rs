@@ -7,21 +7,23 @@
 //!
 //! # Observation
 //!
-//! With a recorder attached ([`Scheduler::with_obs`]) the scheduler records
-//! the admission/queue/run lifecycle of every job: a `job.admit` span on
-//! lane 0 (the producer) around each bounded-queue push, the
-//! `job.queue_wait_ns` histogram (enqueue → pop), a `job.run` span on lane
-//! `1 + w` per scheduler worker `w`, and `job.seed_ns` / `job.lloyd_ns`
-//! latency histograms from each result. Job *phases* stay unobserved here:
-//! phase spans record on lane 0, and concurrent jobs sharing one recorder
-//! would interleave there — observe a single job's internals via
-//! [`JobSpec::run_with_pool_obs`] instead. Observation never changes
-//! results or stats (see [`crate::obs`]).
+//! With a recorder attached ([`Scheduler::with_obs`] or the context's
+//! `obs`) the scheduler records the admission/queue/run lifecycle of every
+//! job: a `job.admit` span on lane 0 (the producer) around each
+//! bounded-queue push, the `job.queue_wait_ns` histogram (enqueue → pop), a
+//! `job.run` span on lane `1 + w` per scheduler worker `w`, and
+//! `job.seed_ns` / `job.lloyd_ns` latency histograms from each result. Job
+//! *phases* stay unobserved here: phase spans record on lane 0, and
+//! concurrent jobs sharing one recorder would interleave there — observe a
+//! single job's internals by passing an [`ExecCtx`] with an `obs` directly
+//! to [`JobSpec::run`] instead. Observation never changes results or stats
+//! (see [`crate::obs`]).
 
 use crate::coordinator::jobs::{JobResult, JobSpec};
 use crate::coordinator::queue::BoundedQueue;
 use crate::obs::Obs;
 use crate::runtime::pool::{PoolStats, WorkerPool};
+use crate::runtime::ExecCtx;
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Instant;
@@ -43,20 +45,29 @@ impl Scheduler {
     /// Attaches an observation handle recording the job lifecycle (see the
     /// module docs for the span/histogram taxonomy). Size the recorder with
     /// at least `1 + workers` lanes so every worker gets its own timeline.
+    /// A context passed to [`Scheduler::run`] with a non-`NoObs` handle
+    /// takes precedence over this one.
     pub fn with_obs(mut self, obs: Obs) -> Self {
         self.obs = obs;
         self
     }
 
-    /// Runs all jobs to completion, returning results in completion order.
-    pub fn run(&self, specs: Vec<JobSpec>) -> Vec<JobResult> {
-        self.run_with_stats(specs).0
-    }
-
-    /// Runs all jobs to completion, returning results in completion order
-    /// plus the aggregated [`PoolStats`] over every worker's persistent
-    /// shard pool (`workers` entries absorbed into one).
-    pub fn run_with_stats(&self, specs: Vec<JobSpec>) -> (Vec<JobResult>, PoolStats) {
+    /// Runs all jobs to completion under one execution context, returning
+    /// results in completion order plus the aggregated [`PoolStats`] over
+    /// every worker's persistent shard pool (`workers` entries absorbed
+    /// into one).
+    ///
+    /// The context supplies the kernel selection, cancellation token and
+    /// (optionally) the observation handle for every job. `ctx.pool` is
+    /// deliberately ignored: each scheduler worker owns its own persistent
+    /// shard pool — sharing one pool across scheduler workers would
+    /// serialize their dispatch gates. The shard *split* stays governed by
+    /// each job's `threads`, so results are bit-identical regardless of
+    /// which pool runs them. `ctx.cancel` is shared by every job in the
+    /// batch: once it fires, queued jobs resolve as terminated partials
+    /// (per-job tokens are the service front-end's business).
+    pub fn run(&self, specs: Vec<JobSpec>, ctx: &ExecCtx) -> (Vec<JobResult>, PoolStats) {
+        let obs = if ctx.obs.enabled() { ctx.obs.clone() } else { self.obs.clone() };
         // One shard pool per scheduler worker, wide enough for any job in
         // the batch; jobs narrower than the pool still split by their own
         // `threads` (the split, not the pool, governs results).
@@ -70,14 +81,21 @@ impl Scheduler {
         for w in 0..self.workers {
             let q = queue.clone();
             let out = Arc::clone(&results);
-            let obs = self.obs.clone();
+            let obs = obs.clone();
+            let job_ctx = ExecCtx {
+                pool: None, // filled per worker below
+                obs: Obs::NoObs,
+                kernel: ctx.kernel,
+                cancel: ctx.cancel.clone(),
+            };
             handles.push(thread::spawn(move || {
                 let pool = Arc::new(WorkerPool::new(lanes));
+                let job_ctx = job_ctx.with_pool(Arc::clone(&pool));
                 while let Some((spec, enqueued)) = q.pop() {
                     obs.record_ns("job.queue_wait_ns", enqueued.elapsed().as_nanos() as u64);
                     let result = {
                         let _run_span = obs.span(1 + w, "job.run");
-                        spec.run_with_pool(&pool)
+                        spec.run(&job_ctx)
                     };
                     obs.record_ns("job.seed_ns", result.elapsed.as_nanos() as u64);
                     if let Some(l) = &result.lloyd {
@@ -90,7 +108,7 @@ impl Scheduler {
         }
         // Producer side: backpressure via the bounded queue.
         for spec in specs {
-            let admit_span = self.obs.span(0, "job.admit");
+            let admit_span = obs.span(0, "job.admit");
             queue.push((spec, Instant::now())).ok();
             drop(admit_span);
         }
@@ -102,6 +120,12 @@ impl Scheduler {
         let results =
             Arc::try_unwrap(results).map(|m| m.into_inner().unwrap()).unwrap_or_default();
         (results, stats)
+    }
+
+    /// Runs all jobs, returning results plus aggregated pool stats.
+    #[deprecated(note = "use run(specs, &ExecCtx::default()) — the one entry point")]
+    pub fn run_with_stats(&self, specs: Vec<JobSpec>) -> (Vec<JobResult>, PoolStats) {
+        self.run(specs, &ExecCtx::default())
     }
 }
 
@@ -119,7 +143,7 @@ pub fn run_concurrent(spec: &JobSpec, j: usize) -> Vec<f64> {
         let barrier = Arc::clone(&barrier);
         handles.push(thread::spawn(move || {
             barrier.wait(); // synchronized start, like a cluster queue burst
-            let r = spec.run();
+            let r = spec.run(&ExecCtx::default());
             r.elapsed.as_secs_f64()
         }));
     }
@@ -153,7 +177,7 @@ mod tests {
     #[test]
     fn pool_completes_all_jobs() {
         let s = Scheduler::new(4, 2);
-        let results = s.run(specs(20));
+        let (results, _) = s.run(specs(20), &ExecCtx::default());
         assert_eq!(results.len(), 20);
         let mut reps: Vec<u64> = results.iter().map(|r| r.rep).collect();
         reps.sort_unstable();
@@ -163,7 +187,7 @@ mod tests {
     #[test]
     fn single_worker_works() {
         let s = Scheduler::new(1, 1);
-        assert_eq!(s.run(specs(5)).len(), 5);
+        assert_eq!(s.run(specs(5), &ExecCtx::default()).0.len(), 5);
     }
 
     #[test]
@@ -183,8 +207,8 @@ mod tests {
         for s in &mut specs {
             s.threads = 2;
         }
-        let serial: Vec<f64> = specs.iter().map(|s| s.run().cost).collect();
-        let (results, stats) = Scheduler::new(3, 4).run_with_stats(specs);
+        let serial: Vec<f64> = specs.iter().map(|s| s.run(&ExecCtx::default()).cost).collect();
+        let (results, stats) = Scheduler::new(3, 4).run(specs, &ExecCtx::default());
         assert_eq!(results.len(), 12);
         for r in &results {
             assert_eq!(r.cost, serial[r.rep as usize]);
@@ -201,9 +225,11 @@ mod tests {
     /// results stay bit-identical to the unobserved runs.
     #[test]
     fn observed_run_matches_serial_and_records_lifecycle() {
-        let serial: Vec<f64> = specs(6).into_iter().map(|s| s.run().cost).collect();
+        let serial: Vec<f64> =
+            specs(6).into_iter().map(|s| s.run(&ExecCtx::default()).cost).collect();
         let obs = Obs::recording(3); // lane 0 (producer) + 2 worker lanes
-        let (results, _) = Scheduler::new(2, 2).with_obs(obs.clone()).run_with_stats(specs(6));
+        let ctx = ExecCtx::default().with_obs(obs.clone());
+        let (results, _) = Scheduler::new(2, 2).run(specs(6), &ctx);
         assert_eq!(results.len(), 6);
         for r in &results {
             assert_eq!(r.cost, serial[r.rep as usize], "observation changed a result");
@@ -221,9 +247,11 @@ mod tests {
     #[test]
     fn pool_results_match_serial_costs() {
         // Concurrency must not change results (determinism per stream).
-        let serial: Vec<f64> = specs(8).into_iter().map(|s| s.run().cost).collect();
+        let serial: Vec<f64> =
+            specs(8).into_iter().map(|s| s.run(&ExecCtx::default()).cost).collect();
         let mut pooled: Vec<(u64, f64)> = Scheduler::new(4, 4)
-            .run(specs(8))
+            .run(specs(8), &ExecCtx::default())
+            .0
             .into_iter()
             .map(|r| (r.rep, r.cost))
             .collect();
@@ -231,5 +259,19 @@ mod tests {
         for (rep, cost) in pooled {
             assert_eq!(cost, serial[rep as usize]);
         }
+    }
+
+    /// The deprecated shim must replay the new entry point bit-for-bit.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shim_matches_ctx_run() {
+        let (a, _) = Scheduler::new(2, 2).run_with_stats(specs(6));
+        let (b, _) = Scheduler::new(2, 2).run(specs(6), &ExecCtx::default());
+        let key = |v: &[JobResult]| {
+            let mut pairs: Vec<(u64, f64)> = v.iter().map(|r| (r.rep, r.cost)).collect();
+            pairs.sort_by_key(|&(rep, _)| rep);
+            pairs
+        };
+        assert_eq!(key(&a), key(&b));
     }
 }

@@ -1,0 +1,637 @@
+//! Clustering-as-a-service: an admission-controlled async front-end over
+//! the coordinator's queue + worker-pool machinery.
+//!
+//! Where [`Scheduler`](crate::coordinator::Scheduler) runs a *batch* —
+//! callers hand over every spec up front and block until the sweep is done
+//! — [`Service`] is a *long-running* front-end: callers [`submit`]
+//! ([`Service::submit`]) jobs one at a time and immediately get back an
+//! explicit [`Admission`] outcome instead of blocking on a full queue:
+//!
+//! * **Admitted** — a [`JobTicket`] that can be `wait()`ed on, polled, or
+//!   cancelled; the job runs on one of the service's worker threads.
+//! * **Rejected** — the bounded queue was full ([`RejectReason::QueueFull`],
+//!   load-shedding backpressure) or the service is shutting down
+//!   ([`RejectReason::ShuttingDown`]). The caller decides whether to retry.
+//!
+//! Every submission resolves; nothing ever wedges the submitting thread.
+//!
+//! Three more service-grade behaviours ride on admission control:
+//!
+//! * **Deadlines & cancellation** — each job carries a
+//!   [`CancelToken`] observed at every seeding-round / Lloyd-iteration
+//!   boundary. A fired token stops the job at the next boundary and
+//!   resolves its ticket with a well-formed partial result
+//!   ([`JobStatus::Terminated`]).
+//! * **Result cache** — completed results are memoized in a
+//!   [`ResultCache`] keyed on [`JobSpec::fingerprint`]; a resubmitted spec
+//!   is answered *at admission*, consuming no queue slot and no pool
+//!   dispatch. Jobs are deterministic per fingerprint, so a hit is
+//!   bit-identical to a fresh run.
+//! * **Graceful shutdown** — [`Service::close`] rejects new submissions
+//!   while admitted jobs drain; [`Service::shutdown`] joins the workers and
+//!   resolves any still-queued tickets as cancelled partials (that branch
+//!   only fires when the service never started its workers).
+//!
+//! # Observation
+//!
+//! With [`Service::with_obs`] attached, admissions record a `job.admit`
+//! span on lane 0 with `job.reject` / `job.cache_hit` nested per outcome,
+//! runs record `job.run` (and `job.cancel` for terminated jobs) on lane
+//! `1 + w`, and the per-outcome monotonic counters `service.admitted` /
+//! `service.rejected` / `service.cancelled` / `service.cache_hits` plus the
+//! `service.admission_ns` histogram accumulate on the recorder. As
+//! everywhere else in the crate, observation is passive — results are
+//! bit-identical with or without it.
+
+use crate::coordinator::jobs::{JobResult, JobSpec, JobStatus};
+use crate::coordinator::queue::{BoundedQueue, PushError};
+use crate::obs::{Histogram, Obs};
+use crate::runtime::ctx::{CancelToken, Terminated};
+use crate::runtime::pool::{PoolStats, WorkerPool};
+use crate::runtime::ExecCtx;
+use crate::seeding::Counters;
+use crate::simcache::ResultCache;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Why a submission was refused (see [`Admission`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is at capacity — backpressure; retry later.
+    QueueFull,
+    /// The service is draining; no further submissions are admitted.
+    ShuttingDown,
+}
+
+/// The immediate outcome of a [`Service::submit`]: every submission
+/// resolves to exactly one of these — admitted submissions never block and
+/// rejected ones hand the caller an explicit reason.
+#[derive(Debug)]
+pub enum Admission {
+    /// The job was admitted (or served from the result cache); track it
+    /// through the ticket.
+    Admitted(JobTicket),
+    /// The job was refused; the service did no work for it.
+    Rejected(RejectReason),
+}
+
+impl Admission {
+    /// Unwraps the ticket, panicking on rejection (test/example sugar).
+    pub fn ticket(self) -> JobTicket {
+        match self {
+            Admission::Admitted(t) => t,
+            Admission::Rejected(reason) => panic!("submission rejected: {reason:?}"),
+        }
+    }
+
+    /// Whether the submission was admitted.
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, Admission::Admitted(_))
+    }
+}
+
+/// Shared slot a worker fulfills and a ticket holder waits on.
+struct TicketState {
+    slot: Mutex<Option<JobResult>>,
+    done: Condvar,
+}
+
+impl TicketState {
+    fn empty() -> Arc<Self> {
+        Arc::new(Self { slot: Mutex::new(None), done: Condvar::new() })
+    }
+
+    fn fulfill(&self, result: JobResult) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.done.notify_all();
+    }
+}
+
+/// Handle to an admitted job: await, poll, or cancel it.
+///
+/// Dropping a ticket abandons the result but never the job — an admitted
+/// job still runs (and still lands in the result cache) with nobody
+/// waiting.
+pub struct JobTicket {
+    state: Arc<TicketState>,
+    cancel: CancelToken,
+}
+
+impl JobTicket {
+    /// Blocks until the job resolves and returns (a clone of) its result.
+    pub fn wait(&self) -> JobResult {
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.as_ref() {
+                return result.clone();
+            }
+            slot = self.state.done.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: the result if the job has resolved.
+    pub fn try_result(&self) -> Option<JobResult> {
+        self.state.slot.lock().unwrap().clone()
+    }
+
+    /// Fires the job's cancellation token: the job stops at its next
+    /// seeding-round / Lloyd-iteration boundary and the ticket resolves
+    /// with a [`JobStatus::Terminated`] partial result. Idempotent; a
+    /// no-op after the job resolved.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+}
+
+/// One queued submission.
+struct Envelope {
+    spec: JobSpec,
+    cancel: CancelToken,
+    ticket: Arc<TicketState>,
+    enqueued: Instant,
+}
+
+/// Counters and cache shared between the front-end and the workers.
+struct Shared {
+    obs: Obs,
+    cache: ResultCache,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    cancelled: AtomicU64,
+    completed: AtomicU64,
+    cache_hits: AtomicU64,
+    admission_ns: Mutex<Histogram>,
+}
+
+impl Shared {
+    fn new(obs: Obs, cache_capacity: usize) -> Arc<Self> {
+        Arc::new(Self {
+            obs,
+            cache: ResultCache::new(cache_capacity),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            admission_ns: Mutex::new(Histogram::new()),
+        })
+    }
+}
+
+/// Final accounting returned by [`Service::shutdown`].
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    /// Worker threads the service ran.
+    pub workers: usize,
+    /// Submissions admitted to the queue (cache hits not included).
+    pub admitted: u64,
+    /// Submissions refused (queue full or shutting down).
+    pub rejected: u64,
+    /// Jobs that resolved as terminated partials (deadline, explicit
+    /// cancel, or shutdown of a never-started service).
+    pub cancelled: u64,
+    /// Jobs that ran to completion.
+    pub completed: u64,
+    /// Submissions answered from the result cache at admission.
+    pub cache_hits: u64,
+    /// Aggregated shard-pool stats over every worker's persistent pool.
+    pub pool: PoolStats,
+    /// Admission-latency distribution (ns, all outcomes).
+    pub admission: Histogram,
+}
+
+impl ServiceStats {
+    /// Renders the stats as a JSON object (hand-rolled, like every other
+    /// JSON surface in the crate). Admission quantiles are upper bucket
+    /// edges of the log-bucketed histogram, `0` when nothing was admitted.
+    pub fn to_json(&self) -> String {
+        let q = |p: f64| self.admission.quantile(p).unwrap_or(0);
+        format!(
+            "{{\"workers\":{},\"admitted\":{},\"rejected\":{},\"cancelled\":{},\
+             \"completed\":{},\"cache_hits\":{},\"admission_p50_ns\":{},\
+             \"admission_p99_ns\":{}}}",
+            self.workers,
+            self.admitted,
+            self.rejected,
+            self.cancelled,
+            self.completed,
+            self.cache_hits,
+            q(0.50),
+            q(0.99),
+        )
+    }
+}
+
+/// The admission-controlled clustering service (see the module docs).
+pub struct Service {
+    workers: usize,
+    lanes: usize,
+    queue: BoundedQueue<Envelope>,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<PoolStats>>,
+}
+
+impl Service {
+    /// Creates a service with `workers` job threads (≥ 1) and an admission
+    /// queue of `capacity` slots (≥ 1), and starts it immediately.
+    pub fn new(workers: usize, capacity: usize) -> Self {
+        let mut s = Self::paused(workers, capacity);
+        s.start();
+        s
+    }
+
+    /// Creates the service *without* starting its workers: submissions are
+    /// admitted (or rejected) against the queue but nothing runs until
+    /// [`Service::start`]. This makes saturation deterministic — fill a
+    /// capacity-`q` queue with `q` admissions, observe rejection `q+1`,
+    /// then start the drain — which is exactly how the tests and the
+    /// perf-smoke gate script arrival traces.
+    pub fn paused(workers: usize, capacity: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            lanes: 1,
+            queue: BoundedQueue::new(capacity.max(1)),
+            shared: Shared::new(Obs::NoObs, 32),
+            handles: Vec::new(),
+        }
+    }
+
+    /// Sets the shard-pool width each worker parks (default 1: jobs run
+    /// their shards inline on the worker thread). Results are identical at
+    /// any width — each job's `threads` governs its shard split.
+    /// Pre-start builder.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.max(1);
+        self
+    }
+
+    /// Attaches an observation handle (see the module docs for the span /
+    /// counter taxonomy). Size the recorder with at least `1 + workers`
+    /// lanes. Pre-submission builder: replaces the (still-empty) shared
+    /// state.
+    pub fn with_obs(mut self, obs: Obs) -> Self {
+        self.shared = Shared::new(obs, 32);
+        self
+    }
+
+    /// Sets the result-cache capacity (default 32). Pre-submission
+    /// builder: replaces the (still-empty) shared state.
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.shared = Shared::new(self.shared.obs.clone(), capacity);
+        self
+    }
+
+    /// Starts the worker threads (idempotent). Only needed after
+    /// [`Service::paused`]; [`Service::new`] starts them itself.
+    pub fn start(&mut self) {
+        if !self.handles.is_empty() {
+            return;
+        }
+        for w in 0..self.workers {
+            let q = self.queue.clone();
+            let shared = Arc::clone(&self.shared);
+            let lanes = self.lanes;
+            self.handles.push(std::thread::spawn(move || {
+                let pool = Arc::new(WorkerPool::new(lanes));
+                while let Some(env) = q.pop() {
+                    shared
+                        .obs
+                        .record_ns("job.queue_wait_ns", env.enqueued.elapsed().as_nanos() as u64);
+                    let ctx = ExecCtx::default()
+                        .with_pool(Arc::clone(&pool))
+                        .with_cancel(env.cancel.clone());
+                    let result = {
+                        let _run = shared.obs.span(1 + w, "job.run");
+                        env.spec.run(&ctx)
+                    };
+                    match result.status {
+                        JobStatus::Completed => {
+                            shared.cache.insert(env.spec.fingerprint(), result.clone());
+                            shared.completed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        JobStatus::Terminated(_) => {
+                            let _cancel = shared.obs.span(1 + w, "job.cancel");
+                            shared.cancelled.fetch_add(1, Ordering::Relaxed);
+                            shared.obs.incr("service.cancelled", 1);
+                        }
+                    }
+                    env.ticket.fulfill(result);
+                }
+                pool.stats()
+            }));
+        }
+    }
+
+    /// Submits a job with a fresh manually-cancellable token
+    /// ([`JobTicket::cancel`] fires it).
+    pub fn submit(&self, spec: JobSpec) -> Admission {
+        self.submit_with_token(spec, CancelToken::manual())
+    }
+
+    /// Submits a job with a wall-clock deadline `budget` from now: the job
+    /// stops at its first boundary past the deadline and resolves as a
+    /// [`Terminated::Deadline`] partial.
+    pub fn submit_with_deadline(&self, spec: JobSpec, budget: Duration) -> Admission {
+        self.submit_with_token(spec, CancelToken::with_deadline(budget))
+    }
+
+    /// Submits a job under a caller-supplied [`CancelToken`] — the general
+    /// form behind [`Service::submit`] / [`Service::submit_with_deadline`]
+    /// (scripted `after_checks` tokens make cancellation deterministic in
+    /// tests).
+    ///
+    /// Resolution order: result cache (hit → pre-resolved ticket, no queue
+    /// slot), then [`BoundedQueue::try_push`] (full → `QueueFull`, closed →
+    /// `ShuttingDown`). Never blocks.
+    pub fn submit_with_token(&self, spec: JobSpec, cancel: CancelToken) -> Admission {
+        let started = Instant::now();
+        let shared = &self.shared;
+        let admit_span = shared.obs.span(0, "job.admit");
+        let key = spec.fingerprint();
+        if let Some(hit) = shared.cache.get(key) {
+            {
+                let _hit = shared.obs.span(0, "job.cache_hit");
+            }
+            shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+            shared.obs.incr("service.cache_hits", 1);
+            self.record_admission(started);
+            drop(admit_span);
+            let ticket = TicketState::empty();
+            ticket.fulfill(hit);
+            return Admission::Admitted(JobTicket { state: ticket, cancel });
+        }
+        let ticket = TicketState::empty();
+        let env = Envelope {
+            spec,
+            cancel: cancel.clone(),
+            ticket: Arc::clone(&ticket),
+            enqueued: Instant::now(),
+        };
+        let admission = match self.queue.try_push(env) {
+            Ok(()) => {
+                shared.admitted.fetch_add(1, Ordering::Relaxed);
+                shared.obs.incr("service.admitted", 1);
+                Admission::Admitted(JobTicket { state: ticket, cancel })
+            }
+            Err(PushError::Full(_)) => {
+                {
+                    let _reject = shared.obs.span(0, "job.reject");
+                }
+                shared.rejected.fetch_add(1, Ordering::Relaxed);
+                shared.obs.incr("service.rejected", 1);
+                Admission::Rejected(RejectReason::QueueFull)
+            }
+            Err(PushError::Closed(_)) => {
+                {
+                    let _reject = shared.obs.span(0, "job.reject");
+                }
+                shared.rejected.fetch_add(1, Ordering::Relaxed);
+                shared.obs.incr("service.rejected", 1);
+                Admission::Rejected(RejectReason::ShuttingDown)
+            }
+        };
+        self.record_admission(started);
+        drop(admit_span);
+        admission
+    }
+
+    fn record_admission(&self, started: Instant) {
+        let ns = started.elapsed().as_nanos() as u64;
+        self.shared.admission_ns.lock().unwrap().record(ns);
+        self.shared.obs.record_ns("service.admission_ns", ns);
+    }
+
+    /// Begins the drain: new submissions resolve as
+    /// [`RejectReason::ShuttingDown`] while already-admitted jobs keep
+    /// running to completion. Idempotent.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Jobs currently waiting in the admission queue.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Gracefully shuts down: closes admissions, waits for the workers to
+    /// drain every admitted job, and returns the final [`ServiceStats`].
+    /// If the service never started, still-queued tickets are resolved as
+    /// [`Terminated::Cancelled`] partials so no waiter is left hanging.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.close();
+        let mut pool = PoolStats::default();
+        for h in self.handles.drain(..) {
+            pool.absorb(&h.join().expect("service worker panicked"));
+        }
+        // Only reachable when the workers never ran: resolve leftovers.
+        while let Some(env) = self.queue.pop() {
+            env.ticket.fulfill(JobResult {
+                instance: env.spec.instance.clone(),
+                k: env.spec.k,
+                variant: env.spec.variant,
+                rep: env.spec.rep,
+                counters: Counters::default(),
+                elapsed: Duration::ZERO,
+                cost: f64::NAN,
+                lloyd: None,
+                status: JobStatus::Terminated(Terminated::Cancelled),
+            });
+            self.shared.cancelled.fetch_add(1, Ordering::Relaxed);
+            self.shared.obs.incr("service.cancelled", 1);
+        }
+        let shared = &self.shared;
+        ServiceStats {
+            workers: self.workers,
+            admitted: shared.admitted.load(Ordering::Relaxed),
+            rejected: shared.rejected.load(Ordering::Relaxed),
+            cancelled: shared.cancelled.load(Ordering::Relaxed),
+            completed: shared.completed.load(Ordering::Relaxed),
+            cache_hits: shared.cache_hits.load(Ordering::Relaxed),
+            pool,
+            admission: shared.admission_ns.lock().unwrap().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Pcg64;
+    use crate::data::synth::{gmm, GmmSpec};
+    use crate::seeding::Variant;
+
+    fn spec(rep: u64, data: &Arc<crate::core::matrix::Matrix>) -> JobSpec {
+        JobSpec {
+            instance: "svc".into(),
+            data: Arc::clone(data),
+            k: 6,
+            variant: Variant::Full,
+            rep,
+            seed: 11,
+            threads: 1,
+            lloyd: None,
+        }
+    }
+
+    fn dataset(seed: u64) -> Arc<crate::core::matrix::Matrix> {
+        let mut rng = Pcg64::seed_from(seed);
+        Arc::new(gmm(&GmmSpec::new(300, 3, 4), &mut rng))
+    }
+
+    #[test]
+    fn admitted_jobs_resolve_with_batch_identical_results() {
+        let data = dataset(3);
+        let specs: Vec<JobSpec> = (0..6).map(|rep| spec(rep, &data)).collect();
+        let (batch, _) =
+            crate::coordinator::Scheduler::new(2, 2).run(specs.clone(), &ExecCtx::default());
+        let service = Service::new(2, 4);
+        let tickets: Vec<JobTicket> =
+            specs.into_iter().map(|s| service.submit(s).ticket()).collect();
+        for t in &tickets {
+            let r = t.wait();
+            assert_eq!(r.status, JobStatus::Completed);
+            let b = batch.iter().find(|b| b.rep == r.rep).unwrap();
+            assert_eq!(r.cost, b.cost, "service diverged from batch");
+            assert_eq!(r.counters, b.counters);
+        }
+        let stats = service.shutdown();
+        assert_eq!(stats.admitted, 6);
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.rejected, 0);
+    }
+
+    #[test]
+    fn saturation_rejects_excess_and_drains_cleanly() {
+        let data = dataset(5);
+        let mut service = Service::paused(1, 2);
+        let mut admitted = Vec::new();
+        let mut rejected = 0;
+        for rep in 0..5 {
+            match service.submit(spec(rep, &data)) {
+                Admission::Admitted(t) => admitted.push(t),
+                Admission::Rejected(RejectReason::QueueFull) => rejected += 1,
+                Admission::Rejected(r) => panic!("unexpected {r:?}"),
+            }
+        }
+        assert_eq!(admitted.len(), 2, "paused capacity-2 queue admits exactly 2");
+        assert_eq!(rejected, 3);
+        service.start();
+        for t in &admitted {
+            assert_eq!(t.wait().status, JobStatus::Completed);
+        }
+        let stats = service.shutdown();
+        assert_eq!((stats.admitted, stats.rejected, stats.completed), (2, 3, 2));
+        assert_eq!(stats.admission.count(), 5, "every submission timed");
+    }
+
+    #[test]
+    fn resubmitted_spec_hits_the_cache_without_dispatch() {
+        let data = dataset(7);
+        let service = Service::new(1, 4);
+        let first = service.submit(spec(0, &data)).ticket().wait();
+        assert_eq!(first.status, JobStatus::Completed);
+        let again = service.submit(spec(0, &data)).ticket();
+        let hit = again.try_result().expect("cache hit resolves at admission");
+        assert_eq!(hit.cost, first.cost);
+        assert_eq!(hit.counters, first.counters);
+        // A different thread count is the same cache line (thread-invariant
+        // results), while a different rep is a fresh job.
+        let wide = JobSpec { threads: 4, ..spec(0, &data) };
+        assert!(service.submit(wide).ticket().try_result().is_some());
+        let other = service.submit(spec(1, &data)).ticket();
+        assert_eq!(other.wait().status, JobStatus::Completed);
+        let stats = service.shutdown();
+        assert_eq!(stats.cache_hits, 2);
+        assert_eq!(stats.admitted, 2, "hits consumed no queue slot");
+    }
+
+    #[test]
+    fn cancel_resolves_ticket_with_terminated_partial() {
+        let data = dataset(9);
+        let mut service = Service::paused(1, 2);
+        // Cancel while still queued: the job's up-front checkpoint sees the
+        // fired token and returns an empty terminated partial.
+        let t = service.submit(spec(0, &data)).ticket();
+        t.cancel();
+        service.start();
+        let r = t.wait();
+        assert_eq!(r.status, JobStatus::Terminated(Terminated::Cancelled));
+        assert!(r.cost.is_nan());
+        let stats = service.shutdown();
+        assert_eq!(stats.cancelled, 1);
+        assert_eq!(stats.completed, 0);
+    }
+
+    #[test]
+    fn scripted_token_yields_partial_with_some_centers() {
+        let data = dataset(11);
+        let service = Service::new(1, 2);
+        // Budget: up-front check + 2 seeding rounds → terminated mid-seed.
+        let token = CancelToken::after_checks(3, Terminated::Deadline);
+        let t = service.submit_with_token(spec(0, &data), token).ticket();
+        let r = t.wait();
+        assert_eq!(r.status, JobStatus::Terminated(Terminated::Deadline));
+        assert!(r.cost > 0.0, "partial carries the cost of the centers picked so far");
+        service.shutdown();
+    }
+
+    #[test]
+    fn close_rejects_new_while_draining_admitted() {
+        let data = dataset(13);
+        let mut service = Service::paused(1, 4);
+        let t = service.submit(spec(0, &data)).ticket();
+        service.close();
+        match service.submit(spec(1, &data)) {
+            Admission::Rejected(RejectReason::ShuttingDown) => {}
+            other => panic!("expected ShuttingDown, got {other:?}"),
+        }
+        service.start();
+        assert_eq!(t.wait().status, JobStatus::Completed, "admitted job drained");
+        let stats = service.shutdown();
+        assert_eq!((stats.admitted, stats.completed, stats.rejected), (1, 1, 1));
+    }
+
+    #[test]
+    fn shutdown_without_start_resolves_queued_tickets() {
+        let data = dataset(15);
+        let service = Service::paused(1, 4);
+        let t = service.submit(spec(0, &data)).ticket();
+        let stats = service.shutdown();
+        let r = t.wait();
+        assert_eq!(r.status, JobStatus::Terminated(Terminated::Cancelled));
+        assert_eq!(stats.cancelled, 1);
+    }
+
+    #[test]
+    fn observed_service_records_the_admission_taxonomy() {
+        let data = dataset(17);
+        let obs = Obs::recording(2);
+        let mut service = Service::paused(1, 1).with_obs(obs.clone());
+        let t0 = service.submit(spec(0, &data)).ticket();
+        assert!(!service.submit(spec(1, &data)).is_admitted(), "queue full");
+        service.start();
+        t0.wait();
+        // Resubmit for a cache hit, and terminate a job for job.cancel —
+        // via a scripted token so the outcome never races the worker.
+        service.submit(spec(0, &data)).ticket();
+        let token = CancelToken::after_checks(0, Terminated::Cancelled);
+        let t2 = service.submit_with_token(spec(2, &data), token).ticket();
+        t2.wait();
+        let stats = service.shutdown();
+        assert!(stats.to_json().contains("\"admitted\":2"));
+        let rec = obs.recorder().unwrap();
+        assert!(rec.balanced());
+        for counter in
+            ["service.admitted", "service.rejected", "service.cancelled", "service.cache_hits"]
+        {
+            assert!(rec.counter(counter) > 0, "{counter} not recorded");
+        }
+        let json = rec.to_chrome_json();
+        for span in ["job.admit", "job.run", "job.reject", "job.cache_hit", "job.cancel"] {
+            assert!(json.contains(&format!("\"{span}\"")), "{span} span missing");
+        }
+        assert!(rec.histogram("service.admission_ns").unwrap().count() >= 4);
+    }
+}

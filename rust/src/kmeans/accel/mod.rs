@@ -333,6 +333,11 @@ fn engine(
     let mut prev_stats = stats;
 
     for _ in 0..cfg.max_iters {
+        // Cooperative cancellation checkpoint: breaking here leaves the
+        // exact state of a fresh run with `max_iters = iterations`.
+        if cfg.cancel.checkpoint().is_some() {
+            break;
+        }
         iterations += 1;
         let iter_sw = obs.enabled().then(std::time::Instant::now);
         let _iter_span = obs.span(0, "lloyd.iter");
@@ -444,8 +449,21 @@ fn engine(
                 })
                 .collect();
             // Merge in shard order — `scoped` returns results task-indexed.
-            for s in pool.scoped(tasks) {
-                stats += s;
+            // The cancellable dispatch skips the scan entirely when the
+            // job's token fired *between* the loop-top checkpoint and this
+            // dispatch (manual/deadline causes; the peek never consumes a
+            // scripted check). The started iteration is then rolled back so
+            // the partial result keeps `iterations == inertia_trace.len()`.
+            match pool.scoped_cancellable(tasks, &cfg.cancel) {
+                Some(shard_stats) => {
+                    for s in shard_stats {
+                        stats += s;
+                    }
+                }
+                None => {
+                    iterations -= 1;
+                    break;
+                }
             }
         }
         debug_assert!(tight.iter().all(|&t| t), "stale distance after assignment step");

@@ -50,6 +50,12 @@ pub struct LloydConfig {
     /// effect on assignments, centers, inertia or [`LloydStats`]
     /// (pinned by `tests/obs.rs`).
     pub obs: crate::obs::Obs,
+    /// Cooperative cancellation token ([`crate::runtime::ctx::CancelToken`];
+    /// never fires by default), checkpointed at the top of every iteration:
+    /// once it fires, the run stops and returns a well-formed partial
+    /// [`LloydResult`] — cancelling after `i` checkpoints is bit-identical
+    /// to a fresh run with `max_iters = i`.
+    pub cancel: crate::runtime::ctx::CancelToken,
 }
 
 impl Default for LloydConfig {
@@ -62,7 +68,23 @@ impl Default for LloydConfig {
             pool: None,
             kernel: KernelConfig::Scalar,
             obs: crate::obs::Obs::NoObs,
+            cancel: crate::runtime::ctx::CancelToken::never(),
         }
+    }
+}
+
+impl LloydConfig {
+    /// Applies a whole [`crate::runtime::ExecCtx`] — pool (when shared),
+    /// observation, kernel and cancellation in one call; the shared
+    /// configuration seam (see `SeedConfig::with_ctx`).
+    pub fn with_ctx(mut self, ctx: &crate::runtime::ExecCtx) -> Self {
+        if let Some(pool) = &ctx.pool {
+            self.pool = Some(Arc::clone(pool));
+        }
+        self.kernel = ctx.kernel;
+        self.obs = ctx.obs.clone();
+        self.cancel = ctx.cancel.clone();
+        self
     }
 }
 
@@ -115,6 +137,11 @@ fn reference(data: &Matrix, initial_centers: &Matrix, cfg: &LloydConfig) -> Lloy
     let _lloyd_span = obs.span(0, "lloyd");
     let mut prev_stats = stats;
     for _ in 0..cfg.max_iters {
+        // Cooperative cancellation checkpoint: breaking here leaves the
+        // exact state of a fresh run with `max_iters = iterations`.
+        if cfg.cancel.checkpoint().is_some() {
+            break;
+        }
         iterations += 1;
         let iter_sw = obs.enabled().then(std::time::Instant::now);
         let _iter_span = obs.span(0, "lloyd.iter");

@@ -47,9 +47,11 @@ pub mod xp;
 
 /// Convenience re-exports of the most commonly used items.
 pub mod prelude {
+    pub use crate::coordinator::{Admission, JobSpec, JobStatus, RejectReason, Service};
     pub use crate::core::matrix::Matrix;
     pub use crate::core::rng::{Pcg64, Rng, SplitMix64};
     pub use crate::data::synth::GmmSpec;
     pub use crate::kmeans::lloyd::{lloyd, LloydConfig};
+    pub use crate::runtime::{CancelToken, ExecCtx, Terminated};
     pub use crate::seeding::{seed, seed_with, SeedConfig, SeedResult, Variant};
 }

@@ -14,6 +14,9 @@
 //!                [--kernel scalar|auto|lanes|avx2]
 //!                [--xla]
 //!                [--trace-out trace.json]
+//! geokmpp serve  --instance NAME --k K [--variant V] [--workers W]
+//!                [--capacity Q] [--jobs N] [--iters N] [--threads T|auto]
+//!                [--deadline-ms D] [--trace-out trace.json]
 //! geokmpp xp <table1|table2|fig2|...|all> [sweep flags]
 //! geokmpp info
 //! ```
@@ -36,6 +39,17 @@
 //! (`hamerly`, `annulus`, `yinyang`, `elkan`) skip most distance
 //! computations (the printed clustering counters show how many, and which
 //! filter — bound, per-center, group, annulus window or norm — paid for it).
+//!
+//! `serve` replays a scripted arrival trace against the admission-controlled
+//! clustering service (`coordinator::service`): a burst of `--jobs`
+//! submissions lands on a paused capacity-`--capacity` queue (so admissions
+//! and `QueueFull` rejections are deterministic), the `--workers` job
+//! threads then drain the admitted set, and the first admitted spec is
+//! resubmitted to demonstrate the fingerprint-keyed result cache. Each
+//! submission prints its outcome; the run ends with the service's JSON
+//! stats line (admitted/rejected/cancelled/cache_hits + admission
+//! latency quantiles). `--deadline-ms` attaches a wall-clock deadline to
+//! every job — expired jobs resolve as well-formed `deadline` partials.
 //!
 //! `--trace-out FILE` writes a Chrome trace-event JSON timeline of the run
 //! (`geokmpp::obs` spans: seeding rounds, Lloyd iterations with their
@@ -89,6 +103,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("data") => cmd_data(args),
         Some("seed") => cmd_seed(args),
         Some("kmeans") => cmd_kmeans(args),
+        Some("serve") => cmd_serve(args),
         Some("xp") => cmd_xp(args),
         Some("info") => cmd_info(),
         Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
@@ -99,7 +114,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: geokmpp <data|seed|kmeans|xp|info> [flags]\n\
+const USAGE: &str = "usage: geokmpp <data|seed|kmeans|serve|xp|info> [flags]\n\
  run `geokmpp xp` with no id for the experiment list";
 
 fn load_data(args: &Args) -> Result<(String, Matrix)> {
@@ -347,6 +362,93 @@ fn cmd_kmeans(args: &Args) -> Result<()> {
         if let Some(path) = trace_out {
             write_trace(rec, &pool, path)?;
         }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use geokmpp::coordinator::{Admission, JobSpec, LloydPhase, Service};
+    let (name, data) = load_data(args)?;
+    let data = Arc::new(data);
+    let k: usize = args.require("k").map_err(anyhow::Error::msg)?;
+    let variant = Variant::parse(args.get("variant").unwrap_or("full"))
+        .context("bad --variant (standard|tie|full|rejection)")?;
+    let seed_v: u64 = args.get_or("seed", 2024).map_err(anyhow::Error::msg)?;
+    let threads = args.threads_or("threads", 1).map_err(anyhow::Error::msg)?;
+    let strategy: Strategy =
+        args.get_or("lloyd-strategy", Strategy::Hamerly).map_err(anyhow::Error::msg)?;
+    let iters: usize = args.get_or("iters", 0).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.get_or("workers", 2).map_err(anyhow::Error::msg)?;
+    let capacity: usize = args.get_or("capacity", workers * 2).map_err(anyhow::Error::msg)?;
+    let jobs: usize = args.get_or("jobs", 8).map_err(anyhow::Error::msg)?;
+    let deadline_ms: u64 = args.get_or("deadline-ms", 0).map_err(anyhow::Error::msg)?;
+    let trace_out = args.get("trace-out");
+    let obs = if trace_out.is_some() { Obs::recording(workers + 1) } else { Obs::NoObs };
+
+    let spec = |rep: u64| JobSpec {
+        instance: name.clone(),
+        data: Arc::clone(&data),
+        k,
+        variant,
+        rep,
+        seed: seed_v,
+        threads,
+        lloyd: (iters > 0).then_some(LloydPhase { strategy, max_iters: iters }),
+    };
+    // The scripted arrival trace: the whole burst lands on a *paused*
+    // service, so which submissions are admitted (the first `capacity`)
+    // and which are shed as QueueFull is deterministic — the CI gate and
+    // the saturation test script the same shape.
+    let mut service =
+        Service::paused(workers, capacity).with_obs(obs.clone()).with_lanes(threads);
+    println!("service           workers={workers} capacity={capacity} burst={jobs}");
+    let mut tickets = Vec::new();
+    for rep in 0..jobs as u64 {
+        let admission = if deadline_ms > 0 {
+            service
+                .submit_with_deadline(spec(rep), std::time::Duration::from_millis(deadline_ms))
+        } else {
+            service.submit(spec(rep))
+        };
+        match admission {
+            Admission::Admitted(t) => {
+                println!("job {rep:>3}           admitted");
+                tickets.push((rep, t));
+            }
+            Admission::Rejected(reason) => println!("job {rep:>3}           rejected ({reason:?})"),
+        }
+    }
+    service.start();
+    for (rep, t) in &tickets {
+        let r = t.wait();
+        println!(
+            "job {rep:>3}           {} cost={} in {}s",
+            r.status.name(),
+            fnum(r.cost, 2),
+            fnum(r.elapsed.as_secs_f64(), 4)
+        );
+    }
+    // Replay the first admitted spec: served from the result cache at
+    // admission time, no queue slot, no pool dispatch.
+    if let Some((rep, _)) = tickets.first() {
+        match service.submit(spec(*rep)) {
+            Admission::Admitted(t) if t.try_result().is_some() => {
+                println!("job {rep:>3} (replay)  served from result cache");
+            }
+            Admission::Admitted(t) => {
+                t.wait();
+                println!("job {rep:>3} (replay)  re-ran (not cached — terminated partial?)");
+            }
+            Admission::Rejected(reason) => println!("job {rep:>3} (replay)  rejected ({reason:?})"),
+        }
+    }
+    let stats = service.shutdown();
+    println!("service stats     {}", stats.to_json());
+    println!("{}", stats.pool);
+    if let (Some(path), Some(rec)) = (trace_out, obs.recorder()) {
+        rec.set_extra_json("service", stats.to_json());
+        std::fs::write(path, rec.to_chrome_json()).with_context(|| format!("writing {path}"))?;
+        println!("trace             {path}");
     }
     Ok(())
 }

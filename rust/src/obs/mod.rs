@@ -97,6 +97,18 @@ impl Obs {
         }
     }
 
+    /// Bumps a named monotonic counter (no-op under `NoObs`). The service
+    /// front-end tallies per-outcome admissions here: `service.admitted`,
+    /// `service.rejected`, `service.cancelled`, `service.cache_hits` —
+    /// beside the span taxonomy `job.admit` / `job.run` / `job.reject` /
+    /// `job.cache_hit` / `job.cancel`.
+    #[inline]
+    pub fn incr(&self, counter: &'static str, by: u64) {
+        if let Obs::Record(rec) = self {
+            rec.incr(counter, by);
+        }
+    }
+
     /// Pushes one per-iteration telemetry sample (no-op under `NoObs`).
     #[inline]
     pub fn iter_sample(&self, sample: IterSample) {
@@ -137,6 +149,7 @@ mod tests {
             let _g = obs.span(0, "anything");
         }
         obs.record_ns("metric", 42);
+        obs.incr("counter", 1);
         obs.iter_sample(IterSample {
             iteration: 1,
             stats: crate::metrics::lloyd::LloydStats::default(),

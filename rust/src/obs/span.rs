@@ -60,6 +60,10 @@ pub struct Recorder {
     lanes: Vec<Mutex<LaneBuf>>,
     hists: Mutex<BTreeMap<&'static str, Histogram>>,
     iters: Mutex<IterRing>,
+    /// Named monotonic event counters (per-outcome admission tallies:
+    /// `service.admitted`, `service.rejected`, …), created on first
+    /// increment and exported as a top-level `"counters"` object.
+    counters: Mutex<BTreeMap<&'static str, u64>>,
     /// Pre-rendered JSON object attached to the trace export (used for the
     /// pool's per-lane busy/queue-wait stats), set by the CLI after a run.
     extra_json: Mutex<Option<(String, String)>>,
@@ -74,6 +78,7 @@ impl Recorder {
             lanes: (0..lanes).map(|_| Mutex::new(LaneBuf::default())).collect(),
             hists: Mutex::new(BTreeMap::new()),
             iters: Mutex::new(IterRing::default()),
+            counters: Mutex::new(BTreeMap::new()),
             extra_json: Mutex::new(None),
         }
     }
@@ -109,6 +114,22 @@ impl Recorder {
     /// Adds one sample to the named histogram (created on first use).
     pub fn record_ns(&self, metric: &'static str, ns: u64) {
         self.hists.lock().unwrap().entry(metric).or_default().record(ns);
+    }
+
+    /// Adds `by` to the named monotonic counter (created on first use).
+    /// Per-outcome admission tallies land here (`service.admitted`, …).
+    pub fn incr(&self, counter: &'static str, by: u64) {
+        *self.counters.lock().unwrap().entry(counter).or_insert(0) += by;
+    }
+
+    /// Current value of a named counter (`0` if never incremented).
+    pub fn counter(&self, counter: &'static str) -> u64 {
+        self.counters.lock().unwrap().get(counter).copied().unwrap_or(0)
+    }
+
+    /// Names of all counters incremented so far, in sorted order.
+    pub fn counter_names(&self) -> Vec<&'static str> {
+        self.counters.lock().unwrap().keys().copied().collect()
     }
 
     /// Snapshot of a named histogram, or `None` if never recorded.
@@ -197,6 +218,14 @@ impl Recorder {
             }
         }
         out.push(']');
+        {
+            let counters = self.counters.lock().unwrap();
+            if !counters.is_empty() {
+                let body: Vec<String> =
+                    counters.iter().map(|(name, v)| format!("\"{name}\":{v}")).collect();
+                out.push_str(&format!(",\"counters\":{{{}}}", body.join(",")));
+            }
+        }
         if let Some((key, json)) = self.extra_json.lock().unwrap().as_ref() {
             out.push_str(&format!(",\"{key}\":{json}"));
         }
@@ -277,6 +306,22 @@ mod tests {
         assert_eq!(json.matches("\"ph\":\"M\"").count(), 2);
         assert!(json.contains("\"pool\":{\"workers\":1}"));
         assert!(json.contains("\"tid\":1"));
+    }
+
+    #[test]
+    fn named_counters_accumulate_and_export() {
+        let rec = Recorder::new(1);
+        assert_eq!(rec.counter("service.admitted"), 0);
+        rec.incr("service.admitted", 1);
+        rec.incr("service.admitted", 2);
+        rec.incr("service.rejected", 1);
+        assert_eq!(rec.counter("service.admitted"), 3);
+        assert_eq!(rec.counter("service.rejected"), 1);
+        assert_eq!(rec.counter_names(), vec!["service.admitted", "service.rejected"]);
+        assert!(rec.begin(0, "job.admit"));
+        rec.end(0, "job.admit");
+        let json = rec.to_chrome_json();
+        assert!(json.contains("\"counters\":{\"service.admitted\":3,\"service.rejected\":1}"));
     }
 
     #[test]

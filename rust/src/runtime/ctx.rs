@@ -1,0 +1,354 @@
+//! The one execution context: pool + observation + kernel + cancellation.
+//!
+//! Before this module, every layer grew its own ad-hoc wiring for the same
+//! three knobs — `SeedConfig::with_pool/with_obs/with_kernel`,
+//! `LloydConfig { pool, obs, kernel, .. }`, `Executor::with_pool/with_obs/
+//! with_kernel` (order-sensitive!), and the coordinator's
+//! `run`/`run_with_pool`/`run_with_pool_obs`/`run_with_stats` method sprawl.
+//! [`ExecCtx`] collapses them into one struct that travels through a single
+//! `run(&self, &ExecCtx)` entry point per layer:
+//!
+//! * `pool` — the shared [`WorkerPool`] serving sharded dispatches (`None`
+//!   means each layer provisions its own private pool, exactly as before);
+//! * `obs` — the passive observation handle ([`Obs::NoObs`] by default);
+//! * `kernel` — the distance-kernel selection ([`KernelConfig::Scalar`]
+//!   by default, the legacy arithmetic every historical pin uses);
+//! * `cancel` — a cooperative [`CancelToken`] checked at Lloyd-iteration
+//!   and seeding-round boundaries.
+//!
+//! None of the four fields may change results of a run that completes: the
+//! pool never re-partitions work, observation is passive, every kernel is
+//! bit-compatible by the `core::simd` contract, and a token that never
+//! fires is never observed.
+//!
+//! # Cancellation model
+//!
+//! Cancellation is *cooperative and checkpointed*: long-running phases call
+//! [`CancelToken::checkpoint`] at their natural round boundaries (top of
+//! each seeding round, top of each Lloyd iteration). Once any cause fires,
+//! the token is latched — every later checkpoint reports the same first
+//! cause — and the phase breaks out, leaving a well-formed partial state
+//! (fewer centers, fewer iterations) rather than a wedged lane. The
+//! scripted [`CancelToken::after_checks`] constructor makes termination a
+//! pure function of the checkpoint count, so cancelled runs are exactly
+//! reproducible: cancelling after `i` Lloyd checkpoints is bit-identical
+//! to a fresh run with `max_iters = i`.
+
+use crate::core::simd::KernelConfig;
+use crate::obs::Obs;
+use crate::runtime::pool::WorkerPool;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a run stopped early (see [`CancelToken`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Terminated {
+    /// The job's deadline passed before the run finished.
+    Deadline,
+    /// The job was cancelled explicitly (caller or shutdown).
+    Cancelled,
+}
+
+impl Terminated {
+    /// Stable lowercase name (JSON/report surfaces).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Terminated::Deadline => "deadline",
+            Terminated::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// Latched-cause encoding for the token's atomic: 0 = live.
+const CAUSE_NONE: u8 = 0;
+const CAUSE_DEADLINE: u8 = 1;
+const CAUSE_CANCELLED: u8 = 2;
+
+fn cause_of(v: u8) -> Option<Terminated> {
+    match v {
+        CAUSE_DEADLINE => Some(Terminated::Deadline),
+        CAUSE_CANCELLED => Some(Terminated::Cancelled),
+        _ => None,
+    }
+}
+
+fn cause_code(t: Terminated) -> u8 {
+    match t {
+        Terminated::Deadline => CAUSE_DEADLINE,
+        Terminated::Cancelled => CAUSE_CANCELLED,
+    }
+}
+
+/// Shared state behind a cloned token.
+#[derive(Debug)]
+struct TokenInner {
+    /// Explicit cancellation flag ([`CancelToken::cancel`]).
+    cancelled: AtomicBool,
+    /// Wall-clock deadline, if any.
+    deadline: Option<Instant>,
+    /// Scripted budget: checkpoints remaining before `budget_cause` fires.
+    /// `u64::MAX` means "no budget" (never fires on count).
+    budget: AtomicU64,
+    budget_cause: Terminated,
+    /// First observed cause, latched forever (see [`CancelToken::checkpoint`]).
+    latched: AtomicU8,
+}
+
+/// Cooperative cancellation handle threaded through [`ExecCtx`].
+///
+/// Cloning shares the underlying state: a service can keep one clone to
+/// [`CancelToken::cancel`] while the job's run loop checkpoints another.
+/// The default token never fires and costs one `Option` branch per
+/// checkpoint.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Option<Arc<TokenInner>>,
+}
+
+impl CancelToken {
+    /// A token that never fires (the default).
+    pub fn never() -> CancelToken {
+        CancelToken::default()
+    }
+
+    fn with_inner(deadline: Option<Instant>, budget: u64, budget_cause: Terminated) -> CancelToken {
+        CancelToken {
+            inner: Some(Arc::new(TokenInner {
+                cancelled: AtomicBool::new(false),
+                deadline,
+                budget: AtomicU64::new(budget),
+                budget_cause,
+                latched: AtomicU8::new(CAUSE_NONE),
+            })),
+        }
+    }
+
+    /// A token that fires only when [`CancelToken::cancel`] is called.
+    pub fn manual() -> CancelToken {
+        CancelToken::with_inner(None, u64::MAX, Terminated::Cancelled)
+    }
+
+    /// A token that fires with [`Terminated::Deadline`] once `budget` has
+    /// elapsed (checked at checkpoints — wall-clock, so timing-dependent;
+    /// use [`CancelToken::after_checks`] for deterministic tests).
+    pub fn with_deadline(budget: Duration) -> CancelToken {
+        CancelToken::with_inner(Some(Instant::now() + budget), u64::MAX, Terminated::Deadline)
+    }
+
+    /// A scripted token: the first `checks` checkpoints pass, every later
+    /// one reports `cause`. Termination is then a pure function of the
+    /// checkpoint count — the seam the deterministic service tests and the
+    /// perf-smoke arrival trace rely on.
+    pub fn after_checks(checks: u64, cause: Terminated) -> CancelToken {
+        CancelToken::with_inner(None, checks, cause)
+    }
+
+    /// Requests cancellation: the next checkpoint (and every one after it)
+    /// reports [`Terminated::Cancelled`] unless another cause latched first.
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancelled.store(true, Ordering::Release);
+        }
+    }
+
+    /// One cooperative cancellation check, called at round boundaries.
+    ///
+    /// Consumes one unit of a scripted budget, latches the first cause to
+    /// fire, and reports the latched cause from then on. `None` means
+    /// "keep going".
+    pub fn checkpoint(&self) -> Option<Terminated> {
+        let inner = self.inner.as_ref()?;
+        if let Some(t) = cause_of(inner.latched.load(Ordering::Acquire)) {
+            return Some(t);
+        }
+        let cause = if inner.cancelled.load(Ordering::Acquire) {
+            Some(Terminated::Cancelled)
+        } else if inner.deadline.is_some_and(|d| Instant::now() >= d) {
+            Some(inner.budget_cause)
+        } else if inner.budget.load(Ordering::Acquire) != u64::MAX {
+            // Scripted budget: pass while checks remain, fire once drained.
+            let prev = inner.budget.fetch_update(Ordering::AcqRel, Ordering::Acquire, |b| {
+                if b == 0 {
+                    None
+                } else {
+                    Some(b - 1)
+                }
+            });
+            match prev {
+                Ok(_) => None,
+                Err(_) => Some(inner.budget_cause),
+            }
+        } else {
+            None
+        };
+        if let Some(t) = cause {
+            // First writer wins: later checkpoints all report one cause.
+            let _ = inner.latched.compare_exchange(
+                CAUSE_NONE,
+                cause_code(t),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+            return cause_of(inner.latched.load(Ordering::Acquire));
+        }
+        None
+    }
+
+    /// Non-consuming peek: the cause a checkpoint *would* report, without
+    /// spending a scripted-budget check. Used by dispatch seams
+    /// ([`WorkerPool::scoped_cancellable`]) and by the coordinator to
+    /// classify a finished run, so scripted budgets stay a pure function of
+    /// the checkpoint count alone.
+    pub fn terminated(&self) -> Option<Terminated> {
+        let inner = self.inner.as_ref()?;
+        if let Some(t) = cause_of(inner.latched.load(Ordering::Acquire)) {
+            return Some(t);
+        }
+        if inner.cancelled.load(Ordering::Acquire) {
+            return Some(Terminated::Cancelled);
+        }
+        if inner.deadline.is_some_and(|d| Instant::now() >= d) {
+            return Some(inner.budget_cause);
+        }
+        None
+    }
+}
+
+/// The shared execution context (see the module docs).
+///
+/// ```
+/// use geokmpp::runtime::{ExecCtx, WorkerPool};
+/// use std::sync::Arc;
+///
+/// let pool = Arc::new(WorkerPool::new(4));
+/// let ctx = ExecCtx::default().with_pool(Arc::clone(&pool));
+/// assert!(ctx.pool.is_some());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct ExecCtx {
+    /// Shared worker pool (`None` = each layer provisions a private one).
+    pub pool: Option<Arc<WorkerPool>>,
+    /// Passive observation handle.
+    pub obs: Obs,
+    /// Distance-kernel selection (legacy scalar arithmetic by default).
+    pub kernel: KernelConfig,
+    /// Cooperative cancellation token (never fires by default).
+    pub cancel: CancelToken,
+}
+
+impl ExecCtx {
+    /// The default context: private pools, no observation, scalar kernel,
+    /// no cancellation — exactly the behaviour of the old no-argument
+    /// entry points.
+    pub fn new() -> ExecCtx {
+        ExecCtx::default()
+    }
+
+    /// Shares `pool` with every layer the context reaches.
+    pub fn with_pool(mut self, pool: Arc<WorkerPool>) -> ExecCtx {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Attaches an observation handle.
+    pub fn with_obs(mut self, obs: Obs) -> ExecCtx {
+        self.obs = obs;
+        self
+    }
+
+    /// Selects the distance kernel.
+    pub fn with_kernel(mut self, kernel: KernelConfig) -> ExecCtx {
+        self.kernel = kernel;
+        self
+    }
+
+    /// Attaches a cancellation token.
+    pub fn with_cancel(mut self, cancel: CancelToken) -> ExecCtx {
+        self.cancel = cancel;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_token_never_fires() {
+        let t = CancelToken::never();
+        for _ in 0..1000 {
+            assert_eq!(t.checkpoint(), None);
+        }
+        assert_eq!(t.terminated(), None);
+    }
+
+    #[test]
+    fn manual_cancel_latches() {
+        let t = CancelToken::manual();
+        assert_eq!(t.checkpoint(), None);
+        assert_eq!(t.terminated(), None);
+        let clone = t.clone();
+        clone.cancel();
+        assert_eq!(t.terminated(), Some(Terminated::Cancelled));
+        assert_eq!(t.checkpoint(), Some(Terminated::Cancelled));
+        // Latched forever, on every clone.
+        assert_eq!(clone.checkpoint(), Some(Terminated::Cancelled));
+    }
+
+    #[test]
+    fn scripted_budget_fires_after_exactly_n_checks() {
+        let t = CancelToken::after_checks(3, Terminated::Deadline);
+        assert_eq!(t.checkpoint(), None);
+        assert_eq!(t.checkpoint(), None);
+        // Peeking never consumes a check.
+        assert_eq!(t.terminated(), None);
+        assert_eq!(t.checkpoint(), None);
+        assert_eq!(t.checkpoint(), Some(Terminated::Deadline));
+        assert_eq!(t.checkpoint(), Some(Terminated::Deadline));
+        assert_eq!(t.terminated(), Some(Terminated::Deadline));
+    }
+
+    #[test]
+    fn zero_check_budget_fires_immediately() {
+        let t = CancelToken::after_checks(0, Terminated::Cancelled);
+        assert_eq!(t.terminated(), None); // not yet latched — peek is passive
+        assert_eq!(t.checkpoint(), Some(Terminated::Cancelled));
+        assert_eq!(t.terminated(), Some(Terminated::Cancelled));
+    }
+
+    #[test]
+    fn expired_deadline_fires() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        assert_eq!(t.checkpoint(), Some(Terminated::Deadline));
+        assert_eq!(t.terminated(), Some(Terminated::Deadline));
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_budget_cause() {
+        let t = CancelToken::after_checks(10, Terminated::Deadline);
+        t.cancel();
+        assert_eq!(t.checkpoint(), Some(Terminated::Cancelled));
+    }
+
+    #[test]
+    fn ctx_builders_compose() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let ctx = ExecCtx::new()
+            .with_pool(Arc::clone(&pool))
+            .with_kernel(KernelConfig::Scalar)
+            .with_cancel(CancelToken::manual());
+        assert!(ctx.pool.is_some());
+        assert!(!ctx.obs.enabled());
+        assert_eq!(ctx.cancel.terminated(), None);
+        let clone = ctx.clone();
+        clone.cancel.cancel();
+        assert_eq!(ctx.cancel.terminated(), Some(Terminated::Cancelled));
+    }
+
+    #[test]
+    fn terminated_names_are_stable() {
+        assert_eq!(Terminated::Deadline.name(), "deadline");
+        assert_eq!(Terminated::Cancelled.name(), "cancelled");
+    }
+}

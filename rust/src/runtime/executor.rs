@@ -122,6 +122,20 @@ impl Executor {
         self
     }
 
+    /// Applies a whole [`crate::runtime::ExecCtx`] — pool (when shared),
+    /// kernel and observation in one call, in the correct order (the pool
+    /// swap happens before the observation handle is forwarded to it, the
+    /// ordering footgun of combining [`Executor::with_pool`] and
+    /// [`Executor::with_obs`] by hand). The shared configuration seam —
+    /// see `SeedConfig::with_ctx` / `LloydConfig::with_ctx`.
+    pub fn with_ctx(self, ctx: &crate::runtime::ExecCtx) -> Executor {
+        let exec = match &ctx.pool {
+            Some(pool) => self.with_pool(Arc::clone(pool)),
+            None => self,
+        };
+        exec.with_kernel(ctx.kernel).with_obs(ctx.obs.clone())
+    }
+
     /// Opens the XLA runtime if available, otherwise falls back to the
     /// scalar backend with the given thread count, logging the actual
     /// reason the runtime was unavailable (missing artifacts, disabled

@@ -8,11 +8,13 @@
 pub mod artifacts;
 pub mod batcher;
 pub mod client;
+pub mod ctx;
 pub mod executor;
 pub mod pool;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use batcher::BatchPolicy;
 pub use client::Runtime;
+pub use ctx::{CancelToken, ExecCtx, Terminated};
 pub use executor::Executor;
 pub use pool::{PoolStats, WorkerPool};

@@ -325,6 +325,29 @@ impl WorkerPool {
         results.into_iter().map(|slot| slot.expect("pool task finished without a result")).collect()
     }
 
+    /// [`WorkerPool::scoped`] with a cooperative cancellation check in
+    /// front: when `cancel` has already fired, the dispatch is skipped
+    /// entirely and `None` comes back, so a cancelled job stops paying for
+    /// sharded scans it no longer needs. The check is the *non-consuming*
+    /// [`CancelToken::terminated`] peek — scripted budgets stay a pure
+    /// function of the round-boundary checkpoint count — and a dispatch
+    /// that does run is plain `scoped`: bit-identical results, tasks never
+    /// interrupted mid-flight.
+    pub fn scoped_cancellable<'env, T, F>(
+        &self,
+        tasks: Vec<F>,
+        cancel: &crate::runtime::ctx::CancelToken,
+    ) -> Option<Vec<T>>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        if cancel.terminated().is_some() {
+            return None;
+        }
+        Some(self.scoped(tasks))
+    }
+
     /// Snapshot of the pool's lifetime counters.
     ///
     /// `tasks`/`dispatches`/`spawns_avoided` are deterministic for a fixed
@@ -689,5 +712,28 @@ mod tests {
         assert_eq!(again, got);
         assert_eq!(rec.histogram("pool.queue_wait_ns").expect("recorded").count(), 2);
         assert!(rec.balanced());
+    }
+
+    /// `scoped_cancellable` skips the dispatch once the token fired, is
+    /// plain `scoped` while it is live, and never consumes a scripted check.
+    #[test]
+    fn cancellable_dispatch_skips_after_fire() {
+        use crate::runtime::ctx::{CancelToken, Terminated};
+        let pool = WorkerPool::new(2);
+        let live = CancelToken::manual();
+        let got = pool.scoped_cancellable((0..4).map(|i| move || i * 2).collect::<Vec<_>>(), &live);
+        assert_eq!(got, Some(vec![0, 2, 4, 6]));
+        let before = pool.stats().dispatches;
+        live.cancel();
+        let skipped =
+            pool.scoped_cancellable((0..4).map(|i| move || i * 2).collect::<Vec<_>>(), &live);
+        assert!(skipped.is_none());
+        assert_eq!(pool.stats().dispatches, before, "skipped dispatch never reached the pool");
+        // The peek is non-consuming: a one-check budget survives the call.
+        let scripted = CancelToken::after_checks(1, Terminated::Deadline);
+        let ran = pool.scoped_cancellable(vec![|| 7], &scripted);
+        assert_eq!(ran, Some(vec![7]));
+        assert_eq!(scripted.checkpoint(), None);
+        assert_eq!(scripted.checkpoint(), Some(Terminated::Deadline));
     }
 }

@@ -98,6 +98,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     // --- Main loop.
     while center_indices.len() < cfg.k {
+        // Cooperative cancellation: stop before the next round, leaving a
+        // well-formed partial result with the centers picked so far.
+        if cfg.cancel.checkpoint().is_some() {
+            break;
+        }
         let _round = cfg.obs.span(0, "seed.round");
         // Two-step sampling over partitions (distribution-equivalent to
         // cluster-level two-step since partitions tile clusters).

@@ -142,6 +142,13 @@ pub struct SeedConfig {
     /// center, all passive — no pinned counter, RNG draw or centroid bit
     /// changes (pinned by `tests/obs.rs`).
     pub obs: crate::obs::Obs,
+    /// Cooperative cancellation token ([`crate::runtime::ctx::CancelToken`];
+    /// never fires by default). Every variant checkpoints it at the top of
+    /// each seeding round: once it fires, the run stops adding centers and
+    /// returns a well-formed partial [`SeedResult`] (at least the first
+    /// center is always selected — the initial pass precedes the first
+    /// checkpoint). A token that never fires changes nothing.
+    pub cancel: crate::runtime::ctx::CancelToken,
 }
 
 impl SeedConfig {
@@ -159,7 +166,22 @@ impl SeedConfig {
             pool: None,
             kernel: KernelConfig::Scalar,
             obs: crate::obs::Obs::NoObs,
+            cancel: crate::runtime::ctx::CancelToken::never(),
         }
+    }
+
+    /// Applies a whole [`crate::runtime::ExecCtx`] — pool (when shared),
+    /// observation, kernel and cancellation in one call. This is the
+    /// configuration seam every layer shares; the individual builders below
+    /// remain for piecemeal use.
+    pub fn with_ctx(mut self, ctx: &crate::runtime::ExecCtx) -> Self {
+        if let Some(pool) = &ctx.pool {
+            self.pool = Some(Arc::clone(pool));
+        }
+        self.kernel = ctx.kernel;
+        self.obs = ctx.obs.clone();
+        self.cancel = ctx.cancel.clone();
+        self
     }
 
     /// Sets the distance-kernel backend (builder style).

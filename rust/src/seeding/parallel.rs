@@ -437,6 +437,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
 
     // --- Main loop.
     while center_indices.len() < cfg.k {
+        // Cooperative cancellation: stop before the next round, leaving a
+        // well-formed partial result with the centers picked so far.
+        if cfg.cancel.checkpoint().is_some() {
+            break;
+        }
         let _round = cfg.obs.span(0, "seed.round");
         // Two-step sampling over *merged* per-(cluster, side) groups: the
         // per-shard partition sums are folded (shard order) into one sum per

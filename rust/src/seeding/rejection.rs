@@ -369,6 +369,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     forest.rebuild_cum();
 
     while center_indices.len() < cfg.k {
+        // Cooperative cancellation: stop before the next round, leaving a
+        // well-formed partial result with the centers picked so far.
+        if cfg.cancel.checkpoint().is_some() {
+            break;
+        }
         let _round = cfg.obs.span(0, "seed.round");
         let mut draw = DrawStats::default();
         let pick = picker.next(PickCtx::Rejection {

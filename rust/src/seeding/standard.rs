@@ -97,6 +97,11 @@ pub(crate) fn run<P: CenterPicker, T: TraceSink>(
     }
 
     while center_indices.len() < cfg.k {
+        // Cooperative cancellation: stop before the next round, leaving a
+        // well-formed partial result with the centers picked so far.
+        if cfg.cancel.checkpoint().is_some() {
+            break;
+        }
         let _round = cfg.obs.span(0, "seed.round");
         let pick = picker.next(PickCtx::Flat { weights: &weights, total });
         counters.visited_sampling += pick.visited;

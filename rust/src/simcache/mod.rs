@@ -17,13 +17,20 @@
 //! Fig. 6's qualitative claims all fall out of these mechanisms; the
 //! experiment runner (`xp::fig6`) reports them side by side with real
 //! wall-clock measurements from the thread-pool coordinator.
+//!
+//! A fifth member is a *real* cache rather than a simulated one:
+//! [`results::ResultCache`] memoizes completed coordinator job results by
+//! canonical spec fingerprint, serving the service front-end's
+//! admission-time cache (`coordinator::service`).
 
 pub mod cache;
 pub mod hierarchy;
 pub mod model;
+pub mod results;
 pub mod trace;
 
 pub use cache::{Cache, CacheConfig, CacheStats};
 pub use hierarchy::{Hierarchy, HierarchyConfig};
 pub use model::IpcModel;
+pub use results::ResultCache;
 pub use trace::TracingSink;

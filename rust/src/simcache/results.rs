@@ -1,0 +1,182 @@
+//! Admission-time result cache for the clustering service.
+//!
+//! The service front-end ([`crate::coordinator::service::Service`]) keys
+//! completed [`JobResult`]s on the canonical
+//! [`JobSpec::fingerprint`](crate::coordinator::JobSpec::fingerprint): a
+//! resubmitted spec is answered at admission, without a queue slot or a
+//! pool dispatch. Jobs are deterministic per fingerprint (the pool
+//! determinism contract), so a cached result is *bit-identical* to what a
+//! fresh run would produce — the cache is an optimization, never an
+//! approximation. Only [`JobStatus::Completed`](
+//! crate::coordinator::jobs::JobStatus::Completed) results are admitted:
+//! partial (terminated) results depend on when their token fired, not just
+//! on the spec.
+
+use crate::coordinator::jobs::{JobResult, JobStatus};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+struct Entry {
+    key: u64,
+    result: JobResult,
+    /// Logical access time (monotone tick) — the LRU eviction key.
+    stamp: u64,
+}
+
+/// A bounded LRU map from job fingerprints to completed results.
+///
+/// Linear-scan over at most `capacity` entries: service caches are small
+/// (tens of entries), and a scan over a `Vec` beats a tree for that size.
+/// Thread-safe; `get` refreshes recency.
+pub struct ResultCache {
+    entries: Mutex<Vec<Entry>>,
+    capacity: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ResultCache {
+    /// Creates a cache holding at most `capacity` results (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            entries: Mutex::new(Vec::new()),
+            capacity: capacity.max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn next_stamp(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Looks up a fingerprint, cloning the cached result on a hit (and
+    /// refreshing its recency).
+    pub fn get(&self, key: u64) -> Option<JobResult> {
+        let mut entries = self.entries.lock().unwrap();
+        let stamp = self.next_stamp();
+        match entries.iter_mut().find(|e| e.key == key) {
+            Some(e) => {
+                e.stamp = stamp;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.result.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Inserts a completed result under `key`, replacing any entry with the
+    /// same key and evicting the least-recently-used entry when full.
+    /// Terminated partials are silently refused (see the module docs).
+    pub fn insert(&self, key: u64, result: JobResult) {
+        if result.status != JobStatus::Completed {
+            return;
+        }
+        let mut entries = self.entries.lock().unwrap();
+        let stamp = self.next_stamp();
+        if let Some(e) = entries.iter_mut().find(|e| e.key == key) {
+            e.result = result;
+            e.stamp = stamp;
+            return;
+        }
+        if entries.len() >= self.capacity {
+            if let Some(oldest) =
+                entries.iter().enumerate().min_by_key(|(_, e)| e.stamp).map(|(i, _)| i)
+            {
+                entries.swap_remove(oldest);
+            }
+        }
+        entries.push(Entry { key, result, stamp });
+    }
+
+    /// Results currently cached.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that missed so far.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ctx::Terminated;
+    use crate::seeding::{Counters, Variant};
+    use std::time::Duration;
+
+    fn result(rep: u64, status: JobStatus) -> JobResult {
+        JobResult {
+            instance: "c".into(),
+            k: 4,
+            variant: Variant::Tie,
+            rep,
+            counters: Counters::default(),
+            elapsed: Duration::from_millis(1),
+            cost: rep as f64,
+            lloyd: None,
+            status,
+        }
+    }
+
+    #[test]
+    fn hit_returns_clone_and_counts() {
+        let cache = ResultCache::new(4);
+        assert!(cache.get(1).is_none());
+        cache.insert(1, result(7, JobStatus::Completed));
+        let hit = cache.get(1).expect("hit");
+        assert_eq!(hit.rep, 7);
+        assert_eq!(hit.cost, 7.0);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn terminated_partials_are_not_cached() {
+        let cache = ResultCache::new(4);
+        cache.insert(1, result(0, JobStatus::Terminated(Terminated::Deadline)));
+        cache.insert(2, result(0, JobStatus::Terminated(Terminated::Cancelled)));
+        assert!(cache.is_empty());
+        assert!(cache.get(1).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let cache = ResultCache::new(2);
+        cache.insert(1, result(1, JobStatus::Completed));
+        cache.insert(2, result(2, JobStatus::Completed));
+        // Touch 1 so 2 becomes the LRU, then overflow.
+        assert!(cache.get(1).is_some());
+        cache.insert(3, result(3, JobStatus::Completed));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(2).is_none(), "LRU entry evicted");
+        assert!(cache.get(1).is_some());
+        assert!(cache.get(3).is_some());
+    }
+
+    #[test]
+    fn same_key_replaces_without_growth() {
+        let cache = ResultCache::new(2);
+        cache.insert(1, result(1, JobStatus::Completed));
+        cache.insert(1, result(9, JobStatus::Completed));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.get(1).unwrap().rep, 9);
+    }
+}

@@ -46,6 +46,17 @@
 //! `--trace-out FILE` additionally writes the sweep's span timeline as
 //! Chrome trace-event JSON (`crate::obs` recorder threaded through the
 //! pool and both engines); observation never changes results.
+//!
+//! Schema v5 adds the **service gate** and its `"service"` object: a
+//! deterministic scripted arrival trace against the admission-controlled
+//! [`crate::coordinator::Service`] (paused 1-worker front-end, capacity-2
+//! queue, 4-submission burst → exactly 2 admitted + 2 `QueueFull`
+//! rejections; drain; replay an admitted spec → result-cache hit at
+//! admission; a pre-fired scripted token → cancelled partial). The gate
+//! requires the admitted/rejected/cancelled/cache_hits counters to match
+//! the script (all non-zero) and the admitted results to be bit-identical
+//! to the batch `Scheduler::run` path; admission-latency p50/p99 ride
+//! along informationally.
 
 use crate::cli::Args;
 use crate::core::rng::Pcg64;
@@ -331,6 +342,95 @@ pub fn run(args: &Args) -> Result<()> {
             .join(",")
     );
 
+    // --- Service gate: admission control, result cache, cancellation ---
+    // The arrival trace is scripted against a *paused* service so every
+    // outcome is deterministic: a 4-burst on a capacity-2 queue admits
+    // exactly reps 0–1 and sheds reps 2–3, the drain then runs, a replay of
+    // rep 0 must resolve from the result cache at admission, and a
+    // pre-fired scripted token must come back as a cancelled partial.
+    use crate::coordinator::{Admission, JobSpec, JobStatus, Scheduler, Service};
+    use crate::runtime::{CancelToken, ExecCtx, Terminated};
+    let svc_t0 = std::time::Instant::now();
+    let svc_inst = by_name("S-NS").context("service-gate instance missing")?;
+    let svc_data = Arc::new(svc_inst.generate_n(n));
+    let svc_spec = |rep: u64| JobSpec {
+        instance: "S-NS".into(),
+        data: Arc::clone(&svc_data),
+        k: 8,
+        variant: Variant::Full,
+        rep,
+        seed: seed_v,
+        threads: 1,
+        lloyd: None,
+    };
+    // Observed through the same recorder as the sweep, so the CI trace
+    // carries the `job.*` admission taxonomy `check_trace.py` validates
+    // (the gate ran after the sweep, so lane stacks are empty here).
+    let mut service = Service::paused(1, 2).with_obs(obs.clone());
+    let mut admitted_reps: Vec<u64> = Vec::new();
+    let mut tickets = Vec::new();
+    for rep in 0..4u64 {
+        match service.submit(svc_spec(rep)) {
+            Admission::Admitted(ticket) => {
+                admitted_reps.push(rep);
+                tickets.push(ticket);
+            }
+            Admission::Rejected(_) => {}
+        }
+    }
+    service.start();
+    let svc_results: Vec<_> = tickets.iter().map(|t| t.wait()).collect();
+    // The admitted results must be bit-identical to the batch path.
+    let batch_specs: Vec<JobSpec> = admitted_reps.iter().map(|&rep| svc_spec(rep)).collect();
+    let (batch, _) = Scheduler::new(1, 2).run(batch_specs, &ExecCtx::default());
+    for r in &svc_results {
+        match batch.iter().find(|b| b.rep == r.rep) {
+            Some(b) if r.cost == b.cost && r.counters == b.counters => {}
+            _ => violations
+                .push(format!("service rep {}: diverged from the batch Scheduler path", r.rep)),
+        }
+    }
+    // Replay: the cache answers at admission (ticket already resolved).
+    let replay_hit = match admitted_reps.first().map(|&rep| service.submit(svc_spec(rep))) {
+        Some(Admission::Admitted(t)) => t.try_result().is_some(),
+        _ => false,
+    };
+    if !replay_hit {
+        violations
+            .push("service: replayed spec was not served from the result cache".to_string());
+    }
+    // Scripted cancellation: a pre-fired token resolves as a partial.
+    match service.submit_with_token(svc_spec(9), CancelToken::after_checks(0, Terminated::Cancelled))
+    {
+        Admission::Admitted(t) => {
+            if t.wait().status == JobStatus::Completed {
+                violations.push("service: pre-fired token still ran to completion".to_string());
+            }
+        }
+        Admission::Rejected(_) => {
+            violations.push("service: cancellation probe was rejected".to_string());
+        }
+    }
+    let svc_stats = service.shutdown();
+    let service_ns = svc_t0.elapsed().as_nanos() as u64;
+    if (svc_stats.admitted, svc_stats.rejected) != (3, 2) {
+        violations.push(format!(
+            "service: admitted/rejected = {}/{}, the scripted trace expects 3/2",
+            svc_stats.admitted, svc_stats.rejected
+        ));
+    }
+    for (counter, value) in [
+        ("admitted", svc_stats.admitted),
+        ("rejected", svc_stats.rejected),
+        ("cancelled", svc_stats.cancelled),
+        ("cache_hits", svc_stats.cache_hits),
+    ] {
+        if value == 0 {
+            violations.push(format!("service: {counter} counter is 0 under the scripted trace"));
+        }
+    }
+    let service_json = svc_stats.to_json();
+
     let pool_stats = pool.stats();
     // Micro-batch occupancy: mean fill of the flushed Gather batches
     // (capacity is `core::batch::BATCH_CAP`); null when nothing batched.
@@ -355,7 +455,8 @@ pub fn run(args: &Args) -> Result<()> {
         None => "null".to_string(),
     };
     let timing_json = format!(
-        "{{\"sweep_ns\":{sweep_ns},\"seed_gate_ns\":{seed_gate_ns},\"total_ns\":{total_ns},\
+        "{{\"sweep_ns\":{sweep_ns},\"seed_gate_ns\":{seed_gate_ns},\
+         \"service_gate_ns\":{service_ns},\"total_ns\":{total_ns},\
          \"lloyd_runs\":{},\"lloyd_run_p50_ns\":{},\"lloyd_run_p95_ns\":{},\
          \"lloyd_run_p99_ns\":{},\"seed_runs\":{},\"seed_run_p50_ns\":{},\
          \"seed_run_p95_ns\":{},\"seed_run_p99_ns\":{}}}",
@@ -369,13 +470,15 @@ pub fn run(args: &Args) -> Result<()> {
         q(&h_seed, 0.99),
     );
     let json = format!(
-        "{{\n  \"schema\": \"geokmpp-perf-smoke/v4\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
+        "{{\n  \"schema\": \"geokmpp-perf-smoke/v5\",\n  \"n\": {n},\n  \"seed\": {seed_v},\n  \
          \"max_iters\": {max_iters},\n  \"threads\": {threads},\n  \"pool\": {},\n  \
-         \"kernels\": {},\n  \"timing\": {},\n  \"seeding\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+         \"kernels\": {},\n  \"timing\": {},\n  \"seeding\": {},\n  \"service\": {},\n  \
+         \"rows\": [\n    {}\n  ]\n}}\n",
         pool_stats.to_json(),
         kernels_json,
         timing_json,
         seeding_json,
+        service_json,
         json_rows.join(",\n    ")
     );
     std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
@@ -392,6 +495,15 @@ pub fn run(args: &Args) -> Result<()> {
         fcount(k_rows)
     );
     println!("{pool_stats}");
+    println!(
+        "service gate: admitted={} rejected={} cancelled={} cache_hits={} (admission p50/p99 {}/{} ns)",
+        svc_stats.admitted,
+        svc_stats.rejected,
+        svc_stats.cancelled,
+        svc_stats.cache_hits,
+        svc_stats.admission.quantile(0.50).unwrap_or(0),
+        svc_stats.admission.quantile(0.99).unwrap_or(0)
+    );
     println!(
         "timing (informational): sweep {}s, seeding gate {}s; lloyd run p50/p99 {}/{} ms",
         fnum(sweep_ns as f64 / 1e9, 3),
@@ -410,14 +522,16 @@ pub fn run(args: &Args) -> Result<()> {
     if !violations.is_empty() {
         bail!(
             "perf-smoke gate failed — accelerated strategies must be exact and strictly \
-             cheaper than naive, and rejection seeding exact and strictly below full's \
-             visits:\n  {}",
+             cheaper than naive, rejection seeding exact and strictly below full's \
+             visits, and the service trace must admit/reject/cancel/cache-hit per \
+             script:\n  {}",
             violations.join("\n  ")
         );
     }
     println!(
         "perf-smoke gate passed: every accelerated strategy is exact and strictly \
-         cheaper than naive; rejection seeding replays full bit-exactly with fewer visits"
+         cheaper than naive; rejection seeding replays full bit-exactly with fewer \
+         visits; the service trace admitted, shed, cancelled and cache-served per script"
     );
     Ok(())
 }
@@ -513,7 +627,7 @@ mod tests {
         ]))
         .unwrap();
         let body = std::fs::read_to_string(&out).unwrap();
-        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v4\""));
+        assert!(body.contains("\"schema\": \"geokmpp-perf-smoke/v5\""));
         // The informational timing object: phase wall times + latency
         // quantiles from every individual run of the sweep (5 strategies ×
         // 1 k × 2 instances = 10 Lloyd runs; 2 cell seeds + 3 gate seeds).
@@ -549,6 +663,13 @@ mod tests {
         assert!(body.contains("\"threads\": 2"), "missing threads: {body}");
         assert!(body.contains("\"pool\": {\"workers\":1,"), "missing pool: {body}");
         assert!(body.contains("\"spawns_avoided\""));
+        // The service gate's scripted trace lands in the v5 object: exact
+        // admitted/rejected counts and non-zero cancel/cache-hit tallies.
+        assert!(body.contains("\"service\": {\"workers\":1,"), "missing service: {body}");
+        assert!(body.contains("\"admitted\":3,\"rejected\":2,\"cancelled\":1,"), "{body}");
+        assert!(body.contains("\"cache_hits\":1"), "{body}");
+        assert!(body.contains("\"admission_p50_ns\":"));
+        assert!(body.contains("\"service_gate_ns\":"));
         std::fs::remove_file(&out).ok();
     }
 

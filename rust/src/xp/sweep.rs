@@ -113,7 +113,8 @@ pub fn run_sweep(p: &SweepParams, variants: &[Variant]) -> Report {
         p.reps,
         p.workers
     );
-    let (results, pool_stats) = Scheduler::new(p.workers, p.workers * 2).run_with_stats(specs);
+    let (results, pool_stats) = Scheduler::new(p.workers, p.workers * 2)
+        .run(specs, &crate::runtime::ExecCtx::default());
     eprintln!("sweep {pool_stats}");
     Report::aggregate(&results)
 }

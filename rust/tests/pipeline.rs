@@ -77,7 +77,7 @@ fn coordinator_sweep_to_report() {
             });
         }
     }
-    let results = Scheduler::new(2, 4).run(specs);
+    let (results, _) = Scheduler::new(2, 4).run(specs, &geokmpp::runtime::ExecCtx::default());
     assert_eq!(results.len(), 8); // 2 reps × 4 variants
     let report = Report::aggregate(&results);
     let speedup_visits = report

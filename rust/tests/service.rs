@@ -1,0 +1,197 @@
+//! Integration tests for the clustering service front-end and the
+//! `ExecCtx` execution-context API: admission control under saturation,
+//! deterministic cooperative cancellation, deadline partials, graceful
+//! drain, the fingerprint-keyed result cache, and the deprecated-shim
+//! bit-identity contract.
+
+use geokmpp::coordinator::jobs::{JobSpec, JobStatus, LloydPhase};
+use geokmpp::coordinator::{Admission, RejectReason, Scheduler, Service};
+use geokmpp::core::matrix::Matrix;
+use geokmpp::core::rng::Pcg64;
+use geokmpp::data::synth::{gmm, GmmSpec};
+use geokmpp::kmeans::accel::Strategy;
+use geokmpp::obs::Obs;
+use geokmpp::runtime::{CancelToken, ExecCtx, Terminated, WorkerPool};
+use geokmpp::seeding::Variant;
+use std::sync::Arc;
+
+fn dataset(n: usize, seed: u64) -> Arc<Matrix> {
+    let mut rng = Pcg64::seed_from(seed);
+    Arc::new(gmm(&GmmSpec::new(n, 3, 4), &mut rng))
+}
+
+fn spec(rep: u64, data: &Arc<Matrix>, lloyd: Option<LloydPhase>) -> JobSpec {
+    JobSpec {
+        instance: "svc-it".into(),
+        data: Arc::clone(data),
+        k: 8,
+        variant: Variant::Full,
+        rep,
+        seed: 23,
+        threads: 2,
+        lloyd,
+    }
+}
+
+/// Saturation: with queue capacity q and > q submissions against a paused
+/// service, every submission resolves to an explicit outcome (no deadlock,
+/// no panic), exactly q are admitted, the drained results are bit-identical
+/// to the batch `Scheduler::run` path, and a replayed spec is served from
+/// the result cache at admission time.
+#[test]
+fn saturation_resolves_every_submission_and_matches_batch() {
+    let data = dataset(600, 3);
+    let mut service = Service::paused(2, 3);
+    let mut admitted = Vec::new();
+    let mut rejected = 0usize;
+    for rep in 0..10u64 {
+        match service.submit(spec(rep, &data, None)) {
+            Admission::Admitted(t) => admitted.push((rep, t)),
+            Admission::Rejected(RejectReason::QueueFull) => rejected += 1,
+            Admission::Rejected(r) => panic!("unexpected rejection {r:?}"),
+        }
+    }
+    assert_eq!(admitted.len(), 3, "paused capacity-3 queue admits exactly 3");
+    assert_eq!(rejected, 7);
+
+    let batch_specs: Vec<JobSpec> =
+        admitted.iter().map(|(rep, _)| spec(*rep, &data, None)).collect();
+    let (batch, _) = Scheduler::new(2, 3).run(batch_specs, &ExecCtx::default());
+
+    service.start();
+    for (rep, t) in &admitted {
+        let r = t.wait();
+        assert_eq!(r.status, JobStatus::Completed);
+        let b = batch.iter().find(|b| b.rep == *rep).unwrap();
+        assert_eq!(r.cost, b.cost, "rep {rep} diverged from batch");
+        assert_eq!(r.counters, b.counters, "rep {rep} diverged from batch");
+    }
+
+    // Replay: admission-time cache hit, bit-identical, no queue slot used.
+    let (rep0, t0) = &admitted[0];
+    let first = t0.wait();
+    let replay = service.submit(spec(*rep0, &data, None)).ticket();
+    let hit = replay.try_result().expect("replayed spec must resolve at admission");
+    assert_eq!(hit.cost, first.cost);
+    assert_eq!(hit.counters, first.counters);
+
+    let stats = service.shutdown();
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.rejected, 7);
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.cache_hits, 1);
+    assert_eq!(stats.admission.count(), 11, "every submission was timed");
+}
+
+/// Cancellation determinism: a scripted token that fires after Lloyd
+/// iteration `i` leaves exactly the state of a fresh run with
+/// `max_iters = i` — same seeding counters, same inertia, same engine
+/// stats — differing only in the reported status.
+#[test]
+fn scripted_cancellation_matches_truncated_fresh_run() {
+    let data = dataset(900, 5);
+    let lloyd = LloydPhase { strategy: Strategy::Hamerly, max_iters: 40 };
+    let full = spec(0, &data, Some(lloyd));
+    let truncated = {
+        let mut s = full.clone();
+        s.lloyd = Some(LloydPhase { max_iters: 3, ..lloyd });
+        s.run(&ExecCtx::default())
+    };
+    assert_eq!(truncated.status, JobStatus::Completed);
+
+    // Budget: 1 up-front check + (k-1)=7 seeding rounds + 3 Lloyd
+    // iteration boundaries pass; the 4th Lloyd boundary fires the token.
+    let token = CancelToken::after_checks(1 + 7 + 3, Terminated::Deadline);
+    let service = Service::new(1, 2);
+    let ticket = service.submit_with_token(full, token).ticket();
+    let partial = ticket.wait();
+    service.shutdown();
+
+    assert_eq!(partial.status, JobStatus::Terminated(Terminated::Deadline));
+    assert_eq!(partial.cost, truncated.cost, "seeding state diverged");
+    assert_eq!(partial.counters, truncated.counters);
+    let (pl, tl) = (partial.lloyd.unwrap(), truncated.lloyd.unwrap());
+    assert_eq!(pl.iterations, 3, "stopped after exactly i iterations");
+    assert_eq!(pl.iterations, tl.iterations);
+    assert_eq!(pl.inertia, tl.inertia, "clustering state diverged");
+    assert_eq!(pl.stats, tl.stats);
+}
+
+/// A wall-clock deadline that expires mid-run still yields a well-formed
+/// partial: terminated status, internally-consistent result, resolved
+/// ticket — never a wedged lane or a panic.
+#[test]
+fn expired_deadline_yields_well_formed_partial() {
+    let data = dataset(800, 7);
+    let service = Service::new(1, 2);
+    let lloyd = LloydPhase { strategy: Strategy::Elkan, max_iters: 50 };
+    let t = service
+        .submit_with_deadline(spec(0, &data, Some(lloyd)), std::time::Duration::ZERO)
+        .ticket();
+    let r = t.wait();
+    assert!(matches!(r.status, JobStatus::Terminated(Terminated::Deadline)));
+    // Zero budget from the start: the up-front checkpoint fires, so the
+    // partial is the well-formed empty result.
+    assert!(r.cost.is_nan());
+    assert!(r.lloyd.is_none());
+    let stats = service.shutdown();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.completed, 0);
+}
+
+/// `close()` during the drain: already-admitted jobs run to completion
+/// while new submissions resolve as `ShuttingDown` — and `shutdown` joins
+/// cleanly with every ticket fulfilled.
+#[test]
+fn close_rejects_new_submissions_while_draining() {
+    let data = dataset(700, 9);
+    let service = Service::new(1, 4);
+    let tickets: Vec<_> =
+        (0..3u64).map(|rep| service.submit(spec(rep, &data, None)).ticket()).collect();
+    service.close();
+    match service.submit(spec(99, &data, None)) {
+        Admission::Rejected(RejectReason::ShuttingDown) => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+    for t in &tickets {
+        assert_eq!(t.wait().status, JobStatus::Completed, "admitted job lost in drain");
+    }
+    let stats = service.shutdown();
+    assert_eq!(stats.admitted, 3);
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.rejected, 1);
+}
+
+/// The deprecated shims (`run_with_pool`, `run_with_pool_obs`,
+/// `run_with_stats`) must compile and replay bit-identically through the
+/// `ExecCtx` entry point they delegate to.
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_replay_bit_identically() {
+    let data = dataset(600, 11);
+    let lloyd = LloydPhase { strategy: Strategy::Yinyang, max_iters: 20 };
+    let s = spec(0, &data, Some(lloyd));
+    let pool = Arc::new(WorkerPool::new(2));
+
+    let via_ctx = s.run(&ExecCtx::default().with_pool(Arc::clone(&pool)));
+    let via_shim = s.run_with_pool(&pool);
+    let via_obs_shim = s.run_with_pool_obs(&pool, &Obs::NoObs);
+    for (label, r) in [("run_with_pool", &via_shim), ("run_with_pool_obs", &via_obs_shim)] {
+        assert_eq!(r.cost, via_ctx.cost, "{label}");
+        assert_eq!(r.counters, via_ctx.counters, "{label}");
+        let (a, b) = (r.lloyd.as_ref().unwrap(), via_ctx.lloyd.as_ref().unwrap());
+        assert_eq!(a.inertia, b.inertia, "{label}");
+        assert_eq!(a.stats, b.stats, "{label}");
+        assert_eq!(r.status, JobStatus::Completed, "{label}");
+    }
+
+    let specs: Vec<JobSpec> = (0..4u64).map(|rep| spec(rep, &data, None)).collect();
+    let (old, _) = Scheduler::new(2, 2).run_with_stats(specs.clone());
+    let (new, _) = Scheduler::new(2, 2).run(specs, &ExecCtx::default());
+    let key = |v: &[geokmpp::coordinator::JobResult]| {
+        let mut pairs: Vec<(u64, f64)> = v.iter().map(|r| (r.rep, r.cost)).collect();
+        pairs.sort_by_key(|&(rep, _)| rep);
+        pairs
+    };
+    assert_eq!(key(&old), key(&new), "run_with_stats shim diverged");
+}
